@@ -1,0 +1,52 @@
+//! Energy-aware scheduling-partitioning (paper §2: "energy consumption
+//! minimization is also supported" and §4 future work): run the iterative
+//! solver under the makespan, energy and EDP objectives on the low-power
+//! ODROID platform and report the resulting performance/energy frontier.
+//!
+//! ```text
+//! cargo run --release --example energy_frontier [-- --n 4096 --iters 150]
+//! ```
+
+use hesp::config::Platform;
+use hesp::coordinator::energy::{energy, Objective, DEFAULT_J_PER_BYTE};
+use hesp::coordinator::engine::SimConfig;
+use hesp::coordinator::metrics::report;
+use hesp::coordinator::partitioners::PartitionerSet;
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::solver::{best_homogeneous, solve, SolverConfig};
+use hesp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 4_096) as u32;
+    let iters = args.usize_or("iters", 150);
+    let tiles: Vec<u32> = args.usize_list("tiles", &[128, 256, 512, 1024]).into_iter().map(|x| x as u32).collect();
+
+    let p = Platform::from_file("configs/odroid.toml")?;
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(p.elem_bytes);
+    let parts = PartitionerSet::standard();
+
+    println!("{:>10} {:>12} {:>10} {:>10} {:>10} {:>8}", "objective", "makespan s", "GFLOPS", "energy J", "EDP", "depth");
+    for obj in [Objective::Makespan, Objective::Energy, Objective::Edp] {
+        let (_, hdag, _) = best_homogeneous(n, &tiles, &p.machine, &p.db, sim, obj).unwrap();
+        let mut cfg = SolverConfig::all_soft(sim, iters, 64);
+        cfg.objective = obj;
+        let res = solve(hdag, &p.machine, &p.db, &parts, cfg);
+        let r = report(&res.best_dag, &res.best_schedule);
+        let e = energy(&res.best_schedule, &p.machine, DEFAULT_J_PER_BYTE);
+        println!(
+            "{:>10} {:>12.4} {:>10.2} {:>10.3} {:>10.3} {:>8}",
+            format!("{obj:?}"),
+            r.makespan,
+            r.gflops,
+            e.total(),
+            e.edp(r.makespan),
+            r.dag_depth
+        );
+    }
+    println!("\nExpected frontier: the energy objective trades makespan for lower");
+    println!("total joules (favoring the A7 cluster and coarser tiles); EDP sits");
+    println!("between the two.");
+    Ok(())
+}

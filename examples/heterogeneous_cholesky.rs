@@ -1,0 +1,69 @@
+//! The paper's headline experiment in one binary: on the highly
+//! heterogeneous BUJARUELO platform, compare the best *homogeneous*
+//! (uniform-tile) schedule against the *heterogeneous* partition found by
+//! the iterative scheduler-partitioner (§3.2, Table 1's PL/EFT-P row).
+//!
+//! ```text
+//! cargo run --release --example heterogeneous_cholesky [-- --n 32768 --iters 250]
+//! ```
+
+use std::collections::BTreeMap;
+
+use hesp::config::Platform;
+use hesp::coordinator::energy::Objective;
+use hesp::coordinator::engine::SimConfig;
+use hesp::coordinator::metrics::report;
+use hesp::coordinator::partitioners::PartitionerSet;
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::solver::{best_homogeneous, solve, SolverConfig};
+use hesp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 32_768) as u32;
+    let iters = args.usize_or("iters", 250);
+    let tiles: Vec<u32> = args.usize_list("tiles", &[512, 1024, 2048, 4096]).into_iter().map(|x| x as u32).collect();
+
+    let p = Platform::from_file("configs/bujaruelo.toml")?;
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(p.elem_bytes);
+
+    println!("== best homogeneous tiling (the static baseline) ==");
+    let (hb, hdag, hsched) = best_homogeneous(n, &tiles, &p.machine, &p.db, sim, Objective::Makespan)
+        .expect("a legal tile size");
+    let hr = report(&hdag, &hsched);
+    println!("b={hb}: {:.2} GFLOPS, load {:.1}%, depth {}", hr.gflops, hr.avg_load_pct, hr.dag_depth);
+
+    println!("\n== iterative scheduler-partitioner (All/Soft, {iters} iters) ==");
+    let cfg = SolverConfig::all_soft(sim, iters, 128);
+    let res = solve(hdag, &p.machine, &p.db, &PartitionerSet::standard(), cfg);
+    let er = report(&res.best_dag, &res.best_schedule);
+    println!(
+        "found at iter {}: {:.2} GFLOPS, load {:.1}%, avg block {:.1}, depth {}",
+        res.best_iter, er.gflops, er.avg_load_pct, er.avg_block_size, er.dag_depth
+    );
+    println!("improvement over best homogeneous: {:+.2}%", 100.0 * (er.gflops - hr.gflops) / hr.gflops);
+
+    // task-granularity histogram of the found heterogeneous partition —
+    // the textual version of Fig. 6's granularity gradient
+    let mut hist: BTreeMap<u32, usize> = BTreeMap::new();
+    for t in res.best_dag.frontier() {
+        *hist.entry(res.best_dag.task(t).char_edge().round() as u32).or_insert(0) += 1;
+    }
+    println!("\ntile-edge histogram of the heterogeneous partition:");
+    for (edge, count) in hist {
+        println!("  {edge:>5}: {count:>6} tasks");
+    }
+
+    // where did the makespan go? per-proc-type busy shares
+    let mut busy: BTreeMap<&str, f64> = BTreeMap::new();
+    for proc in &p.machine.procs {
+        *busy.entry(p.machine.proc_types[proc.ptype].name.as_str()).or_insert(0.0) +=
+            res.best_schedule.proc_busy[proc.id];
+    }
+    println!("\nbusy seconds by processor type:");
+    for (ty, b) in busy {
+        println!("  {ty:>8}: {b:.3}s");
+    }
+    Ok(())
+}

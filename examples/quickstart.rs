@@ -1,0 +1,55 @@
+//! Quickstart: simulate a blocked Cholesky factorization on the paper's
+//! BUJARUELO platform (28 Xeon cores + 3 GPUs) and print the schedule
+//! report — the 60-second tour of the HeSP API.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use hesp::config::Platform;
+use hesp::coordinator::engine::{simulate, SimConfig};
+use hesp::coordinator::metrics::{load_trace, report};
+use hesp::coordinator::partitioners::cholesky;
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A platform = machine topology + per-(proc, task, size) perf models.
+    let platform = Platform::from_file("configs/bujaruelo.toml")?;
+
+    // 2. A workload = one root task, recursively partitionable. Here: the
+    //    paper's Fig. 2 example, a 16384^2 Cholesky at 1024^2 tiles.
+    let (n, b) = (16_384, 1_024);
+    let mut dag = cholesky::root(n);
+    cholesky::partition_uniform(&mut dag, b);
+    let flat = dag.flat_dag();
+    println!(
+        "task DAG: {} tasks, {} dependence edges, width {}, longest path {}",
+        flat.len(),
+        flat.edge_count(),
+        flat.width(),
+        flat.longest_path_len()
+    );
+
+    // 3. Simulate under a scheduling policy (PL/EFT-P ~= HEFT).
+    let cfg = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(platform.elem_bytes);
+    let sched = simulate(&dag, &platform.machine, &platform.db, cfg);
+
+    // 4. Inspect the result.
+    let r = report(&dag, &sched);
+    println!(
+        "PL/EFT-P on {}: {:.2} GFLOPS, makespan {:.4}s, avg load {:.1}%, {:.1} MB moved",
+        platform.machine.name,
+        r.gflops,
+        r.makespan,
+        r.avg_load_pct,
+        r.transfer_bytes as f64 / 1e6
+    );
+
+    // 5. The Fig. 2b-style compute-load timeline.
+    println!("\ncompute load (active processors over time):");
+    for (t, active) in load_trace(&sched, 20) {
+        println!("  t={t:7.4}s  {}", "#".repeat(active));
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Regenerate the paper's trace figures: Fig. 2b (compute-load trace) and
+//! Fig. 6 (homogeneous vs heterogeneous execution traces) as Paraver
+//! `.prv/.pcf/.row` bundles plus CSVs, for both platforms.
+//!
+//! ```text
+//! cargo run --release --example traces [-- --out traces --iters 200]
+//! ```
+
+use hesp::config::Platform;
+use hesp::coordinator::engine::{simulate, SimConfig};
+use hesp::coordinator::metrics::report;
+use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::solver::{solve, SolverConfig};
+use hesp::coordinator::trace::write_bundle;
+use hesp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let out = std::path::PathBuf::from(args.str_or("out", "traces"));
+    let iters = args.usize_or("iters", 200);
+
+    // Fig. 6 uses PL/EFT-P on both platforms; Fig. 2b is the BUJARUELO
+    // load trace at n=16384, b=1024.
+    for (config, n, b, min_edge) in [
+        ("configs/bujaruelo.toml", 32_768u32, 2_048u32, 128u32),
+        ("configs/odroid.toml", 8_192, 512, 64),
+    ] {
+        let p = Platform::from_file(config)?;
+        let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+            .with_elem_bytes(p.elem_bytes);
+
+        let mut dag = cholesky::root(n);
+        cholesky::partition_uniform(&mut dag, b);
+        let hsched = simulate(&dag, &p.machine, &p.db, sim);
+        let hr = report(&dag, &hsched);
+        write_bundle(&out, &format!("{}_homog", p.machine.name), &dag, &hsched, &p.machine)?;
+
+        let res = solve(dag, &p.machine, &p.db, &PartitionerSet::standard(), SolverConfig::all_soft(sim, iters, min_edge));
+        let er = report(&res.best_dag, &res.best_schedule);
+        write_bundle(&out, &format!("{}_heterog", p.machine.name), &res.best_dag, &res.best_schedule, &p.machine)?;
+
+        println!(
+            "{}: homog {:.2} GFLOPS (load {:.1}%) -> heterog {:.2} GFLOPS (load {:.1}%)",
+            p.machine.name, hr.gflops, hr.avg_load_pct, er.gflops, er.avg_load_pct
+        );
+        println!("\nheterogeneous schedule (ASCII Gantt):");
+        print!(
+            "{}",
+            hesp::coordinator::trace::ascii_gantt(&res.best_dag, &res.best_schedule, &p.machine, 100)
+        );
+    }
+
+    // Fig. 2b companion: the 16384/1024 load trace of the motivation section.
+    let p = Platform::from_file("configs/bujaruelo.toml")?;
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(p.elem_bytes);
+    let mut dag = cholesky::root(16_384);
+    cholesky::partition_uniform(&mut dag, 1_024);
+    let sched = simulate(&dag, &p.machine, &p.db, sim);
+    write_bundle(&out, "fig2b_load", &dag, &sched, &p.machine)?;
+
+    println!("trace bundles written to {}/", out.display());
+    println!("open the .prv files with Paraver (https://tools.bsc.es/paraver)");
+    Ok(())
+}

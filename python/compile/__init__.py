@@ -1,0 +1,5 @@
+"""Build-time Python for HeSP: JAX/Pallas kernel authoring + AOT lowering.
+
+Nothing in this package is imported at runtime; ``make artifacts`` runs
+``compile.aot`` once and the Rust binary consumes only ``artifacts/``.
+"""

@@ -1,0 +1,101 @@
+"""AOT lowering: one HLO-text module per (tile task, tile edge, dtype).
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits ``<task>_<dtype>_<b>.hlo.txt`` plus ``manifest.json`` describing every
+artifact (task, dtype, tile edge, operand count, flops) for the Rust runtime.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Tile edges the Rust executor can schedule at. Must be multiples of
+# model.POTRF_BASE (32) so the blocked POTRF tiles evenly.
+DEFAULT_TILES = (32, 64, 128, 256)
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def task_flops(task: str, b: int) -> float:
+    """Standard flop counts for b x b tile tasks (single tile, lower-Cholesky
+    convention; matches rust/src/coordinator/task.rs)."""
+    if task == "potrf":
+        return b**3 / 3.0
+    if task == "trsm":
+        return float(b**3)
+    if task == "syrk":
+        return float(b**3)  # full-block symmetric update (see kernels.gemm.syrk)
+    if task == "gemm":
+        return 2.0 * b**3
+    raise ValueError(task)
+
+
+def lower_task(task: str, b: int, dtype) -> str:
+    fn, nargs = model.TASKS[task]
+    spec = jax.ShapeDtypeStruct((b, b), dtype)
+
+    def tupled(*args):
+        return (fn(*args),)
+
+    lowered = jax.jit(tupled).lower(*([spec] * nargs))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tiles", type=int, nargs="*", default=list(DEFAULT_TILES))
+    ap.add_argument("--dtypes", nargs="*", default=["f32", "f64"])
+    ap.add_argument("--tasks", nargs="*", default=list(model.TASKS))
+    args = ap.parse_args()
+
+    jax.config.update("jax_enable_x64", True)
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "entries": []}
+    for dt_name in args.dtypes:
+        dtype = DTYPES[dt_name]
+        for b in args.tiles:
+            for task in args.tasks:
+                name = f"{task}_{dt_name}_{b}"
+                path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+                text = lower_task(task, b, dtype)
+                with open(path, "w") as f:
+                    f.write(text)
+                manifest["entries"].append(
+                    {
+                        "name": name,
+                        "file": f"{name}.hlo.txt",
+                        "task": task,
+                        "dtype": dt_name,
+                        "tile": b,
+                        "num_args": model.TASKS[task][1],
+                        "flops": task_flops(task, b),
+                    }
+                )
+                print(f"lowered {name}: {len(text)} chars")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""L1 Pallas kernels for the dense linear-algebra tile tasks HeSP schedules.
+
+The paper's driving workload is the blocked Cholesky factorization, whose
+tile-level tasks are POTRF, TRSM, SYRK and GEMM. The throughput hot spot is
+the trailing-matrix update (GEMM/SYRK: O(s^3) tasks vs O(s) POTRFs), so those
+are grid-tiled Pallas kernels; TRSM is a row-panel-parallel Pallas kernel;
+POTRF is composed at L2 (``compile.model``) from these kernels in a blocked
+right-looking scheme with a small unblocked base case.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime loads. Correctness is pinned against the pure-jnp oracles in
+``ref.py`` (pytest + hypothesis-style sweeps in ``python/tests``).
+"""
+
+from . import gemm, trsm, ref  # noqa: F401

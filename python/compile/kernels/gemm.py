@@ -1,0 +1,93 @@
+"""Pallas GEMM / SYRK tile kernels: the flops hot spot of blocked Cholesky.
+
+Computes the trailing-update form used by the factorization,
+
+    C <- C - A @ B^T        (GEMM:  A_ij -= A_ik @ A_jk^T)
+    C <- C - A @ A^T        (SYRK:  A_ii -= A_ik @ A_ik^T)
+
+as a grid-tiled Pallas kernel. The grid is (m/bm, n/bn, k/bk); the k axis is
+the innermost (sequential) accumulation axis, so each (i, j) output block is
+initialized from C on the first k-step and accumulated in place afterwards —
+the standard Pallas matmul schedule, expressing the HBM<->VMEM pipeline the
+paper's CUDA kernels express with threadblocks (DESIGN.md
+§Hardware-Adaptation).
+
+VMEM footprint per step is bm*bn + bm*bk + bn*bk elements (3 * 128^2 * 4 B
+= 192 KiB at the default block, comfortably under a TPU core's ~16 MiB
+VMEM and leaving room for double-buffering).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate inner block edges, largest first. 128 is MXU-friendly (the
+# systolic array is 128x128); smaller edges keep odd tile sizes legal.
+_BLOCK_CANDIDATES = (128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def pick_block(dim: int, cap: int = 128) -> int:
+    """Largest candidate block edge that divides ``dim`` (and is <= cap)."""
+    if dim <= 0:
+        raise ValueError(f"dimension must be positive, got {dim}")
+    for b in _BLOCK_CANDIDATES:
+        if b <= cap and dim % b == 0:
+            return b
+    return 1
+
+
+def _gemm_kernel(c_ref, a_ref, b_ref, o_ref):
+    """One (bm, bn) output block; k-steps accumulate sequentially."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    # fp32/fp64 accumulate on the MXU; B is stored (n, k) so the update is
+    # an explicit outer-product-panel contraction A(bm,bk) @ B(bn,bk)^T.
+    o_ref[...] -= jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(c, a, b, *, bm: int | None = None, bn: int | None = None, bk: int | None = None):
+    """C - A @ B^T with C:(m,n), A:(m,k), B:(n,k) — Pallas, interpret mode."""
+    m, n = c.shape
+    k = a.shape[1]
+    if a.shape != (m, k) or b.shape != (n, k):
+        raise ValueError(f"shape mismatch: C{c.shape} A{a.shape} B{b.shape}")
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bn, bk), lambda i, j, l: (j, l)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(c, a, b)
+
+
+def syrk(c, a, **kw):
+    """C - A @ A^T (symmetric rank-k trailing update of a diagonal tile).
+
+    Reuses the GEMM kernel with both panel operands bound to A; the full
+    (not just lower-triangular) block is updated, which keeps diagonal
+    tiles exactly symmetric — the factorization only ever reads the lower
+    triangle, so this is numerically equivalent to a masked SYRK.
+    """
+    if c.shape[0] != c.shape[1]:
+        raise ValueError(f"SYRK output must be square, got {c.shape}")
+    return gemm(c, a, a, **kw)

@@ -1,0 +1,37 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Deliberately written on a *different* code path (jnp matmul / jnp triangular
+inverse / jnp cholesky) so a kernel bug cannot cancel against an oracle bug.
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_ref(c, a, b):
+    """C - A @ B^T."""
+    return c - a @ b.T
+
+
+def syrk_ref(c, a):
+    """C - A @ A^T."""
+    return c - a @ a.T
+
+
+def trsm_ref(l, b):
+    """X with X @ L^T = B, via an explicit triangular inverse."""
+    n = l.shape[0]
+    eye = jnp.eye(n, dtype=l.dtype)
+    # jnp.linalg.solve on the triangular system (dense solve — independent
+    # of the kernel's substitution path).
+    linv = jnp.linalg.solve(l, eye)
+    return b @ linv.T
+
+
+def potrf_ref(a):
+    """Lower Cholesky factor of SPD matrix A."""
+    return jnp.linalg.cholesky(a)
+
+
+def cholesky_reconstruct(l):
+    """A = L @ L^T (round-trip check)."""
+    return l @ l.T

@@ -1,0 +1,121 @@
+"""L2: the tile-task compute graphs of blocked Cholesky, composing L1 kernels.
+
+Each tile task HeSP schedules (POTRF / TRSM / SYRK / GEMM over a b x b tile)
+is a jax function here; ``aot.py`` lowers one HLO module per (task, b, dtype)
+and the Rust runtime (rust/src/runtime) executes them on the PJRT CPU client.
+
+POTRF is a blocked right-looking factorization composing the Pallas
+GEMM/SYRK/TRSM kernels with a small vectorized unblocked base case — written
+in pure jnp index ops (NOT ``jnp.linalg.cholesky``, which lowers to a LAPACK
+custom-call on CPU that the xla_extension 0.5.1 runtime cannot resolve).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gemm as gemm_k
+from .kernels import trsm as trsm_k
+
+# Unblocked base-case edge for the blocked POTRF. 32 keeps trace size small
+# (one fused column update per iteration) while the Pallas kernels do the
+# O(b^3) panel work above it.
+POTRF_BASE = 32
+
+
+def potrf_unblocked(a):
+    """Lower Cholesky factor by right-looking column updates (pure jnp).
+
+    One (static) iteration per column; each iteration is a rank-1 trailing
+    update, so the lowered HLO is a flat chain of fused vector ops.
+    """
+    n = a.shape[0]
+    rows = jnp.arange(n)
+    l = jnp.zeros_like(a)
+    for j in range(n):
+        d = jnp.sqrt(a[j, j])
+        col = jnp.where(rows > j, a[:, j] / d, jnp.zeros((), a.dtype)).at[j].set(d)
+        l = l.at[:, j].set(col)
+        a = a - jnp.outer(col, col)
+    return l
+
+
+def potrf(a, base: int = POTRF_BASE):
+    """Blocked right-looking Cholesky of one b x b tile.
+
+    for k-panels of edge ``base``:
+      L_kk   = potrf_unblocked(A_kk)
+      L_pk   = TRSM(L_kk, A_pk)            (Pallas, row-panel parallel)
+      A_tail = SYRK(A_tail, L_pk)          (Pallas, grid-tiled)
+    """
+    n = a.shape[0]
+    if n <= base:
+        return potrf_unblocked(a)
+    if n % base != 0:
+        raise ValueError(f"tile edge {n} not a multiple of base {base}")
+    l = jnp.zeros_like(a)
+    for k in range(n // base):
+        lo, hi = k * base, (k + 1) * base
+        lkk = potrf_unblocked(a[lo:hi, lo:hi])
+        l = l.at[lo:hi, lo:hi].set(lkk)
+        if hi < n:
+            panel = trsm_k.trsm(lkk, a[hi:, lo:hi])
+            l = l.at[hi:, lo:hi].set(panel)
+            a = a.at[hi:, hi:].set(gemm_k.syrk(a[hi:, hi:], panel))
+    return jnp.tril(l)
+
+
+def trsm(l, b):
+    """TRSM tile task: X @ L^T = B (off-diagonal panel of the factorization)."""
+    return trsm_k.trsm(l, b)
+
+
+def syrk(c, a):
+    """SYRK tile task: C - A @ A^T (diagonal trailing update)."""
+    return gemm_k.syrk(c, a)
+
+
+def gemm(c, a, b):
+    """GEMM tile task: C - A @ B^T (off-diagonal trailing update)."""
+    return gemm_k.gemm(c, a, b)
+
+
+TASKS = {
+    # name -> (fn, number of b x b operands)
+    "potrf": (potrf, 1),
+    "trsm": (trsm, 2),
+    "syrk": (syrk, 2),
+    "gemm": (gemm, 3),
+}
+
+
+def cholesky_blocked(a, s: int):
+    """Full tiled Cholesky over an s x s grid of tiles — the same task
+    sequence the Rust executor replays, used by pytest to prove the four
+    tile tasks compose to a correct factorization."""
+    n = a.shape[0]
+    if n % s != 0:
+        raise ValueError(f"matrix edge {n} not divisible by s={s}")
+    b = n // s
+    t = [[a[i * b : (i + 1) * b, j * b : (j + 1) * b] for j in range(s)] for i in range(s)]
+    for k in range(s):
+        t[k][k] = potrf(t[k][k])
+        for i in range(k + 1, s):
+            t[i][k] = trsm(t[k][k], t[i][k])
+        for i in range(k + 1, s):
+            t[i][i] = syrk(t[i][i], t[i][k])
+            for j in range(k + 1, i):
+                t[i][j] = gemm(t[i][j], t[i][k], t[j][k])
+    out = jnp.zeros_like(a)
+    for i in range(s):
+        for j in range(i + 1):
+            out = out.at[i * b : (i + 1) * b, j * b : (j + 1) * b].set(t[i][j])
+    return out
+
+
+def random_spd(n: int, dtype=jnp.float32, seed: int = 0):
+    """Well-conditioned random SPD test matrix: G G^T / n + I."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n, n), dtype=jnp.float32)
+    a = (g @ g.T) / n + jnp.eye(n, dtype=jnp.float32) * 2.0
+    return a.astype(dtype)

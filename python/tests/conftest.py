@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64():
+    # f64 kernels (ODROID experiments run double precision) need x64 mode.
+    assert jax.config.jax_enable_x64

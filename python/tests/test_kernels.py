@@ -1,0 +1,177 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (any multiple of the minimal block edge) and both
+dtypes; explicit cases pin the tile edges the AOT artifacts ship.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import gemm as gemm_k
+from compile.kernels import ref
+from compile.kernels import trsm as trsm_k
+
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def tol(dtype):
+    return dict(rtol=3e-4, atol=3e-4) if dtype == jnp.float32 else dict(rtol=1e-9, atol=1e-9)
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def rand_lower(rng, n, dtype):
+    """Well-conditioned lower-triangular matrix."""
+    return jnp.asarray(np.tril(rng.standard_normal((n, n))) + 4.0 * np.eye(n), dtype)
+
+
+# ---------------------------------------------------------------- pick_block
+
+
+@pytest.mark.parametrize(
+    "dim,cap,expect",
+    [(256, 128, 128), (96, 128, 32), (32, 128, 32), (8, 128, 8), (7, 128, 7 and 1), (1, 128, 1), (40, 8, 8), (48, 8, 8)],
+)
+def test_pick_block_divides(dim, cap, expect):
+    b = gemm_k.pick_block(dim, cap)
+    assert dim % b == 0 and b <= cap
+    assert b == expect
+
+
+@given(st.integers(1, 4096), st.sampled_from([8, 32, 128]))
+def test_pick_block_always_legal(dim, cap):
+    b = gemm_k.pick_block(dim, cap)
+    assert 1 <= b <= cap and dim % b == 0
+
+
+def test_pick_block_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        gemm_k.pick_block(0)
+
+
+# --------------------------------------------------------------------- GEMM
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,n,k", [(32, 32, 32), (64, 32, 96), (128, 128, 64), (256, 256, 256), (8, 8, 8)])
+def test_gemm_matches_ref(dtype, m, n, k):
+    rng = np.random.default_rng(m * 1000 + n * 10 + k)
+    c, a, b = rand(rng, (m, n), dtype), rand(rng, (m, k), dtype), rand(rng, (n, k), dtype)
+    np.testing.assert_allclose(gemm_k.gemm(c, a, b), ref.gemm_ref(c, a, b), **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 24, 40, 64, 96]),
+    n=st.sampled_from([8, 16, 32, 48, 80]),
+    k=st.sampled_from([8, 16, 32, 56, 72]),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**16),
+)
+def test_gemm_hypothesis(m, n, k, dtype, seed):
+    rng = np.random.default_rng(seed)
+    c, a, b = rand(rng, (m, n), dtype), rand(rng, (m, k), dtype), rand(rng, (n, k), dtype)
+    np.testing.assert_allclose(gemm_k.gemm(c, a, b), ref.gemm_ref(c, a, b), **tol(dtype))
+
+
+def test_gemm_explicit_blocks():
+    rng = np.random.default_rng(7)
+    c, a, b = rand(rng, (64, 64), jnp.float32), rand(rng, (64, 64), jnp.float32), rand(rng, (64, 64), jnp.float32)
+    out = gemm_k.gemm(c, a, b, bm=16, bn=32, bk=64)
+    np.testing.assert_allclose(out, ref.gemm_ref(c, a, b), **tol(jnp.float32))
+
+
+def test_gemm_shape_mismatch_raises():
+    z = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        gemm_k.gemm(z, jnp.zeros((8, 4), jnp.float32), jnp.zeros((4, 4), jnp.float32))
+
+
+def test_gemm_zero_update_is_identity():
+    rng = np.random.default_rng(3)
+    c = rand(rng, (32, 32), jnp.float64)
+    a = jnp.zeros((32, 16), jnp.float64)
+    b = rand(rng, (32, 16), jnp.float64)
+    np.testing.assert_allclose(gemm_k.gemm(c, a, b), c)
+
+
+# --------------------------------------------------------------------- SYRK
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n,k", [(32, 32), (64, 32), (128, 128), (96, 64)])
+def test_syrk_matches_ref(dtype, n, k):
+    rng = np.random.default_rng(n + k)
+    c, a = rand(rng, (n, n), dtype), rand(rng, (n, k), dtype)
+    np.testing.assert_allclose(gemm_k.syrk(c, a), ref.syrk_ref(c, a), **tol(dtype))
+
+
+def test_syrk_preserves_symmetry():
+    rng = np.random.default_rng(11)
+    sym = rng.standard_normal((64, 64))
+    c = jnp.asarray(sym + sym.T, jnp.float64)
+    a = rand(rng, (64, 32), jnp.float64)
+    out = gemm_k.syrk(c, a)
+    np.testing.assert_allclose(out, out.T, rtol=1e-12, atol=1e-12)
+
+
+def test_syrk_requires_square():
+    with pytest.raises(ValueError):
+        gemm_k.syrk(jnp.zeros((8, 16), jnp.float32), jnp.zeros((8, 8), jnp.float32))
+
+
+# --------------------------------------------------------------------- TRSM
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("m,n", [(32, 32), (64, 32), (128, 64), (32, 128)])
+def test_trsm_matches_ref(dtype, m, n):
+    rng = np.random.default_rng(m + 7 * n)
+    l, b = rand_lower(rng, n, dtype), rand(rng, (m, n), dtype)
+    x = trsm_k.trsm(l, b)
+    np.testing.assert_allclose(x, ref.trsm_ref(l, b), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_trsm_residual(dtype):
+    """Independent check: the solve satisfies X @ L^T = B."""
+    rng = np.random.default_rng(42)
+    l, b = rand_lower(rng, 64, dtype), rand(rng, (96, 64), dtype)
+    x = trsm_k.trsm(l, b)
+    np.testing.assert_allclose(x @ l.T, b, **tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 40, 64]),
+    n=st.sampled_from([8, 16, 32, 64]),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**16),
+)
+def test_trsm_hypothesis(m, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    l, b = rand_lower(rng, n, dtype), rand(rng, (m, n), dtype)
+    np.testing.assert_allclose(trsm_k.trsm(l, b) @ l.T, b, **tol(dtype))
+
+
+def test_trsm_identity_l():
+    rng = np.random.default_rng(5)
+    b = rand(rng, (32, 32), jnp.float32)
+    np.testing.assert_allclose(trsm_k.trsm(jnp.eye(32, dtype=jnp.float32), b), b, rtol=1e-6)
+
+
+def test_trsm_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        trsm_k.trsm(jnp.zeros((8, 8), jnp.float32), jnp.zeros((8, 16), jnp.float32))
+
+
+def test_inv_lower_small():
+    rng = np.random.default_rng(9)
+    l = rand_lower(rng, 8, jnp.float64)
+    inv = trsm_k._inv_lower(l)
+    np.testing.assert_allclose(inv @ l, np.eye(8), rtol=1e-10, atol=1e-10)

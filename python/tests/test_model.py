@@ -1,0 +1,72 @@
+"""L2 correctness: blocked POTRF and the full tiled Cholesky composition."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def tol(dtype):
+    return dict(rtol=5e-4, atol=5e-4) if dtype == jnp.float32 else dict(rtol=1e-8, atol=1e-8)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_potrf_unblocked(n, dtype):
+    a = model.random_spd(n, dtype, seed=n)
+    l = model.potrf_unblocked(a)
+    np.testing.assert_allclose(ref.cholesky_reconstruct(l), a, **tol(dtype))
+    # strictly lower-triangular output
+    np.testing.assert_allclose(np.triu(np.asarray(l), 1), 0.0)
+
+
+@pytest.mark.parametrize("n", [32, 64, 128, 256])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_potrf_blocked(n, dtype):
+    a = model.random_spd(n, dtype, seed=n + 1)
+    l = model.potrf(a)
+    np.testing.assert_allclose(ref.cholesky_reconstruct(l), a, **tol(dtype))
+    np.testing.assert_allclose(np.triu(np.asarray(l), 1), 0.0)
+
+
+def test_potrf_matches_oracle_factor():
+    """Cholesky factors are unique (positive diagonal) — compare directly."""
+    a = model.random_spd(64, jnp.float64, seed=3)
+    np.testing.assert_allclose(model.potrf(a), ref.potrf_ref(a), rtol=1e-8, atol=1e-8)
+
+
+def test_potrf_rejects_non_multiple():
+    with pytest.raises(ValueError):
+        model.potrf(jnp.eye(48, dtype=jnp.float32))  # 48 % 32 != 0
+
+
+@pytest.mark.parametrize("s", [1, 2, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_cholesky_blocked(s, dtype):
+    n = 64 * s
+    a = model.random_spd(n, dtype, seed=s)
+    l = model.cholesky_blocked(a, s)
+    np.testing.assert_allclose(ref.cholesky_reconstruct(l), a, **tol(dtype))
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([1, 2, 3]), b=st.sampled_from([32, 64]), seed=st.integers(0, 1000))
+def test_cholesky_blocked_hypothesis(s, b, seed):
+    a = model.random_spd(s * b, jnp.float64, seed=seed)
+    l = model.cholesky_blocked(a, s)
+    np.testing.assert_allclose(ref.cholesky_reconstruct(l), a, rtol=1e-8, atol=1e-8)
+
+
+def test_cholesky_blocked_rejects_indivisible():
+    with pytest.raises(ValueError):
+        model.cholesky_blocked(jnp.eye(65, dtype=jnp.float32), 2)
+
+
+def test_random_spd_is_spd():
+    a = model.random_spd(96, jnp.float64, seed=0)
+    np.testing.assert_allclose(a, a.T)
+    w = np.linalg.eigvalsh(np.asarray(a))
+    assert w.min() > 0

@@ -1,0 +1,123 @@
+//! Ablations over HeSP's design choices (DESIGN.md §Key design decisions):
+//!
+//! * candidate selection (All vs CP vs Shallow) x sampling (Hard vs Soft)
+//!   — the paper's §2.1 partition-stage knobs;
+//! * merge/re-partition moves on vs off;
+//! * caching policy (WB vs WT vs WA) impact on makespan + traffic;
+//! * iterative (offline bound-explorer) vs constructive (online, §4);
+//! * iteration budget sensitivity.
+
+use hesp::bench::Table;
+use hesp::config::Platform;
+use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::energy::Objective;
+use hesp::coordinator::engine::{simulate, SimConfig};
+use hesp::coordinator::metrics::report;
+use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::solver::{best_homogeneous, solve, CandidateSelect, Sampling, SolverConfig};
+use hesp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 16_384) as u32;
+    let iters = args.usize_or("iters", 120);
+    let tiles = [512u32, 1024, 2048, 4096];
+    let p = Platform::from_file("configs/bujaruelo.toml").expect("config");
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(p.elem_bytes);
+    let parts = PartitionerSet::standard();
+    let (_, hdag, hsched) = best_homogeneous(n, &tiles, &p.machine, &p.db, sim, Objective::Makespan).unwrap();
+    let base = hsched.makespan;
+    println!("baseline: best homogeneous makespan {base:.4}s (n={n})");
+
+    println!("\n== ablation 1: candidate selection x sampling ==");
+    let mut t = Table::new(&["candidates", "sampling", "best makespan s", "improve %", "iters to best"]);
+    for cs in [CandidateSelect::All, CandidateSelect::CriticalPath, CandidateSelect::Shallow] {
+        for sm in [Sampling::Hard, Sampling::Soft] {
+            let mut cfg = SolverConfig::all_soft(sim, iters, 128);
+            cfg.candidates = cs;
+            cfg.sampling = sm;
+            let res = solve(hdag.clone(), &p.machine, &p.db, &parts, cfg);
+            t.row(&[
+                cs.name().to_string(),
+                sm.name().to_string(),
+                format!("{:.4}", res.best_cost),
+                format!("{:.2}", 100.0 * (base - res.best_cost) / res.best_cost),
+                res.best_iter.to_string(),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n== ablation 2: merge/re-partition moves ==");
+    let mut t = Table::new(&["allow_merge", "best makespan s", "improve %"]);
+    for merge in [true, false] {
+        let mut cfg = SolverConfig::all_soft(sim, iters, 128);
+        cfg.allow_merge = merge;
+        let res = solve(hdag.clone(), &p.machine, &p.db, &parts, cfg);
+        t.row(&[
+            merge.to_string(),
+            format!("{:.4}", res.best_cost),
+            format!("{:.2}", 100.0 * (base - res.best_cost) / res.best_cost),
+        ]);
+    }
+    t.print();
+
+    println!("\n== ablation 3: caching policy (homogeneous b=1024) ==");
+    let mut t = Table::new(&["policy", "makespan s", "GFLOPS", "transferred MB"]);
+    let mut dag = cholesky::root(n);
+    cholesky::partition_uniform(&mut dag, 1024);
+    for cp in [CachePolicy::WriteBack, CachePolicy::WriteThrough, CachePolicy::WriteAround] {
+        let sched = simulate(&dag, &p.machine, &p.db, sim.with_cache(cp));
+        let r = report(&dag, &sched);
+        t.row(&[
+            cp.name().to_string(),
+            format!("{:.4}", r.makespan),
+            format!("{:.1}", r.gflops),
+            format!("{:.1}", r.transfer_bytes as f64 / 1e6),
+        ]);
+    }
+    t.print();
+
+    println!("\n== ablation 4: iterative (offline) vs constructive (online, paper §4) ==");
+    {
+        use hesp::coordinator::constructive::{schedule_online, OnlineConfig};
+        use std::time::Instant;
+        let mut t = Table::new(&["scheme", "makespan s", "improve %", "decision time"]);
+        let t0 = Instant::now();
+        let res = solve(hdag.clone(), &p.machine, &p.db, &parts, SolverConfig::all_soft(sim, iters, 128));
+        let iter_time = t0.elapsed().as_secs_f64();
+        t.row(&[
+            format!("iterative({iters})"),
+            format!("{:.4}", res.best_cost),
+            format!("{:.2}", 100.0 * (base - res.best_cost) / res.best_cost),
+            format!("{iter_time:.2}s"),
+        ]);
+        let t0 = Instant::now();
+        let on = schedule_online(&hdag, &p.machine, &p.db, &parts, OnlineConfig::new(sim, 128));
+        let on_time = t0.elapsed().as_secs_f64();
+        t.row(&[
+            format!("constructive({} splits)", on.splits),
+            format!("{:.4}", on.schedule.makespan),
+            format!("{:.2}", 100.0 * (base - on.schedule.makespan) / on.schedule.makespan),
+            format!("{on_time:.2}s"),
+        ]);
+        t.print();
+        println!("(the paper positions the iterative solver as the bound-explorer and");
+        println!(" the constructive one as what a real runtime would implement)");
+    }
+
+    println!("\n== ablation 5: iteration budget ==");
+    let mut t = Table::new(&["iters", "best makespan s", "improve %"]);
+    for it in [10usize, 40, 120, 300] {
+        let cfg = SolverConfig::all_soft(sim, it, 128);
+        let res = solve(hdag.clone(), &p.machine, &p.db, &parts, cfg);
+        t.row(&[
+            it.to_string(),
+            format!("{:.4}", res.best_cost),
+            format!("{:.2}", 100.0 * (base - res.best_cost) / res.best_cost),
+        ]);
+    }
+    t.print();
+}

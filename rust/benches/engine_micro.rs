@@ -1,0 +1,62 @@
+//! Engine microbenchmarks — the §Perf hot paths: dependence derivation,
+//! simulation throughput per policy, coherence closure queries, and the
+//! solver's candidate collection. Used before/after every optimization in
+//! EXPERIMENTS.md §Perf.
+
+use hesp::bench::Bench;
+use hesp::config::Platform;
+use hesp::coordinator::coherence::{CachePolicy, Coherence};
+use hesp::coordinator::engine::{simulate, SimConfig};
+use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::region::Region;
+use hesp::coordinator::solver::{solve, SolverConfig};
+
+fn main() {
+    let p = Platform::from_file("configs/bujaruelo.toml").expect("config");
+
+    // -- dependence derivation at three scales --
+    for (n, b) in [(16_384u32, 1_024u32), (32_768, 1_024), (32_768, 512)] {
+        let mut dag = cholesky::root(n);
+        cholesky::partition_uniform(&mut dag, b);
+        let tasks = dag.frontier().len();
+        Bench::new(&format!("flat_dag n={n} b={b} ({tasks} tasks)")).samples(5).run(|| dag.flat_dag());
+    }
+
+    // -- simulation throughput per policy (n=32768, b=1024: 5984 tasks) --
+    let mut dag = cholesky::root(32_768);
+    cholesky::partition_uniform(&mut dag, 1_024);
+    for (o, s, label) in [
+        (Ordering::Fcfs, ProcSelect::EarliestIdle, "FCFS/EIT-P"),
+        (Ordering::Fcfs, ProcSelect::Random, "FCFS/R-P"),
+        (Ordering::PriorityList, ProcSelect::EarliestFinish, "PL/EFT-P"),
+    ] {
+        let sim = SimConfig::new(SchedConfig::new(o, s)).with_elem_bytes(p.elem_bytes);
+        Bench::new(&format!("simulate 5984 tasks {label}")).samples(5).run(|| simulate(&dag, &p.machine, &p.db, sim));
+    }
+
+    // -- coherence closure under deep nesting --
+    Bench::new("coherence write closure (4-level nest)").samples(10).run(|| {
+        let mut coh = Coherence::new(4, 0, CachePolicy::WriteBack, vec![u64::MAX; 4], 4);
+        let mut blocks = Vec::new();
+        for level in [4096u32, 1024, 256, 64] {
+            for i in 0..(4096 / level).min(8) {
+                blocks.push(coh.register(Region::new(0, i * level, (i + 1) * level, 0, level)));
+            }
+        }
+        for (k, &b) in blocks.iter().enumerate() {
+            coh.complete_write(b, k % 4);
+        }
+        coh
+    });
+
+    // -- one full solver iteration loop (collect+apply dominated) --
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(p.elem_bytes);
+    let mut small = cholesky::root(16_384);
+    cholesky::partition_uniform(&mut small, 2_048);
+    let parts = PartitionerSet::standard();
+    Bench::new("solver 20 iterations (16384/2048 start)").samples(3).run(|| {
+        solve(small.clone(), &p.machine, &p.db, &parts, SolverConfig::all_soft(sim, 20, 128))
+    });
+}

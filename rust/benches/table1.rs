@@ -1,0 +1,77 @@
+//! TABLE 1 regenerator: for each of the 8 scheduling configurations on
+//! BUJARUELO (n=32768 f32) and ODROID (n=8192 f64), the best homogeneous
+//! tiling vs the heterogeneous partition found by the iterative
+//! scheduler-partitioner (All/Soft), with the paper's companion metrics:
+//! average load, optimal/average block size and DAG depth.
+//!
+//! Flags: --iters N (default 250), --quick (smaller problems for CI).
+
+use hesp::bench::Table;
+use hesp::config::Platform;
+use hesp::coordinator::energy::Objective;
+use hesp::coordinator::engine::SimConfig;
+use hesp::coordinator::metrics::report;
+use hesp::coordinator::partitioners::PartitionerSet;
+use hesp::coordinator::policies::SchedConfig;
+use hesp::coordinator::solver::{best_homogeneous, solve, SolverConfig};
+use hesp::util::cli::Args;
+
+fn run_platform(config: &str, n: u32, tiles: &[u32], min_edge: u32, iters: usize, csv: &mut String) {
+    let p = Platform::from_file(config).expect("config");
+    println!(
+        "\n== TABLE 1 — {} ({}x{} Cholesky, f{}) ==",
+        p.machine.name,
+        n,
+        n,
+        p.elem_bytes * 8
+    );
+    let mut table = Table::new(&[
+        "Config", "Hom GFLOPS", "Hom load %", "Hom block", "Het GFLOPS", "Improve %", "Het load %", "Het avg blk", "Depth",
+    ]);
+    let parts = PartitionerSet::standard();
+    for row in SchedConfig::table1_rows() {
+        let sim = SimConfig::new(row).with_elem_bytes(p.elem_bytes);
+        let (hb, hdag, hsched) =
+            best_homogeneous(n, tiles, &p.machine, &p.db, sim, Objective::Makespan).expect("legal tiles");
+        let hr = report(&hdag, &hsched);
+        let cfg = SolverConfig::all_soft(sim, iters, min_edge);
+        let res = solve(hdag, &p.machine, &p.db, &parts, cfg);
+        let er = report(&res.best_dag, &res.best_schedule);
+        let improve = 100.0 * (er.gflops - hr.gflops) / hr.gflops;
+        table.row(&[
+            row.name(),
+            format!("{:.2}", hr.gflops),
+            format!("{:.1}", hr.avg_load_pct),
+            hb.to_string(),
+            format!("{:.2}", er.gflops),
+            format!("{:.2}", improve),
+            format!("{:.1}", er.avg_load_pct),
+            format!("{:.1}", er.avg_block_size),
+            er.dag_depth.to_string(),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{:.2},{:.1},{},{:.2},{:.2},{:.1},{:.1},{}\n",
+            p.machine.name, row.name(), hr.gflops, hr.avg_load_pct, hb, er.gflops, improve, er.avg_load_pct, er.avg_block_size, er.dag_depth
+        ));
+        // paper invariant: heterogeneous never loses
+        assert!(er.gflops >= hr.gflops * 0.999, "{}: heterog must not lose", row.name());
+    }
+    table.print();
+}
+
+fn main() {
+    let args = Args::from_env();
+    let iters = args.usize_or("iters", 250);
+    let quick = args.has("quick");
+    let mut csv = String::from("platform,config,hom_gflops,hom_load,hom_block,het_gflops,improve_pct,het_load,het_avg_block,depth\n");
+    if quick {
+        run_platform("configs/bujaruelo.toml", 16_384, &[512, 1024, 2048, 4096], 128, iters.min(120), &mut csv);
+        run_platform("configs/odroid.toml", 4_096, &[128, 256, 512, 1024], 64, iters.min(120), &mut csv);
+    } else {
+        run_platform("configs/bujaruelo.toml", 32_768, &[512, 1024, 2048, 4096], 128, iters, &mut csv);
+        run_platform("configs/odroid.toml", 8_192, &[128, 256, 512, 1024], 64, iters, &mut csv);
+    }
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/table1.csv", csv).ok();
+    println!("\nCSV -> bench_out/table1.csv");
+}

@@ -1,0 +1,199 @@
+//! Minimal measurement harness (criterion is unavailable offline).
+//!
+//! `rust/benches/*.rs` use [`Bench`] both to time hot paths (warmup +
+//! repeated samples, median/mean/stddev) and to print the experiment
+//! tables/figures the paper reports. Results can also be dumped as JSON
+//! for EXPERIMENTS.md bookkeeping.
+
+use std::time::Instant;
+
+/// Timing statistics over n samples.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            mean_s: mean,
+            median_s: if n % 2 == 1 { xs[n / 2] } else { 0.5 * (xs[n / 2 - 1] + xs[n / 2]) },
+            min_s: xs[0],
+            max_s: xs[n - 1],
+            stddev_s: var.sqrt(),
+        }
+    }
+}
+
+/// A named bench run.
+pub struct Bench {
+    pub name: String,
+    /// Minimum number of timed samples.
+    pub samples: usize,
+    /// Warmup iterations before timing.
+    pub warmup: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench { name: name.to_string(), samples: 10, warmup: 2 }
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(1);
+        self
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    /// Time `f` (its return value is black-boxed) and print one line.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut xs = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            xs.push(t0.elapsed().as_secs_f64());
+        }
+        let st = Stats::from_samples(xs);
+        println!(
+            "bench {:<40} median {:>12}  mean {:>12}  (n={}, sd {:.1}%)",
+            self.name,
+            fmt_time(st.median_s),
+            fmt_time(st.mean_s),
+            st.n,
+            if st.mean_s > 0.0 { 100.0 * st.stddev_s / st.mean_s } else { 0.0 },
+        );
+        st
+    }
+}
+
+/// Opaque value sink (prevents the optimizer from deleting the work).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Simple fixed-width table printer for experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median_s, 3.0);
+        assert_eq!(s.mean_s, 3.0);
+        assert_eq!((s.min_s, s.max_s), (1.0, 5.0));
+        let s2 = Stats::from_samples(vec![1.0, 2.0]);
+        assert_eq!(s2.median_s, 1.5);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut calls = 0;
+        let st = Bench::new("noop").samples(3).warmup(1).run(|| calls += 1);
+        assert_eq!(st.n, 3);
+        assert_eq!(calls, 4);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "bbb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| a | bbb |"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,349 @@
+//! Platform/experiment configuration loading (`configs/*.toml`).
+//!
+//! A platform file describes memory spaces, links, processor types with
+//! their performance curves, and processor instances — everything HeSP
+//! needs as its "hardware platform description" input (§2). Example:
+//!
+//! ```toml
+//! name = "bujaruelo"
+//! main_space = "host"
+//! elem_bytes = 4
+//!
+//! [[memory]]
+//! name = "host"
+//! capacity_gb = 256.0
+//!
+//! [[link]]
+//! from = "host"
+//! to = "gtx980a_mem"
+//! latency_us = 10.0
+//! bandwidth_gbs = 12.0
+//!
+//! [[proctype]]
+//! name = "xeon"
+//! busy_watts = 9.0
+//! idle_watts = 2.0
+//! overhead_us = 4.0
+//!
+//! [perf.xeon.gemm]        # Saturating curve
+//! peak = 43.0
+//! half = 90.0
+//! exponent = 1.7
+//!
+//! [perf.xeon.default]     # fallback for unlisted kinds
+//! peak = 25.0
+//! half = 90.0
+//! exponent = 1.7
+//!
+//! [[processor]]
+//! prefix = "xeon"
+//! count = 28
+//! type = "xeon"
+//! space = "host"
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
+use crate::coordinator::platform::{Link, Machine, MemSpace, ProcType, Processor};
+use crate::coordinator::task::TaskKind;
+use crate::util::toml::{parse, Toml};
+
+/// A loaded platform: machine topology + performance database.
+pub struct Platform {
+    pub machine: Machine,
+    pub db: PerfDb,
+    /// Bytes per element for this platform's experiments (4 = f32, 8 = f64).
+    pub elem_bytes: u64,
+}
+
+impl Platform {
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Platform> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Platform::from_str(&text)
+    }
+
+    pub fn from_str(text: &str) -> Result<Platform> {
+        let doc = parse(text).map_err(|e| anyhow!(e))?;
+        build(&doc)
+    }
+}
+
+fn get_str<'a>(t: &'a BTreeMap<String, Toml>, k: &str) -> Result<&'a str> {
+    t.get(k).and_then(|v| v.as_str()).ok_or_else(|| anyhow!("missing string key '{k}'"))
+}
+
+fn get_f64(t: &BTreeMap<String, Toml>, k: &str) -> Result<f64> {
+    t.get(k).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("missing number key '{k}'"))
+}
+
+fn build(doc: &Toml) -> Result<Platform> {
+    let name = doc.get("name").and_then(|v| v.as_str()).unwrap_or("unnamed").to_string();
+    let elem_bytes = doc.get("elem_bytes").and_then(|v| v.as_i64()).unwrap_or(4) as u64;
+
+    // ---- memory spaces ----
+    let mems = doc
+        .get("memory")
+        .and_then(|v| v.as_table_arr())
+        .ok_or_else(|| anyhow!("no [[memory]] sections"))?;
+    let mut spaces = Vec::new();
+    let mut space_ids: BTreeMap<String, usize> = BTreeMap::new();
+    for m in mems {
+        let nm = get_str(m, "name")?.to_string();
+        let capacity = match m.get("capacity_gb").and_then(|v| v.as_f64()) {
+            Some(gb) => (gb * (1u64 << 30) as f64) as u64,
+            None => u64::MAX,
+        };
+        let id = spaces.len();
+        if space_ids.insert(nm.clone(), id).is_some() {
+            bail!("duplicate memory space '{nm}'");
+        }
+        spaces.push(MemSpace { id, name: nm, capacity });
+    }
+    let main_name = get_str(doc.as_table().unwrap(), "main_space")?;
+    let main_space = *space_ids.get(main_name).ok_or_else(|| anyhow!("unknown main_space '{main_name}'"))?;
+
+    // ---- links ----
+    let mut links = Vec::new();
+    if let Some(ls) = doc.get("link").and_then(|v| v.as_table_arr()) {
+        for l in ls {
+            let from = *space_ids.get(get_str(l, "from")?).ok_or_else(|| anyhow!("link from unknown space"))?;
+            let to = *space_ids.get(get_str(l, "to")?).ok_or_else(|| anyhow!("link to unknown space"))?;
+            let latency = get_f64(l, "latency_us")? * 1e-6;
+            let bandwidth = get_f64(l, "bandwidth_gbs")? * 1e9;
+            let bidir = l.get("bidirectional").and_then(|v| v.as_bool()).unwrap_or(true);
+            let id = links.len();
+            links.push(Link { id, from, to, latency, bandwidth });
+            if bidir {
+                let id = links.len();
+                links.push(Link { id, from: to, to: from, latency, bandwidth });
+            }
+        }
+    }
+
+    // ---- processor types + perf models ----
+    let pts = doc
+        .get("proctype")
+        .and_then(|v| v.as_table_arr())
+        .ok_or_else(|| anyhow!("no [[proctype]] sections"))?;
+    let mut proc_types = Vec::new();
+    let mut type_ids: BTreeMap<String, usize> = BTreeMap::new();
+    let mut db = PerfDb::new();
+    for pt in pts {
+        let nm = get_str(pt, "name")?.to_string();
+        let id = proc_types.len();
+        if type_ids.insert(nm.clone(), id).is_some() {
+            bail!("duplicate proctype '{nm}'");
+        }
+        proc_types.push(ProcType {
+            id,
+            name: nm.clone(),
+            busy_watts: pt.get("busy_watts").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            idle_watts: pt.get("idle_watts").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        });
+        if let Some(oh) = pt.get("overhead_us").and_then(|v| v.as_f64()) {
+            db.set_overhead(id, oh * 1e-6);
+        }
+        // perf.<type>.<task> sections
+        if let Some(perf) = doc.get_path(&format!("perf.{nm}")) {
+            let table = perf.as_table().ok_or_else(|| anyhow!("perf.{nm} is not a table"))?;
+            for (task_name, curve_toml) in table {
+                let curve = parse_curve(curve_toml).with_context(|| format!("perf.{nm}.{task_name}"))?;
+                if task_name == "default" {
+                    db.set_fallback(id, curve);
+                } else {
+                    let kind = TaskKind::from_name(task_name)
+                        .ok_or_else(|| anyhow!("unknown task kind '{task_name}' in perf.{nm}"))?;
+                    db.set(id, kind, curve);
+                }
+            }
+        } else {
+            bail!("no [perf.{nm}.*] sections for proctype '{nm}'");
+        }
+    }
+
+    // ---- processors ----
+    let ps = doc
+        .get("processor")
+        .and_then(|v| v.as_table_arr())
+        .ok_or_else(|| anyhow!("no [[processor]] sections"))?;
+    let mut procs = Vec::new();
+    for p in ps {
+        let prefix = get_str(p, "prefix")?;
+        let count = p.get("count").and_then(|v| v.as_i64()).unwrap_or(1) as usize;
+        let ptype = *type_ids.get(get_str(p, "type")?).ok_or_else(|| anyhow!("processor of unknown type"))?;
+        let space = *space_ids.get(get_str(p, "space")?).ok_or_else(|| anyhow!("processor in unknown space"))?;
+        for i in 0..count {
+            let id = procs.len();
+            procs.push(Processor { id, name: format!("{prefix}{i}"), ptype, space });
+        }
+    }
+
+    let machine = Machine { name, spaces, links, proc_types, procs, main_space };
+    machine.validate().map_err(|e| anyhow!(e))?;
+    Ok(Platform { machine, db, elem_bytes })
+}
+
+fn parse_curve(t: &Toml) -> Result<PerfCurve> {
+    let table = t.as_table().ok_or_else(|| anyhow!("curve is not a table"))?;
+    if let Some(points) = table.get("points") {
+        let arr = points.as_arr().ok_or_else(|| anyhow!("points must be an array"))?;
+        let mut pts = Vec::new();
+        for p in arr {
+            let pair = p.as_arr().ok_or_else(|| anyhow!("point must be [edge, gflops]"))?;
+            if pair.len() != 2 {
+                bail!("point must be [edge, gflops]");
+            }
+            pts.push((pair[0].as_f64().unwrap_or(0.0), pair[1].as_f64().unwrap_or(0.0)));
+        }
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+        if pts.is_empty() {
+            bail!("empty points table");
+        }
+        return Ok(PerfCurve::Table { points: pts });
+    }
+    if let Some(g) = table.get("gflops").and_then(|v| v.as_f64()) {
+        return Ok(PerfCurve::Const { gflops: g });
+    }
+    let peak = get_f64(table, "peak")?;
+    let half = get_f64(table, "half")?;
+    let exponent = table.get("exponent").and_then(|v| v.as_f64()).unwrap_or(2.0);
+    Ok(PerfCurve::Saturating { peak, half, exponent })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TOY: &str = r#"
+name = "toy"
+main_space = "host"
+elem_bytes = 8
+
+[[memory]]
+name = "host"
+
+[[memory]]
+name = "gpu_mem"
+capacity_gb = 4.0
+
+[[link]]
+from = "host"
+to = "gpu_mem"
+latency_us = 10.0
+bandwidth_gbs = 12.0
+
+[[proctype]]
+name = "cpu"
+busy_watts = 20.0
+idle_watts = 5.0
+overhead_us = 2.0
+
+[perf.cpu.gemm]
+peak = 40.0
+half = 64.0
+exponent = 2.0
+
+[perf.cpu.default]
+gflops = 10.0
+
+[[proctype]]
+name = "gpu"
+busy_watts = 180.0
+idle_watts = 30.0
+
+[perf.gpu.default]
+points = [[128, 100.0], [1024, 900.0]]
+
+[[processor]]
+prefix = "c"
+count = 4
+type = "cpu"
+space = "host"
+
+[[processor]]
+prefix = "g"
+count = 1
+type = "gpu"
+space = "gpu_mem"
+"#;
+
+    #[test]
+    fn parses_toy_platform() {
+        let p = Platform::from_str(TOY).unwrap();
+        assert_eq!(p.machine.name, "toy");
+        assert_eq!(p.machine.spaces.len(), 2);
+        assert_eq!(p.machine.links.len(), 2, "bidirectional default");
+        assert_eq!(p.machine.procs.len(), 5);
+        assert_eq!(p.elem_bytes, 8);
+        assert_eq!(p.machine.main_space, 0);
+        assert_eq!(p.machine.spaces[1].capacity, 4 << 30);
+    }
+
+    #[test]
+    fn perf_models_resolve() {
+        let p = Platform::from_str(TOY).unwrap();
+        let g = p.db.curve(0, TaskKind::Gemm).gflops(64.0);
+        assert!((g - 20.0).abs() < 1e-9, "saturating half point");
+        assert_eq!(p.db.curve(0, TaskKind::Trsm).gflops(64.0), 10.0, "fallback");
+        assert_eq!(p.db.curve(1, TaskKind::Gemm).gflops(64.0), 100.0, "table clamp");
+        // overhead applied for cpu
+        let t = p.db.time(0, TaskKind::Trsm, 64.0, 10e9);
+        assert!((t - (1.0 + 2e-6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_missing_perf() {
+        let bad = r#"
+name = "x"
+main_space = "host"
+[[memory]]
+name = "host"
+[[proctype]]
+name = "cpu"
+[[processor]]
+prefix = "c"
+type = "cpu"
+space = "host"
+"#;
+        assert!(Platform::from_str(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_spaces() {
+        let bad = r#"
+name = "x"
+main_space = "nope"
+[[memory]]
+name = "host"
+[[proctype]]
+name = "cpu"
+[perf.cpu.default]
+gflops = 1.0
+[[processor]]
+prefix = "c"
+type = "cpu"
+space = "host"
+"#;
+        assert!(Platform::from_str(bad).is_err());
+    }
+
+    #[test]
+    fn shipped_configs_load() {
+        // every file in configs/ must parse and validate
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+        let mut n = 0;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.extension().map(|e| e == "toml").unwrap_or(false) {
+                Platform::from_file(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                n += 1;
+            }
+        }
+        assert!(n >= 3, "expected >= 3 shipped platform configs, found {n}");
+    }
+}

@@ -1,0 +1,327 @@
+//! The data DAG: every distinct data block ever referenced, related by
+//! nesting, plus *intersection descriptors* for partially-overlapping
+//! blocks (paper Fig. 4: a block simultaneously divided by two tilings of
+//! non-divisible grain gets a common child per pairwise overlap).
+//!
+//! Nodes are created lazily as partitioners reference new regions; the
+//! graph is append-only (merging tasks leaves stale blocks in place — they
+//! are simply never referenced again, matching the paper's append-only
+//! descriptor store).
+
+
+use crate::util::fxhash::FxHashMap;
+
+use super::region::Region;
+
+pub type BlockId = usize;
+
+/// Spatial index over regions, exploiting that partitioner-emitted tiles
+/// are *grain-aligned*: a tile of shape (h, w) sits at offsets that are
+/// multiples of (h, w) (divisor-based partitioning guarantees it). Aligned
+/// regions live in per-grain grids with O(cells-overlapped) queries;
+/// anything irregular (e.g. Fig. 4 intersection descriptors) falls back to
+/// a per-matrix linear list. This turns dependence derivation and
+/// coherence closure queries from O(#blocks) to near O(#overlaps).
+#[derive(Debug, Clone, Default)]
+pub struct GrainIndex {
+    /// (matrix, h, w) -> (i, j) cell -> payload.
+    grids: FxHashMap<(u32, u32, u32), FxHashMap<(u32, u32), usize>>,
+    /// Distinct grains per matrix (small: one per partition granularity).
+    grains: FxHashMap<u32, Vec<(u32, u32)>>,
+    /// Non-grain-aligned regions, scanned linearly.
+    irregular: FxHashMap<u32, Vec<(Region, usize)>>,
+}
+
+impl GrainIndex {
+    pub fn new() -> GrainIndex {
+        GrainIndex::default()
+    }
+
+    fn aligned(r: &Region) -> bool {
+        r.r0 % r.rows() == 0 && r.c0 % r.cols() == 0
+    }
+
+    /// Insert `region` with payload `id`. Last insert for a cell wins
+    /// (regions are deduplicated by callers).
+    pub fn insert(&mut self, region: Region, id: usize) {
+        if Self::aligned(&region) {
+            let (h, w) = (region.rows(), region.cols());
+            let key = (region.matrix, h, w);
+            if !self.grids.contains_key(&key) {
+                self.grains.entry(region.matrix).or_default().push((h, w));
+            }
+            self.grids.entry(key).or_default().insert((region.r0 / h, region.c0 / w), id);
+        } else {
+            self.irregular.entry(region.matrix).or_default().push((region, id));
+        }
+    }
+
+    /// Visit the payloads of all indexed regions intersecting `region`.
+    pub fn visit_intersecting<F: FnMut(usize)>(&self, region: &Region, mut f: F) {
+        if let Some(grains) = self.grains.get(&region.matrix) {
+            for &(h, w) in grains {
+                let grid = &self.grids[&(region.matrix, h, w)];
+                // cheap path: if the query covers more cells than the grid
+                // holds, iterate the grid instead of the cell range
+                let cells = ((region.r1 - 1) / h - region.r0 / h + 1) as usize
+                    * ((region.c1 - 1) / w - region.c0 / w + 1) as usize;
+                if cells > grid.len() {
+                    for (&(i, j), &id) in grid {
+                        let cell = Region::new(region.matrix, i * h, (i + 1) * h, j * w, (j + 1) * w);
+                        if cell.intersects(region) {
+                            f(id);
+                        }
+                    }
+                } else {
+                    for i in region.r0 / h..=(region.r1 - 1) / h {
+                        for j in region.c0 / w..=(region.c1 - 1) / w {
+                            if let Some(&id) = grid.get(&(i, j)) {
+                                f(id);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(list) = self.irregular.get(&region.matrix) {
+            for (r, id) in list {
+                if r.intersects(region) {
+                    f(*id);
+                }
+            }
+        }
+    }
+}
+
+/// One data-block descriptor.
+#[derive(Debug, Clone)]
+pub struct BlockNode {
+    pub id: BlockId,
+    pub region: Region,
+    /// Blocks strictly containing this one (bottom-up links).
+    pub parents: Vec<BlockId>,
+    /// Blocks strictly contained in this one (top-down links).
+    pub children: Vec<BlockId>,
+    /// True if this node was synthesized as the overlap of two
+    /// partially-overlapping blocks (Fig. 4's green descriptors).
+    pub is_intersection: bool,
+}
+
+/// Append-only registry of data blocks with containment/intersection
+/// structure.
+#[derive(Debug, Clone, Default)]
+pub struct DataDag {
+    blocks: Vec<BlockNode>,
+    index: FxHashMap<Region, BlockId>,
+    spatial: GrainIndex,
+}
+
+impl DataDag {
+    pub fn new() -> DataDag {
+        DataDag::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn block(&self, id: BlockId) -> &BlockNode {
+        &self.blocks[id]
+    }
+
+    pub fn lookup(&self, region: &Region) -> Option<BlockId> {
+        self.index.get(region).copied()
+    }
+
+    /// Insert (or find) the block for `region`; creates intersection
+    /// descriptors against partially-overlapping existing blocks.
+    pub fn insert(&mut self, region: Region) -> BlockId {
+        if let Some(&id) = self.index.get(&region) {
+            return id;
+        }
+        let id = self.blocks.len();
+        self.blocks.push(BlockNode { id, region, parents: Vec::new(), children: Vec::new(), is_intersection: false });
+        self.index.insert(region, id);
+
+        // relate against existing blocks intersecting this one
+        let mut touching: Vec<BlockId> = Vec::new();
+        self.spatial.visit_intersecting(&region, |b| touching.push(b));
+        let mut overlaps: Vec<Region> = Vec::new();
+        for other in touching {
+            let oregion = self.blocks[other].region;
+            if oregion == region {
+                continue;
+            }
+            if oregion.contains(&region) {
+                self.blocks[other].children.push(id);
+                self.blocks[id].parents.push(other);
+            } else if region.contains(&oregion) {
+                self.blocks[id].children.push(other);
+                self.blocks[other].parents.push(id);
+            } else if let Some(ix) = region.intersection(&oregion) {
+                // partial overlap: synthesize a common child (Fig. 4)
+                overlaps.push(ix);
+            }
+        }
+        self.spatial.insert(region, id);
+        for ix in overlaps {
+            let ix_id = self.insert(ix);
+            self.blocks[ix_id].is_intersection = true;
+        }
+        id
+    }
+
+    /// All blocks whose region intersects `region` (including nested and
+    /// partially-overlapping ones) — the invalidation closure used by the
+    /// coherence machinery.
+    pub fn intersecting(&self, region: &Region) -> Vec<BlockId> {
+        let mut out = Vec::new();
+        self.spatial.visit_intersecting(region, |b| out.push(b));
+        out.sort_unstable();
+        out
+    }
+
+    /// Blocks fully contained in `region` (top-down validation closure).
+    pub fn contained_in(&self, region: &Region) -> Vec<BlockId> {
+        let mut out = Vec::new();
+        self.spatial.visit_intersecting(region, |b| {
+            if region.contains(&self.blocks[b].region) {
+                out.push(b);
+            }
+        });
+        out.sort_unstable();
+        out
+    }
+
+    /// Blocks containing `region` (bottom-up propagation closure).
+    pub fn containing(&self, region: &Region) -> Vec<BlockId> {
+        let mut out = Vec::new();
+        self.spatial.visit_intersecting(region, |b| {
+            if self.blocks[b].region.contains(region) {
+                out.push(b);
+            }
+        });
+        out.sort_unstable();
+        out
+    }
+
+    /// Longest nesting chain (a depth measure of the data hierarchy).
+    pub fn nesting_depth(&self) -> usize {
+        let mut memo = vec![0usize; self.blocks.len()];
+        let mut order: Vec<BlockId> = (0..self.blocks.len()).collect();
+        // sort by area ascending: children before parents
+        order.sort_by_key(|&b| self.blocks[b].region.area());
+        let mut best = 0;
+        for b in order {
+            let d = self.blocks[b].children.iter().map(|&c| memo[c] + 1).max().unwrap_or(1);
+            memo[b] = d;
+            best = best.max(d);
+        }
+        best
+    }
+
+    pub fn intersection_count(&self) -> usize {
+        self.blocks.iter().filter(|b| b.is_intersection).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(r0: u32, r1: u32, c0: u32, c1: u32) -> Region {
+        Region::new(0, r0, r1, c0, c1)
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let mut d = DataDag::new();
+        let a = d.insert(r(0, 8, 0, 8));
+        let b = d.insert(r(0, 8, 0, 8));
+        assert_eq!(a, b);
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn nesting_links() {
+        let mut d = DataDag::new();
+        let big = d.insert(r(0, 8, 0, 8));
+        let small = d.insert(r(0, 4, 0, 4));
+        assert_eq!(d.block(big).children, vec![small]);
+        assert_eq!(d.block(small).parents, vec![big]);
+        assert_eq!(d.nesting_depth(), 2);
+    }
+
+    #[test]
+    fn insert_parent_after_child() {
+        let mut d = DataDag::new();
+        let small = d.insert(r(2, 4, 2, 4));
+        let big = d.insert(r(0, 8, 0, 8));
+        assert_eq!(d.block(big).children, vec![small]);
+        assert_eq!(d.block(small).parents, vec![big]);
+    }
+
+    #[test]
+    fn fig4_intersection_descriptor() {
+        // Two tilings of a 6x6 block with grains 2 and 3: tile (2..4,2..4)
+        // and tile (0..3,0..3) partially overlap -> descriptor (2..3,2..3).
+        let mut d = DataDag::new();
+        d.insert(r(0, 6, 0, 6));
+        let yellow = d.insert(r(2, 4, 2, 4));
+        let blue = d.insert(r(0, 3, 0, 3));
+        let ix = d.lookup(&r(2, 3, 2, 3)).expect("intersection descriptor created");
+        assert!(d.block(ix).is_intersection);
+        assert!(d.block(ix).parents.contains(&yellow));
+        assert!(d.block(ix).parents.contains(&blue));
+        assert_eq!(d.intersection_count(), 1);
+    }
+
+    #[test]
+    fn intersection_inserted_recursively() {
+        let mut d = DataDag::new();
+        d.insert(r(0, 4, 0, 4));
+        d.insert(r(2, 6, 2, 6));
+        // overlap (2..4,2..4) created; inserting (3..5,3..5) overlaps it too
+        d.insert(r(3, 5, 3, 5));
+        assert!(d.lookup(&r(2, 4, 2, 4)).is_some());
+        assert!(d.lookup(&r(3, 4, 3, 4)).is_some());
+    }
+
+    #[test]
+    fn closures_are_geometric() {
+        let mut d = DataDag::new();
+        let big = d.insert(r(0, 8, 0, 8));
+        let q1 = d.insert(r(0, 4, 0, 4));
+        let q4 = d.insert(r(4, 8, 4, 8));
+        let probe = r(0, 4, 0, 4);
+        let inter = d.intersecting(&probe);
+        assert!(inter.contains(&big) && inter.contains(&q1) && !inter.contains(&q4));
+        assert_eq!(d.contained_in(&probe), vec![q1]);
+        let cont = d.containing(&probe);
+        assert!(cont.contains(&big) && cont.contains(&q1));
+    }
+
+    #[test]
+    fn matrices_are_disjoint_worlds() {
+        let mut d = DataDag::new();
+        let a = d.insert(Region::new(0, 0, 8, 0, 8));
+        let b = d.insert(Region::new(1, 0, 8, 0, 8));
+        assert!(d.block(a).parents.is_empty() && d.block(a).children.is_empty());
+        assert!(d.block(b).parents.is_empty() && d.block(b).children.is_empty());
+        assert_eq!(d.intersecting(&Region::new(0, 0, 8, 0, 8)), vec![a]);
+    }
+
+    #[test]
+    fn three_level_nesting_depth() {
+        let mut d = DataDag::new();
+        d.insert(r(0, 16, 0, 16));
+        d.insert(r(0, 8, 0, 8));
+        d.insert(r(0, 4, 0, 4));
+        d.insert(r(8, 16, 8, 16));
+        assert_eq!(d.nesting_depth(), 3);
+    }
+}

@@ -1,0 +1,143 @@
+//! Energy model + objective (paper §2: "energy consumption minimization is
+//! also supported").
+//!
+//! Per-processor power is two-state (busy/idle watts, from the platform's
+//! processor types); interconnect energy is charged per byte moved.
+
+use super::engine::Schedule;
+use super::platform::Machine;
+
+/// Energy accounting for one schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyReport {
+    /// Joules burnt by busy processors.
+    pub busy_j: f64,
+    /// Joules burnt idling (until the makespan).
+    pub idle_j: f64,
+    /// Joules spent moving data.
+    pub transfer_j: f64,
+}
+
+impl EnergyReport {
+    pub fn total(&self) -> f64 {
+        self.busy_j + self.idle_j + self.transfer_j
+    }
+
+    /// Energy-delay product (a common combined objective).
+    pub fn edp(&self, makespan: f64) -> f64 {
+        self.total() * makespan
+    }
+}
+
+/// Default interconnect energy cost (J/byte): ~20 pJ/bit DRAM+link class.
+pub const DEFAULT_J_PER_BYTE: f64 = 2.5e-9;
+
+/// Compute the energy report for `sched` on `machine`.
+pub fn energy(sched: &Schedule, machine: &Machine, j_per_byte: f64) -> EnergyReport {
+    let mut busy_j = 0.0;
+    let mut idle_j = 0.0;
+    for p in &machine.procs {
+        let t = &machine.proc_types[p.ptype];
+        let busy = sched.proc_busy.get(p.id).copied().unwrap_or(0.0);
+        busy_j += busy * t.busy_watts;
+        idle_j += (sched.makespan - busy).max(0.0) * t.idle_watts;
+    }
+    EnergyReport { busy_j, idle_j, transfer_j: sched.transfer_bytes as f64 * j_per_byte }
+}
+
+/// Optimization objective for the iterative solver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimize makespan (the paper's default).
+    Makespan,
+    /// Minimize total energy.
+    Energy,
+    /// Minimize energy-delay product.
+    Edp,
+}
+
+impl Objective {
+    pub fn from_name(s: &str) -> Option<Objective> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "makespan" | "perf" | "performance" => Objective::Makespan,
+            "energy" => Objective::Energy,
+            "edp" => Objective::Edp,
+            _ => return None,
+        })
+    }
+
+    /// Scalar cost of a schedule (lower is better).
+    pub fn cost(&self, sched: &Schedule, machine: &Machine) -> f64 {
+        match self {
+            Objective::Makespan => sched.makespan,
+            Objective::Energy => energy(sched, machine, DEFAULT_J_PER_BYTE).total(),
+            Objective::Edp => energy(sched, machine, DEFAULT_J_PER_BYTE).edp(sched.makespan),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{Assignment, Schedule};
+    use crate::coordinator::platform::MachineBuilder;
+
+    fn machine() -> Machine {
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let cpu = b.proc_type("cpu", 100.0, 10.0);
+        b.processors(2, "c", cpu, h);
+        b.build()
+    }
+
+    fn sched(busy0: f64, busy1: f64, makespan: f64, bytes: u64) -> Schedule {
+        Schedule {
+            assignments: vec![Assignment { task: 0, pos: 0, proc: 0, release: 0.0, start: 0.0, end: busy0 }],
+            transfers: vec![],
+            makespan,
+            proc_busy: vec![busy0, busy1],
+            transfer_bytes: bytes,
+        }
+    }
+
+    #[test]
+    fn two_state_power_accounting() {
+        let m = machine();
+        let s = sched(2.0, 1.0, 2.0, 0);
+        let e = energy(&s, &m, 0.0);
+        assert!((e.busy_j - 300.0).abs() < 1e-9); // (2+1)*100
+        assert!((e.idle_j - 10.0).abs() < 1e-9); // proc1 idle 1s * 10W
+        assert!((e.total() - 310.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_energy_counted() {
+        let m = machine();
+        let s = sched(1.0, 1.0, 1.0, 1_000_000);
+        let e = energy(&s, &m, 2.5e-9);
+        assert!((e.transfer_j - 2.5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objectives_order_differently() {
+        let m = machine();
+        // fast but power-hungry vs slow but efficient
+        let fast = sched(1.0, 1.0, 1.0, 0);
+        let slow = sched(1.5, 0.0, 1.5, 0);
+        assert!(Objective::Makespan.cost(&fast, &m) < Objective::Makespan.cost(&slow, &m));
+        // energy: fast = 200 J; slow = 150*1 busy + idle 10*1.5+... =
+        let ef = Objective::Energy.cost(&fast, &m);
+        let es = Objective::Energy.cost(&slow, &m);
+        assert!(es < ef, "slow run uses less energy ({es} vs {ef})");
+        assert_eq!(Objective::from_name("edp"), Some(Objective::Edp));
+    }
+
+    #[test]
+    fn edp_is_product() {
+        let m = machine();
+        let s = sched(1.0, 1.0, 2.0, 0);
+        let e = energy(&s, &m, DEFAULT_J_PER_BYTE);
+        assert!((e.edp(2.0) - e.total() * 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,152 @@
+//! Schedule/DAG metrics — the columns of Table 1 and the series of
+//! Figs. 2b/5/6.
+
+use super::engine::Schedule;
+use super::taskdag::TaskDag;
+
+/// A Table-1-style report for one (platform, config, partition) run.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub makespan: f64,
+    /// Useful throughput: frontier flops / makespan / 1e9.
+    pub gflops: f64,
+    /// Average processor load in percent.
+    pub avg_load_pct: f64,
+    /// Flops-weighted mean tile edge over frontier tasks (Table 1's
+    /// "Avg. block size": weighting by work matches the paper's averages,
+    /// which stay near the dominant-update grain).
+    pub avg_block_size: f64,
+    /// Max number of nested task clusters (Table 1's "DAG depth").
+    pub dag_depth: u32,
+    pub n_tasks: usize,
+    pub transfer_bytes: u64,
+    pub transfer_count: usize,
+}
+
+/// Compute the report for a simulated schedule of `dag`'s frontier.
+pub fn report(dag: &TaskDag, sched: &Schedule) -> Report {
+    let frontier = dag.frontier();
+    let total_flops: f64 = frontier.iter().map(|&t| dag.task(t).flops).sum();
+    let (mut wsum, mut w) = (0.0f64, 0.0f64);
+    for &t in &frontier {
+        let task = dag.task(t);
+        wsum += task.flops * task.char_edge();
+        w += task.flops;
+    }
+    Report {
+        makespan: sched.makespan,
+        gflops: if sched.makespan > 0.0 { total_flops / sched.makespan / 1e9 } else { 0.0 },
+        avg_load_pct: sched.avg_load() * 100.0,
+        avg_block_size: if w > 0.0 { wsum / w } else { 0.0 },
+        dag_depth: dag.depth(),
+        n_tasks: frontier.len(),
+        transfer_bytes: sched.transfer_bytes,
+        transfer_count: sched.transfers.len(),
+    }
+}
+
+/// Discretized compute-load trace (Fig. 2b): number of busy processors at
+/// `samples` evenly-spaced instants.
+pub fn load_trace(sched: &Schedule, samples: usize) -> Vec<(f64, usize)> {
+    if sched.makespan <= 0.0 || samples == 0 {
+        return Vec::new();
+    }
+    // sweep-line over start/end events, sampled on the grid
+    let mut events: Vec<(f64, i64)> = Vec::with_capacity(sched.assignments.len() * 2);
+    for a in &sched.assignments {
+        events.push((a.start, 1));
+        events.push((a.end, -1));
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let dt = sched.makespan / samples as f64;
+    let mut out = Vec::with_capacity(samples);
+    let mut active = 0i64;
+    let mut ei = 0usize;
+    for k in 0..samples {
+        let t = (k as f64 + 0.5) * dt;
+        while ei < events.len() && events[ei].0 <= t {
+            active += events[ei].1;
+            ei += 1;
+        }
+        out.push((t, active.max(0) as usize));
+    }
+    out
+}
+
+/// Idle fraction during `[t0, t1)` given per-proc busy intervals — used by
+/// the solver to estimate available parallelism around a task.
+pub fn idle_procs_during(sched: &Schedule, n_procs: usize, t0: f64, t1: f64) -> usize {
+    if t1 <= t0 {
+        return 0;
+    }
+    let mut busy = vec![false; n_procs];
+    for a in &sched.assignments {
+        if a.start < t1 && t0 < a.end {
+            busy[a.proc] = true;
+        }
+    }
+    busy.iter().filter(|&&b| !b).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{simulate, SimConfig};
+    use crate::coordinator::partitioners::cholesky;
+    use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
+    use crate::coordinator::platform::{Machine, MachineBuilder};
+    use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+
+    fn setup() -> (Machine, PerfDb) {
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let t = b.proc_type("cpu", 1.0, 0.1);
+        b.processors(4, "c", t, h);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 10.0 });
+        (m, db)
+    }
+
+    #[test]
+    fn report_basics() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(512);
+        cholesky::partition_uniform(&mut dag, 128);
+        let s = simulate(&dag, &m, &db, SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestFinish)));
+        let r = report(&dag, &s);
+        assert!(r.makespan > 0.0);
+        assert!((r.gflops - dag.total_flops() / r.makespan / 1e9).abs() < 1e-9);
+        assert!(r.avg_load_pct > 0.0 && r.avg_load_pct <= 100.0);
+        assert_eq!(r.avg_block_size, 128.0, "uniform tiling: all edges equal");
+        assert_eq!(r.dag_depth, 1);
+        assert_eq!(r.n_tasks, cholesky::task_count(4) as usize);
+    }
+
+    #[test]
+    fn load_trace_bounds() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(512);
+        cholesky::partition_uniform(&mut dag, 64);
+        let s = simulate(&dag, &m, &db, SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestIdle)));
+        let trace = load_trace(&s, 50);
+        assert_eq!(trace.len(), 50);
+        assert!(trace.iter().all(|&(_, a)| a <= 4));
+        assert!(trace.iter().any(|&(_, a)| a > 0));
+        // final stage of cholesky is sequential: last sample lightly loaded
+        assert!(trace.last().unwrap().1 <= 2);
+    }
+
+    #[test]
+    fn idle_procs_counted() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(256);
+        cholesky::partition_uniform(&mut dag, 128); // s=2: mostly sequential
+        let s = simulate(&dag, &m, &db, SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestIdle)));
+        // during the first task only 1 of 4 procs is busy
+        let a0 = &s.assignments[0];
+        assert_eq!(idle_procs_during(&s, 4, a0.start, a0.end), 3);
+        assert_eq!(idle_procs_during(&s, 4, 1.0, 1.0), 0, "empty interval");
+    }
+}

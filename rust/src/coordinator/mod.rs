@@ -1,0 +1,36 @@
+//! The HeSP coordinator — the paper's contribution (§2).
+//!
+//! * [`region`] / [`datadag`] / [`coherence`]: recursive data blocks,
+//!   nesting + intersection descriptors, validate/invalidate coherence.
+//! * [`task`] / [`taskdag`]: the hierarchical task DAG with derived
+//!   RaW/WaR/WaW dependences.
+//! * [`platform`] / [`perfmodel`]: heterogeneous machine descriptions and
+//!   per-(processor, task, size) performance + transfer models.
+//! * [`engine`] / [`policies`] / [`ordering`]: the discrete-event schedule
+//!   simulator with R-P/F-P/EIT-P/EFT-P selection and FCFS/PL ordering.
+//! * [`partitioners`]: blocked algorithms emitting sub-task clusters.
+//! * [`solver`]: the iterative scheduler-partitioner (All/CP/Shallow x
+//!   Hard/Soft).
+//! * [`constructive`]: the online per-task-arrival scheduler-partitioner
+//!   (the paper's §4 follow-up).
+//! * [`workloads`]: synthetic DAG generators beyond dense linear algebra.
+//! * [`metrics`] / [`energy`] / [`trace`]: Table-1 metrics, the energy
+//!   objective, Paraver traces and ASCII Gantt rendering.
+
+pub mod coherence;
+pub mod constructive;
+pub mod datadag;
+pub mod energy;
+pub mod engine;
+pub mod metrics;
+pub mod ordering;
+pub mod partitioners;
+pub mod perfmodel;
+pub mod platform;
+pub mod policies;
+pub mod region;
+pub mod solver;
+pub mod task;
+pub mod taskdag;
+pub mod trace;
+pub mod workloads;

@@ -1,0 +1,131 @@
+//! Critical-time computation for the Priority-List ordering.
+//!
+//! Paper §2.1: "a priority list is built by sorting tasks by their critical
+//! times in decreasing order. Critical times are computed by averaging task
+//! processing time for all processors, and propagating them throughout the
+//! task DAG by a backflow algorithm" — i.e. the upward rank of HEFT,
+//! without transfer terms (HeSP folds transfer awareness into EFT-P).
+
+use super::perfmodel::PerfDb;
+use super::platform::Machine;
+use super::taskdag::{FlatDag, TaskDag};
+
+/// Average execution time of each frontier task across all processors.
+pub fn avg_times(dag: &TaskDag, flat: &FlatDag, machine: &Machine, db: &PerfDb) -> Vec<f64> {
+    let ptypes: Vec<usize> = machine.procs.iter().map(|p| p.ptype).collect();
+    flat.tasks
+        .iter()
+        .map(|&tid| {
+            let t = dag.task(tid);
+            db.avg_time(&ptypes, t.kind, t.char_edge(), t.flops)
+        })
+        .collect()
+}
+
+/// Backflow critical times: `ct[i] = avg[i] + max over successors ct[s]`.
+/// Program order is a topological order, so one reverse sweep suffices.
+pub fn critical_times(dag: &TaskDag, flat: &FlatDag, machine: &Machine, db: &PerfDb) -> Vec<f64> {
+    let avg = avg_times(dag, flat, machine, db);
+    let mut ct = vec![0.0f64; flat.len()];
+    for i in (0..flat.len()).rev() {
+        let down = flat.succs[i].iter().map(|&s| ct[s]).fold(0.0f64, f64::max);
+        ct[i] = avg[i] + down;
+    }
+    ct
+}
+
+/// Positions (into the frontier) of tasks on a critical path: start from a
+/// source with maximal critical time and walk successors greedily.
+pub fn critical_path(flat: &FlatDag, ct: &[f64]) -> Vec<usize> {
+    if flat.is_empty() {
+        return Vec::new();
+    }
+    let mut cur = (0..flat.len())
+        .filter(|&i| flat.preds[i].is_empty())
+        .max_by(|&a, &b| ct[a].total_cmp(&ct[b]))
+        .unwrap();
+    let mut path = vec![cur];
+    while let Some(&next) = flat.succs[cur].iter().max_by(|&&a, &&b| ct[a].total_cmp(&ct[b])) {
+        path.push(next);
+        cur = next;
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::perfmodel::PerfCurve;
+    use crate::coordinator::platform::MachineBuilder;
+    use crate::coordinator::region::Region;
+    use crate::coordinator::task::{TaskKind, TaskSpec};
+
+    fn machine_two_types() -> Machine {
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let slow = b.proc_type("slow", 1.0, 0.1);
+        let fast = b.proc_type("fast", 1.0, 0.1);
+        b.processors(1, "s", slow, h);
+        b.processors(1, "f", fast, h);
+        b.build()
+    }
+
+    fn db() -> PerfDb {
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 1.0 });
+        db.set_fallback(1, PerfCurve::Const { gflops: 3.0 });
+        db
+    }
+
+    fn chain_dag() -> TaskDag {
+        // t0 -> t1 -> t2 over the same region
+        let r = Region::new(0, 0, 100, 0, 100);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![r], vec![r]));
+        dag.partition(0, vec![TaskSpec::new(TaskKind::Gemm, vec![r], vec![r]); 3], 100);
+        dag
+    }
+
+    #[test]
+    fn critical_times_accumulate_backwards() {
+        let dag = chain_dag();
+        let flat = dag.flat_dag();
+        let m = machine_two_types();
+        let ct = critical_times(&dag, &flat, &m, &db());
+        // per-task avg time: flops = 2*100^3 = 2e6 flops; rates 1 and 3
+        // GFLOPS -> times 2e-3 and 2e-3/3; avg = (2e-3 + 6.667e-4)/2
+        let avg = (2e-3 + 2e-3 / 3.0) / 2.0;
+        assert!((ct[2] - avg).abs() < 1e-12);
+        assert!((ct[1] - 2.0 * avg).abs() < 1e-12);
+        assert!((ct[0] - 3.0 * avg).abs() < 1e-12);
+        // decreasing along the chain => PL order is program order here
+        assert!(ct[0] > ct[1] && ct[1] > ct[2]);
+    }
+
+    #[test]
+    fn critical_path_follows_heavy_branch() {
+        // diamond: t0 -> {t1 heavy, t2 light} -> t3
+        let w = Region::new(0, 0, 8, 0, 8);
+        let heavy = Region::new(0, 0, 4, 0, 4);
+        let light = Region::new(0, 4, 8, 4, 8);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![w], vec![w]));
+        dag.partition(
+            0,
+            vec![
+                TaskSpec::new(TaskKind::Gemm, vec![], vec![w]),
+                TaskSpec::new(TaskKind::Gemm, vec![heavy], vec![heavy]), // 2*64 flops
+                TaskSpec::new(TaskKind::Trsm, vec![light], vec![light]), // 64 flops
+                TaskSpec::new(TaskKind::Gemm, vec![w], vec![w]),
+            ],
+            4,
+        );
+        let flat = dag.flat_dag();
+        let m = machine_two_types();
+        let ct = critical_times(&dag, &flat, &m, &db());
+        let path = critical_path(&flat, &ct);
+        assert_eq!(path.first(), Some(&0));
+        assert_eq!(path.last(), Some(&3));
+        assert!(path.contains(&1), "heavy branch on critical path: {path:?}");
+        assert!(!path.contains(&2));
+    }
+}

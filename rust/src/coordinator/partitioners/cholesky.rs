@@ -1,0 +1,169 @@
+//! Blocked right-looking Cholesky partitioner (the paper's Fig. 1
+//! algorithm): splits a POTRF task over an n x n tile into the classic
+//! POTRF / TRSM / SYRK / GEMM task set over an s x s grid of b x b tiles.
+
+use crate::coordinator::region::Region;
+use crate::coordinator::task::{Task, TaskKind, TaskSpec};
+use crate::coordinator::taskdag::TaskDag;
+
+use super::Partitioner;
+
+pub struct CholeskyPartitioner;
+
+impl Partitioner for CholeskyPartitioner {
+    fn kinds(&self) -> Vec<TaskKind> {
+        vec![TaskKind::Potrf]
+    }
+
+    fn partition(&self, task: &Task, b: u32) -> Option<Vec<TaskSpec>> {
+        let a = *task.writes.first()?;
+        if !a.is_square() || b == 0 || a.rows() % b != 0 || a.rows() / b < 2 {
+            return None;
+        }
+        Some(specs(&a, b))
+    }
+}
+
+/// The blocked-Cholesky task stream over region `a` at tile edge `b`
+/// (program order; dependences derive from region overlap).
+pub fn specs(a: &Region, b: u32) -> Vec<TaskSpec> {
+    let s = a.rows() / b;
+    let tile = |i: u32, j: u32| Region::tile(a, b, i, j);
+    let mut out = Vec::new();
+    for k in 0..s {
+        let akk = tile(k, k);
+        out.push(TaskSpec::new(TaskKind::Potrf, vec![akk], vec![akk]));
+        for i in k + 1..s {
+            let aik = tile(i, k);
+            out.push(TaskSpec::new(TaskKind::Trsm, vec![akk, aik], vec![aik]));
+        }
+        for i in k + 1..s {
+            let aik = tile(i, k);
+            let aii = tile(i, i);
+            out.push(TaskSpec::new(TaskKind::Syrk, vec![aik, aii], vec![aii]));
+            for j in k + 1..i {
+                let ajk = tile(j, k);
+                let aij = tile(i, j);
+                out.push(TaskSpec::new(TaskKind::Gemm, vec![aik, ajk, aij], vec![aij]));
+            }
+        }
+    }
+    out
+}
+
+/// Expected task count for an s x s blocking:
+/// `s POTRF + s(s-1)/2 TRSM + s(s-1)/2 SYRK + s(s-1)(s-2)/6 GEMM`.
+pub fn task_count(s: u64) -> u64 {
+    s + s * (s - 1) / 2 + s * (s - 1) / 2 + s * (s - 1) * (s - 2) / 6
+}
+
+/// A fresh DAG holding one root CHOL task over an n x n matrix.
+pub fn root(n: u32) -> TaskDag {
+    let a = Region::new(0, 0, n, 0, n);
+    TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![a], vec![a]))
+}
+
+/// Uniform (homogeneous) blocking: partition the root once at tile edge
+/// `b` — the static equally-sized tiling every Table-1 row compares
+/// against. Panics if `b` does not divide n.
+pub fn partition_uniform(dag: &mut TaskDag, b: u32) {
+    let specs = {
+        let t = dag.task(dag.root);
+        let a = *t.writes.first().expect("root has an output region");
+        assert_eq!(a.rows() % b, 0, "tile edge {b} must divide {}", a.rows());
+        specs(&a, b)
+    };
+    let root = dag.root;
+    dag.partition(root, specs, b);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_counts_match_formula() {
+        for s in [2u32, 3, 4, 8, 16] {
+            let dag = {
+                let mut d = root(64 * s);
+                partition_uniform(&mut d, 64);
+                d
+            };
+            assert_eq!(dag.frontier().len() as u64, task_count(s as u64), "s={s}");
+        }
+    }
+
+    #[test]
+    fn two_by_two_structure() {
+        let mut dag = root(8);
+        partition_uniform(&mut dag, 4);
+        let flat = dag.flat_dag();
+        let kinds: Vec<_> = flat.tasks.iter().map(|&t| dag.task(t).kind).collect();
+        assert_eq!(
+            kinds,
+            vec![TaskKind::Potrf, TaskKind::Trsm, TaskKind::Syrk, TaskKind::Potrf]
+        );
+        // chain: potrf -> trsm -> syrk -> potrf
+        assert_eq!(flat.preds[1], vec![0]);
+        assert_eq!(flat.preds[2], vec![1]);
+        assert_eq!(flat.preds[3], vec![2]);
+    }
+
+    #[test]
+    fn four_by_four_width_grows() {
+        let mut dag = root(16);
+        partition_uniform(&mut dag, 4);
+        let flat = dag.flat_dag();
+        assert_eq!(flat.len() as u64, task_count(4));
+        assert!(flat.width() >= 3, "width={}", flat.width());
+        // longest chain passes through all 4 potrfs
+        assert!(flat.longest_path_len() >= 10);
+    }
+
+    #[test]
+    fn partitioner_rejects_illegal_edges() {
+        let p = CholeskyPartitioner;
+        let mut dag = root(100);
+        let t = dag.task(0).clone();
+        assert!(p.partition(&t, 30).is_none(), "non-divisor");
+        assert!(p.partition(&t, 100).is_none(), "s=1 is not a partition");
+        assert!(p.partition(&t, 50).is_some());
+        let _ = &mut dag;
+    }
+
+    #[test]
+    fn gemm_reads_two_panels_and_c() {
+        let mut dag = root(12);
+        partition_uniform(&mut dag, 4);
+        let flat = dag.flat_dag();
+        let gemms: Vec<_> = flat
+            .tasks
+            .iter()
+            .filter(|&&t| dag.task(t).kind == TaskKind::Gemm)
+            .collect();
+        assert_eq!(gemms.len() as u64, 1); // s=3 -> 1 gemm
+        let g = dag.task(*gemms[0]);
+        assert_eq!(g.reads.len(), 3);
+        assert_eq!(g.writes.len(), 1);
+        assert_eq!(g.reads[2], g.writes[0]);
+    }
+
+    #[test]
+    fn flops_conserved_exactly_per_level() {
+        // Sum of sub-task flops equals the root's n^3/3 (with the
+        // full-block SYRK convention adding the symmetric half: the sum is
+        // n^3/3 only when SYRK counts b^3; see task.rs). We check the total
+        // equals s*potrf + ... algebra rather than a magic constant.
+        let n = 32u32;
+        let b = 8u32;
+        let s = (n / b) as f64;
+        let bf = b as f64;
+        let expect = s * bf.powi(3) / 3.0
+            + (s * (s - 1.0) / 2.0) * bf.powi(3)
+            + (s * (s - 1.0) / 2.0) * bf.powi(3)
+            + (s * (s - 1.0) * (s - 2.0) / 6.0) * 2.0 * bf.powi(3);
+        let mut dag = root(n);
+        partition_uniform(&mut dag, b);
+        assert!((dag.total_flops() - expect).abs() < 1e-6);
+    }
+}

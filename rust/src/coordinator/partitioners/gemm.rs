@@ -1,0 +1,103 @@
+//! Blocked GEMM partitioner: splits `C -= A B^T` (operands `[A, B, C] ->
+//! [C]`) into a 3-D tiling with sequential accumulation along p:
+//!
+//! ```text
+//! for i, j, p:  GEMM  C[i][j] -= A[i][p] B[j][p]^T
+//! ```
+
+use crate::coordinator::region::Region;
+use crate::coordinator::task::{Task, TaskKind, TaskSpec};
+
+use super::Partitioner;
+
+pub struct GemmPartitioner;
+
+impl Partitioner for GemmPartitioner {
+    fn kinds(&self) -> Vec<TaskKind> {
+        vec![TaskKind::Gemm]
+    }
+
+    fn partition(&self, task: &Task, c: u32) -> Option<Vec<TaskSpec>> {
+        if task.reads.len() < 3 {
+            return None;
+        }
+        let a = task.reads[0];
+        let b = task.reads[1];
+        let cc = *task.writes.first()?;
+        if c == 0 || cc.rows() % c != 0 || cc.cols() % c != 0 || a.cols() % c != 0 {
+            return None;
+        }
+        if a.rows() != cc.rows() || b.rows() != cc.cols() || a.cols() != b.cols() {
+            return None;
+        }
+        let (ti, tj, tp) = (cc.rows() / c, cc.cols() / c, a.cols() / c);
+        if ti * tj * tp < 2 {
+            return None;
+        }
+        let mut out = Vec::new();
+        for i in 0..ti {
+            for j in 0..tj {
+                let cij = Region::tile(&cc, c, i, j);
+                for p in 0..tp {
+                    let aip = Region::tile(&a, c, i, p);
+                    let bjp = Region::tile(&b, c, j, p);
+                    out.push(TaskSpec::new(TaskKind::Gemm, vec![aip, bjp, cij], vec![cij]));
+                }
+            }
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::taskdag::TaskDag;
+
+    fn gemm_task(edge: u32) -> TaskDag {
+        let a = Region::new(0, 0, edge, 0, edge);
+        let b = Region::new(1, 0, edge, 0, edge);
+        let c = Region::new(2, 0, edge, 0, edge);
+        TaskDag::new(TaskSpec::new(TaskKind::Gemm, vec![a, b, c], vec![c]))
+    }
+
+    #[test]
+    fn produces_t3_tasks() {
+        let p = GemmPartitioner;
+        let dag = gemm_task(8);
+        let specs = p.partition(dag.task(0), 4).unwrap();
+        assert_eq!(specs.len(), 8);
+        assert!(specs.iter().all(|s| s.kind == TaskKind::Gemm));
+    }
+
+    #[test]
+    fn flops_preserved() {
+        let p = GemmPartitioner;
+        let dag = gemm_task(16);
+        let specs = p.partition(dag.task(0), 4).unwrap();
+        let total: f64 = specs.iter().map(|s| s.flops()).sum();
+        assert!((total - dag.task(0).flops).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_chain_serializes_same_c_tile() {
+        let p = GemmPartitioner;
+        let mut dag = gemm_task(8);
+        let specs = p.partition(dag.task(0), 4).unwrap();
+        dag.partition(0, specs, 4);
+        let flat = dag.flat_dag();
+        // tasks 0,1 share C[0][0] (p=0,1) -> chain; tasks 2.. other tiles
+        assert_eq!(flat.preds[1], vec![0]);
+        assert!(flat.preds[2].is_empty());
+        assert_eq!(flat.width(), 4, "4 independent C tiles");
+    }
+
+    #[test]
+    fn rejects_mismatched_shapes() {
+        let a = Region::new(0, 0, 8, 0, 4);
+        let b = Region::new(1, 0, 8, 0, 8);
+        let c = Region::new(2, 0, 8, 0, 8);
+        let dag = TaskDag::new(TaskSpec::new(TaskKind::Gemm, vec![a, b, c], vec![c]));
+        assert!(GemmPartitioner.partition(dag.task(0), 4).is_none());
+    }
+}

@@ -1,0 +1,102 @@
+//! Blocked LU (no pivoting) partitioner — extension workload showing HeSP
+//! generalizes beyond Cholesky ("can be easily applied to other irregular
+//! task-parallel implementations", paper §4).
+//!
+//! ```text
+//! for k: GETRF(A[k][k])
+//!        for j>k: TRSM_U  A[k][j] = L[k][k]^-1 A[k][j]
+//!        for i>k: TRSM_L  A[i][k] = A[i][k] U[k][k]^-1
+//!        for i>k, j>k: GEMM  A[i][j] -= A[i][k] A[k][j]
+//! ```
+
+use crate::coordinator::region::Region;
+use crate::coordinator::task::{Task, TaskKind, TaskSpec};
+use crate::coordinator::taskdag::TaskDag;
+
+use super::Partitioner;
+
+pub struct LuPartitioner;
+
+impl Partitioner for LuPartitioner {
+    fn kinds(&self) -> Vec<TaskKind> {
+        vec![TaskKind::Getrf]
+    }
+
+    fn partition(&self, task: &Task, b: u32) -> Option<Vec<TaskSpec>> {
+        let a = *task.writes.first()?;
+        if !a.is_square() || b == 0 || a.rows() % b != 0 || a.rows() / b < 2 {
+            return None;
+        }
+        let s = a.rows() / b;
+        let tile = |i: u32, j: u32| Region::tile(&a, b, i, j);
+        let mut out = Vec::new();
+        for k in 0..s {
+            let akk = tile(k, k);
+            out.push(TaskSpec::new(TaskKind::Getrf, vec![akk], vec![akk]));
+            for j in k + 1..s {
+                let akj = tile(k, j);
+                out.push(TaskSpec::new(TaskKind::TrsmU, vec![akk, akj], vec![akj]));
+            }
+            for i in k + 1..s {
+                let aik = tile(i, k);
+                out.push(TaskSpec::new(TaskKind::TrsmL, vec![akk, aik], vec![aik]));
+            }
+            for i in k + 1..s {
+                for j in k + 1..s {
+                    let (aik, akj, aij) = (tile(i, k), tile(k, j), tile(i, j));
+                    out.push(TaskSpec::new(TaskKind::Gemm, vec![aik, akj, aij], vec![aij]));
+                }
+            }
+        }
+        Some(out)
+    }
+}
+
+/// Fresh DAG with one root GETRF task over an n x n matrix.
+pub fn root(n: u32) -> TaskDag {
+    let a = Region::new(0, 0, n, 0, n);
+    TaskDag::new(TaskSpec::new(TaskKind::Getrf, vec![a], vec![a]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioners::PartitionerSet;
+
+    #[test]
+    fn task_count() {
+        // s=3: 3 getrf + 3+3 trsm_u + trsm_l? per k: (s-k-1) each + (s-k-1)^2 gemm
+        let mut dag = root(12);
+        let set = PartitionerSet::standard();
+        set.apply(&mut dag, 0, 4).unwrap();
+        // k=0: 1+2+2+4, k=1: 1+1+1+1, k=2: 1  => 14
+        assert_eq!(dag.frontier().len(), 14);
+    }
+
+    #[test]
+    fn lu_dag_has_wider_trailing_updates_than_cholesky() {
+        let mut lu = root(16);
+        let set = PartitionerSet::standard();
+        set.apply(&mut lu, 0, 4).unwrap();
+        let flat = lu.flat_dag();
+        // 9 independent gemms in the first trailing update
+        assert!(flat.width() >= 9, "width={}", flat.width());
+    }
+
+    #[test]
+    fn first_trailing_gemm_depends_on_both_panels() {
+        let mut dag = root(8);
+        let set = PartitionerSet::standard();
+        set.apply(&mut dag, 0, 4).unwrap();
+        let flat = dag.flat_dag();
+        // order: getrf0, trsm_u(0,1), trsm_l(1,0), gemm(1,1), getrf1
+        let kinds: Vec<_> = flat.tasks.iter().map(|&t| dag.task(t).kind).collect();
+        assert_eq!(
+            kinds,
+            vec![TaskKind::Getrf, TaskKind::TrsmU, TaskKind::TrsmL, TaskKind::Gemm, TaskKind::Getrf]
+        );
+        let mut p = flat.preds[3].clone();
+        p.sort();
+        assert_eq!(p, vec![1, 2]);
+    }
+}

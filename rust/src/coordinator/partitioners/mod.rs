@@ -1,0 +1,151 @@
+//! Recursive task partitioners: blocked algorithms that replace a task by
+//! an equivalent cluster of finer-grained sub-tasks (paper §2.1,
+//! "Recursive task partitioners").
+//!
+//! A partitioner is "just a blocked algorithm with an input parameter that
+//! specifies the data granularity of the following partition". Operand
+//! conventions (positions in `reads`/`writes`) are fixed per task kind so
+//! partitioners can be applied to tasks emitted by other partitioners:
+//!
+//! | kind   | reads                      | writes  |
+//! |--------|----------------------------|---------|
+//! | POTRF  | `[A]`                      | `[A]`   |
+//! | TRSM   | `[L, B]`                   | `[B]`   |
+//! | SYRK   | `[A, C]`                   | `[C]`   |
+//! | GEMM   | `[A, B, C]`                | `[C]`   |
+//! | GETRF  | `[A]`                      | `[A]`   |
+//! | TRSM_L/U | `[L or U, B]`            | `[B]`   |
+//! | GEQRT  | `[A]`                      | `[A]`   |
+//! | TSQRT  | `[R, A]`                   | `[R, A]`|
+//! | LARFB  | `[V, C]`                   | `[C]`   |
+//! | SSRFB  | `[V, C1, C2]`              | `[C1, C2]` |
+
+pub mod cholesky;
+pub mod gemm;
+pub mod lu;
+pub mod qr;
+pub mod syrk;
+pub mod trsm;
+
+use std::collections::HashMap;
+
+use super::task::{Task, TaskKind, TaskSpec};
+use super::taskdag::TaskDag;
+
+/// A recursive task partitioner for one (or more) task kinds.
+pub trait Partitioner: Send + Sync {
+    /// Task kinds this partitioner can split.
+    fn kinds(&self) -> Vec<TaskKind>;
+
+    /// Emit the sub-task cluster for `task` at sub-tile edge `sub_edge`,
+    /// in program order. Returns `None` if the task cannot be split at
+    /// that edge (e.g. non-divisible).
+    fn partition(&self, task: &Task, sub_edge: u32) -> Option<Vec<TaskSpec>>;
+}
+
+/// Registry mapping task kinds to partitioners.
+pub struct PartitionerSet {
+    map: HashMap<TaskKind, std::sync::Arc<dyn Partitioner>>,
+}
+
+impl PartitionerSet {
+    pub fn empty() -> PartitionerSet {
+        PartitionerSet { map: HashMap::new() }
+    }
+
+    /// The dense-linear-algebra set: Cholesky (POTRF/TRSM/SYRK/GEMM),
+    /// LU and tile-QR blocked algorithms.
+    pub fn standard() -> PartitionerSet {
+        let mut s = PartitionerSet::empty();
+        s.register(std::sync::Arc::new(cholesky::CholeskyPartitioner));
+        s.register(std::sync::Arc::new(trsm::TrsmPartitioner));
+        s.register(std::sync::Arc::new(syrk::SyrkPartitioner));
+        s.register(std::sync::Arc::new(gemm::GemmPartitioner));
+        s.register(std::sync::Arc::new(lu::LuPartitioner));
+        s.register(std::sync::Arc::new(qr::QrPartitioner));
+        s
+    }
+
+    pub fn register(&mut self, p: std::sync::Arc<dyn Partitioner>) {
+        for k in p.kinds() {
+            self.map.insert(k, p.clone());
+        }
+    }
+
+    pub fn can_partition(&self, kind: TaskKind) -> bool {
+        self.map.contains_key(&kind)
+    }
+
+    /// Split leaf `id` of `dag` at `sub_edge`; returns the new child ids,
+    /// or `None` if no partitioner applies / the edge is illegal.
+    pub fn apply(&self, dag: &mut TaskDag, id: usize, sub_edge: u32) -> Option<Vec<usize>> {
+        let task = dag.task(id).clone();
+        let p = self.map.get(&task.kind)?;
+        let specs = p.partition(&task, sub_edge)?;
+        debug_assert!(!specs.is_empty());
+        Some(dag.partition(id, specs, sub_edge))
+    }
+}
+
+/// Sub-edges at which a tile of edge `edge` can legally be split:
+/// proper divisors, largest first, bounded below by `min_edge`.
+pub fn legal_sub_edges(edge: u32, min_edge: u32) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut d = edge / 2;
+    while d >= min_edge.max(1) {
+        if edge % d == 0 {
+            out.push(d);
+        }
+        d -= 1;
+    }
+    out
+}
+
+/// The sub-edge closest to `target` among the legal ones (used to realize
+/// the paper's partition parameter `p` with `b = p * d`).
+pub fn snap_sub_edge(edge: u32, target: f64, min_edge: u32) -> Option<u32> {
+    legal_sub_edges(edge, min_edge)
+        .into_iter()
+        .min_by(|&a, &b| {
+            let da = (a as f64 - target).abs();
+            let db = (b as f64 - target).abs();
+            da.total_cmp(&db).then(b.cmp(&a)) // prefer larger on ties
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legal_edges_are_proper_divisors() {
+        assert_eq!(legal_sub_edges(1024, 128), vec![512, 256, 128]);
+        assert_eq!(legal_sub_edges(12, 1), vec![6, 4, 3, 2, 1]);
+        assert!(legal_sub_edges(7, 1) == vec![1]);
+        assert!(legal_sub_edges(64, 64).is_empty());
+    }
+
+    #[test]
+    fn snap_picks_closest() {
+        assert_eq!(snap_sub_edge(1024, 300.0, 64), Some(256));
+        assert_eq!(snap_sub_edge(1024, 512.0, 64), Some(512));
+        assert_eq!(snap_sub_edge(1024, 1.0, 64), Some(64));
+        assert_eq!(snap_sub_edge(64, 32.0, 64), None);
+    }
+
+    #[test]
+    fn standard_set_covers_all_la_kinds() {
+        let s = PartitionerSet::standard();
+        for k in [
+            TaskKind::Potrf,
+            TaskKind::Trsm,
+            TaskKind::Syrk,
+            TaskKind::Gemm,
+            TaskKind::Getrf,
+            TaskKind::Geqrt,
+        ] {
+            assert!(s.can_partition(k), "{k:?}");
+        }
+        assert!(!s.can_partition(TaskKind::Custom(0)));
+    }
+}

@@ -1,0 +1,104 @@
+//! Tile-QR partitioner (Householder, PLASMA-style) — second extension
+//! workload. Reflector/T-factor storage is modeled through the tiles
+//! themselves (scheduling studies need the dependence shape and flop
+//! weights, not the numerics):
+//!
+//! ```text
+//! for k: GEQRT(A[k][k])
+//!        for j>k: LARFB  A[k][j] <- (I - V T V^T) A[k][j]
+//!        for i>k: TSQRT  couples A[k][k], A[i][k]
+//!                 for j>k: SSRFB  couples A[k][j], A[i][j] with V=A[i][k]
+//! ```
+
+use crate::coordinator::region::Region;
+use crate::coordinator::task::{Task, TaskKind, TaskSpec};
+use crate::coordinator::taskdag::TaskDag;
+
+use super::Partitioner;
+
+pub struct QrPartitioner;
+
+impl Partitioner for QrPartitioner {
+    fn kinds(&self) -> Vec<TaskKind> {
+        vec![TaskKind::Geqrt]
+    }
+
+    fn partition(&self, task: &Task, b: u32) -> Option<Vec<TaskSpec>> {
+        let a = *task.writes.first()?;
+        if !a.is_square() || b == 0 || a.rows() % b != 0 || a.rows() / b < 2 {
+            return None;
+        }
+        let s = a.rows() / b;
+        let tile = |i: u32, j: u32| Region::tile(&a, b, i, j);
+        let mut out = Vec::new();
+        for k in 0..s {
+            let akk = tile(k, k);
+            out.push(TaskSpec::new(TaskKind::Geqrt, vec![akk], vec![akk]));
+            for j in k + 1..s {
+                let akj = tile(k, j);
+                out.push(TaskSpec::new(TaskKind::Larfb, vec![akk, akj], vec![akj]));
+            }
+            for i in k + 1..s {
+                let aik = tile(i, k);
+                out.push(TaskSpec::new(TaskKind::Tsqrt, vec![akk, aik], vec![akk, aik]));
+                for j in k + 1..s {
+                    let (akj, aij) = (tile(k, j), tile(i, j));
+                    out.push(TaskSpec::new(TaskKind::Ssrfb, vec![aik, akj, aij], vec![akj, aij]));
+                }
+            }
+        }
+        Some(out)
+    }
+}
+
+/// Fresh DAG with one root GEQRT task over an n x n matrix.
+pub fn root(n: u32) -> TaskDag {
+    let a = Region::new(0, 0, n, 0, n);
+    TaskDag::new(TaskSpec::new(TaskKind::Geqrt, vec![a], vec![a]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioners::PartitionerSet;
+
+    #[test]
+    fn task_count_s2() {
+        let mut dag = root(8);
+        PartitionerSet::standard().apply(&mut dag, 0, 4).unwrap();
+        // k=0: geqrt + larfb + tsqrt + ssrfb = 4; k=1: geqrt = 1
+        assert_eq!(dag.frontier().len(), 5);
+    }
+
+    #[test]
+    fn tsqrt_couples_diagonal_making_panel_sequential() {
+        let mut dag = root(16);
+        PartitionerSet::standard().apply(&mut dag, 0, 4).unwrap();
+        let flat = dag.flat_dag();
+        // all TSQRT tasks of panel k=0 form a chain through A[0][0]
+        let tsqrts: Vec<usize> = (0..flat.len())
+            .filter(|&i| dag.task(flat.tasks[i]).kind == TaskKind::Tsqrt)
+            .take(3)
+            .collect();
+        assert_eq!(tsqrts.len(), 3);
+        assert!(flat.preds[tsqrts[1]].contains(&tsqrts[0]));
+        assert!(flat.preds[tsqrts[2]].contains(&tsqrts[1]));
+    }
+
+    #[test]
+    fn ssrfb_depends_on_tsqrt_and_larfb() {
+        let mut dag = root(8);
+        PartitionerSet::standard().apply(&mut dag, 0, 4).unwrap();
+        let flat = dag.flat_dag();
+        let kinds: Vec<_> = flat.tasks.iter().map(|&t| dag.task(t).kind).collect();
+        assert_eq!(
+            kinds,
+            vec![TaskKind::Geqrt, TaskKind::Larfb, TaskKind::Tsqrt, TaskKind::Ssrfb, TaskKind::Geqrt]
+        );
+        let mut p = flat.preds[3].clone();
+        p.sort();
+        assert_eq!(p, vec![1, 2]);
+        // final geqrt waits for the ssrfb that updated A[1][1]
+        assert_eq!(flat.preds[4], vec![3]);
+    }
+}

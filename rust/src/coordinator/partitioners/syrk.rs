@@ -1,0 +1,105 @@
+//! Blocked SYRK partitioner: splits `C -= A A^T` (operands `[A, C] -> [C]`,
+//! both b x b tiles) into a tiled symmetric update:
+//!
+//! ```text
+//! for i in 0..t: for j in 0..=i: for p in 0..t:
+//!   i == j:  SYRK  C[i][i] -= A[i][p] A[i][p]^T
+//!   i != j:  GEMM  C[i][j] -= A[i][p] A[j][p]^T
+//! ```
+//!
+//! The p-loop forms a sequential accumulation chain on each C tile (WaW),
+//! which the derived-dependence machinery captures automatically.
+
+use crate::coordinator::region::Region;
+use crate::coordinator::task::{Task, TaskKind, TaskSpec};
+
+use super::Partitioner;
+
+pub struct SyrkPartitioner;
+
+impl Partitioner for SyrkPartitioner {
+    fn kinds(&self) -> Vec<TaskKind> {
+        vec![TaskKind::Syrk]
+    }
+
+    fn partition(&self, task: &Task, c: u32) -> Option<Vec<TaskSpec>> {
+        let a = *task.reads.first()?;
+        let cc = *task.writes.first()?;
+        if !cc.is_square() || c == 0 || cc.rows() % c != 0 || a.rows() % c != 0 || a.cols() % c != 0 {
+            return None;
+        }
+        if cc.rows() / c < 2 && a.cols() / c < 2 {
+            return None;
+        }
+        let t = cc.rows() / c;
+        let kp = a.cols() / c;
+        let atile = |i: u32, p: u32| Region::tile(&a, c, i, p);
+        let ctile = |i: u32, j: u32| Region::tile(&cc, c, i, j);
+        let mut out = Vec::new();
+        for i in 0..t {
+            for j in 0..=i {
+                let cij = ctile(i, j);
+                for p in 0..kp {
+                    if i == j {
+                        out.push(TaskSpec::new(TaskKind::Syrk, vec![atile(i, p), cij], vec![cij]));
+                    } else {
+                        out.push(TaskSpec::new(TaskKind::Gemm, vec![atile(i, p), atile(j, p), cij], vec![cij]));
+                    }
+                }
+            }
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::taskdag::TaskDag;
+
+    fn syrk_task(edge: u32) -> TaskDag {
+        let a = Region::new(0, 0, edge, 0, edge);
+        let c = Region::new(1, 0, edge, 0, edge);
+        TaskDag::new(TaskSpec::new(TaskKind::Syrk, vec![a, c], vec![c]))
+    }
+
+    #[test]
+    fn counts() {
+        let p = SyrkPartitioner;
+        let dag = syrk_task(8);
+        let specs = p.partition(dag.task(0), 4).unwrap();
+        // t=2, kp=2: diag targets 2 * 2 syrk, off-diag 1 * 2 gemm
+        let syrk = specs.iter().filter(|s| s.kind == TaskKind::Syrk).count();
+        let gemm = specs.iter().filter(|s| s.kind == TaskKind::Gemm).count();
+        assert_eq!((syrk, gemm), (4, 2));
+    }
+
+    #[test]
+    fn accumulation_chains_serialize() {
+        let p = SyrkPartitioner;
+        let mut dag = syrk_task(8);
+        let specs = p.partition(dag.task(0), 4).unwrap();
+        dag.partition(0, specs, 4);
+        let flat = dag.flat_dag();
+        // first two tasks update C[0][0] with p=0,1 -> chain
+        assert!(flat.preds[1].contains(&0));
+    }
+
+    #[test]
+    fn independent_c_tiles_are_parallel() {
+        let p = SyrkPartitioner;
+        let mut dag = syrk_task(8);
+        let specs = p.partition(dag.task(0), 4).unwrap();
+        dag.partition(0, specs, 4);
+        let flat = dag.flat_dag();
+        assert!(flat.width() >= 2, "different C tiles update in parallel");
+    }
+
+    #[test]
+    fn rejects_illegal() {
+        let p = SyrkPartitioner;
+        let dag = syrk_task(8);
+        assert!(p.partition(dag.task(0), 3).is_none());
+        assert!(p.partition(dag.task(0), 8).is_none());
+    }
+}

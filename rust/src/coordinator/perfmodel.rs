@@ -1,0 +1,198 @@
+//! Per-(processor-type, task-kind, tile-size) performance models.
+//!
+//! HeSP estimates task delays from models extracted a priori (paper §2.1,
+//! "Performance and data transfer models"). Two model families are
+//! supported:
+//!
+//! * [`PerfCurve::Saturating`] — an analytic efficiency curve
+//!   `gflops(b) = peak * b^k / (b^k + h^k)`: performance saturates toward
+//!   `peak` as the tile edge grows, with `h` the half-saturation edge.
+//!   GPUs get large `h` (need big tiles to fill the device), CPUs small
+//!   `h` (near-peak on small tiles) — exactly the shape that creates the
+//!   scheduling-partitioning trade-off the paper studies.
+//! * [`PerfCurve::Table`] — log-linear interpolation through measured
+//!   `(edge, gflops)` samples; the *measured* models the real-execution
+//!   validation platform uses (runtime::executor extracts them).
+
+use std::collections::HashMap;
+
+use super::platform::ProcTypeId;
+use super::task::TaskKind;
+
+/// GFLOPS as a function of tile edge.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PerfCurve {
+    /// `gflops(b) = peak * b^k / (b^k + h^k)`.
+    Saturating { peak: f64, half: f64, exponent: f64 },
+    /// Piecewise log-linear through sorted `(edge, gflops)` samples.
+    Table { points: Vec<(f64, f64)> },
+    /// Size-independent rate (useful in unit tests).
+    Const { gflops: f64 },
+}
+
+impl PerfCurve {
+    pub fn gflops(&self, edge: f64) -> f64 {
+        match self {
+            PerfCurve::Saturating { peak, half, exponent } => {
+                let bk = edge.max(1.0).powf(*exponent);
+                let hk = half.powf(*exponent);
+                peak * bk / (bk + hk)
+            }
+            PerfCurve::Table { points } => {
+                assert!(!points.is_empty(), "empty perf table");
+                if points.len() == 1 {
+                    return points[0].1;
+                }
+                let e = edge.max(1.0);
+                // clamp outside range, log-linear inside
+                if e <= points[0].0 {
+                    return points[0].1;
+                }
+                if e >= points[points.len() - 1].0 {
+                    return points[points.len() - 1].1;
+                }
+                let i = points.partition_point(|p| p.0 <= e) - 1;
+                let (x0, y0) = points[i];
+                let (x1, y1) = points[i + 1];
+                let t = (e.ln() - x0.ln()) / (x1.ln() - x0.ln());
+                y0 + t * (y1 - y0)
+            }
+            PerfCurve::Const { gflops } => *gflops,
+        }
+    }
+
+    /// Execution time in seconds for `flops` at tile edge `edge`.
+    pub fn time(&self, edge: f64, flops: f64) -> f64 {
+        flops / (self.gflops(edge).max(1e-9) * 1e9)
+    }
+}
+
+/// The performance database: curve per (processor type, task kind), plus a
+/// per-type fallback and fixed per-task launch overhead.
+#[derive(Debug, Clone, Default)]
+pub struct PerfDb {
+    curves: HashMap<(ProcTypeId, TaskKind), PerfCurve>,
+    fallback: HashMap<ProcTypeId, PerfCurve>,
+    /// Fixed per-task overhead in seconds (kernel launch, runtime cost).
+    overhead: HashMap<ProcTypeId, f64>,
+}
+
+impl PerfDb {
+    pub fn new() -> PerfDb {
+        PerfDb::default()
+    }
+
+    pub fn set(&mut self, ptype: ProcTypeId, kind: TaskKind, curve: PerfCurve) -> &mut Self {
+        self.curves.insert((ptype, kind), curve);
+        self
+    }
+
+    /// Curve used for any task kind without a specific entry.
+    pub fn set_fallback(&mut self, ptype: ProcTypeId, curve: PerfCurve) -> &mut Self {
+        self.fallback.insert(ptype, curve);
+        self
+    }
+
+    pub fn set_overhead(&mut self, ptype: ProcTypeId, seconds: f64) -> &mut Self {
+        self.overhead.insert(ptype, seconds);
+        self
+    }
+
+    pub fn curve(&self, ptype: ProcTypeId, kind: TaskKind) -> &PerfCurve {
+        self.curves
+            .get(&(ptype, kind))
+            .or_else(|| self.fallback.get(&ptype))
+            .unwrap_or_else(|| panic!("no perf model for proc type {ptype} task {}", kind.name()))
+    }
+
+    /// Predicted delay of a task (kind, tile edge, flops) on `ptype`.
+    pub fn time(&self, ptype: ProcTypeId, kind: TaskKind, edge: f64, flops: f64) -> f64 {
+        self.curve(ptype, kind).time(edge, flops) + self.overhead.get(&ptype).copied().unwrap_or(0.0)
+    }
+
+    /// Average delay across the given processor-type multiset — the task
+    /// "critical time" basis of the PL ordering (paper §2.1).
+    pub fn avg_time(&self, ptypes: &[ProcTypeId], kind: TaskKind, edge: f64, flops: f64) -> f64 {
+        assert!(!ptypes.is_empty());
+        ptypes.iter().map(|&t| self.time(t, kind, edge, flops)).sum::<f64>() / ptypes.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturating_shape() {
+        let c = PerfCurve::Saturating { peak: 1000.0, half: 512.0, exponent: 2.0 };
+        assert!((c.gflops(512.0) - 500.0).abs() < 1e-9);
+        assert!(c.gflops(64.0) < 20.0);
+        assert!(c.gflops(4096.0) > 980.0);
+        // monotone increasing
+        let mut prev = 0.0;
+        for b in [16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0] {
+            let g = c.gflops(b);
+            assert!(g > prev);
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn table_interpolation_and_clamping() {
+        let c = PerfCurve::Table { points: vec![(64.0, 10.0), (256.0, 40.0), (1024.0, 80.0)] };
+        assert_eq!(c.gflops(32.0), 10.0);
+        assert_eq!(c.gflops(64.0), 10.0);
+        assert_eq!(c.gflops(4096.0), 80.0);
+        let mid = c.gflops(128.0); // halfway in log space between 64 and 256
+        assert!((mid - 25.0).abs() < 1e-9, "mid={mid}");
+        assert!((c.gflops(512.0) - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_is_flops_over_rate() {
+        let c = PerfCurve::Const { gflops: 2.0 };
+        assert!((c.time(128.0, 4e9) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn db_lookup_and_fallback() {
+        let mut db = PerfDb::new();
+        db.set(0, TaskKind::Gemm, PerfCurve::Const { gflops: 100.0 });
+        db.set_fallback(0, PerfCurve::Const { gflops: 10.0 });
+        assert_eq!(db.curve(0, TaskKind::Gemm).gflops(64.0), 100.0);
+        assert_eq!(db.curve(0, TaskKind::Trsm).gflops(64.0), 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn db_missing_model_panics() {
+        PerfDb::new().curve(3, TaskKind::Gemm);
+    }
+
+    #[test]
+    fn overhead_added() {
+        let mut db = PerfDb::new();
+        db.set(0, TaskKind::Gemm, PerfCurve::Const { gflops: 1.0 });
+        db.set_overhead(0, 0.5);
+        assert!((db.time(0, TaskKind::Gemm, 64.0, 1e9) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn avg_time_mixes_types() {
+        let mut db = PerfDb::new();
+        db.set(0, TaskKind::Gemm, PerfCurve::Const { gflops: 1.0 }); // 1s per gflop
+        db.set(1, TaskKind::Gemm, PerfCurve::Const { gflops: 3.0 }); // 1/3s
+        let avg = db.avg_time(&[0, 1], TaskKind::Gemm, 64.0, 1e9);
+        assert!((avg - (1.0 + 1.0 / 3.0) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gpu_needs_big_tiles_cpu_does_not() {
+        // the heterogeneity premise: at small tiles CPU wins, at large GPU
+        let cpu = PerfCurve::Saturating { peak: 40.0, half: 64.0, exponent: 2.0 };
+        let gpu = PerfCurve::Saturating { peak: 2000.0, half: 1024.0, exponent: 2.0 };
+        assert!(cpu.gflops(64.0) > gpu.gflops(64.0) * 0.9 || cpu.gflops(64.0) > 15.0);
+        assert!(gpu.gflops(64.0) < cpu.gflops(64.0) * 2.0);
+        assert!(gpu.gflops(2048.0) > cpu.gflops(2048.0) * 10.0);
+    }
+}

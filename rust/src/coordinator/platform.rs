@@ -1,0 +1,326 @@
+//! Heterogeneous platform descriptions: memory spaces connected by an
+//! interconnect topology, with a (possibly heterogeneous) set of
+//! processors tied to them (paper §2: the "hardware platform description"
+//! input).
+
+use super::coherence::SpaceId;
+
+pub type ProcId = usize;
+pub type ProcTypeId = usize;
+pub type LinkId = usize;
+
+/// A finite-size memory space (host DRAM, one GPU's device memory, ...).
+#[derive(Debug, Clone)]
+pub struct MemSpace {
+    pub id: SpaceId,
+    pub name: String,
+    /// Capacity in bytes (`u64::MAX` = effectively unbounded).
+    pub capacity: u64,
+}
+
+/// A directed interconnect link between two memory spaces.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub id: LinkId,
+    pub from: SpaceId,
+    pub to: SpaceId,
+    /// Fixed per-transfer latency in seconds.
+    pub latency: f64,
+    /// Bandwidth in bytes/second.
+    pub bandwidth: f64,
+}
+
+/// A processor class sharing one performance model (e.g. "xeon", "gtx980",
+/// "a7", "a15").
+#[derive(Debug, Clone)]
+pub struct ProcType {
+    pub id: ProcTypeId,
+    pub name: String,
+    /// Busy/idle power draw in watts (energy objective, paper §2).
+    pub busy_watts: f64,
+    pub idle_watts: f64,
+}
+
+/// One processor instance.
+#[derive(Debug, Clone)]
+pub struct Processor {
+    pub id: ProcId,
+    pub name: String,
+    pub ptype: ProcTypeId,
+    /// Memory space this processor computes from.
+    pub space: SpaceId,
+}
+
+/// The machine: spaces + links + processors.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub name: String,
+    pub spaces: Vec<MemSpace>,
+    pub links: Vec<Link>,
+    pub proc_types: Vec<ProcType>,
+    pub procs: Vec<Processor>,
+    /// The main memory space accelerator memories cache (paper §2.1).
+    pub main_space: SpaceId,
+}
+
+impl Machine {
+    /// Validate internal consistency; returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.spaces.is_empty() {
+            return Err("machine has no memory spaces".into());
+        }
+        if self.procs.is_empty() {
+            return Err("machine has no processors".into());
+        }
+        if self.main_space >= self.spaces.len() {
+            return Err(format!("main_space {} out of range", self.main_space));
+        }
+        for (i, s) in self.spaces.iter().enumerate() {
+            if s.id != i {
+                return Err(format!("space {i} has id {}", s.id));
+            }
+        }
+        for (i, p) in self.procs.iter().enumerate() {
+            if p.id != i {
+                return Err(format!("proc {i} has id {}", p.id));
+            }
+            if p.space >= self.spaces.len() {
+                return Err(format!("proc {} in unknown space {}", p.name, p.space));
+            }
+            if p.ptype >= self.proc_types.len() {
+                return Err(format!("proc {} of unknown type {}", p.name, p.ptype));
+            }
+        }
+        for l in &self.links {
+            if l.from >= self.spaces.len() || l.to >= self.spaces.len() {
+                return Err(format!("link {} connects unknown spaces", l.id));
+            }
+            if l.bandwidth <= 0.0 {
+                return Err(format!("link {} has non-positive bandwidth", l.id));
+            }
+        }
+        // every non-main space must reach main (directly) for staging
+        for s in &self.spaces {
+            if s.id != self.main_space {
+                let up = self.links.iter().any(|l| l.from == s.id && l.to == self.main_space);
+                let down = self.links.iter().any(|l| l.from == self.main_space && l.to == s.id);
+                if !up || !down {
+                    return Err(format!("space {} lacks links to/from main", s.name));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Direct link between two spaces, if any.
+    pub fn link_between(&self, from: SpaceId, to: SpaceId) -> Option<&Link> {
+        self.links.iter().find(|l| l.from == from && l.to == to)
+    }
+
+    /// Transfer route `from -> to`: the direct link, or a two-hop staging
+    /// through main memory (the common PCIe topology where GPU<->GPU moves
+    /// bounce through the host).
+    pub fn route(&self, from: SpaceId, to: SpaceId) -> Vec<LinkId> {
+        if from == to {
+            return Vec::new();
+        }
+        if let Some(l) = self.link_between(from, to) {
+            return vec![l.id];
+        }
+        let up = self.link_between(from, self.main_space);
+        let down = self.link_between(self.main_space, to);
+        match (up, down) {
+            (Some(a), Some(b)) => vec![a.id, b.id],
+            _ => panic!("no route between spaces {from} and {to}"),
+        }
+    }
+
+    /// Pure transfer time (seconds) of `bytes` along the route, ignoring
+    /// link contention (the engine adds queuing on top).
+    pub fn transfer_time(&self, from: SpaceId, to: SpaceId, bytes: u64) -> f64 {
+        self.route(from, to)
+            .iter()
+            .map(|&lid| {
+                let l = &self.links[lid];
+                l.latency + bytes as f64 / l.bandwidth
+            })
+            .sum()
+    }
+
+    /// Memory-space capacities indexed by space id (coherence input).
+    pub fn capacities(&self) -> Vec<u64> {
+        self.spaces.iter().map(|s| s.capacity).collect()
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.procs.len()
+    }
+
+    pub fn proc_type(&self, p: ProcId) -> &ProcType {
+        &self.proc_types[self.procs[p].ptype]
+    }
+
+    /// Processors grouped by type id (diagnostics / traces).
+    pub fn procs_of_type(&self, t: ProcTypeId) -> Vec<ProcId> {
+        self.procs.iter().filter(|p| p.ptype == t).map(|p| p.id).collect()
+    }
+}
+
+/// Convenience builder used by tests and synthetic experiments.
+#[derive(Debug, Default)]
+pub struct MachineBuilder {
+    name: String,
+    spaces: Vec<MemSpace>,
+    links: Vec<Link>,
+    proc_types: Vec<ProcType>,
+    procs: Vec<Processor>,
+    main_space: SpaceId,
+}
+
+impl MachineBuilder {
+    pub fn new(name: &str) -> MachineBuilder {
+        MachineBuilder { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn space(&mut self, name: &str, capacity: u64) -> SpaceId {
+        let id = self.spaces.len();
+        self.spaces.push(MemSpace { id, name: name.to_string(), capacity });
+        id
+    }
+
+    pub fn main(&mut self, s: SpaceId) -> &mut Self {
+        self.main_space = s;
+        self
+    }
+
+    /// Add a symmetric pair of links.
+    pub fn connect(&mut self, a: SpaceId, b: SpaceId, latency: f64, bandwidth: f64) -> &mut Self {
+        for (f, t) in [(a, b), (b, a)] {
+            let id = self.links.len();
+            self.links.push(Link { id, from: f, to: t, latency, bandwidth });
+        }
+        self
+    }
+
+    pub fn proc_type(&mut self, name: &str, busy_watts: f64, idle_watts: f64) -> ProcTypeId {
+        let id = self.proc_types.len();
+        self.proc_types.push(ProcType { id, name: name.to_string(), busy_watts, idle_watts });
+        id
+    }
+
+    pub fn processors(&mut self, count: usize, prefix: &str, ptype: ProcTypeId, space: SpaceId) -> &mut Self {
+        for i in 0..count {
+            let id = self.procs.len();
+            self.procs.push(Processor { id, name: format!("{prefix}{i}"), ptype, space });
+        }
+        self
+    }
+
+    pub fn build(self) -> Machine {
+        let m = Machine {
+            name: self.name,
+            spaces: self.spaces,
+            links: self.links,
+            proc_types: self.proc_types,
+            procs: self.procs,
+            main_space: self.main_space,
+        };
+        if let Err(e) = m.validate() {
+            panic!("invalid machine: {e}");
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// host + 2 GPUs over PCIe-ish links.
+    pub fn toy_gpu_machine() -> Machine {
+        let mut b = MachineBuilder::new("toy");
+        let host = b.space("host", u64::MAX);
+        let g0 = b.space("gpu0_mem", 4 << 30);
+        let g1 = b.space("gpu1_mem", 4 << 30);
+        b.main(host);
+        b.connect(host, g0, 10e-6, 12e9);
+        b.connect(host, g1, 10e-6, 12e9);
+        let cpu = b.proc_type("cpu", 20.0, 5.0);
+        let gpu = b.proc_type("gpu", 180.0, 30.0);
+        b.processors(4, "cpu", cpu, host);
+        b.processors(2, "gpu", gpu, g0); // gpu0 in g0
+        // rebind second gpu to its own space
+        let mut m = b.build();
+        m.procs[5].space = g1;
+        m
+    }
+
+    #[test]
+    fn builder_produces_valid_machine() {
+        let m = toy_gpu_machine();
+        assert!(m.validate().is_ok());
+        assert_eq!(m.n_procs(), 6);
+        assert_eq!(m.procs_of_type(0).len(), 4);
+        assert_eq!(m.procs_of_type(1).len(), 2);
+    }
+
+    #[test]
+    fn direct_route_and_time() {
+        let m = toy_gpu_machine();
+        let r = m.route(0, 1);
+        assert_eq!(r.len(), 1);
+        // 12 MB over 12 GB/s + 10us latency
+        let t = m.transfer_time(0, 1, 12_000_000);
+        assert!((t - (10e-6 + 1e-3)).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn two_hop_route_via_main() {
+        let m = toy_gpu_machine();
+        let r = m.route(1, 2);
+        assert_eq!(r.len(), 2);
+        let t = m.transfer_time(1, 2, 12_000_000);
+        assert!((t - 2.0 * (10e-6 + 1e-3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn same_space_is_free() {
+        let m = toy_gpu_machine();
+        assert!(m.route(1, 1).is_empty());
+        assert_eq!(m.transfer_time(1, 1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_orphan_space() {
+        let mut b = MachineBuilder::new("bad");
+        let h = b.space("host", u64::MAX);
+        let g = b.space("gpu", 1 << 30);
+        b.main(h);
+        let t = b.proc_type("cpu", 1.0, 0.1);
+        b.processors(1, "c", t, h);
+        // no links to g
+        let m = Machine {
+            name: "bad".into(),
+            spaces: b.spaces.clone(),
+            links: vec![],
+            proc_types: b.proc_types.clone(),
+            procs: b.procs.clone(),
+            main_space: h,
+        };
+        assert!(m.validate().is_err());
+        let _ = g;
+    }
+
+    #[test]
+    fn validate_rejects_empty() {
+        let m = Machine {
+            name: "empty".into(),
+            spaces: vec![],
+            links: vec![],
+            proc_types: vec![],
+            procs: vec![],
+            main_space: 0,
+        };
+        assert!(m.validate().is_err());
+    }
+}

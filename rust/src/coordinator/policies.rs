@@ -1,0 +1,122 @@
+//! Scheduling policy knobs (paper §2.1, "Task and data scheduling
+//! heuristics"): processor-selection heuristics and task-ordering choices.
+//! `PriorityList` + `EarliestFinish` is practically identical to HEFT
+//! (Topcuoglu et al., 2002).
+
+/// Processor-selection heuristics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProcSelect {
+    /// R-P: random among processors idle at the task's release time.
+    Random,
+    /// F-P: fastest (for this task) among idle processors at release time.
+    Fastest,
+    /// EIT-P: the processor becoming idle first.
+    EarliestIdle,
+    /// EFT-P: the processor finishing this task first, accounting for
+    /// eventual data transfers.
+    EarliestFinish,
+}
+
+impl ProcSelect {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProcSelect::Random => "R-P",
+            ProcSelect::Fastest => "F-P",
+            ProcSelect::EarliestIdle => "EIT-P",
+            ProcSelect::EarliestFinish => "EFT-P",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ProcSelect> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "r-p" | "rp" | "random" => ProcSelect::Random,
+            "f-p" | "fp" | "fastest" => ProcSelect::Fastest,
+            "eit-p" | "eit" | "earliest-idle" => ProcSelect::EarliestIdle,
+            "eft-p" | "eft" | "earliest-finish" => ProcSelect::EarliestFinish,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [ProcSelect; 4] =
+        [ProcSelect::Random, ProcSelect::Fastest, ProcSelect::EarliestIdle, ProcSelect::EarliestFinish];
+}
+
+/// Task scheduling order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Ordering {
+    /// First-come, first-served (release-time order).
+    Fcfs,
+    /// Priority list by decreasing critical time (backflow upward rank).
+    PriorityList,
+}
+
+impl Ordering {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Ordering::Fcfs => "FCFS",
+            Ordering::PriorityList => "PL",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Ordering> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "fcfs" => Ordering::Fcfs,
+            "pl" | "priority-list" | "priority" => Ordering::PriorityList,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [Ordering; 2] = [Ordering::Fcfs, Ordering::PriorityList];
+}
+
+/// One scheduling configuration row of Table 1, e.g. "PL/EFT-P".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SchedConfig {
+    pub ordering: Ordering,
+    pub select: ProcSelect,
+}
+
+impl SchedConfig {
+    pub fn new(ordering: Ordering, select: ProcSelect) -> SchedConfig {
+        SchedConfig { ordering, select }
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}/{}", self.ordering.name(), self.select.name())
+    }
+
+    /// The eight rows of Table 1, in the paper's order.
+    pub fn table1_rows() -> Vec<SchedConfig> {
+        let mut out = Vec::new();
+        for select in [ProcSelect::Random, ProcSelect::Fastest, ProcSelect::EarliestIdle, ProcSelect::EarliestFinish] {
+            for ordering in [Ordering::Fcfs, Ordering::PriorityList] {
+                out.push(SchedConfig::new(ordering, select));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for s in ProcSelect::ALL {
+            assert_eq!(ProcSelect::from_name(s.name()), Some(s));
+        }
+        for o in Ordering::ALL {
+            assert_eq!(Ordering::from_name(o.name()), Some(o));
+        }
+        assert_eq!(ProcSelect::from_name("zzz"), None);
+    }
+
+    #[test]
+    fn table1_has_eight_rows() {
+        let rows = SchedConfig::table1_rows();
+        assert_eq!(rows.len(), 8);
+        assert_eq!(rows[0].name(), "FCFS/R-P");
+        assert_eq!(rows[7].name(), "PL/EFT-P");
+    }
+}

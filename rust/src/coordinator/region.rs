@@ -1,0 +1,189 @@
+//! Rectangular data-block regions.
+//!
+//! A data block in HeSP is a rectangular sub-region of a named matrix,
+//! identified by half-open row/column ranges. All containment, overlap and
+//! intersection relations of the data DAG (paper §2.1, Figs. 3–4) are
+//! geometric predicates on these regions, which makes the coherence
+//! machinery exact and property-testable.
+
+/// Identifier of a top-level matrix (HeSP can schedule programs touching
+/// several independent matrices).
+pub type MatrixId = u32;
+
+/// A rectangular region of a matrix: rows `[r0, r1)`, cols `[c0, c1)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Region {
+    pub matrix: MatrixId,
+    pub r0: u32,
+    pub r1: u32,
+    pub c0: u32,
+    pub c1: u32,
+}
+
+impl Region {
+    pub fn new(matrix: MatrixId, r0: u32, r1: u32, c0: u32, c1: u32) -> Region {
+        debug_assert!(r0 < r1 && c0 < c1, "degenerate region {r0}..{r1} x {c0}..{c1}");
+        Region { matrix, r0, r1, c0, c1 }
+    }
+
+    /// Square tile helper: rows/cols `[i*b, (i+1)*b) x [j*b, (j+1)*b)`
+    /// offset by the region origin of `within`.
+    pub fn tile(within: &Region, b: u32, i: u32, j: u32) -> Region {
+        Region::new(
+            within.matrix,
+            within.r0 + i * b,
+            within.r0 + (i + 1) * b,
+            within.c0 + j * b,
+            within.c0 + (j + 1) * b,
+        )
+    }
+
+    pub fn rows(&self) -> u32 {
+        self.r1 - self.r0
+    }
+
+    pub fn cols(&self) -> u32 {
+        self.c1 - self.c0
+    }
+
+    /// Number of elements.
+    pub fn area(&self) -> u64 {
+        self.rows() as u64 * self.cols() as u64
+    }
+
+    /// Geometric mean edge — the "characteristic size d" used when choosing
+    /// a partition parameter p with b = p * d (paper §2.1).
+    pub fn char_size(&self) -> f64 {
+        (self.rows() as f64 * self.cols() as f64).sqrt()
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows() == self.cols()
+    }
+
+    /// `self` fully contains `other` (non-strict).
+    pub fn contains(&self, other: &Region) -> bool {
+        self.matrix == other.matrix
+            && self.r0 <= other.r0
+            && other.r1 <= self.r1
+            && self.c0 <= other.c0
+            && other.c1 <= self.c1
+    }
+
+    /// Regions overlap in at least one element.
+    pub fn intersects(&self, other: &Region) -> bool {
+        self.matrix == other.matrix
+            && self.r0 < other.r1
+            && other.r0 < self.r1
+            && self.c0 < other.c1
+            && other.c0 < self.c1
+    }
+
+    /// The overlap region, if any. Partial overlaps become the extra data
+    /// DAG descriptors of Fig. 4.
+    pub fn intersection(&self, other: &Region) -> Option<Region> {
+        if !self.intersects(other) {
+            return None;
+        }
+        Some(Region::new(
+            self.matrix,
+            self.r0.max(other.r0),
+            self.r1.min(other.r1),
+            self.c0.max(other.c0),
+            self.c1.min(other.c1),
+        ))
+    }
+
+    /// Partial overlap: they intersect but neither contains the other.
+    pub fn partially_overlaps(&self, other: &Region) -> bool {
+        self.intersects(other) && !self.contains(other) && !other.contains(self)
+    }
+}
+
+impl std::fmt::Display for Region {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "M{}[{}:{},{}:{}]", self.matrix, self.r0, self.r1, self.c0, self.c1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn r(r0: u32, r1: u32, c0: u32, c1: u32) -> Region {
+        Region::new(0, r0, r1, c0, c1)
+    }
+
+    #[test]
+    fn tile_indexing() {
+        let root = r(0, 1024, 0, 1024);
+        let t = Region::tile(&root, 256, 1, 3);
+        assert_eq!(t, r(256, 512, 768, 1024));
+        assert!(root.contains(&t));
+    }
+
+    #[test]
+    fn tile_respects_origin() {
+        let q2 = r(512, 1024, 0, 512);
+        let t = Region::tile(&q2, 256, 0, 1);
+        assert_eq!(t, r(512, 768, 256, 512));
+    }
+
+    #[test]
+    fn containment() {
+        let a = r(0, 100, 0, 100);
+        let b = r(10, 50, 20, 60);
+        assert!(a.contains(&b));
+        assert!(!b.contains(&a));
+        assert!(a.contains(&a));
+    }
+
+    #[test]
+    fn different_matrices_never_relate() {
+        let a = Region::new(0, 0, 10, 0, 10);
+        let b = Region::new(1, 0, 10, 0, 10);
+        assert!(!a.contains(&b));
+        assert!(!a.intersects(&b));
+        assert_eq!(a.intersection(&b), None);
+    }
+
+    #[test]
+    fn intersection_geometry() {
+        let a = r(0, 50, 0, 50);
+        let b = r(25, 75, 25, 75);
+        assert_eq!(a.intersection(&b), Some(r(25, 50, 25, 50)));
+        assert!(a.partially_overlaps(&b));
+        // adjacent (share an edge) regions do not intersect
+        let c = r(50, 60, 0, 50);
+        assert!(!a.intersects(&c));
+    }
+
+    #[test]
+    fn partial_overlap_excludes_nesting() {
+        let a = r(0, 100, 0, 100);
+        let b = r(10, 20, 10, 20);
+        assert!(a.intersects(&b));
+        assert!(!a.partially_overlaps(&b));
+    }
+
+    #[test]
+    fn fig4_two_tilings_intersect() {
+        // Quadrant Q2 split by two tilings of non-divisible grains (3 vs 2):
+        // a 2x2 tile at (0,0) of a 6x6 block vs a 3x3 tile — partial overlap.
+        let yellow = r(0, 2, 0, 2);
+        let blue = r(0, 3, 0, 3);
+        assert!(blue.contains(&yellow)); // this pair nests...
+        let yellow2 = r(2, 4, 2, 4);
+        assert!(blue.partially_overlaps(&yellow2)); // ...this one does not
+        assert_eq!(blue.intersection(&yellow2), Some(r(2, 3, 2, 3)));
+    }
+
+    #[test]
+    fn area_and_char_size() {
+        let a = r(0, 128, 0, 512);
+        assert_eq!(a.area(), 65536);
+        assert!((a.char_size() - 256.0).abs() < 1e-12);
+        assert!(!a.is_square());
+        assert!(r(0, 4, 0, 4).is_square());
+    }
+}

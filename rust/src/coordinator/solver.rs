@@ -1,0 +1,522 @@
+//! The iterative scheduler-partitioner (paper §2.1, "Iterative solver").
+//!
+//! Each iteration runs a *schedule stage* (full discrete-event simulation
+//! of the current hierarchical DAG) followed by a *partition stage*:
+//!
+//! 1. **Candidate selection** — `All` leaves, `CP` (leaves on the critical
+//!    path), or `Shallow` (leaves of minimal cluster depth); every existing
+//!    task cluster is additionally a candidate to be merged back (p = 1)
+//!    or re-partitioned at a different granularity (p < 1).
+//! 2. **Scoring** — each candidate's score is the current cost delay minus
+//!    an estimated cost after the move, the estimate driven by the
+//!    available parallelism (idle processors) around the candidate's
+//!    scheduled interval.
+//! 3. **Sampling** — `Hard` takes the max-score candidate; `Soft` samples
+//!    with probability proportional to score.
+//!
+//! The solver keeps the best (dag, schedule) pair seen; the applied moves
+//! walk the search space even through locally-worse states (Soft mode).
+
+use super::energy::Objective;
+use super::engine::{simulate, simulate_flat, Schedule, SimConfig};
+use super::ordering::{critical_path, critical_times};
+use super::partitioners::{snap_sub_edge, PartitionerSet};
+use super::perfmodel::PerfDb;
+use super::platform::Machine;
+use super::task::TaskId;
+use super::taskdag::TaskDag;
+use crate::util::rng::Rng;
+
+/// Which tasks enter the partition-candidate list (paper: All/CP/Shallow).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CandidateSelect {
+    All,
+    CriticalPath,
+    Shallow,
+}
+
+impl CandidateSelect {
+    pub fn from_name(s: &str) -> Option<CandidateSelect> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "all" => CandidateSelect::All,
+            "cp" | "critical-path" => CandidateSelect::CriticalPath,
+            "shallow" => CandidateSelect::Shallow,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CandidateSelect::All => "All",
+            CandidateSelect::CriticalPath => "CP",
+            CandidateSelect::Shallow => "Shallow",
+        }
+    }
+}
+
+/// Final candidate choice (paper: Hard/Soft).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampling {
+    /// Take the maximum-score candidate.
+    Hard,
+    /// Sample proportionally to score.
+    Soft,
+}
+
+impl Sampling {
+    pub fn from_name(s: &str) -> Option<Sampling> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "hard" => Sampling::Hard,
+            "soft" => Sampling::Soft,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Sampling::Hard => "Hard",
+            Sampling::Soft => "Soft",
+        }
+    }
+}
+
+/// Solver configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SolverConfig {
+    pub candidates: CandidateSelect,
+    pub sampling: Sampling,
+    /// Number of schedule+partition iterations.
+    pub iters: usize,
+    /// Never partition below this tile edge.
+    pub min_edge: u32,
+    pub objective: Objective,
+    pub sim: SimConfig,
+    pub seed: u64,
+    /// Allow merge / re-partition moves on existing clusters.
+    pub allow_merge: bool,
+}
+
+impl SolverConfig {
+    /// The paper's main configuration: All/Soft, makespan objective.
+    pub fn all_soft(sim: SimConfig, iters: usize, min_edge: u32) -> SolverConfig {
+        SolverConfig {
+            candidates: CandidateSelect::All,
+            sampling: Sampling::Soft,
+            iters,
+            min_edge,
+            objective: Objective::Makespan,
+            sim,
+            seed: 0x5e5f,
+            allow_merge: true,
+        }
+    }
+}
+
+/// One move of the partition stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    Partition { task: TaskId, sub_edge: u32 },
+    Merge { cluster: TaskId },
+    Repartition { cluster: TaskId, sub_edge: u32 },
+}
+
+/// Per-iteration log entry.
+#[derive(Debug, Clone)]
+pub struct IterLog {
+    pub iter: usize,
+    pub cost: f64,
+    pub n_tasks: usize,
+    pub action: Option<Action>,
+    pub score: f64,
+}
+
+/// Solver output: best state found + full iteration history.
+pub struct SolveResult {
+    pub best_cost: f64,
+    pub best_schedule: Schedule,
+    pub best_dag: TaskDag,
+    pub best_iter: usize,
+    pub history: Vec<IterLog>,
+}
+
+/// Run the iterative scheduler-partitioner starting from `dag`.
+pub fn solve(
+    mut dag: TaskDag,
+    machine: &Machine,
+    db: &PerfDb,
+    parts: &PartitionerSet,
+    cfg: SolverConfig,
+) -> SolveResult {
+    let mut rng = Rng::new(cfg.seed);
+    let mut history = Vec::new();
+    let mut best: Option<(f64, Schedule, TaskDag, usize)> = None;
+
+    for iter in 0..cfg.iters.max(1) {
+        let flat = dag.flat_dag();
+        let sched = simulate_flat(&dag, &flat, machine, db, cfg.sim);
+        let cost = cfg.objective.cost(&sched, machine);
+        if best.as_ref().map(|b| cost < b.0).unwrap_or(true) {
+            best = Some((cost, sched.clone(), dag.clone(), iter));
+        }
+
+        let cands = collect_candidates(&dag, &flat, &sched, machine, db, parts, &cfg);
+        let mut entry = IterLog { iter, cost, n_tasks: dag.frontier().len(), action: None, score: 0.0 };
+        if cands.is_empty() {
+            history.push(entry);
+            break;
+        }
+        let idx = match cfg.sampling {
+            Sampling::Hard => {
+                cands
+                    .iter()
+                    .enumerate()
+                    .max_by(|(_, a), (_, b)| a.1.total_cmp(&b.1))
+                    .map(|(i, _)| i)
+                    .unwrap()
+            }
+            Sampling::Soft => {
+                let weights: Vec<f64> = cands.iter().map(|c| c.1).collect();
+                rng.weighted(&weights)
+            }
+        };
+        let (action, score) = cands[idx];
+        apply(&mut dag, parts, action);
+        entry.action = Some(action);
+        entry.score = score;
+        history.push(entry);
+    }
+
+    let (best_cost, best_schedule, best_dag, best_iter) = best.unwrap();
+    SolveResult { best_cost, best_schedule, best_dag, best_iter, history }
+}
+
+fn apply(dag: &mut TaskDag, parts: &PartitionerSet, action: Action) {
+    match action {
+        Action::Partition { task, sub_edge } => {
+            parts.apply(dag, task, sub_edge);
+        }
+        Action::Merge { cluster } => dag.merge(cluster),
+        Action::Repartition { cluster, sub_edge } => {
+            dag.merge(cluster);
+            parts.apply(dag, cluster, sub_edge);
+        }
+    }
+}
+
+/// Build the scored candidate list for one iteration (positive scores only).
+fn collect_candidates(
+    dag: &TaskDag,
+    flat: &super::taskdag::FlatDag,
+    sched: &Schedule,
+    machine: &Machine,
+    db: &PerfDb,
+    parts: &PartitionerSet,
+    cfg: &SolverConfig,
+) -> Vec<(Action, f64)> {
+    let n_procs = machine.n_procs();
+    let mut out = Vec::new();
+
+    // per-proc sorted busy intervals: O(log k) "is p busy during [t0,t1)?"
+    let mut proc_ivs: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n_procs];
+    for a in &sched.assignments {
+        proc_ivs[a.proc].push((a.start, a.end));
+    }
+    for iv in &mut proc_ivs {
+        iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    }
+    let busy_during = |p: usize, t0: f64, t1: f64| -> bool {
+        let iv = &proc_ivs[p];
+        // first interval with end > t0
+        let i = iv.partition_point(|&(_, e)| e <= t0);
+        i < iv.len() && iv[i].0 < t1
+    };
+
+    // ---- select leaf positions per policy ----
+    let positions: Vec<usize> = match cfg.candidates {
+        CandidateSelect::All => (0..flat.len()).collect(),
+        CandidateSelect::CriticalPath => {
+            let ct = critical_times(dag, flat, machine, db);
+            critical_path(flat, &ct)
+        }
+        CandidateSelect::Shallow => {
+            let min_d = flat.tasks.iter().map(|&t| dag.task(t).depth).min().unwrap_or(0);
+            (0..flat.len()).filter(|&i| dag.task(flat.tasks[i]).depth == min_d).collect()
+        }
+    };
+
+    // ---- partition candidates ----
+    for pos in positions {
+        let tid = flat.tasks[pos];
+        let t = dag.task(tid);
+        if !parts.can_partition(t.kind) {
+            continue;
+        }
+        let edge = t.char_edge().round() as u32;
+        if edge / 2 < cfg.min_edge {
+            continue;
+        }
+        let a = &sched.assignments[pos];
+        let dur = a.end - a.start;
+        if dur <= 0.0 {
+            continue;
+        }
+        let idle = (0..n_procs).filter(|&p| !busy_during(p, a.start, a.end)).count();
+        let avail = idle + 1;
+        // the more available parallelism, the smaller p (paper §2.1):
+        // target an s x s sub-grid with roughly `avail` parallel sub-tasks.
+        let s_target = ((avail as f64).sqrt().ceil() as u32).max(2);
+        let target_edge = edge as f64 / s_target as f64;
+        let Some(sub_edge) = snap_sub_edge(edge, target_edge, cfg.min_edge) else {
+            continue;
+        };
+        // estimated post-partition delay: the task's flops spread over the
+        // assigned + idle processors at the finer grain's efficiency
+        let assigned_type = machine.procs[a.proc].ptype;
+        let mut rate = db.curve(assigned_type, t.kind).gflops(sub_edge as f64);
+        // processors idle during [start, end) can absorb sub-tasks
+        for p in 0..n_procs {
+            if p != a.proc && !busy_during(p, a.start, a.end) {
+                rate += db.curve(machine.procs[p].ptype, t.kind).gflops(sub_edge as f64);
+            }
+        }
+        let est = t.flops / (rate * 1e9);
+        let score = dur - est;
+        if score > 0.0 {
+            out.push((Action::Partition { task: tid, sub_edge }, score));
+        }
+    }
+
+    // ---- cluster candidates: merge back or re-partition ----
+    if cfg.allow_merge {
+        // leaf spans per cluster: walk frontier, attribute to ancestors
+        let pos_of: std::collections::HashMap<TaskId, usize> =
+            flat.tasks.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+        for cluster in dag.clusters() {
+            let c = dag.task(cluster);
+            // gather descendant leaves
+            let mut leaves = Vec::new();
+            let mut stack = vec![cluster];
+            while let Some(x) = stack.pop() {
+                match &dag.task(x).children {
+                    None => leaves.push(x),
+                    Some(ch) => stack.extend(ch.iter().copied()),
+                }
+            }
+            let (mut t0, mut t1) = (f64::INFINITY, 0.0f64);
+            for l in &leaves {
+                if let Some(&p) = pos_of.get(l) {
+                    let a = &sched.assignments[p];
+                    t0 = t0.min(a.start);
+                    t1 = t1.max(a.end);
+                }
+            }
+            if !t0.is_finite() || t1 <= t0 {
+                continue;
+            }
+            let span = t1 - t0;
+            let edge = c.char_edge().round() as u32;
+            // merged estimate: whole cluster as one task on the fastest
+            // processor type for it
+            let best_rate = (0..machine.proc_types.len())
+                .map(|pt| db.curve(pt, c.kind).gflops(edge as f64))
+                .fold(0.0f64, f64::max);
+            let est_merged = c.flops / (best_rate * 1e9);
+            let merge_score = span - est_merged;
+            if merge_score > 0.0 {
+                out.push((Action::Merge { cluster }, merge_score));
+            }
+            // re-partition at one step coarser granularity than current
+            if let Some(cur) = c.partition_edge {
+                let idle = (0..n_procs).filter(|&p| !busy_during(p, t0, t1)).count();
+                if let Some(coarser) = snap_sub_edge(edge, cur as f64 * 2.0, cfg.min_edge) {
+                    if coarser != cur {
+                        // fewer, bigger tasks: better per-task efficiency;
+                        // estimate with the same busy-work at the coarser
+                        // grain's best rate, same parallelism
+                        let rate_now = db
+                            .curve(0, c.kind)
+                            .gflops(cur as f64)
+                            .max(1e-9);
+                        let rate_new = db.curve(0, c.kind).gflops(coarser as f64);
+                        let est = span * rate_now / rate_new;
+                        let score = (span - est) * if idle == 0 { 1.0 } else { 0.1 };
+                        if score > 0.0 {
+                            out.push((Action::Repartition { cluster, sub_edge: coarser }, score));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    out
+}
+
+/// Simulate the uniform (homogeneous) tilings of an n x n Cholesky root
+/// for each tile edge — the static baseline of Fig. 5 (right) and of the
+/// "Best Homogeneous" halves of Table 1.
+pub fn homogeneous_sweep(
+    n: u32,
+    tiles: &[u32],
+    machine: &Machine,
+    db: &PerfDb,
+    sim: SimConfig,
+) -> Vec<(u32, TaskDag, Schedule)> {
+    use super::partitioners::cholesky;
+    let mut out = Vec::new();
+    for &b in tiles {
+        if n % b != 0 || n / b < 2 {
+            continue;
+        }
+        let mut dag = cholesky::root(n);
+        cholesky::partition_uniform(&mut dag, b);
+        let sched = simulate(&dag, machine, db, sim);
+        out.push((b, dag, sched));
+    }
+    out
+}
+
+/// Best (lowest-cost) entry of a homogeneous sweep.
+pub fn best_homogeneous(
+    n: u32,
+    tiles: &[u32],
+    machine: &Machine,
+    db: &PerfDb,
+    sim: SimConfig,
+    objective: Objective,
+) -> Option<(u32, TaskDag, Schedule)> {
+    homogeneous_sweep(n, tiles, machine, db, sim)
+        .into_iter()
+        .min_by(|a, b| objective.cost(&a.2, machine).total_cmp(&objective.cost(&b.2, machine)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioners::cholesky;
+    use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
+    use crate::coordinator::platform::{Machine, MachineBuilder};
+    use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+
+    /// 4 CPUs with saturating curves: small tiles are inefficient, so the
+    /// solver has a real granularity trade-off.
+    fn setup() -> (Machine, PerfDb) {
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let t = b.proc_type("cpu", 1.0, 0.1);
+        b.processors(4, "c", t, h);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Saturating { peak: 20.0, half: 64.0, exponent: 2.0 });
+        (m, db)
+    }
+
+    fn simcfg() -> SimConfig {
+        SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+    }
+
+    #[test]
+    fn solver_improves_over_root_task() {
+        let (m, db) = setup();
+        let dag = cholesky::root(1024);
+        let root_sched = simulate(&dag, &m, &db, simcfg());
+        let parts = PartitionerSet::standard();
+        let cfg = SolverConfig::all_soft(simcfg(), 30, 64);
+        let res = solve(dag, &m, &db, &parts, cfg);
+        assert!(res.best_cost < root_sched.makespan, "{} < {}", res.best_cost, root_sched.makespan);
+        assert!(res.best_dag.depth() >= 1);
+        assert!(!res.history.is_empty());
+    }
+
+    #[test]
+    fn hard_sampling_is_deterministic() {
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 10, 64);
+        cfg.sampling = Sampling::Hard;
+        let r1 = solve(cholesky::root(512), &m, &db, &parts, cfg);
+        let r2 = solve(cholesky::root(512), &m, &db, &parts, cfg);
+        assert_eq!(r1.best_cost, r2.best_cost);
+        assert_eq!(r1.history.len(), r2.history.len());
+    }
+
+    #[test]
+    fn soft_sampling_differs_across_seeds_but_is_reproducible() {
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 12, 64);
+        cfg.seed = 1;
+        let r1 = solve(cholesky::root(512), &m, &db, &parts, cfg);
+        let r1b = solve(cholesky::root(512), &m, &db, &parts, cfg);
+        assert_eq!(r1.best_cost, r1b.best_cost, "same seed, same trajectory");
+        let _ = r1;
+    }
+
+    #[test]
+    fn candidate_select_modes_run() {
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        for cs in [CandidateSelect::All, CandidateSelect::CriticalPath, CandidateSelect::Shallow] {
+            let mut cfg = SolverConfig::all_soft(simcfg(), 8, 64);
+            cfg.candidates = cs;
+            let res = solve(cholesky::root(512), &m, &db, &parts, cfg);
+            assert!(res.best_cost.is_finite(), "{cs:?}");
+        }
+    }
+
+    #[test]
+    fn min_edge_is_respected() {
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 25, 128);
+        cfg.sampling = Sampling::Hard;
+        let res = solve(cholesky::root(1024), &m, &db, &parts, cfg);
+        let frontier = res.best_dag.frontier();
+        for t in frontier {
+            assert!(res.best_dag.task(t).char_edge() >= 128.0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn homogeneous_sweep_has_interior_optimum() {
+        let (m, db) = setup();
+        let tiles = [64, 128, 256, 512];
+        let sweep = homogeneous_sweep(1024, &tiles, &m, &db, simcfg());
+        assert_eq!(sweep.len(), 4);
+        let (best_b, _, _) =
+            best_homogeneous(1024, &tiles, &m, &db, simcfg(), Objective::Makespan).unwrap();
+        // trade-off: neither the finest nor the coarsest tile wins
+        assert!(best_b == 128 || best_b == 256, "best_b={best_b}");
+    }
+
+    #[test]
+    fn solver_beats_best_homogeneous() {
+        // the paper's headline claim, in miniature
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let tiles = [64, 128, 256, 512];
+        let (_, hdag, hsched) =
+            best_homogeneous(1024, &tiles, &m, &db, simcfg(), Objective::Makespan).unwrap();
+        // start the heterogeneous search FROM the best homogeneous tiling
+        let cfg = SolverConfig::all_soft(simcfg(), 40, 64);
+        let res = solve(hdag, &m, &db, &parts, cfg);
+        assert!(
+            res.best_cost <= hsched.makespan * 1.0001,
+            "heterogeneous {} vs homogeneous {}",
+            res.best_cost,
+            hsched.makespan
+        );
+    }
+
+    #[test]
+    fn history_records_actions() {
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 6, 64);
+        cfg.sampling = Sampling::Hard;
+        let res = solve(cholesky::root(512), &m, &db, &parts, cfg);
+        assert!(res.history.iter().any(|h| h.action.is_some()));
+        assert!(res.history.iter().all(|h| h.cost.is_finite()));
+    }
+}

@@ -1,0 +1,235 @@
+//! Task model: the nodes of the hierarchical task DAG.
+//!
+//! A task has a kind (the tile-algorithm it runs), a read set and a write
+//! set of [`Region`]s, and a flop count derived from its geometry. Tasks
+//! are stored in an arena ([`super::taskdag::TaskDag`]); a task is either a
+//! *leaf* (schedulable) or *partitioned* into a cluster of children
+//! produced by one of the blocked-algorithm partitioners.
+
+use super::region::Region;
+
+pub type TaskId = usize;
+
+/// Tile-algorithm kinds. The first four are the Cholesky tasks of the
+/// paper's driving example; LU and QR kinds support the extension
+/// workloads; `Custom` lets library users register their own.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TaskKind {
+    /// Cholesky factorization of a diagonal tile (CHOL in the paper).
+    Potrf,
+    /// Triangular panel solve X L^T = B.
+    Trsm,
+    /// Symmetric trailing update C -= A A^T.
+    Syrk,
+    /// General trailing update C -= A B^T.
+    Gemm,
+    // ---- LU (no pivoting) extension workload ----
+    Getrf,
+    TrsmL,
+    TrsmU,
+    // ---- tile-QR extension workload ----
+    Geqrt,
+    Tsqrt,
+    Larfb,
+    Ssrfb,
+    /// User-defined kind (index into a user registry).
+    Custom(u16),
+}
+
+impl TaskKind {
+    /// Stable short name (trace files, perf-model config keys).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Potrf => "potrf",
+            TaskKind::Trsm => "trsm",
+            TaskKind::Syrk => "syrk",
+            TaskKind::Gemm => "gemm",
+            TaskKind::Getrf => "getrf",
+            TaskKind::TrsmL => "trsm_l",
+            TaskKind::TrsmU => "trsm_u",
+            TaskKind::Geqrt => "geqrt",
+            TaskKind::Tsqrt => "tsqrt",
+            TaskKind::Larfb => "larfb",
+            TaskKind::Ssrfb => "ssrfb",
+            TaskKind::Custom(_) => "custom",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TaskKind> {
+        Some(match s {
+            "potrf" | "chol" => TaskKind::Potrf,
+            "trsm" => TaskKind::Trsm,
+            "syrk" => TaskKind::Syrk,
+            "gemm" => TaskKind::Gemm,
+            "getrf" => TaskKind::Getrf,
+            "trsm_l" => TaskKind::TrsmL,
+            "trsm_u" => TaskKind::TrsmU,
+            "geqrt" => TaskKind::Geqrt,
+            "tsqrt" => TaskKind::Tsqrt,
+            "larfb" => TaskKind::Larfb,
+            "ssrfb" => TaskKind::Ssrfb,
+            _ => return None,
+        })
+    }
+
+    /// Flop count for a task of this kind whose characteristic tile edge is
+    /// `b` (matches python/compile/aot.py::task_flops so simulated GFLOPS
+    /// and real-execution GFLOPS are directly comparable).
+    pub fn flops(&self, b: f64) -> f64 {
+        let b3 = b * b * b;
+        match self {
+            TaskKind::Potrf => b3 / 3.0,
+            TaskKind::Trsm | TaskKind::TrsmL | TaskKind::TrsmU => b3,
+            // full-block symmetric update (kernels update the whole tile)
+            TaskKind::Syrk => b3,
+            TaskKind::Gemm => 2.0 * b3,
+            TaskKind::Getrf => 2.0 * b3 / 3.0,
+            TaskKind::Geqrt => 4.0 / 3.0 * b3,
+            TaskKind::Tsqrt => 10.0 / 3.0 * b3,
+            TaskKind::Larfb => 4.0 * b3,
+            TaskKind::Ssrfb => 5.0 * b3,
+            TaskKind::Custom(_) => b3,
+        }
+    }
+}
+
+/// Creation-time description of a task (the partitioners emit these; the
+/// DAG assigns ids and derives dependence edges).
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub kind: TaskKind,
+    /// Regions read (input dependences).
+    pub reads: Vec<Region>,
+    /// Regions written (output dependences). A region in both sets is an
+    /// in-out dependence (e.g. the C tile of a GEMM update).
+    pub writes: Vec<Region>,
+}
+
+impl TaskSpec {
+    pub fn new(kind: TaskKind, reads: Vec<Region>, writes: Vec<Region>) -> TaskSpec {
+        TaskSpec { kind, reads, writes }
+    }
+
+    /// Characteristic tile edge: geometric mean edge of the first write
+    /// region (every HeSP task has exactly one primary output tile).
+    pub fn char_edge(&self) -> f64 {
+        self.writes.first().map(|r| r.char_size()).unwrap_or(0.0)
+    }
+
+    pub fn flops(&self) -> f64 {
+        self.kind.flops(self.char_edge())
+    }
+}
+
+/// A node of the hierarchical task DAG.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub kind: TaskKind,
+    pub reads: Vec<Region>,
+    pub writes: Vec<Region>,
+    pub flops: f64,
+    /// Parent task this one was partitioned out of (None for the root).
+    pub parent: Option<TaskId>,
+    /// Children, in program order, if this task has been partitioned.
+    /// `Some(vec)` makes this node a *cluster*; only leaves are scheduled.
+    pub children: Option<Vec<TaskId>>,
+    /// Nesting depth: number of task clusters containing this task
+    /// (root = 0). Table 1's "DAG depth" is the max over leaves.
+    pub depth: u32,
+    /// Partition edge used when this cluster was created (diagnostics).
+    pub partition_edge: Option<u32>,
+}
+
+impl Task {
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_none()
+    }
+
+    /// Characteristic tile edge of this task (primary output geometry).
+    pub fn char_edge(&self) -> f64 {
+        self.writes.first().map(|r| r.char_size()).unwrap_or(0.0)
+    }
+
+    /// Bytes touched (reads + writes, dedup'd by region identity).
+    pub fn bytes_touched(&self, elem_bytes: u64) -> u64 {
+        let mut total = 0u64;
+        let mut seen: Vec<&Region> = Vec::new();
+        for r in self.reads.iter().chain(self.writes.iter()) {
+            if !seen.contains(&r) {
+                total += r.area() * elem_bytes;
+                seen.push(r);
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::region::Region;
+
+    fn reg(e: u32) -> Region {
+        Region::new(0, 0, e, 0, e)
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [
+            TaskKind::Potrf,
+            TaskKind::Trsm,
+            TaskKind::Syrk,
+            TaskKind::Gemm,
+            TaskKind::Getrf,
+            TaskKind::TrsmL,
+            TaskKind::TrsmU,
+            TaskKind::Geqrt,
+            TaskKind::Tsqrt,
+            TaskKind::Larfb,
+            TaskKind::Ssrfb,
+        ] {
+            assert_eq!(TaskKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(TaskKind::from_name("chol"), Some(TaskKind::Potrf));
+        assert_eq!(TaskKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn flops_match_aot_manifest_convention() {
+        // python/compile/aot.py::task_flops for b=10: potrf 1000/3, trsm
+        // 1000, syrk 1000, gemm 2000.
+        assert!((TaskKind::Potrf.flops(10.0) - 1000.0 / 3.0).abs() < 1e-9);
+        assert_eq!(TaskKind::Trsm.flops(10.0), 1000.0);
+        assert_eq!(TaskKind::Syrk.flops(10.0), 1000.0);
+        assert_eq!(TaskKind::Gemm.flops(10.0), 2000.0);
+    }
+
+    #[test]
+    fn spec_edge_and_flops() {
+        let s = TaskSpec::new(TaskKind::Gemm, vec![reg(64), reg(64)], vec![reg(64)]);
+        assert_eq!(s.char_edge(), 64.0);
+        assert_eq!(s.flops(), 2.0 * 64f64.powi(3));
+    }
+
+    #[test]
+    fn bytes_touched_dedups_inout() {
+        let t = Task {
+            id: 0,
+            kind: TaskKind::Syrk,
+            reads: vec![reg(32), reg(32)], // duplicate read regions count once
+            writes: vec![reg(32)],         // in-out with the read
+            flops: 0.0,
+            parent: None,
+            children: None,
+            depth: 0,
+            partition_edge: None,
+        };
+        assert_eq!(t.bytes_touched(4), 32 * 32 * 4);
+        let t2 = Task {
+            reads: vec![Region::new(0, 0, 32, 32, 64)],
+            ..t.clone()
+        };
+        assert_eq!(t2.bytes_touched(4), 2 * 32 * 32 * 4);
+    }
+}

@@ -1,0 +1,513 @@
+//! The hierarchical task DAG.
+//!
+//! Tasks live in an arena; *partitioning* a leaf replaces it (logically) by
+//! a cluster of children in program order, and *merging* a cluster restores
+//! the parent leaf — the two moves of the iterative scheduler-partitioner.
+//! Only the **frontier** (the leaves, in program order) is scheduled.
+//!
+//! Dependence edges are *derived, not declared*: the frontier is a
+//! sequential task stream (OmpSs/StarPU semantics) and RaW, WaR and WaW
+//! constraints are found by geometric overlap between read/write regions.
+//! This stays exact across nested partitions, where a sub-task of one
+//! cluster depends on a sub-task of another through regions of different
+//! granularity (paper §2.1).
+
+use std::collections::HashMap;
+
+use crate::util::fxhash::FxHashMap;
+
+use super::region::Region;
+use super::task::{Task, TaskId, TaskKind, TaskSpec};
+
+/// Hierarchical task DAG (arena + tree structure + derived edges).
+#[derive(Debug, Clone)]
+pub struct TaskDag {
+    tasks: Vec<Task>,
+    /// Tombstones for tasks removed by merges.
+    removed: Vec<bool>,
+    pub root: TaskId,
+}
+
+/// The schedulable view: frontier tasks in program order plus derived
+/// dependence edges (indices are positions in `tasks`).
+#[derive(Debug, Clone, Default)]
+pub struct FlatDag {
+    /// Frontier task ids in program order.
+    pub tasks: Vec<TaskId>,
+    /// preds[i] / succs[i]: positions of dependence neighbours of tasks[i].
+    pub preds: Vec<Vec<usize>>,
+    pub succs: Vec<Vec<usize>>,
+}
+
+impl FlatDag {
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// DAG width: maximum number of tasks in one longest-path level — the
+    /// paper's "maximum number of tasks that can be run in parallel".
+    pub fn width(&self) -> usize {
+        let mut level = vec![0usize; self.len()];
+        let mut widths: HashMap<usize, usize> = HashMap::new();
+        for i in 0..self.len() {
+            // program order is a topological order
+            let l = self.preds[i].iter().map(|&p| level[p] + 1).max().unwrap_or(0);
+            level[i] = l;
+            *widths.entry(l).or_insert(0) += 1;
+        }
+        widths.values().copied().max().unwrap_or(0)
+    }
+
+    /// Length (in tasks) of the longest dependence chain.
+    pub fn longest_path_len(&self) -> usize {
+        let mut level = vec![0usize; self.len()];
+        let mut best = 0;
+        for i in 0..self.len() {
+            level[i] = self.preds[i].iter().map(|&p| level[p] + 1).max().unwrap_or(0);
+            best = best.max(level[i] + 1);
+        }
+        best
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.preds.iter().map(|p| p.len()).sum()
+    }
+}
+
+impl TaskDag {
+    /// Create a DAG holding a single root task.
+    pub fn new(root: TaskSpec) -> TaskDag {
+        let flops = root.flops();
+        TaskDag {
+            tasks: vec![Task {
+                id: 0,
+                kind: root.kind,
+                reads: root.reads,
+                writes: root.writes,
+                flops,
+                parent: None,
+                children: None,
+                depth: 0,
+                partition_edge: None,
+            }],
+            removed: vec![false],
+            root: 0,
+        }
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        debug_assert!(!self.removed[id], "access to merged task {id}");
+        &self.tasks[id]
+    }
+
+    pub fn is_live(&self, id: TaskId) -> bool {
+        id < self.tasks.len() && !self.removed[id]
+    }
+
+    /// Number of live tasks (clusters + leaves).
+    pub fn live_count(&self) -> usize {
+        self.removed.iter().filter(|&&r| !r).count()
+    }
+
+    /// Partition a leaf into `specs` children (program order). Returns the
+    /// new child ids. `edge` records the sub-tile edge used.
+    pub fn partition(&mut self, id: TaskId, specs: Vec<TaskSpec>, edge: u32) -> Vec<TaskId> {
+        assert!(self.is_live(id), "partition of dead task {id}");
+        assert!(self.tasks[id].is_leaf(), "partition of non-leaf {id}");
+        assert!(!specs.is_empty(), "empty partition of task {id}");
+        let depth = self.tasks[id].depth + 1;
+        let mut ids = Vec::with_capacity(specs.len());
+        for s in specs {
+            let nid = self.tasks.len();
+            let flops = s.flops();
+            self.tasks.push(Task {
+                id: nid,
+                kind: s.kind,
+                reads: s.reads,
+                writes: s.writes,
+                flops,
+                parent: Some(id),
+                children: None,
+                depth,
+                partition_edge: None,
+            });
+            self.removed.push(false);
+            ids.push(nid);
+        }
+        self.tasks[id].children = Some(ids.clone());
+        self.tasks[id].partition_edge = Some(edge);
+        ids
+    }
+
+    /// Merge a cluster back into its parent leaf: removes the whole
+    /// descendant subtree. The task becomes schedulable again.
+    pub fn merge(&mut self, id: TaskId) {
+        assert!(self.is_live(id), "merge of dead task {id}");
+        let children = match self.tasks[id].children.take() {
+            Some(c) => c,
+            None => return, // already a leaf
+        };
+        self.tasks[id].partition_edge = None;
+        let mut stack = children;
+        while let Some(c) = stack.pop() {
+            if let Some(gc) = self.tasks[c].children.take() {
+                stack.extend(gc);
+            }
+            self.removed[c] = true;
+        }
+    }
+
+    /// Leaves in program order (DFS following child order).
+    pub fn frontier(&self) -> Vec<TaskId> {
+        let mut out = Vec::new();
+        let mut stack = vec![self.root];
+        while let Some(id) = stack.pop() {
+            match &self.tasks[id].children {
+                None => out.push(id),
+                Some(children) => {
+                    // push reversed so children pop in program order
+                    for &c in children.iter().rev() {
+                        stack.push(c);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Clusters (live non-leaf tasks), candidates for merge/re-partition.
+    pub fn clusters(&self) -> Vec<TaskId> {
+        (0..self.tasks.len())
+            .filter(|&i| !self.removed[i] && !self.tasks[i].is_leaf())
+            .collect()
+    }
+
+    /// DAG depth: max number of nested clusters over leaves (paper: root
+    /// unpartitioned = 0; one uniform blocking = 1; Table 1 reports 2–5).
+    pub fn depth(&self) -> u32 {
+        self.frontier().iter().map(|&t| self.tasks[t].depth).max().unwrap_or(0)
+    }
+
+    /// Total leaf flops (the workload's useful work).
+    pub fn total_flops(&self) -> f64 {
+        self.frontier().iter().map(|&t| self.tasks[t].flops).sum()
+    }
+
+    /// Build the schedulable view with derived dependence edges.
+    ///
+    /// Sequential-stream semantics over the frontier: for every pair of
+    /// accesses to overlapping regions where at least one is a write, the
+    /// later task depends on the earlier. Implemented with a registry of
+    /// distinct accessed regions carrying last-writer + readers-since.
+    pub fn flat_dag(&self) -> FlatDag {
+        let frontier = self.frontier();
+        let n = frontier.len();
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+
+        #[derive(Debug)]
+        struct Access {
+            last_writer: Option<usize>,
+            readers_since: Vec<usize>,
+        }
+        // registry of distinct regions with a grain-grid spatial index
+        let mut spatial = super::datadag::GrainIndex::new();
+        let mut registry: Vec<Access> = Vec::new();
+        let mut exact: FxHashMap<Region, usize> = FxHashMap::default();
+        // dedup stamps: stamp[p] == current pos  =>  p already a pred
+        let mut stamp: Vec<usize> = vec![usize::MAX; n];
+
+        for (pos, &tid) in frontier.iter().enumerate() {
+            let t = &self.tasks[tid];
+            {
+                let mut add_pred = |p: usize| {
+                    if p != pos && stamp[p] != pos {
+                        stamp[p] = pos;
+                        preds[pos].push(p);
+                        succs[p].push(pos);
+                    }
+                };
+                // RaW: reads depend on last writers of overlapping regions
+                for r in &t.reads {
+                    spatial.visit_intersecting(r, |ai| {
+                        if let Some(w) = registry[ai].last_writer {
+                            add_pred(w);
+                        }
+                    });
+                }
+                // WaW + WaR: writes depend on last writers and on readers
+                for w in &t.writes {
+                    spatial.visit_intersecting(w, |ai| {
+                        let a = &registry[ai];
+                        if let Some(lw) = a.last_writer {
+                            add_pred(lw);
+                        }
+                        for &rd in &a.readers_since {
+                            add_pred(rd);
+                        }
+                    });
+                }
+            }
+            // update registry
+            let touch = |region: &Region,
+                         registry: &mut Vec<Access>,
+                         exact: &mut FxHashMap<Region, usize>,
+                         spatial: &mut super::datadag::GrainIndex|
+             -> usize {
+                *exact.entry(*region).or_insert_with(|| {
+                    let ai = registry.len();
+                    registry.push(Access { last_writer: None, readers_since: Vec::new() });
+                    spatial.insert(*region, ai);
+                    ai
+                })
+            };
+            for r in &t.reads {
+                let ai = touch(r, &mut registry, &mut exact, &mut spatial);
+                registry[ai].readers_since.push(pos);
+            }
+            for w in &t.writes {
+                let ai = touch(w, &mut registry, &mut exact, &mut spatial);
+                registry[ai].last_writer = Some(pos);
+                registry[ai].readers_since.clear();
+            }
+        }
+
+        FlatDag { tasks: frontier, preds, succs }
+    }
+
+    /// Graphviz DOT export of the frontier DAG (Fig. 2a regeneration).
+    pub fn to_dot(&self) -> String {
+        let flat = self.flat_dag();
+        let mut out = String::from("digraph hesp {\n  rankdir=LR;\n");
+        for (i, &tid) in flat.tasks.iter().enumerate() {
+            let t = &self.tasks[tid];
+            let color = match t.kind {
+                TaskKind::Potrf => "gold",
+                TaskKind::Trsm => "skyblue",
+                TaskKind::Syrk => "salmon",
+                TaskKind::Gemm => "palegreen",
+                _ => "gray",
+            };
+            out.push_str(&format!(
+                "  n{i} [label=\"{}\\n{}\" style=filled fillcolor={color}];\n",
+                t.kind.name(),
+                t.writes.first().map(|r| r.to_string()).unwrap_or_default()
+            ));
+        }
+        for (i, ps) in flat.preds.iter().enumerate() {
+            for &p in ps {
+                out.push_str(&format!("  n{p} -> n{i};\n"));
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::region::Region;
+
+    fn reg(r0: u32, r1: u32, c0: u32, c1: u32) -> Region {
+        Region::new(0, r0, r1, c0, c1)
+    }
+
+    fn spec(kind: TaskKind, reads: Vec<Region>, writes: Vec<Region>) -> TaskSpec {
+        TaskSpec::new(kind, reads, writes)
+    }
+
+    fn root_chol(n: u32) -> TaskSpec {
+        let r = reg(0, n, 0, n);
+        spec(TaskKind::Potrf, vec![r], vec![r])
+    }
+
+    #[test]
+    fn single_task_dag() {
+        let dag = TaskDag::new(root_chol(64));
+        assert_eq!(dag.frontier(), vec![0]);
+        let flat = dag.flat_dag();
+        assert_eq!(flat.len(), 1);
+        assert!(flat.preds[0].is_empty());
+        assert_eq!(dag.depth(), 0);
+        assert_eq!(flat.width(), 1);
+    }
+
+    #[test]
+    fn partition_creates_program_order_frontier() {
+        let mut dag = TaskDag::new(root_chol(4));
+        // 2x2 blocked cholesky: potrf00, trsm10, syrk11, potrf11
+        let b = 2;
+        let t00 = reg(0, b, 0, b);
+        let t10 = reg(b, 2 * b, 0, b);
+        let t11 = reg(b, 2 * b, b, 2 * b);
+        let kids = dag.partition(
+            0,
+            vec![
+                spec(TaskKind::Potrf, vec![t00], vec![t00]),
+                spec(TaskKind::Trsm, vec![t00, t10], vec![t10]),
+                spec(TaskKind::Syrk, vec![t10, t11], vec![t11]),
+                spec(TaskKind::Potrf, vec![t11], vec![t11]),
+            ],
+            b,
+        );
+        assert_eq!(dag.frontier(), kids);
+        assert_eq!(dag.depth(), 1);
+
+        let flat = dag.flat_dag();
+        // trsm depends on potrf00 (RaW on t00)
+        assert_eq!(flat.preds[1], vec![0]);
+        // syrk depends on trsm (RaW t10)
+        assert_eq!(flat.preds[2], vec![1]);
+        // potrf11 depends on syrk (RaW+WaW t11)
+        assert_eq!(flat.preds[3], vec![2]);
+        assert_eq!(flat.longest_path_len(), 4);
+    }
+
+    #[test]
+    fn waw_and_war_edges() {
+        let mut dag = TaskDag::new(root_chol(8));
+        let a = reg(0, 8, 0, 8);
+        let kids = dag.partition(
+            0,
+            vec![
+                spec(TaskKind::Gemm, vec![], vec![a]),  // W
+                spec(TaskKind::Gemm, vec![a], vec![]),  // R  -> RaW on 0
+                spec(TaskKind::Gemm, vec![], vec![a]),  // W  -> WaW on 0, WaR on 1
+            ],
+            8,
+        );
+        assert_eq!(kids.len(), 3);
+        let flat = dag.flat_dag();
+        assert_eq!(flat.preds[1], vec![0]);
+        let mut p2 = flat.preds[2].clone();
+        p2.sort();
+        assert_eq!(p2, vec![0, 1]);
+    }
+
+    #[test]
+    fn cross_granularity_dependences() {
+        // Writer of a big block, then readers of its quadrants at finer
+        // grain: every quadrant reader must depend on the big writer.
+        let mut dag = TaskDag::new(root_chol(8));
+        let big = reg(0, 8, 0, 8);
+        let q = reg(4, 8, 0, 4);
+        let other = reg(0, 4, 4, 8);
+        dag.partition(
+            0,
+            vec![
+                spec(TaskKind::Gemm, vec![], vec![big]),
+                spec(TaskKind::Gemm, vec![q], vec![q]),
+                spec(TaskKind::Gemm, vec![other], vec![other]),
+                // writes a region overlapping q partially
+                spec(TaskKind::Gemm, vec![], vec![reg(2, 6, 0, 6)]),
+            ],
+            4,
+        );
+        let flat = dag.flat_dag();
+        assert_eq!(flat.preds[1], vec![0]);
+        assert_eq!(flat.preds[2], vec![0]);
+        // task3 overlaps big (WaW->0), q (WaW/WaR->1) and other? reg(2,6,0,6)
+        // cols 0..6 rows 2..6 vs other rows 0..4 cols 4..8: rows 2..4, cols
+        // 4..6 overlap -> WaR on 2 as well.
+        let mut p3 = flat.preds[3].clone();
+        p3.sort();
+        assert_eq!(p3, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn merge_restores_leaf_and_removes_subtree() {
+        let mut dag = TaskDag::new(root_chol(8));
+        let a = reg(0, 4, 0, 4);
+        let kids = dag.partition(0, vec![spec(TaskKind::Potrf, vec![a], vec![a]); 3], 4);
+        let gkids = dag.partition(kids[1], vec![spec(TaskKind::Potrf, vec![a], vec![a]); 2], 2);
+        assert_eq!(dag.frontier().len(), 4);
+        assert_eq!(dag.depth(), 2);
+        dag.merge(kids[1]);
+        assert_eq!(dag.frontier(), kids);
+        assert!(!dag.is_live(gkids[0]) && !dag.is_live(gkids[1]));
+        assert_eq!(dag.depth(), 1);
+        // merging the root removes everything below
+        dag.merge(0);
+        assert_eq!(dag.frontier(), vec![0]);
+        assert_eq!(dag.live_count(), 1);
+    }
+
+    #[test]
+    fn merge_leaf_is_noop() {
+        let mut dag = TaskDag::new(root_chol(8));
+        dag.merge(0);
+        assert_eq!(dag.frontier(), vec![0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_non_leaf_panics() {
+        let mut dag = TaskDag::new(root_chol(8));
+        let a = reg(0, 4, 0, 4);
+        dag.partition(0, vec![spec(TaskKind::Potrf, vec![a], vec![a])], 4);
+        dag.partition(0, vec![spec(TaskKind::Potrf, vec![a], vec![a])], 4);
+    }
+
+    #[test]
+    fn clusters_listed() {
+        let mut dag = TaskDag::new(root_chol(8));
+        let a = reg(0, 4, 0, 4);
+        let kids = dag.partition(0, vec![spec(TaskKind::Potrf, vec![a], vec![a]); 2], 4);
+        dag.partition(kids[0], vec![spec(TaskKind::Potrf, vec![a], vec![a]); 2], 2);
+        let mut cs = dag.clusters();
+        cs.sort();
+        assert_eq!(cs, vec![0, kids[0]]);
+    }
+
+    #[test]
+    fn width_of_fork_join() {
+        let mut dag = TaskDag::new(root_chol(8));
+        let w = reg(0, 8, 0, 8);
+        let r1 = reg(0, 4, 0, 4);
+        let r2 = reg(4, 8, 4, 8);
+        dag.partition(
+            0,
+            vec![
+                spec(TaskKind::Gemm, vec![], vec![w]),
+                spec(TaskKind::Gemm, vec![r1], vec![r1]),
+                spec(TaskKind::Gemm, vec![r2], vec![r2]),
+                spec(TaskKind::Gemm, vec![w], vec![w]),
+            ],
+            4,
+        );
+        let flat = dag.flat_dag();
+        assert_eq!(flat.width(), 2);
+        assert_eq!(flat.longest_path_len(), 3);
+        assert_eq!(flat.edge_count(), 5); // 0->1, 0->2, 0->3(WaW), 1->3, 2->3
+    }
+
+    #[test]
+    fn dot_export_mentions_all_tasks() {
+        let mut dag = TaskDag::new(root_chol(4));
+        let a = reg(0, 2, 0, 2);
+        dag.partition(0, vec![spec(TaskKind::Potrf, vec![a], vec![a]); 3], 2);
+        let dot = dag.to_dot();
+        assert_eq!(dot.matches("fillcolor").count(), 3);
+        assert!(dot.contains("digraph"));
+    }
+
+    #[test]
+    fn total_flops_sums_frontier() {
+        let mut dag = TaskDag::new(root_chol(8));
+        let a = reg(0, 4, 0, 4);
+        dag.partition(
+            0,
+            vec![
+                spec(TaskKind::Gemm, vec![a], vec![a]),
+                spec(TaskKind::Trsm, vec![a], vec![a]),
+            ],
+            4,
+        );
+        assert_eq!(dag.total_flops(), 2.0 * 64.0 + 64.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Synthetic workload generators beyond dense linear algebra — used by the
+//! robustness tests and the scheduler ablations ("the extracted insights
+//! can be applied to other irregular task-parallel implementations", §4).
+
+use super::region::Region;
+use super::task::{TaskKind, TaskSpec};
+use super::taskdag::TaskDag;
+use crate::util::rng::Rng;
+
+/// A layered fork-join DAG: `layers` stages of `width` independent tasks
+/// over disjoint tiles, with a reduction task between stages (classic
+/// bulk-synchronous shape). Tile edge = `b`.
+pub fn layered(layers: u32, width: u32, b: u32) -> TaskDag {
+    assert!(layers >= 1 && width >= 1);
+    let total = Region::new(0, 0, width * b, 0, (layers + 1) * b);
+    let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Custom(1), vec![total], vec![total]));
+    let mut specs = Vec::new();
+    for l in 0..layers {
+        let col = |i: u32, l: u32| Region::new(0, i * b, (i + 1) * b, l * b, (l + 1) * b);
+        // stage tasks read the previous reduction column, write their own
+        for i in 0..width {
+            specs.push(TaskSpec::new(TaskKind::Gemm, vec![col(0, l)], vec![col(i, l + 1)]));
+        }
+        // reduction: reads the whole next column band, writes cell (0, l+1)
+        let band = Region::new(0, 0, width * b, (l + 1) * b, (l + 2) * b);
+        if l + 1 < layers {
+            specs.push(TaskSpec::new(TaskKind::Syrk, vec![band], vec![col(0, l + 1)]));
+        }
+    }
+    let root = dag.root;
+    dag.partition(root, specs, b);
+    dag
+}
+
+/// 1-D stencil sweep: `steps` time steps over `cells` tiles; each step's
+/// task reads its neighbours from the previous step (wavefront DAG).
+pub fn stencil(cells: u32, steps: u32, b: u32) -> TaskDag {
+    assert!(cells >= 1 && steps >= 1);
+    let total = Region::new(0, 0, cells * b, 0, (steps + 1) * b);
+    let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Custom(2), vec![total], vec![total]));
+    let cell = |i: u32, t: u32| Region::new(0, i * b, (i + 1) * b, t * b, (t + 1) * b);
+    let mut specs = Vec::new();
+    for t in 0..steps {
+        for i in 0..cells {
+            let mut reads = vec![cell(i, t)];
+            if i > 0 {
+                reads.push(cell(i - 1, t));
+            }
+            if i + 1 < cells {
+                reads.push(cell(i + 1, t));
+            }
+            specs.push(TaskSpec::new(TaskKind::Trsm, reads, vec![cell(i, t + 1)]));
+        }
+    }
+    let root = dag.root;
+    dag.partition(root, specs, b);
+    dag
+}
+
+/// Random layered DAG (Tobita-Kasahara-style): `n` tasks in random layers,
+/// each reading 1..=3 random earlier tiles — a stress shape for the
+/// dependence-derivation and scheduling machinery.
+pub fn random_layered(n: u32, b: u32, seed: u64) -> TaskDag {
+    assert!(n >= 1);
+    let mut rng = Rng::new(seed);
+    let total = Region::new(0, 0, n * b, 0, b);
+    let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Custom(3), vec![total], vec![total]));
+    let tile = |i: u32| Region::new(0, i * b, (i + 1) * b, 0, b);
+    let mut specs = Vec::new();
+    for i in 0..n {
+        let mut reads = Vec::new();
+        if i > 0 {
+            for _ in 0..1 + rng.below(3) {
+                reads.push(tile(rng.below(i as usize) as u32));
+            }
+        }
+        specs.push(TaskSpec::new(TaskKind::Gemm, reads, vec![tile(i)]));
+    }
+    let root = dag.root;
+    dag.partition(root, specs, b);
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layered_shape() {
+        let dag = layered(3, 4, 32);
+        let flat = dag.flat_dag();
+        assert_eq!(flat.len(), 3 * 4 + 2); // 3 stages + 2 reductions
+        assert!(flat.width() >= 4, "stage tasks parallel: {}", flat.width());
+        // reductions serialize stages: longest path >= 2*layers - 1
+        assert!(flat.longest_path_len() >= 5);
+    }
+
+    #[test]
+    fn stencil_wavefront() {
+        let dag = stencil(5, 4, 16);
+        let flat = dag.flat_dag();
+        assert_eq!(flat.len(), 20);
+        assert_eq!(flat.width(), 5, "one wavefront per step");
+        assert_eq!(flat.longest_path_len(), 4, "steps chain");
+        // middle cell depends on 3 neighbours of the previous step
+        let mid = 5 + 2; // step 1, cell 2
+        assert_eq!(flat.preds[mid].len(), 3);
+    }
+
+    #[test]
+    fn random_layered_is_schedulable() {
+        use crate::coordinator::engine::{simulate, SimConfig};
+        use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
+        use crate::coordinator::platform::MachineBuilder;
+        use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+
+        let dag = random_layered(64, 16, 7);
+        assert_eq!(dag.flat_dag().len(), 64);
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let t = b.proc_type("cpu", 1.0, 0.1);
+        b.processors(3, "c", t, h);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 5.0 });
+        let s = simulate(&dag, &m, &db, SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish)));
+        assert_eq!(s.assignments.len(), 64);
+        assert!(s.makespan > 0.0);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = random_layered(32, 16, 3).flat_dag();
+        let b = random_layered(32, 16, 3).flat_dag();
+        assert_eq!(a.edge_count(), b.edge_count());
+        let c = random_layered(32, 16, 4).flat_dag();
+        assert_ne!(a.edge_count(), c.edge_count());
+    }
+}

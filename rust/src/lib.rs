@@ -1,0 +1,32 @@
+//! # HeSP — Heterogeneous Scheduler-Partitioner
+//!
+//! A production-grade reproduction of *"HeSP: a simulation framework for
+//! solving the task scheduling-partitioning problem on heterogeneous
+//! architectures"* (Rey, Igual, Prieto-Matías, 2016).
+//!
+//! HeSP treats recursive task **partitioning** and task **scheduling** as a
+//! joint optimization problem: tasks can be dynamically split into finer
+//! sub-tasks (or merged back) per processor type, exposing exactly as much
+//! parallelism as the platform can absorb at each execution phase.
+//!
+//! The crate is organized as the three-layer architecture described in
+//! `DESIGN.md`:
+//!
+//! * [`coordinator`] — the simulation framework itself (task DAG, data DAG
+//!   + coherence, scheduling heuristics, iterative scheduler-partitioner,
+//!   metrics, traces, energy).
+//! * [`runtime`] — the XLA/PJRT runtime that loads AOT-compiled JAX/Pallas
+//!   tile kernels (`artifacts/*.hlo.txt`) and executes scheduled DAGs for
+//!   real, providing the validation substrate of §3.1.
+//! * [`config`] — TOML platform/experiment descriptions (`configs/`).
+//! * [`util`] — offline-friendly substrates (PRNG, JSON, TOML, CLI).
+//! * [`bench`] — a small measurement harness used by `rust/benches/`.
+//! * [`proptest`] — a seeded property-testing helper used by the test
+//!   suite.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod proptest;
+pub mod runtime;
+pub mod util;

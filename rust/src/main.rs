@@ -1,0 +1,344 @@
+//! `hesp` — command-line front-end of the HeSP framework.
+//!
+//! Subcommands:
+//!
+//! * `simulate`  — schedule one uniform tiling on a platform, print the report
+//! * `sweep`     — policy x tile-size sweep (Fig. 5 right)
+//! * `solve`     — run the iterative scheduler-partitioner (Table 1 rows)
+//! * `table1`    — the full 8-configuration Table 1 for a platform
+//! * `validate`  — real PJRT execution vs simulation (Fig. 5 left analog)
+//! * `calibrate` — measure local kernel perf models, print TOML
+//! * `trace`     — write Paraver/CSV trace bundles (Figs. 2b & 6)
+//! * `dag`       — export the task DAG as Graphviz DOT (Fig. 2a)
+//!
+//! Examples:
+//!
+//! ```text
+//! hesp simulate --platform configs/bujaruelo.toml --n 32768 --tile 1024 \
+//!               --order pl --select eft
+//! hesp solve --platform configs/odroid.toml --n 8192 --iters 200
+//! hesp validate --n 512 --tiles 64,128 --reps 3
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use hesp::config::Platform;
+use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::energy::Objective;
+use hesp::coordinator::engine::{simulate, SimConfig};
+use hesp::coordinator::metrics::report;
+use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::solver::{best_homogeneous, homogeneous_sweep, solve, CandidateSelect, Sampling, SolverConfig};
+use hesp::coordinator::trace::write_bundle;
+use hesp::bench::Table;
+use hesp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let r = match cmd {
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "solve" => cmd_solve(&args),
+        "online" => cmd_online(&args),
+        "table1" => cmd_table1(&args),
+        "validate" => cmd_validate(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "trace" => cmd_trace(&args),
+        "dag" => cmd_dag(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand '{other}' (try `hesp help`)")),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+hesp — Heterogeneous Scheduler-Partitioner (Rey, Igual, Prieto-Matias 2016)
+
+USAGE: hesp <subcommand> [--flags]
+
+  simulate  --platform F --n N --tile B [--order fcfs|pl] [--select rp|fp|eit|eft]
+            [--cache wb|wt|wa] [--seed S]
+  sweep     --platform F --n N [--tiles 256,512,...]     (Fig. 5 right)
+  solve     --platform F --n N [--tiles ...] [--iters K] [--candidates all|cp|shallow]
+            [--sampling hard|soft] [--min-edge E] [--objective makespan|energy|edp]
+            [--order ...] [--select ...]                  (Table 1 rows)
+  online    --platform F --n N --tile B [--min-edge E] [--order ...] [--select ...]
+            (constructive per-task-arrival partitioner, paper §4)
+  table1    --platform F --n N [--tiles ...] [--iters K]  (full Table 1)
+  validate  [--n N] [--tiles 64,128] [--reps R]           (Fig. 5 left; needs artifacts)
+  calibrate [--tiles 32,64,128] [--reps R]                (refresh configs/local.toml)
+  trace     --platform F --n N --tile B [--out DIR] [--solve-iters K]  (Figs. 2b & 6)
+  dag       --n N --tile B [--out FILE.dot]               (Fig. 2a)
+";
+
+fn sim_config(args: &Args, p: &Platform) -> Result<SimConfig> {
+    let ordering = Ordering::from_name(&args.str_or("order", "pl")).ok_or_else(|| anyhow!("bad --order"))?;
+    let select = ProcSelect::from_name(&args.str_or("select", "eft")).ok_or_else(|| anyhow!("bad --select"))?;
+    let cache = CachePolicy::from_name(&args.str_or("cache", "wb")).ok_or_else(|| anyhow!("bad --cache"))?;
+    Ok(SimConfig::new(SchedConfig::new(ordering, select))
+        .with_cache(cache)
+        .with_elem_bytes(p.elem_bytes)
+        .with_seed(args.u64_or("seed", 0)))
+}
+
+fn load_platform(args: &Args) -> Result<Platform> {
+    let path = args.get("platform").ok_or_else(|| anyhow!("--platform <file.toml> required"))?;
+    Platform::from_file(path)
+}
+
+fn print_report(label: &str, dag: &hesp::coordinator::taskdag::TaskDag, sched: &hesp::coordinator::engine::Schedule) {
+    let r = report(dag, sched);
+    println!(
+        "{label}: makespan {:.4}s  {:.2} GFLOPS  load {:.1}%  avg-block {:.1}  depth {}  tasks {}  xfer {:.1} MB",
+        r.makespan,
+        r.gflops,
+        r.avg_load_pct,
+        r.avg_block_size,
+        r.dag_depth,
+        r.n_tasks,
+        r.transfer_bytes as f64 / 1e6
+    );
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let p = load_platform(args)?;
+    let n = args.usize_or("n", 16384) as u32;
+    let b = args.usize_or("tile", 1024) as u32;
+    let cfg = sim_config(args, &p)?;
+    let mut dag = cholesky::root(n);
+    cholesky::partition_uniform(&mut dag, b);
+    let sched = simulate(&dag, &p.machine, &p.db, cfg);
+    print_report(&format!("{} n={n} b={b}", p.machine.name), &dag, &sched);
+    Ok(())
+}
+
+fn default_tiles(n: u32) -> Vec<usize> {
+    [256usize, 512, 1024, 2048, 4096]
+        .into_iter()
+        .filter(|&b| (b as u32) < n && n % b as u32 == 0)
+        .collect()
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let p = load_platform(args)?;
+    let n = args.usize_or("n", 32768) as u32;
+    let tiles: Vec<u32> = args.usize_list("tiles", &default_tiles(n)).into_iter().map(|x| x as u32).collect();
+    let mut table = Table::new(&["config", "tile", "GFLOPS", "load %", "makespan s"]);
+    for cfgrow in SchedConfig::table1_rows() {
+        let sim = SimConfig::new(cfgrow).with_elem_bytes(p.elem_bytes);
+        for (b, dag, sched) in homogeneous_sweep(n, &tiles, &p.machine, &p.db, sim) {
+            let r = report(&dag, &sched);
+            table.row(&[
+                cfgrow.name(),
+                b.to_string(),
+                format!("{:.2}", r.gflops),
+                format!("{:.1}", r.avg_load_pct),
+                format!("{:.4}", r.makespan),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn solver_config(args: &Args, sim: SimConfig) -> Result<SolverConfig> {
+    Ok(SolverConfig {
+        candidates: CandidateSelect::from_name(&args.str_or("candidates", "all"))
+            .ok_or_else(|| anyhow!("bad --candidates"))?,
+        sampling: Sampling::from_name(&args.str_or("sampling", "soft")).ok_or_else(|| anyhow!("bad --sampling"))?,
+        iters: args.usize_or("iters", 150),
+        min_edge: args.usize_or("min-edge", 64) as u32,
+        objective: Objective::from_name(&args.str_or("objective", "makespan"))
+            .ok_or_else(|| anyhow!("bad --objective"))?,
+        sim,
+        seed: args.u64_or("seed", 0x5e5f),
+        allow_merge: args.bool_or("merge", true),
+    })
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let p = load_platform(args)?;
+    let n = args.usize_or("n", 32768) as u32;
+    let tiles: Vec<u32> = args.usize_list("tiles", &default_tiles(n)).into_iter().map(|x| x as u32).collect();
+    let sim = sim_config(args, &p)?;
+    let scfg = solver_config(args, sim)?;
+
+    let (hb, hdag, hsched) = best_homogeneous(n, &tiles, &p.machine, &p.db, sim, scfg.objective)
+        .ok_or_else(|| anyhow!("no legal tile size in {tiles:?} for n={n}"))?;
+    print_report(&format!("best homogeneous (b={hb})"), &hdag, &hsched);
+
+    let res = solve(hdag, &p.machine, &p.db, &PartitionerSet::standard(), scfg);
+    print_report(&format!("best heterogeneous (iter {})", res.best_iter), &res.best_dag, &res.best_schedule);
+    let imp = 100.0 * (hsched.makespan - res.best_schedule.makespan) / res.best_schedule.makespan;
+    println!("improvement: {imp:.2}%");
+    Ok(())
+}
+
+fn cmd_online(args: &Args) -> Result<()> {
+    use hesp::coordinator::constructive::{schedule_online, OnlineConfig};
+    let p = load_platform(args)?;
+    let n = args.usize_or("n", 32768) as u32;
+    let b = args.usize_or("tile", 2048) as u32;
+    let sim = sim_config(args, &p)?;
+    let mut dag = cholesky::root(n);
+    cholesky::partition_uniform(&mut dag, b);
+    let base = simulate(&dag, &p.machine, &p.db, sim);
+    print_report(&format!("static uniform b={b}"), &dag, &base);
+    let mut cfg = OnlineConfig::new(sim, args.usize_or("min-edge", 128) as u32);
+    cfg.gain_factor = args.f64_or("gain", 0.6);
+    let res = schedule_online(&dag, &p.machine, &p.db, &PartitionerSet::standard(), cfg);
+    print_report(&format!("constructive ({} online splits)", res.splits), &res.dag, &res.schedule);
+    let imp = 100.0 * (base.makespan - res.schedule.makespan) / res.schedule.makespan;
+    println!("improvement: {imp:.2}%");
+    if args.has("gantt") {
+        print!("{}", hesp::coordinator::trace::ascii_gantt(&res.dag, &res.schedule, &p.machine, 100));
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let p = load_platform(args)?;
+    let n = args.usize_or("n", 32768) as u32;
+    let tiles: Vec<u32> = args.usize_list("tiles", &default_tiles(n)).into_iter().map(|x| x as u32).collect();
+    let iters = args.usize_or("iters", 150);
+    let mut table = Table::new(&[
+        "Config", "Hom GFLOPS", "Hom load%", "Hom b", "Het GFLOPS", "Improve %", "Het load%", "Het avg b", "depth",
+    ]);
+    for row in SchedConfig::table1_rows() {
+        let sim = SimConfig::new(row).with_elem_bytes(p.elem_bytes);
+        let (hb, hdag, hsched) = best_homogeneous(n, &tiles, &p.machine, &p.db, sim, Objective::Makespan)
+            .ok_or_else(|| anyhow!("no legal tiles"))?;
+        let hr = report(&hdag, &hsched);
+        let mut scfg = solver_config(args, sim)?;
+        scfg.iters = iters;
+        let res = solve(hdag, &p.machine, &p.db, &PartitionerSet::standard(), scfg);
+        let er = report(&res.best_dag, &res.best_schedule);
+        let imp = 100.0 * (er.gflops - hr.gflops) / hr.gflops;
+        table.row(&[
+            row.name(),
+            format!("{:.2}", hr.gflops),
+            format!("{:.1}", hr.avg_load_pct),
+            hb.to_string(),
+            format!("{:.2}", er.gflops),
+            format!("{:.2}", imp),
+            format!("{:.1}", er.avg_load_pct),
+            format!("{:.1}", er.avg_block_size),
+            er.dag_depth.to_string(),
+        ]);
+    }
+    println!("Table 1 — {} (n={n}, f{})", p.machine.name, p.elem_bytes * 8);
+    table.print();
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    use hesp::coordinator::engine::simulate_mapped;
+    use hesp::runtime::executor;
+
+    let n = args.usize_or("n", 512) as u32;
+    let tiles: Vec<u32> = args.usize_list("tiles", &[64, 128]).into_iter().map(|x| x as u32).collect();
+    let reps = args.usize_or("reps", 3);
+    let rt = executor::load_f32_runtime(&tiles)?;
+
+    let local = Platform::from_file(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/local.toml"),
+    )?;
+    let mut table = Table::new(&["b", "real s", "sim-PM s", "sim-RD s", "PM err %", "RD err %", "max|LL^T-A|"]);
+    for &b in &tiles {
+        if n % b != 0 {
+            continue;
+        }
+        let real = executor::run_cholesky(&rt, n, b, 42)?;
+        anyhow::ensure!(real.max_err < 1e-2, "numerics check failed: {}", real.max_err);
+
+        let measures = executor::measure_models(&rt, &[b], reps, 7)?;
+        let rd_db = executor::measured_perfdb(&measures);
+
+        let mut dag = cholesky::root(n);
+        cholesky::partition_uniform(&mut dag, b);
+        let frontier_len = dag.frontier().len();
+        let mapping = vec![0usize; frontier_len]; // single local proc
+        let sim = SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestIdle));
+        let pm = simulate_mapped(&dag, &local.machine, &local.db, sim, &mapping);
+        let rd = simulate_mapped(&dag, &local.machine, &rd_db, sim, &mapping);
+        let pm_err = 100.0 * (pm.makespan - real.total_s) / real.total_s;
+        let rd_err = 100.0 * (rd.makespan - real.total_s) / real.total_s;
+        table.row(&[
+            b.to_string(),
+            format!("{:.3}", real.total_s),
+            format!("{:.3}", pm.makespan),
+            format!("{:.3}", rd.makespan),
+            format!("{pm_err:+.1}"),
+            format!("{rd_err:+.1}"),
+            format!("{:.2e}", real.max_err),
+        ]);
+    }
+    println!("Framework validation (real PJRT execution vs HESP-REPLICA), n={n}");
+    table.print();
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    use hesp::runtime::executor;
+    let tiles: Vec<u32> = args.usize_list("tiles", &[32, 64, 128]).into_iter().map(|x| x as u32).collect();
+    let reps = args.usize_or("reps", 5);
+    let rt = executor::load_f32_runtime(&tiles)?;
+    let ms = executor::measure_models(&rt, &tiles, reps, 11)?;
+    println!("# measured on this machine — paste into configs/local.toml");
+    print!("{}", executor::measurements_to_toml(&ms));
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let p = load_platform(args)?;
+    let n = args.usize_or("n", 32768) as u32;
+    let b = args.usize_or("tile", 2048) as u32;
+    let out = std::path::PathBuf::from(args.str_or("out", "traces"));
+    let sim = sim_config(args, &p)?;
+
+    let mut dag = cholesky::root(n);
+    cholesky::partition_uniform(&mut dag, b);
+    let sched = simulate(&dag, &p.machine, &p.db, sim);
+    write_bundle(&out, &format!("{}_homog_b{b}", p.machine.name), &dag, &sched, &p.machine)?;
+    print_report("homogeneous", &dag, &sched);
+
+    let iters = args.usize_or("solve-iters", 150);
+    let mut scfg = solver_config(args, sim)?;
+    scfg.iters = iters;
+    let res = solve(dag, &p.machine, &p.db, &PartitionerSet::standard(), scfg);
+    write_bundle(&out, &format!("{}_heterog", p.machine.name), &res.best_dag, &res.best_schedule, &p.machine)?;
+    print_report("heterogeneous", &res.best_dag, &res.best_schedule);
+    println!("trace bundles in {}", out.display());
+    Ok(())
+}
+
+fn cmd_dag(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 16384) as u32;
+    let b = args.usize_or("tile", 1024) as u32;
+    if n % b != 0 {
+        bail!("tile must divide n");
+    }
+    let mut dag = cholesky::root(n);
+    cholesky::partition_uniform(&mut dag, b);
+    let flat = dag.flat_dag();
+    println!(
+        "n={n} b={b}: {} tasks, {} edges, width {}, longest path {}",
+        flat.len(),
+        flat.edge_count(),
+        flat.width(),
+        flat.longest_path_len()
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, dag.to_dot())?;
+        println!("DOT written to {out}");
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Seeded property-testing helper (the proptest crate is unavailable
+//! offline). Generates many random cases from a deterministic PRNG and
+//! reports the failing seed so cases can be replayed exactly.
+//!
+//! ```no_run
+//! use hesp::proptest::forall;
+//! forall(500, 42, |rng| {
+//!     let x = rng.below(100);
+//!     assert!(x < 100, "x={x}");
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `prop` against `cases` random cases derived from `seed`. On panic,
+/// re-raises with the per-case seed so the failure is reproducible via
+/// [`replay`].
+pub fn forall<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: usize, seed: u64, prop: F) {
+    for i in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(i as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(case_seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {i} (replay seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay<F: Fn(&mut Rng)>(case_seed: u64, prop: F) {
+    let mut rng = Rng::new(case_seed);
+    prop(&mut rng);
+}
+
+/// Helpers for building random structured inputs.
+pub mod gen {
+    use crate::coordinator::region::Region;
+    use crate::util::rng::Rng;
+
+    /// Random non-degenerate region inside a `dim x dim` matrix, with
+    /// coordinates aligned to `align` (0 or 1 = unaligned).
+    pub fn region(rng: &mut Rng, matrix: u32, dim: u32, align: u32) -> Region {
+        let a = align.max(1);
+        let cells = dim / a;
+        assert!(cells >= 1);
+        let pick = |rng: &mut Rng| {
+            let lo = rng.below(cells as usize) as u32;
+            let hi = lo + 1 + rng.below((cells - lo) as usize) as u32;
+            (lo * a, hi * a)
+        };
+        let (r0, r1) = pick(rng);
+        let (c0, c1) = pick(rng);
+        Region::new(matrix, r0, r1, c0, c1)
+    }
+
+    /// Random square region with power-of-two edge, tile-aligned — the
+    /// shape partitioners produce.
+    pub fn square_tile(rng: &mut Rng, matrix: u32, dim_log2: u32) -> Region {
+        let edge_log2 = rng.below(dim_log2 as usize) as u32; // 1..dim/2
+        let edge = 1u32 << edge_log2;
+        let dim = 1u32 << dim_log2;
+        let slots = dim / edge;
+        let i = rng.below(slots as usize) as u32;
+        let j = rng.below(slots as usize) as u32;
+        Region::new(matrix, i * edge, (i + 1) * edge, j * edge, (j + 1) * edge)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(100, 7, |rng| {
+            let x = rng.below(10);
+            assert!(x < 10);
+        });
+    }
+
+    #[test]
+    fn forall_reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(50, 3, |rng| {
+                assert!(rng.below(2) != 1, "hit the bad value");
+            })
+        });
+        let err = r.expect_err("property should fail eventually");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn gen_region_is_valid_and_aligned() {
+        forall(500, 11, |rng| {
+            let r = gen::region(rng, 0, 64, 8);
+            assert!(r.r0 < r.r1 && r.c0 < r.c1);
+            assert!(r.r1 <= 64 && r.c1 <= 64);
+            assert_eq!(r.r0 % 8, 0);
+            assert_eq!(r.r1 % 8, 0);
+        });
+    }
+
+    #[test]
+    fn gen_square_tile_is_power_of_two() {
+        forall(200, 13, |rng| {
+            let r = gen::square_tile(rng, 0, 6);
+            assert!(r.is_square());
+            assert!(r.rows().is_power_of_two());
+            assert!(r.r1 <= 64);
+        });
+    }
+}

@@ -1,0 +1,94 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing.
+//!
+//! `python/compile/aot.py` writes one HLO-text file per (task, dtype, tile)
+//! plus this manifest describing them; the Rust runtime never inspects the
+//! HLO itself beyond handing it to the XLA parser.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// Task kind name ("potrf" | "trsm" | "syrk" | "gemm").
+    pub task: String,
+    /// "f32" | "f64".
+    pub dtype: String,
+    /// Tile edge.
+    pub tile: u32,
+    pub num_args: usize,
+    /// Flop count of one kernel invocation (matches TaskKind::flops).
+    pub flops: f64,
+}
+
+/// Read and validate `<dir>/manifest.json`.
+pub fn read_manifest<P: AsRef<Path>>(dir: P) -> Result<Vec<ArtifactEntry>> {
+    let path = dir.as_ref().join("manifest.json");
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+    parse_manifest(&text)
+}
+
+/// Parse manifest JSON text.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactEntry>> {
+    let doc = parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+    let fmt = doc.get("format").and_then(Json::as_str).unwrap_or("");
+    anyhow::ensure!(fmt == "hlo-text", "unsupported artifact format '{fmt}'");
+    let entries = doc.get("entries").and_then(Json::as_arr).ok_or_else(|| anyhow!("manifest has no entries"))?;
+    let mut out = Vec::with_capacity(entries.len());
+    for e in entries {
+        let get_str = |k: &str| e.get(k).and_then(Json::as_str).map(str::to_string).ok_or_else(|| anyhow!("entry missing '{k}'"));
+        out.push(ArtifactEntry {
+            name: get_str("name")?,
+            file: get_str("file")?,
+            task: get_str("task")?,
+            dtype: get_str("dtype")?,
+            tile: e.get("tile").and_then(Json::as_usize).ok_or_else(|| anyhow!("entry missing 'tile'"))? as u32,
+            num_args: e.get("num_args").and_then(Json::as_usize).ok_or_else(|| anyhow!("entry missing 'num_args'"))?,
+            flops: e.get("flops").and_then(Json::as_f64).unwrap_or(0.0),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "entries": [
+        {"name": "gemm_f32_64", "file": "gemm_f32_64.hlo.txt", "task": "gemm",
+         "dtype": "f32", "tile": 64, "num_args": 3, "flops": 524288.0},
+        {"name": "potrf_f64_32", "file": "potrf_f64_32.hlo.txt", "task": "potrf",
+         "dtype": "f64", "tile": 32, "num_args": 1, "flops": 10922.67}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let es = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(es.len(), 2);
+        assert_eq!(es[0].task, "gemm");
+        assert_eq!(es[0].tile, 64);
+        assert_eq!(es[0].num_args, 3);
+        assert_eq!(es[1].dtype, "f64");
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        assert!(parse_manifest(r#"{"format":"proto","entries":[]}"#).is_err());
+        assert!(parse_manifest("{}").is_err());
+        assert!(parse_manifest("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_incomplete_entry() {
+        let bad = r#"{"format":"hlo-text","entries":[{"name":"x"}]}"#;
+        assert!(parse_manifest(bad).is_err());
+    }
+}

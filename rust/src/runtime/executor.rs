@@ -1,0 +1,347 @@
+//! Real execution of scheduled tile-task DAGs on the PJRT CPU client —
+//! the validation substrate replacing the paper's OmpSs runs (§3.1).
+//!
+//! The executor replays the exact task stream the Cholesky partitioner
+//! emits (so simulated and real runs cover the same DAG), timing every
+//! task. From the timings it can also extract *measured* performance
+//! models ([`measure_models`]) that feed the HESP-REPLICA-RD simulation.
+//!
+//! The CI container exposes a single CPU core, so execution is sequential
+//! and validation compares serial makespans; the mechanism is identical
+//! for multi-processor PJRT hosts.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
+use crate::coordinator::task::TaskKind;
+use crate::util::rng::Rng;
+
+use super::{tile_literal_f32, tile_to_vec_f32, DType, Runtime};
+
+/// Deterministic well-conditioned SPD matrix: `A = G G^T / n + 2 I`
+/// (same construction as python/compile/model.py::random_spd).
+pub fn random_spd(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let g: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+    let mut a = vec![0f32; n * n];
+    // A = G G^T / n + 2I, computed in f64 for accuracy
+    for i in 0..n {
+        for j in 0..=i {
+            let mut acc = 0.0f64;
+            for k in 0..n {
+                acc += g[i * n + k] * g[j * n + k];
+            }
+            let v = (acc / n as f64 + if i == j { 2.0 } else { 0.0 }) as f32;
+            a[i * n + j] = v;
+            a[j * n + i] = v;
+        }
+    }
+    a
+}
+
+/// One timed task execution.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskTiming {
+    pub kind: TaskKind,
+    pub tile: u32,
+    pub seconds: f64,
+}
+
+/// Result of a real tiled-Cholesky execution.
+#[derive(Debug, Clone)]
+pub struct ExecutionResult {
+    pub n: u32,
+    pub b: u32,
+    /// Wall-clock of the full factorization (sequential replay).
+    pub total_s: f64,
+    pub timings: Vec<TaskTiming>,
+    /// `max |L L^T - A|` over the lower triangle — the correctness check.
+    pub max_err: f64,
+    /// Useful flops (n^3/3 + symmetric-update convention, summed per task).
+    pub flops: f64,
+}
+
+impl ExecutionResult {
+    pub fn gflops(&self) -> f64 {
+        self.flops / self.total_s / 1e9
+    }
+}
+
+/// Execute a full tiled Cholesky factorization of a synthetic SPD matrix
+/// for real: n x n matrix, b x b tiles, f32 kernels from `rt`.
+pub fn run_cholesky(rt: &Runtime, n: u32, b: u32, seed: u64) -> Result<ExecutionResult> {
+    anyhow::ensure!(n % b == 0 && n / b >= 1, "b={b} must divide n={n}");
+    let s = (n / b) as usize;
+    let bb = b as usize;
+    let a = random_spd(n as usize, seed);
+
+    // slice into row-major tiles
+    let tile_of = |i: usize, j: usize| -> Vec<f32> {
+        let mut t = vec![0f32; bb * bb];
+        for r in 0..bb {
+            let src = (i * bb + r) * n as usize + j * bb;
+            t[r * bb..(r + 1) * bb].copy_from_slice(&a[src..src + bb]);
+        }
+        t
+    };
+    let mut tiles: Vec<Option<xla::Literal>> = Vec::with_capacity(s * s);
+    for i in 0..s {
+        for j in 0..s {
+            tiles.push(if j <= i { Some(tile_literal_f32(&tile_of(i, j), b)?) } else { None });
+        }
+    }
+    let idx = |i: usize, j: usize| i * s + j;
+
+    let potrf = rt.kernel(TaskKind::Potrf, DType::F32, b)?;
+    let trsm = rt.kernel(TaskKind::Trsm, DType::F32, b)?;
+    let syrk = rt.kernel(TaskKind::Syrk, DType::F32, b)?;
+    let gemm = rt.kernel(TaskKind::Gemm, DType::F32, b)?;
+
+    // warm each executable once: the first PJRT dispatch pays a one-time
+    // runtime-initialization cost (~tens of ms) that is not task work
+    {
+        let w = tiles[idx(0, 0)].as_ref().unwrap();
+        let _ = potrf.execute(std::slice::from_ref(w))?;
+        let _ = trsm.execute(&[w.clone(), w.clone()])?;
+        let _ = syrk.execute(&[w.clone(), w.clone()])?;
+        let _ = gemm.execute(&[w.clone(), w.clone(), w.clone()])?;
+    }
+
+    let mut timings = Vec::new();
+    let t_total = Instant::now();
+    let mut flops = 0.0f64;
+    // the same program order the Cholesky partitioner emits
+    for k in 0..s {
+        let mut timed = |kern: &super::Kernel, kind: TaskKind, args: &[xla::Literal]| -> Result<xla::Literal> {
+            let t0 = Instant::now();
+            let out = kern.execute(args)?;
+            timings.push(TaskTiming { kind, tile: b, seconds: t0.elapsed().as_secs_f64() });
+            flops += kind.flops(b as f64);
+            Ok(out)
+        };
+        let lkk = timed(potrf, TaskKind::Potrf, std::slice::from_ref(tiles[idx(k, k)].as_ref().unwrap()))?;
+        tiles[idx(k, k)] = Some(lkk);
+        for i in k + 1..s {
+            // TRSM args (l, b)
+            let out = timed(
+                trsm,
+                TaskKind::Trsm,
+                &[tiles[idx(k, k)].as_ref().unwrap().clone(), tiles[idx(i, k)].take().unwrap()],
+            )?;
+            tiles[idx(i, k)] = Some(out);
+        }
+        for i in k + 1..s {
+            // SYRK args (c, a)
+            let out = timed(
+                syrk,
+                TaskKind::Syrk,
+                &[tiles[idx(i, i)].take().unwrap(), tiles[idx(i, k)].as_ref().unwrap().clone()],
+            )?;
+            tiles[idx(i, i)] = Some(out);
+            for j in k + 1..i {
+                // GEMM args (c, a, b)
+                let out = timed(
+                    gemm,
+                    TaskKind::Gemm,
+                    &[
+                        tiles[idx(i, j)].take().unwrap(),
+                        tiles[idx(i, k)].as_ref().unwrap().clone(),
+                        tiles[idx(j, k)].as_ref().unwrap().clone(),
+                    ],
+                )?;
+                tiles[idx(i, j)] = Some(out);
+            }
+        }
+    }
+    let total_s = t_total.elapsed().as_secs_f64();
+
+    // reconstruct L, verify L L^T == A on the lower triangle
+    let nn = n as usize;
+    let mut l = vec![0f32; nn * nn];
+    for i in 0..s {
+        for j in 0..=i {
+            let data = tile_to_vec_f32(tiles[idx(i, j)].as_ref().unwrap())?;
+            for r in 0..bb {
+                for c in 0..bb {
+                    let (gr, gc) = (i * bb + r, j * bb + c);
+                    if gc <= gr {
+                        l[gr * nn + gc] = data[r * bb + c];
+                    }
+                }
+            }
+        }
+    }
+    let mut max_err = 0f64;
+    for i in 0..nn {
+        for j in 0..=i {
+            let mut acc = 0f64;
+            for k in 0..=j.min(i) {
+                acc += l[i * nn + k] as f64 * l[j * nn + k] as f64;
+            }
+            max_err = max_err.max((acc - a[i * nn + j] as f64).abs());
+        }
+    }
+
+    Ok(ExecutionResult { n, b, total_s, timings, max_err, flops })
+}
+
+/// Measured GFLOPS per (kind, tile): runs each available f32 kernel `reps`
+/// times on random tiles and takes the median — HeSP's "performance models
+/// extracted a priori" for the local platform.
+pub fn measure_models(rt: &Runtime, tiles: &[u32], reps: usize, seed: u64) -> Result<Vec<(TaskKind, u32, f64)>> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for &b in tiles {
+        let bb = (b * b) as usize;
+        let mk = |rng: &mut Rng| -> Result<xla::Literal> {
+            let v: Vec<f32> = (0..bb).map(|_| rng.normal() as f32).collect();
+            tile_literal_f32(&v, b)
+        };
+        // well-conditioned lower-triangular / SPD inputs where needed
+        let spd = {
+            let v = random_spd(b as usize, seed ^ b as u64);
+            tile_literal_f32(&v, b)?
+        };
+        let lower = {
+            let mut v: Vec<f32> = vec![0.0; bb];
+            for i in 0..b as usize {
+                for j in 0..=i {
+                    v[i * b as usize + j] = if i == j { 4.0 } else { rng.normal() as f32 * 0.1 };
+                }
+            }
+            tile_literal_f32(&v, b)?
+        };
+        for kind in [TaskKind::Potrf, TaskKind::Trsm, TaskKind::Syrk, TaskKind::Gemm] {
+            let Ok(kern) = rt.kernel(kind, DType::F32, b) else { continue };
+            let mut samples = Vec::with_capacity(reps);
+            // one discarded warmup execution per kernel (first PJRT
+            // dispatch pays one-time initialization)
+            let _ = kern.execute(&match kind {
+                TaskKind::Potrf => vec![spd.clone()],
+                TaskKind::Trsm => vec![lower.clone(), mk(&mut rng)?],
+                TaskKind::Syrk => vec![mk(&mut rng)?, mk(&mut rng)?],
+                TaskKind::Gemm => vec![mk(&mut rng)?, mk(&mut rng)?, mk(&mut rng)?],
+                _ => unreachable!(),
+            })?;
+            for _ in 0..reps.max(1) {
+                let args: Vec<xla::Literal> = match kind {
+                    TaskKind::Potrf => vec![spd.clone()],
+                    TaskKind::Trsm => vec![lower.clone(), mk(&mut rng)?],
+                    TaskKind::Syrk => vec![mk(&mut rng)?, mk(&mut rng)?],
+                    TaskKind::Gemm => vec![mk(&mut rng)?, mk(&mut rng)?, mk(&mut rng)?],
+                    _ => unreachable!(),
+                };
+                let t0 = Instant::now();
+                let _ = kern.execute(&args)?;
+                samples.push(t0.elapsed().as_secs_f64());
+            }
+            samples.sort_by(|a, b| a.total_cmp(b));
+            let median = samples[samples.len() / 2];
+            let gflops = kind.flops(b as f64) / median / 1e9;
+            out.push((kind, b, gflops));
+        }
+    }
+    Ok(out)
+}
+
+/// Build a single-proc-type [`PerfDb`] (Table curves) from measurements —
+/// the HESP-REPLICA-RD performance model.
+pub fn measured_perfdb(measures: &[(TaskKind, u32, f64)]) -> PerfDb {
+    let mut db = PerfDb::new();
+    let mut by_kind: std::collections::HashMap<TaskKind, Vec<(f64, f64)>> = std::collections::HashMap::new();
+    for &(k, b, g) in measures {
+        by_kind.entry(k).or_default().push((b as f64, g));
+    }
+    let mut any: Vec<(f64, f64)> = Vec::new();
+    for (k, mut pts) in by_kind {
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+        any = pts.clone();
+        db.set(0, k, PerfCurve::Table { points: pts });
+    }
+    if !any.is_empty() {
+        db.set_fallback(0, PerfCurve::Table { points: any });
+    }
+    db
+}
+
+/// Render measurements as `[perf.pjrt.*]` TOML tables (to refresh
+/// configs/local.toml after calibration).
+pub fn measurements_to_toml(measures: &[(TaskKind, u32, f64)]) -> String {
+    use std::fmt::Write;
+    let mut by_kind: std::collections::BTreeMap<&str, Vec<(u32, f64)>> = std::collections::BTreeMap::new();
+    for &(k, b, g) in measures {
+        by_kind.entry(k.name()).or_default().push((b, g));
+    }
+    let mut out = String::new();
+    for (name, mut pts) in by_kind {
+        pts.sort_by(|a, b| a.0.cmp(&b.0));
+        let _ = writeln!(out, "[perf.pjrt.{name}]");
+        let pstr: Vec<String> = pts.iter().map(|(b, g)| format!("[{b}, {g:.4}]")).collect();
+        let _ = writeln!(out, "points = [{}]\n", pstr.join(", "));
+    }
+    out
+}
+
+/// Locate the artifacts directory (env override, then repo default).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("HESP_ARTIFACTS") {
+        return d.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if AOT artifacts are present (tests skip politely otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Convenience loader for validation runs: f32 kernels at the given tiles.
+pub fn load_f32_runtime(tiles: &[u32]) -> Result<Runtime> {
+    let dir = artifacts_dir();
+    anyhow::ensure!(dir.join("manifest.json").exists(), "no artifacts at {} — run `make artifacts`", dir.display());
+    Runtime::load_filtered(&dir, |e| e.dtype == "f32" && tiles.contains(&e.tile))
+        .map_err(|e| anyhow!("loading artifacts: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_spd_is_symmetric_diag_dominantish() {
+        let a = random_spd(32, 7);
+        for i in 0..32 {
+            for j in 0..32 {
+                assert_eq!(a[i * 32 + j], a[j * 32 + i]);
+            }
+            assert!(a[i * 32 + i] > 1.0, "diagonal lifted");
+        }
+    }
+
+    #[test]
+    fn measured_perfdb_builds_tables() {
+        let ms = vec![
+            (TaskKind::Gemm, 32, 1.0),
+            (TaskKind::Gemm, 64, 2.0),
+            (TaskKind::Potrf, 32, 0.5),
+        ];
+        let db = measured_perfdb(&ms);
+        assert_eq!(db.curve(0, TaskKind::Gemm).gflops(64.0), 2.0);
+        assert_eq!(db.curve(0, TaskKind::Potrf).gflops(32.0), 0.5);
+        // fallback exists for unmeasured kinds
+        let _ = db.curve(0, TaskKind::Trsm);
+    }
+
+    #[test]
+    fn toml_rendering() {
+        let ms = vec![(TaskKind::Gemm, 64, 2.0), (TaskKind::Gemm, 32, 1.0)];
+        let t = measurements_to_toml(&ms);
+        assert!(t.contains("[perf.pjrt.gemm]"));
+        assert!(t.contains("[32, 1.0000], [64, 2.0000]"));
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs and
+    // skip when artifacts are absent.
+}

@@ -1,0 +1,150 @@
+//! XLA/PJRT runtime: loads the AOT-compiled JAX/Pallas tile kernels
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them on the CPU PJRT client. Python never runs here — the HLO text is
+//! the only interchange (see DESIGN.md and python/compile/aot.py for why
+//! text, not serialized protos).
+
+pub mod artifacts;
+pub mod executor;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::task::TaskKind;
+use artifacts::ArtifactEntry;
+
+/// Element dtype of an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "f64" => Some(DType::F64),
+            _ => None,
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+        }
+    }
+}
+
+/// A compiled tile kernel.
+pub struct Kernel {
+    pub meta: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Kernel {
+    /// Execute with `args` tile literals; returns the single output tile
+    /// (artifacts are lowered with `return_tuple=True`, so the raw result
+    /// is a 1-tuple).
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        anyhow::ensure!(args.len() == self.meta.num_args, "{} expects {} args, got {}", self.meta.name, self.meta.num_args, args.len());
+        let bufs = self.exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("execute {}: {e}", self.meta.name))?;
+        let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("sync {}: {e}", self.meta.name))?;
+        lit.to_tuple1().map_err(|e| anyhow!("untuple {}: {e}", self.meta.name))
+    }
+}
+
+/// The loaded runtime: PJRT CPU client + compiled kernel registry keyed by
+/// (task kind, dtype, tile edge).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    kernels: HashMap<(TaskKind, DType, u32), Kernel>,
+}
+
+impl Runtime {
+    /// Load and compile every artifact in `dir` matching `pred`.
+    /// Compiling all 32 shipped artifacts takes a while; experiments load
+    /// only the (dtype, tiles) they use.
+    pub fn load_filtered<P: AsRef<Path>, F: Fn(&ArtifactEntry) -> bool>(dir: P, pred: F) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let entries = artifacts::read_manifest(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let mut kernels = HashMap::new();
+        for meta in entries.into_iter().filter(|e| pred(e)) {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow!("parse {}: {e}", meta.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", meta.file))?;
+            let kind = TaskKind::from_name(&meta.task).ok_or_else(|| anyhow!("unknown task '{}' in manifest", meta.task))?;
+            let dtype = DType::from_name(&meta.dtype).ok_or_else(|| anyhow!("unknown dtype '{}'", meta.dtype))?;
+            kernels.insert((kind, dtype, meta.tile), Kernel { meta, exe });
+        }
+        Ok(Runtime { client, kernels })
+    }
+
+    /// Load every artifact in `dir`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        Runtime::load_filtered(dir, |_| true)
+    }
+
+    pub fn kernel(&self, kind: TaskKind, dtype: DType, tile: u32) -> Result<&Kernel> {
+        self.kernels
+            .get(&(kind, dtype, tile))
+            .with_context(|| format!("no kernel for {}_{}_{}", kind.name(), dtype.name(), tile))
+    }
+
+    pub fn available(&self) -> Vec<(TaskKind, DType, u32)> {
+        let mut v: Vec<_> = self.kernels.keys().copied().collect();
+        v.sort_by_key(|(k, d, t)| (k.name(), d.name(), *t));
+        v
+    }
+
+    /// Tile edges available for `dtype` (all four Cholesky kernels present).
+    pub fn tiles_for(&self, dtype: DType) -> Vec<u32> {
+        let mut tiles: Vec<u32> = self
+            .kernels
+            .keys()
+            .filter(|(k, d, _)| *d == dtype && *k == TaskKind::Potrf)
+            .map(|(_, _, t)| *t)
+            .filter(|&t| {
+                [TaskKind::Trsm, TaskKind::Syrk, TaskKind::Gemm]
+                    .iter()
+                    .all(|&k| self.kernels.contains_key(&(k, dtype, t)))
+            })
+            .collect();
+        tiles.sort();
+        tiles
+    }
+}
+
+/// Build a `b x b` f32 tile literal from row-major data.
+pub fn tile_literal_f32(data: &[f32], b: u32) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == (b * b) as usize);
+    xla::Literal::vec1(data)
+        .reshape(&[b as i64, b as i64])
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Build a `b x b` f64 tile literal from row-major data.
+pub fn tile_literal_f64(data: &[f64], b: u32) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == (b * b) as usize);
+    xla::Literal::vec1(data)
+        .reshape(&[b as i64, b as i64])
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Extract row-major f32 data from a tile literal.
+pub fn tile_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+}

@@ -1,0 +1,124 @@
+//! Tiny CLI flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and free
+//! positional arguments. Subcommands are handled by `main.rs` taking the
+//! first positional.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order + flag map.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags seen, for unknown-flag reporting.
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.seen.push(k.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                    out.seen.push(name.to_string());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                    out.seen.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, name: &str, default: bool) -> bool {
+        self.get(name).map(|s| s == "true" || s == "1" || s == "yes").unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--tiles 128,256,512`.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(s) => s.split(',').filter_map(|p| p.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("solve --platform configs/b.toml --iters 200 out.json");
+        assert_eq!(a.positional, vec!["solve", "out.json"]);
+        assert_eq!(a.get("platform"), Some("configs/b.toml"));
+        assert_eq!(a.usize_or("iters", 0), 200);
+    }
+
+    #[test]
+    fn eq_form_and_bools() {
+        let a = parse("run --n=4096 --verbose --last");
+        assert_eq!(a.usize_or("n", 0), 4096);
+        assert!(a.bool_or("verbose", false));
+        assert!(a.has("last"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("x --tiles 128,256,512");
+        assert_eq!(a.usize_list("tiles", &[64]), vec![128, 256, 512]);
+        assert_eq!(a.usize_list("other", &[64]), vec![64]);
+        assert_eq!(a.f64_or("gamma", 1.5), 1.5);
+        assert_eq!(a.str_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // A value starting with '-' but not '--' is consumed as a value.
+        let a = parse("x --offset -3");
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained substrates that replace ecosystem crates
+//! (the build is fully offline — see Cargo.toml): a seeded PRNG, a JSON
+//! parser for the artifact manifest, a TOML-subset parser for platform
+//! configs, and a tiny CLI flag parser.
+
+pub mod cli;
+pub mod fxhash;
+pub mod json;
+pub mod rng;
+pub mod toml;

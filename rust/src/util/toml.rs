@@ -1,0 +1,303 @@
+//! TOML-subset parser for platform/experiment configs (`configs/*.toml`).
+//!
+//! Supported: `[table]` headers, `[[array-of-tables]]` headers, dotted
+//! headers (`[perf.gpu.gemm]`), `key = value` with strings, integers,
+//! floats, booleans and homogeneous arrays, `#` comments. This covers the
+//! full config schema in `configs/`; anything fancier is a parse error,
+//! not silent misbehaviour.
+
+use std::collections::BTreeMap;
+
+/// A TOML value (subset).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Toml {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Toml>),
+    Table(BTreeMap<String, Toml>),
+    /// Array of tables, from `[[name]]` sections.
+    TableArr(Vec<BTreeMap<String, Toml>>),
+}
+
+impl Toml {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Toml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Toml::Int(i) => Some(*i as f64),
+            Toml::Float(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Toml::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Toml::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Toml]> {
+        match self {
+            Toml::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Toml>> {
+        match self {
+            Toml::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+    pub fn as_table_arr(&self) -> Option<&[BTreeMap<String, Toml>]> {
+        match self {
+            Toml::TableArr(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn get(&self, key: &str) -> Option<&Toml> {
+        self.as_table().and_then(|t| t.get(key))
+    }
+    /// Navigate a dotted path, e.g. `get_path("perf.gpu.gemm")`.
+    pub fn get_path(&self, path: &str) -> Option<&Toml> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse a TOML-subset document into a root table.
+pub fn parse(input: &str) -> Result<Toml, String> {
+    let mut root: BTreeMap<String, Toml> = BTreeMap::new();
+    // Path of the currently open table ([] = root); `true` if the last
+    // segment addresses the tail of an array-of-tables.
+    let mut cur_path: Vec<String> = Vec::new();
+    let mut cur_is_arr = false;
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| format!("config line {}: {msg}: {raw}", lineno + 1);
+
+        if let Some(rest) = line.strip_prefix("[[") {
+            let name = rest.strip_suffix("]]").ok_or_else(|| err("bad [[header]]"))?;
+            cur_path = name.trim().split('.').map(|s| s.trim().to_string()).collect();
+            cur_is_arr = true;
+            let (parent, leaf) = open_parent(&mut root, &cur_path)?;
+            match parent.entry(leaf.clone()).or_insert_with(|| Toml::TableArr(Vec::new())) {
+                Toml::TableArr(v) => v.push(BTreeMap::new()),
+                _ => return Err(err("redefined as array-of-tables")),
+            }
+        } else if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("bad [header]"))?;
+            cur_path = name.trim().split('.').map(|s| s.trim().to_string()).collect();
+            cur_is_arr = false;
+            let (parent, leaf) = open_parent(&mut root, &cur_path)?;
+            match parent.entry(leaf.clone()).or_insert_with(|| Toml::Table(BTreeMap::new())) {
+                Toml::Table(_) => {}
+                _ => return Err(err("redefined as table")),
+            }
+        } else {
+            let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+            let key = line[..eq].trim().trim_matches('"').to_string();
+            let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            let table = open_table(&mut root, &cur_path, cur_is_arr)?;
+            if table.insert(key, val).is_some() {
+                return Err(err("duplicate key"));
+            }
+        }
+    }
+    Ok(Toml::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Walk to the parent table of `path`, creating intermediate tables.
+fn open_parent<'a>(
+    root: &'a mut BTreeMap<String, Toml>,
+    path: &[String],
+) -> Result<(&'a mut BTreeMap<String, Toml>, String), String> {
+    let (leaf, parents) = path.split_last().ok_or("empty header")?;
+    let mut cur = root;
+    for p in parents {
+        let next = cur.entry(p.clone()).or_insert_with(|| Toml::Table(BTreeMap::new()));
+        cur = match next {
+            Toml::Table(t) => t,
+            Toml::TableArr(v) => v.last_mut().ok_or("empty table array")?,
+            _ => return Err(format!("'{p}' is not a table")),
+        };
+    }
+    Ok((cur, leaf.clone()))
+}
+
+/// Resolve the table currently addressed by `path` for key insertion.
+fn open_table<'a>(
+    root: &'a mut BTreeMap<String, Toml>,
+    path: &[String],
+    is_arr: bool,
+) -> Result<&'a mut BTreeMap<String, Toml>, String> {
+    if path.is_empty() {
+        return Ok(root);
+    }
+    let (parent, leaf) = open_parent(root, path)?;
+    match parent.get_mut(&leaf) {
+        Some(Toml::Table(t)) if !is_arr => Ok(t),
+        Some(Toml::TableArr(v)) if is_arr => v.last_mut().ok_or_else(|| "empty table array".into()),
+        _ => Err(format!("header '{leaf}' missing")),
+    }
+}
+
+fn parse_value(s: &str) -> Result<Toml, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or("unterminated string")?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err("trailing garbage after string".into());
+        }
+        return Ok(Toml::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Toml::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Toml::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Toml::Arr(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Toml::Int(i));
+    }
+    if let Ok(x) = clean.parse::<f64>() {
+        return Ok(Toml::Float(x));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Split on commas not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_comments() {
+        let t = parse("a = 1 # comment\nb = 2.5\nc = \"x # not comment\"\nd = true\n").unwrap();
+        assert_eq!(t.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(t.get("b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(t.get("c").unwrap().as_str(), Some("x # not comment"));
+        assert_eq!(t.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn tables_and_dotted() {
+        let t = parse("[perf.gpu.gemm]\npeak = 2000.0\nhalf = 512\n").unwrap();
+        assert_eq!(t.get_path("perf.gpu.gemm.peak").unwrap().as_f64(), Some(2000.0));
+        assert_eq!(t.get_path("perf.gpu.gemm.half").unwrap().as_i64(), Some(512));
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let src = "[[processor]]\nname = \"cpu0\"\n[[processor]]\nname = \"gpu0\"\nfast = true\n";
+        let t = parse(src).unwrap();
+        let procs = t.get("processor").unwrap().as_table_arr().unwrap();
+        assert_eq!(procs.len(), 2);
+        assert_eq!(procs[0].get("name").unwrap().as_str(), Some("cpu0"));
+        assert_eq!(procs[1].get("fast").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse("tiles = [128, 256, 512]\nnames = [\"a\", \"b\"]\nnested = [[1,2],[3]]\n").unwrap();
+        let tiles = t.get("tiles").unwrap().as_arr().unwrap();
+        assert_eq!(tiles.len(), 3);
+        assert_eq!(tiles[2].as_i64(), Some(512));
+        assert_eq!(t.get("names").unwrap().as_arr().unwrap()[1].as_str(), Some("b"));
+        assert_eq!(t.get("nested").unwrap().as_arr().unwrap()[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let t = parse("n = 32_768\n").unwrap();
+        assert_eq!(t.get("n").unwrap().as_i64(), Some(32768));
+    }
+
+    #[test]
+    fn mixed_sections() {
+        let src = "top = 1\n[a]\nx = 2\n[[b]]\ny = 3\n[[b]]\ny = 4\n[a.c]\nz = 5\n";
+        let t = parse(src).unwrap();
+        assert_eq!(t.get("top").unwrap().as_i64(), Some(1));
+        assert_eq!(t.get_path("a.x").unwrap().as_i64(), Some(2));
+        assert_eq!(t.get_path("a.c.z").unwrap().as_i64(), Some(5));
+        assert_eq!(t.get("b").unwrap().as_table_arr().unwrap()[1].get("y").unwrap().as_i64(), Some(4));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse("a =").is_err());
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("a = zzz\n").is_err());
+    }
+
+    #[test]
+    fn tables_inside_table_array_entries() {
+        let src = "[[proc]]\nname = \"p0\"\n[proc.perf]\npeak = 9.0\n[[proc]]\nname = \"p1\"\n[proc.perf]\npeak = 3.0\n";
+        let t = parse(src).unwrap();
+        let procs = t.get("proc").unwrap().as_table_arr().unwrap();
+        assert_eq!(procs[0].get("perf").unwrap().get("peak").unwrap().as_f64(), Some(9.0));
+        assert_eq!(procs[1].get("perf").unwrap().get("peak").unwrap().as_f64(), Some(3.0));
+    }
+}

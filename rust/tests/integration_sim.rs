@@ -1,0 +1,258 @@
+//! Integration tests: full pipeline from shipped platform configs through
+//! simulation and the iterative solver, asserting the *qualitative shapes*
+//! the paper reports (who wins, where the trade-offs fall).
+
+use hesp::config::Platform;
+use hesp::coordinator::energy::{energy, Objective, DEFAULT_J_PER_BYTE};
+use hesp::coordinator::engine::{simulate, simulate_mapped, SimConfig};
+use hesp::coordinator::metrics::{load_trace, report};
+use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::solver::{best_homogeneous, homogeneous_sweep, solve, SolverConfig};
+
+fn bujaruelo() -> Platform {
+    Platform::from_file(concat!(env!("CARGO_MANIFEST_DIR"), "/configs/bujaruelo.toml")).unwrap()
+}
+
+fn odroid() -> Platform {
+    Platform::from_file(concat!(env!("CARGO_MANIFEST_DIR"), "/configs/odroid.toml")).unwrap()
+}
+
+fn pl_eft(p: &Platform) -> SimConfig {
+    SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish)).with_elem_bytes(p.elem_bytes)
+}
+
+#[test]
+fn bujaruelo_platform_shape() {
+    let p = bujaruelo();
+    assert_eq!(p.machine.n_procs(), 28, "25 CPUs + 3 GPUs");
+    assert_eq!(p.machine.spaces.len(), 4);
+    assert_eq!(p.elem_bytes, 4);
+    // GPUs dominate at huge tiles, CPUs competitive at small ones
+    let xeon = p.db.curve(0, hesp::coordinator::task::TaskKind::Gemm);
+    let gtx = p.db.curve(1, hesp::coordinator::task::TaskKind::Gemm);
+    assert!(gtx.gflops(4096.0) > 30.0 * xeon.gflops(4096.0));
+    assert!(gtx.gflops(64.0) < 20.0 * xeon.gflops(64.0));
+}
+
+#[test]
+fn fig5_right_policy_sweep_shapes() {
+    // Fig. 5 (right): performance vs tile count per policy. Assertions:
+    // (1) every policy has an interior optimum or clear trade-off,
+    // (2) EFT-P beats EIT-P beats R-P at the optimum,
+    // (3) the optimal tile size depends on the policy.
+    let p = bujaruelo();
+    let n = 16_384;
+    let tiles = [512u32, 1024, 2048, 4096];
+    let mut best = std::collections::HashMap::new();
+    for row in SchedConfig::table1_rows() {
+        let sim = SimConfig::new(row).with_elem_bytes(p.elem_bytes);
+        let sweep = homogeneous_sweep(n, &tiles, &p.machine, &p.db, sim);
+        assert_eq!(sweep.len(), tiles.len());
+        let (b, _, sched) = sweep
+            .into_iter()
+            .min_by(|a, b| a.2.makespan.total_cmp(&b.2.makespan))
+            .unwrap();
+        best.insert(row.name(), (b, sched.makespan));
+    }
+    let mk = |name: &str| best[name].1;
+    assert!(mk("PL/EFT-P") < mk("PL/EIT-P"), "EFT beats EIT");
+    assert!(mk("PL/EIT-P") < mk("FCFS/R-P"), "EIT beats random");
+    // the optimal tile size depends on the policy (paper §3.1, fact 1):
+    // transfer-aware EFT prefers coarser tiles than load-greedy EIT
+    assert!(best["PL/EFT-P"].0 >= best["PL/EIT-P"].0, "{best:?}");
+}
+
+#[test]
+fn heterogeneous_beats_homogeneous_on_bujaruelo() {
+    // Table 1's headline: the found heterogeneous partition improves on
+    // the best homogeneous tiling, raises load, lowers avg block size.
+    let p = bujaruelo();
+    let sim = pl_eft(&p);
+    let tiles = [1024u32, 2048, 4096];
+    let n = 16_384;
+    let (_, hdag, hsched) = best_homogeneous(n, &tiles, &p.machine, &p.db, sim, Objective::Makespan).unwrap();
+    let hr = report(&hdag, &hsched);
+    let res = solve(hdag, &p.machine, &p.db, &PartitionerSet::standard(), SolverConfig::all_soft(sim, 120, 128));
+    let er = report(&res.best_dag, &res.best_schedule);
+    assert!(er.makespan <= hr.makespan, "{} vs {}", er.makespan, hr.makespan);
+    assert!(er.gflops >= hr.gflops);
+    assert!(er.dag_depth >= 2, "heterogeneous partitions are nested (depth {})", er.dag_depth);
+    assert!(er.avg_block_size <= hr.avg_block_size + 1e-9);
+}
+
+#[test]
+fn odroid_high_occupancy_leaves_little_room() {
+    // The paper's ODROID observation: EIT-P yields ~99% load, so the
+    // improvement from heterogeneous partitioning is small (<5%).
+    let p = odroid();
+    let sim = SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestIdle)).with_elem_bytes(p.elem_bytes);
+    let tiles = [128u32, 256, 512];
+    let (_, hdag, hsched) = best_homogeneous(4096, &tiles, &p.machine, &p.db, sim, Objective::Makespan).unwrap();
+    let hr = report(&hdag, &hsched);
+    assert!(hr.avg_load_pct > 90.0, "EIT keeps the asymmetric CPUs busy ({}%)", hr.avg_load_pct);
+    let res = solve(hdag, &p.machine, &p.db, &PartitionerSet::standard(), SolverConfig::all_soft(sim, 60, 64));
+    let improve = 100.0 * (hr.makespan - res.best_schedule.makespan) / res.best_schedule.makespan;
+    assert!(improve < 8.0, "little room for improvement at high load, got {improve}%");
+}
+
+#[test]
+fn fp_piles_work_on_fast_processors() {
+    // F-P's known failure mode (Table 1: lowest loads): everything queues
+    // on the fastest processors while slow ones idle.
+    // Compare each policy at its own best homogeneous tiling (as Table 1
+    // does): F-P is the weakest informed policy — EFT-P clearly beats it,
+    // and EIT-P beats it too (paper: 5650/6096 vs 2846/3381 GFLOPS).
+    let p = bujaruelo();
+    let tiles = [512u32, 1024, 2048, 4096];
+    let best = |sel: ProcSelect| {
+        let sim = SimConfig::new(SchedConfig::new(Ordering::Fcfs, sel)).with_elem_bytes(p.elem_bytes);
+        best_homogeneous(16_384, &tiles, &p.machine, &p.db, sim, Objective::Makespan).unwrap().2.makespan
+    };
+    let (fp, eit, eft) = (best(ProcSelect::Fastest), best(ProcSelect::EarliestIdle), best(ProcSelect::EarliestFinish));
+    assert!(eft < fp, "EFT {eft} vs F-P {fp}");
+    assert!(eit < fp, "EIT {eit} vs F-P {fp}");
+}
+
+#[test]
+fn fig2b_load_trace_shows_tail_starvation() {
+    // Fig. 2b: the final stages of Cholesky starve the machine.
+    let p = bujaruelo();
+    let mut dag = cholesky::root(16_384);
+    cholesky::partition_uniform(&mut dag, 1_024);
+    // EIT-P spreads over all 28 processors (like the paper's Fig. 2b run)
+    let sim = SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestIdle)).with_elem_bytes(p.elem_bytes);
+    let sched = simulate(&dag, &p.machine, &p.db, sim);
+    let trace = load_trace(&sched, 100);
+    let peak = trace.iter().map(|&(_, a)| a).max().unwrap();
+    let tail = trace[95..].iter().map(|&(_, a)| a).max().unwrap();
+    assert!(peak >= 10, "mid-execution parallelism present (peak {peak})");
+    assert!(tail <= peak / 2, "tail starvation visible (tail {tail} vs peak {peak})");
+}
+
+#[test]
+fn replica_mapping_reproduces_schedule() {
+    // HESP-REPLICA mechanism: replaying a simulated mapping yields the
+    // same makespan under the same models.
+    let p = odroid();
+    let sim = pl_eft(&p);
+    let mut dag = cholesky::root(2048);
+    cholesky::partition_uniform(&mut dag, 256);
+    let sched = simulate(&dag, &p.machine, &p.db, sim);
+    let replay = simulate_mapped(&dag, &p.machine, &p.db, sim, &sched.mapping());
+    assert!((sched.makespan - replay.makespan).abs() < 1e-9 * sched.makespan.max(1.0));
+}
+
+#[test]
+fn energy_objective_prefers_lower_power_schedules() {
+    let p = odroid();
+    let sim = pl_eft(&p);
+    let tiles = [128u32, 256, 512];
+    let parts = PartitionerSet::standard();
+    let (_, hdag, _) = best_homogeneous(2048, &tiles, &p.machine, &p.db, sim, Objective::Makespan).unwrap();
+    let mut cfg_mk = SolverConfig::all_soft(sim, 40, 64);
+    cfg_mk.objective = Objective::Makespan;
+    let mut cfg_en = cfg_mk;
+    cfg_en.objective = Objective::Energy;
+    let r_mk = solve(hdag.clone(), &p.machine, &p.db, &parts, cfg_mk);
+    let r_en = solve(hdag, &p.machine, &p.db, &parts, cfg_en);
+    let e_mk = energy(&r_mk.best_schedule, &p.machine, DEFAULT_J_PER_BYTE).total();
+    let e_en = energy(&r_en.best_schedule, &p.machine, DEFAULT_J_PER_BYTE).total();
+    assert!(e_en <= e_mk * 1.001, "energy objective no worse in joules ({e_en} vs {e_mk})");
+    assert!(r_mk.best_schedule.makespan <= r_en.best_schedule.makespan * 1.001);
+}
+
+#[test]
+fn caching_policy_ordering_on_transfer_volume() {
+    // WB <= WT in bytes moved (write-through adds backflow), WA >= WB.
+    use hesp::coordinator::coherence::CachePolicy;
+    let p = bujaruelo();
+    let mut dag = cholesky::root(8192);
+    cholesky::partition_uniform(&mut dag, 1024);
+    let base = pl_eft(&p);
+    let wb = simulate(&dag, &p.machine, &p.db, base.with_cache(CachePolicy::WriteBack));
+    let wt = simulate(&dag, &p.machine, &p.db, base.with_cache(CachePolicy::WriteThrough));
+    let wa = simulate(&dag, &p.machine, &p.db, base.with_cache(CachePolicy::WriteAround));
+    assert!(wb.transfer_bytes <= wt.transfer_bytes);
+    assert!(wb.transfer_bytes <= wa.transfer_bytes);
+}
+
+#[test]
+fn solver_history_is_recorded_and_improves() {
+    let p = odroid();
+    let sim = pl_eft(&p);
+    let mut dag = cholesky::root(2048);
+    cholesky::partition_uniform(&mut dag, 512);
+    let first = simulate(&dag, &p.machine, &p.db, sim).makespan;
+    let res = solve(dag, &p.machine, &p.db, &PartitionerSet::standard(), SolverConfig::all_soft(sim, 60, 64));
+    assert!(res.best_cost <= first * 1.0001);
+    assert!(!res.history.is_empty());
+    assert_eq!(res.history[0].cost, first);
+}
+
+#[test]
+fn constructive_online_improves_coarse_start_on_bujaruelo() {
+    use hesp::coordinator::constructive::{schedule_online, OnlineConfig};
+    let p = bujaruelo();
+    let sim = pl_eft(&p);
+    let mut dag = cholesky::root(16_384);
+    cholesky::partition_uniform(&mut dag, 2_048);
+    let base = simulate(&dag, &p.machine, &p.db, sim);
+    let res = schedule_online(&dag, &p.machine, &p.db, &PartitionerSet::standard(), OnlineConfig::new(sim, 128));
+    assert!(res.splits > 0, "online splits taken");
+    // local-information-only decisions can regress slightly vs the static
+    // schedule (the paper positions the constructive variant as
+    // runtime-practical, not bound-optimal) — but never catastrophically
+    assert!(
+        res.schedule.makespan <= base.makespan * 1.15,
+        "online {} vs static {}",
+        res.schedule.makespan,
+        base.makespan
+    );
+    // online refinement produces a nested DAG
+    assert!(res.dag.depth() >= 2);
+}
+
+#[test]
+fn synthetic_workloads_schedule_on_real_platforms() {
+    use hesp::coordinator::workloads;
+    let p = odroid();
+    let sim = pl_eft(&p);
+    for dag in [workloads::layered(4, 6, 128), workloads::stencil(6, 5, 128), workloads::random_layered(40, 128, 3)] {
+        let sched = simulate(&dag, &p.machine, &p.db, sim);
+        assert_eq!(sched.assignments.len(), dag.frontier().len());
+        assert!(sched.makespan > 0.0 && sched.makespan.is_finite());
+        let r = report(&dag, &sched);
+        assert!(r.avg_load_pct > 0.0);
+    }
+}
+
+#[test]
+fn ascii_gantt_renders_platform_schedule() {
+    use hesp::coordinator::trace::ascii_gantt;
+    let p = odroid();
+    let mut dag = cholesky::root(2048);
+    cholesky::partition_uniform(&mut dag, 256);
+    let sched = simulate(&dag, &p.machine, &p.db, pl_eft(&p));
+    let g = ascii_gantt(&dag, &sched, &p.machine, 80);
+    assert_eq!(g.lines().count(), 9, "8 procs + legend");
+    for glyph in ['P', 'T', 'S', 'G'] {
+        assert!(g.contains(glyph), "missing {glyph}");
+    }
+}
+
+#[test]
+fn cross_platform_scale_sanity() {
+    // BUJARUELO is ~500x the GFLOPS of ODROID on the same relative
+    // workload (paper: thousands vs ~9 GFLOPS).
+    let pb = bujaruelo();
+    let po = odroid();
+    let mut db_dag = cholesky::root(16_384);
+    cholesky::partition_uniform(&mut db_dag, 1024);
+    let rb = report(&db_dag, &simulate(&db_dag, &pb.machine, &pb.db, pl_eft(&pb)));
+    let mut do_dag = cholesky::root(4096);
+    cholesky::partition_uniform(&mut do_dag, 256);
+    let ro = report(&do_dag, &simulate(&do_dag, &po.machine, &po.db, pl_eft(&po)));
+    assert!(rb.gflops > 1000.0, "bujaruelo in the TFLOPS regime: {}", rb.gflops);
+    assert!(ro.gflops > 2.0 && ro.gflops < 15.0, "odroid in the ~5-10 GFLOPS regime: {}", ro.gflops);
+}

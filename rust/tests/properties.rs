@@ -1,0 +1,345 @@
+//! Property-based tests over the coordinator's core invariants, using the
+//! in-tree seeded property harness (`hesp::proptest`).
+
+use hesp::coordinator::coherence::{CachePolicy, Coherence};
+use hesp::coordinator::datadag::{DataDag, GrainIndex};
+use hesp::coordinator::engine::{simulate, SimConfig};
+use hesp::coordinator::partitioners::{cholesky, legal_sub_edges, PartitionerSet};
+use hesp::coordinator::perfmodel::{PerfCurve, PerfDb};
+use hesp::coordinator::platform::{Machine, MachineBuilder};
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::region::Region;
+use hesp::coordinator::task::{TaskKind, TaskSpec};
+use hesp::coordinator::taskdag::TaskDag;
+use hesp::proptest::{forall, gen};
+use hesp::util::rng::Rng;
+
+/// Random small task stream over aligned tiles of one matrix.
+fn random_stream(rng: &mut Rng, n_tasks: usize) -> TaskDag {
+    let root = Region::new(0, 0, 64, 0, 64);
+    let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![root], vec![root]));
+    let mut specs = Vec::new();
+    for _ in 0..n_tasks {
+        let nreads = rng.below(3);
+        let reads: Vec<Region> = (0..nreads).map(|_| gen::square_tile(rng, 0, 6)).collect();
+        let writes = vec![gen::square_tile(rng, 0, 6)];
+        specs.push(TaskSpec::new(TaskKind::Gemm, reads, writes));
+    }
+    dag.partition(0, specs, 8);
+    dag
+}
+
+fn reachable(flat: &hesp::coordinator::taskdag::FlatDag, from: usize, to: usize) -> bool {
+    let mut seen = vec![false; flat.len()];
+    let mut stack = vec![from];
+    while let Some(x) = stack.pop() {
+        if x == to {
+            return true;
+        }
+        for &s in &flat.succs[x] {
+            if !seen[s] {
+                seen[s] = true;
+                stack.push(s);
+            }
+        }
+    }
+    false
+}
+
+#[test]
+fn prop_dependences_respect_sequential_semantics() {
+    // Every conflicting pair (overlapping access, at least one write) must
+    // be ordered by a dependence path in program order.
+    forall(60, 0xDA6, |rng| {
+        let dag = random_stream(rng, 14);
+        let flat = dag.flat_dag();
+        let n = flat.len();
+        for i in 0..n {
+            let ti = dag.task(flat.tasks[i]);
+            for j in i + 1..n {
+                let tj = dag.task(flat.tasks[j]);
+                let conflict = ti.writes.iter().any(|w| {
+                    tj.reads.iter().chain(tj.writes.iter()).any(|r| w.intersects(r))
+                }) || tj.writes.iter().any(|w| ti.reads.iter().any(|r| w.intersects(r)));
+                if conflict {
+                    assert!(reachable(&flat, i, j), "conflicting pair ({i},{j}) unordered");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_flat_dag_is_acyclic_topological() {
+    // preds always point backwards in program order (an inductive proof of
+    // acyclicity), and indegrees are consistent with succs.
+    forall(80, 0xACE, |rng| {
+        let dag = random_stream(rng, 20);
+        let flat = dag.flat_dag();
+        for (i, ps) in flat.preds.iter().enumerate() {
+            for &p in ps {
+                assert!(p < i, "pred {p} not before {i}");
+                assert!(flat.succs[p].contains(&i));
+            }
+        }
+    });
+}
+
+fn random_machine(rng: &mut Rng) -> (Machine, PerfDb) {
+    let mut b = MachineBuilder::new("rand");
+    let host = b.space("host", u64::MAX);
+    b.main(host);
+    let n_spaces = 1 + rng.below(3);
+    let mut spaces = vec![host];
+    for i in 1..n_spaces {
+        let s = b.space(&format!("dev{i}"), 1 << 30);
+        b.connect(host, s, 1e-6 * (1 + rng.below(20)) as f64, 1e9 * (1 + rng.below(20)) as f64);
+        spaces.push(s);
+    }
+    let mut db = PerfDb::new();
+    let n_types = 1 + rng.below(3);
+    for t in 0..n_types {
+        let ty = b.proc_type(&format!("ty{t}"), 10.0, 1.0);
+        db.set_fallback(
+            ty,
+            PerfCurve::Saturating { peak: 1.0 + rng.next_f64() * 100.0, half: 8.0 + rng.next_f64() * 64.0, exponent: 1.5 },
+        );
+        let space = spaces[rng.below(spaces.len())];
+        b.processors(1 + rng.below(4), &format!("p{t}_"), ty, space);
+    }
+    (b.build(), db)
+}
+
+#[test]
+fn prop_schedule_is_valid_under_all_policies() {
+    forall(40, 0x5CED, |rng| {
+        let dag = random_stream(rng, 16);
+        let (m, db) = random_machine(rng);
+        let ordering = *rng.choose(&[Ordering::Fcfs, Ordering::PriorityList]);
+        let select = *rng.choose(&ProcSelect::ALL);
+        let cache = *rng.choose(&[CachePolicy::WriteBack, CachePolicy::WriteThrough, CachePolicy::WriteAround]);
+        let cfg = SimConfig::new(SchedConfig::new(ordering, select)).with_cache(cache).with_seed(rng.next_u64());
+        let sched = simulate(&dag, &m, &db, cfg);
+        let flat = dag.flat_dag();
+
+        // every task scheduled exactly once, on a real processor
+        assert_eq!(sched.assignments.len(), flat.len());
+        for a in &sched.assignments {
+            assert!(a.proc < m.n_procs());
+            assert!(a.end >= a.start && a.start >= a.release - 1e-12);
+        }
+        // dependence order respected
+        for (i, ps) in flat.preds.iter().enumerate() {
+            for &p in ps {
+                assert!(
+                    sched.assignments[i].start >= sched.assignments[p].end - 1e-9,
+                    "task {i} starts before pred {p} ends"
+                );
+            }
+        }
+        // no processor runs two tasks at once
+        let mut per_proc: Vec<Vec<(f64, f64)>> = vec![Vec::new(); m.n_procs()];
+        for a in &sched.assignments {
+            per_proc[a.proc].push((a.start, a.end));
+        }
+        for iv in &mut per_proc {
+            iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in iv.windows(2) {
+                assert!(w[1].0 >= w[0].1 - 1e-9, "overlap on a processor");
+            }
+        }
+        // makespan covers everything
+        for a in &sched.assignments {
+            assert!(a.end <= sched.makespan + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_grain_index_matches_naive_scan() {
+    forall(150, 0x16D, |rng| {
+        let mut idx = GrainIndex::new();
+        let mut all: Vec<(Region, usize)> = Vec::new();
+        let n = 1 + rng.below(20);
+        for i in 0..n {
+            // mix of aligned tiles and arbitrary rectangles
+            let r = if rng.below(2) == 0 {
+                gen::square_tile(rng, 0, 6)
+            } else {
+                gen::region(rng, 0, 64, 1)
+            };
+            if all.iter().any(|(x, _)| *x == r) {
+                continue;
+            }
+            idx.insert(r, i);
+            all.push((r, i));
+        }
+        let q = gen::region(rng, 0, 64, 1);
+        let mut got: Vec<usize> = Vec::new();
+        idx.visit_intersecting(&q, |i| got.push(i));
+        got.sort_unstable();
+        got.dedup();
+        let mut want: Vec<usize> = all.iter().filter(|(r, _)| r.intersects(&q)).map(|&(_, i)| i).collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "query {q}");
+    });
+}
+
+#[test]
+fn prop_datadag_relations_are_geometric() {
+    forall(80, 0xDD, |rng| {
+        let mut dag = DataDag::new();
+        let mut regions = Vec::new();
+        for _ in 0..8 {
+            let r = gen::square_tile(rng, 0, 5);
+            dag.insert(r);
+            regions.push(r);
+        }
+        // node relations mirror geometry for every inserted pair
+        for &r in &regions {
+            let b = dag.lookup(&r).unwrap();
+            for p in &dag.block(b).parents {
+                assert!(dag.block(*p).region.contains(&r));
+            }
+            for c in &dag.block(b).children {
+                assert!(r.contains(&dag.block(*c).region));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_coherence_no_stale_reads() {
+    // Random read/write traffic across spaces: after any write, a read
+    // plan from another space must source every fragment from somewhere
+    // holding valid data, and reassembly must make the block readable.
+    forall(60, 0xC0E, |rng| {
+        let policy = *rng.choose(&[CachePolicy::WriteBack, CachePolicy::WriteThrough, CachePolicy::WriteAround]);
+        let mut coh = Coherence::new(3, 0, policy, vec![u64::MAX; 3], 4);
+        let mut blocks = Vec::new();
+        for _ in 0..6 {
+            blocks.push(coh.register(gen::square_tile(rng, 0, 5)));
+        }
+        for _ in 0..30 {
+            let b = blocks[rng.below(blocks.len())];
+            let s = rng.below(3);
+            if rng.below(2) == 0 {
+                // read: plan + apply
+                let plan = coh.read_plan(b, s);
+                for tr in &plan {
+                    assert!(tr.to == s);
+                    assert!(tr.bytes > 0);
+                    // source must actually hold the block (or be main for
+                    // the residual fetch)
+                    assert!(
+                        coh.is_valid(tr.block, tr.from) || tr.from == 0,
+                        "transfer sourced from invalid space"
+                    );
+                }
+                for tr in plan {
+                    coh.complete_read(tr.block, tr.to);
+                }
+                coh.complete_read(b, s);
+                assert!(coh.is_valid(b, s), "block unreadable after plan applied");
+            } else {
+                coh.complete_write(b, s);
+                match policy {
+                    CachePolicy::WriteBack => assert!(coh.is_valid(b, s)),
+                    CachePolicy::WriteThrough => {
+                        assert!(coh.is_valid(b, s) && coh.is_valid(b, 0))
+                    }
+                    CachePolicy::WriteAround => assert!(coh.is_valid(b, 0)),
+                }
+                // no *other* space may still hold an intersecting block
+                for &ob in &blocks {
+                    if coh.dag.block(ob).region.intersects(&coh.dag.block(b).region) {
+                        for other in 0..3 {
+                            let writer_space = if policy == CachePolicy::WriteAround { 0 } else { s };
+                            if other != writer_space && other != 0 && other != s {
+                                assert!(!coh.is_valid(ob, other), "stale copy survived a write");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_partitioners_conserve_flops() {
+    // POTRF/TRSM/SYRK/GEMM/GETRF blocked partitions redistribute exactly
+    // the parent's flops (with the crate's full-block SYRK convention).
+    forall(60, 0xF70, |rng| {
+        let parts = PartitionerSet::standard();
+        let edge = 1u32 << (4 + rng.below(4)); // 16..128
+        let subs = legal_sub_edges(edge, 2);
+        if subs.is_empty() {
+            return;
+        }
+        let sub = subs[rng.below(subs.len())];
+        let a = Region::new(0, 0, edge, 0, edge);
+        let b = Region::new(1, 0, edge, 0, edge);
+        let c = Region::new(2, 0, edge, 0, edge);
+        let specs = [
+            TaskSpec::new(TaskKind::Potrf, vec![a], vec![a]),
+            TaskSpec::new(TaskKind::Trsm, vec![a, b], vec![b]),
+            TaskSpec::new(TaskKind::Syrk, vec![a, b], vec![b]),
+            TaskSpec::new(TaskKind::Gemm, vec![a, b, c], vec![c]),
+            TaskSpec::new(TaskKind::Getrf, vec![a], vec![a]),
+        ];
+        for spec in specs {
+            let parent_flops = spec.flops();
+            let mut dag = TaskDag::new(spec);
+            if parts.apply(&mut dag, 0, sub).is_some() {
+                let total = dag.total_flops();
+                assert!(
+                    (total - parent_flops).abs() <= 1e-6 * parent_flops.max(1.0),
+                    "flops not conserved: {total} vs {parent_flops} (edge {edge} sub {sub})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_merge_restores_exact_frontier() {
+    // partition -> partition child -> merge child -> merge root returns
+    // the DAG to its original single-task frontier, for random choices.
+    forall(60, 0x3E6, |rng| {
+        let parts = PartitionerSet::standard();
+        let mut dag = cholesky::root(64);
+        let subs = [8u32, 16, 32];
+        let b = *rng.choose(&subs);
+        parts.apply(&mut dag, 0, b).unwrap();
+        let frontier1 = dag.frontier();
+        // partition a random partitionable leaf one level deeper
+        let leaf = frontier1[rng.below(frontier1.len())];
+        let edge = dag.task(leaf).char_edge() as u32;
+        if let Some(sub2) = legal_sub_edges(edge, 2).first().copied() {
+            if parts.apply(&mut dag, leaf, sub2).is_some() {
+                assert!(dag.frontier().len() > frontier1.len());
+                dag.merge(leaf);
+            }
+        }
+        assert_eq!(dag.frontier(), frontier1, "merge must restore the previous frontier");
+        dag.merge(dag.root);
+        assert_eq!(dag.frontier(), vec![dag.root]);
+        assert_eq!(dag.live_count(), 1);
+    });
+}
+
+#[test]
+fn prop_simulation_is_deterministic() {
+    forall(25, 0xDE7, |rng| {
+        let dag = random_stream(rng, 12);
+        let (m, db) = random_machine(rng);
+        let seed = rng.next_u64();
+        let cfg = SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::Random)).with_seed(seed);
+        let a = simulate(&dag, &m, &db, cfg);
+        let b = simulate(&dag, &m, &db, cfg);
+        assert_eq!(a.mapping(), b.mapping());
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.transfer_bytes, b.transfer_bytes);
+    });
+}

@@ -1,0 +1,197 @@
+//! PJRT runtime integration: load the AOT artifacts, execute tile kernels
+//! and full factorizations for real, and check the numerics against
+//! pure-Rust references. Tests skip (with a notice) when `make artifacts`
+//! has not been run.
+
+use hesp::coordinator::task::TaskKind;
+use hesp::runtime::executor::{self, artifacts_available, artifacts_dir, random_spd};
+use hesp::runtime::{tile_literal_f32, tile_literal_f64, tile_to_vec_f32, DType, Runtime};
+use hesp::util::rng::Rng;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn load(tiles: &[u32], dtype: &str) -> Runtime {
+    Runtime::load_filtered(artifacts_dir(), |e| e.dtype == dtype && tiles.contains(&e.tile)).unwrap()
+}
+
+fn rand_tile(rng: &mut Rng, b: u32) -> Vec<f32> {
+    (0..b * b).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn manifest_covers_all_task_kinds_and_tiles() {
+    require_artifacts!();
+    let entries = hesp::runtime::artifacts::read_manifest(artifacts_dir()).unwrap();
+    for task in ["potrf", "trsm", "syrk", "gemm"] {
+        for dtype in ["f32", "f64"] {
+            for tile in [32u32, 64, 128, 256] {
+                assert!(
+                    entries.iter().any(|e| e.task == task && e.dtype == dtype && e.tile == tile),
+                    "missing {task}_{dtype}_{tile}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_kernel_matches_rust_reference() {
+    require_artifacts!();
+    let rt = load(&[32], "f32");
+    let k = rt.kernel(TaskKind::Gemm, DType::F32, 32).unwrap();
+    let mut rng = Rng::new(1);
+    let (c, a, b) = (rand_tile(&mut rng, 32), rand_tile(&mut rng, 32), rand_tile(&mut rng, 32));
+    let out = k
+        .execute(&[
+            tile_literal_f32(&c, 32).unwrap(),
+            tile_literal_f32(&a, 32).unwrap(),
+            tile_literal_f32(&b, 32).unwrap(),
+        ])
+        .unwrap();
+    let got = tile_to_vec_f32(&out).unwrap();
+    // reference: C - A @ B^T
+    for i in 0..32 {
+        for j in 0..32 {
+            let mut acc = c[i * 32 + j] as f64;
+            for p in 0..32 {
+                acc -= a[i * 32 + p] as f64 * b[j * 32 + p] as f64;
+            }
+            let err = (got[i * 32 + j] as f64 - acc).abs();
+            assert!(err < 1e-3, "gemm mismatch at ({i},{j}): {err}");
+        }
+    }
+}
+
+#[test]
+fn potrf_kernel_factorizes() {
+    require_artifacts!();
+    let rt = load(&[64], "f32");
+    let k = rt.kernel(TaskKind::Potrf, DType::F32, 64).unwrap();
+    let a = random_spd(64, 3);
+    let out = k.execute(&[tile_literal_f32(&a, 64).unwrap()]).unwrap();
+    let l = tile_to_vec_f32(&out).unwrap();
+    // L is lower-triangular and L L^T == A
+    let mut max_err = 0f64;
+    for i in 0..64 {
+        for j in 0..64 {
+            if j > i {
+                assert!(l[i * 64 + j].abs() < 1e-5, "upper triangle not zero");
+            } else {
+                let mut acc = 0f64;
+                for p in 0..=j {
+                    acc += l[i * 64 + p] as f64 * l[j * 64 + p] as f64;
+                }
+                max_err = max_err.max((acc - a[i * 64 + j] as f64).abs());
+            }
+        }
+    }
+    assert!(max_err < 1e-4, "reconstruction error {max_err}");
+}
+
+#[test]
+fn trsm_kernel_solves() {
+    require_artifacts!();
+    let rt = load(&[32], "f32");
+    let k = rt.kernel(TaskKind::Trsm, DType::F32, 32).unwrap();
+    let mut rng = Rng::new(5);
+    // well-conditioned lower-triangular L
+    let mut l = vec![0f32; 32 * 32];
+    for i in 0..32 {
+        for j in 0..=i {
+            l[i * 32 + j] = if i == j { 4.0 } else { rng.normal() as f32 * 0.2 };
+        }
+    }
+    let b = rand_tile(&mut rng, 32);
+    let out = k
+        .execute(&[tile_literal_f32(&l, 32).unwrap(), tile_literal_f32(&b, 32).unwrap()])
+        .unwrap();
+    let x = tile_to_vec_f32(&out).unwrap();
+    // check X L^T == B
+    for i in 0..32 {
+        for j in 0..32 {
+            let mut acc = 0f64;
+            for p in 0..32 {
+                acc += x[i * 32 + p] as f64 * l[j * 32 + p] as f64;
+            }
+            assert!((acc - b[i * 32 + j] as f64).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn f64_kernels_execute() {
+    require_artifacts!();
+    let rt = load(&[32], "f64");
+    let k = rt.kernel(TaskKind::Syrk, DType::F64, 32).unwrap();
+    let c: Vec<f64> = (0..32 * 32).map(|i| i as f64 * 0.001).collect();
+    let a: Vec<f64> = (0..32 * 32).map(|i| (i % 7) as f64 * 0.01).collect();
+    let out = k
+        .execute(&[tile_literal_f64(&c, 32).unwrap(), tile_literal_f64(&a, 32).unwrap()])
+        .unwrap();
+    let got = out.to_vec::<f64>().unwrap();
+    for i in 0..32 {
+        for j in 0..32 {
+            let mut acc = c[i * 32 + j];
+            for p in 0..32 {
+                acc -= a[i * 32 + p] * a[j * 32 + p];
+            }
+            assert!((got[i * 32 + j] - acc).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn full_cholesky_execution_verifies() {
+    require_artifacts!();
+    let rt = load(&[64], "f32");
+    let r = executor::run_cholesky(&rt, 256, 64, 42).unwrap();
+    assert!(r.max_err < 1e-3, "numerics: {}", r.max_err);
+    assert_eq!(r.timings.len(), hesp::coordinator::partitioners::cholesky::task_count(4) as usize);
+    assert!(r.total_s > 0.0);
+    assert!(r.gflops() > 0.0);
+}
+
+#[test]
+fn execution_is_deterministic_in_values() {
+    require_artifacts!();
+    let rt = load(&[64], "f32");
+    let a = executor::run_cholesky(&rt, 128, 64, 9).unwrap();
+    let b = executor::run_cholesky(&rt, 128, 64, 9).unwrap();
+    assert_eq!(a.max_err, b.max_err, "same input -> bitwise same factor");
+}
+
+#[test]
+fn measured_models_are_sane() {
+    require_artifacts!();
+    let rt = load(&[32, 64], "f32");
+    let ms = executor::measure_models(&rt, &[32, 64], 3, 1).unwrap();
+    assert_eq!(ms.len(), 8, "4 kinds x 2 tiles");
+    for (kind, tile, gflops) in ms {
+        assert!(gflops > 1e-3 && gflops < 1e3, "{kind:?} {tile}: {gflops} GFLOPS");
+    }
+}
+
+#[test]
+fn kernel_rejects_wrong_arity() {
+    require_artifacts!();
+    let rt = load(&[32], "f32");
+    let k = rt.kernel(TaskKind::Gemm, DType::F32, 32).unwrap();
+    let t = tile_literal_f32(&vec![0f32; 32 * 32], 32).unwrap();
+    assert!(k.execute(&[t]).is_err());
+}
+
+#[test]
+fn runtime_tile_listing() {
+    require_artifacts!();
+    let rt = load(&[32, 64], "f32");
+    assert_eq!(rt.tiles_for(DType::F32), vec![32, 64]);
+    assert!(rt.tiles_for(DType::F64).is_empty());
+    assert!(rt.kernel(TaskKind::Gemm, DType::F32, 128).is_err());
+}
