@@ -1,4 +1,5 @@
-//! FIG5-right regenerator: performance of every scheduling policy across
+//! FIG5-right regenerator: performance of every *registered* scheduling
+//! policy (the 8 paper rows plus `pl/affinity` and `pl/lookahead`) across
 //! homogeneous tile sizes on BUJARUELO (n=32768, f32). The paper's three
 //! observations are checked in-line: (1) the optimal tile depends on the
 //! policy, (2) each curve peaks at an interior trade-off tile, (3) policy
@@ -8,8 +9,9 @@ use hesp::bench::Table;
 use hesp::config::Platform;
 use hesp::coordinator::engine::SimConfig;
 use hesp::coordinator::metrics::report;
-use hesp::coordinator::policies::SchedConfig;
-use hesp::coordinator::solver::homogeneous_sweep;
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::policy::PolicyRegistry;
+use hesp::coordinator::solver::homogeneous_sweep_with;
 use hesp::util::cli::Args;
 
 fn main() {
@@ -19,23 +21,27 @@ fn main() {
     let p = Platform::from_file("configs/bujaruelo.toml").expect("config");
 
     println!("== FIG 5 (right): policies x tile size, {} n={n} ==", p.machine.name);
-    let mut table = Table::new(&["config", "tile", "GFLOPS", "load %", "makespan s"]);
+    let reg = PolicyRegistry::standard();
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(p.elem_bytes);
+    let mut table = Table::new(&["policy", "tile", "GFLOPS", "load %", "makespan s", "xfer MB"]);
     let mut series: Vec<(String, Vec<(u32, f64)>)> = Vec::new();
-    for row in SchedConfig::table1_rows() {
-        let sim = SimConfig::new(row).with_elem_bytes(p.elem_bytes);
+    for name in reg.names() {
+        let mut pol = reg.get(name).expect("registered policy constructs");
         let mut pts = Vec::new();
-        for (b, dag, sched) in homogeneous_sweep(n, &tiles, &p.machine, &p.db, sim) {
+        for (b, dag, sched) in homogeneous_sweep_with(n, &tiles, &p.machine, &p.db, sim, pol.as_mut()) {
             let r = report(&dag, &sched);
             table.row(&[
-                row.name(),
+                name.to_string(),
                 b.to_string(),
                 format!("{:.1}", r.gflops),
                 format!("{:.1}", r.avg_load_pct),
                 format!("{:.4}", r.makespan),
+                format!("{:.1}", r.transfer_bytes as f64 / 1e6),
             ]);
             pts.push((b, r.gflops));
         }
-        series.push((row.name(), pts));
+        series.push((name.to_string(), pts));
     }
     table.print();
 

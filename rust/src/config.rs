@@ -49,6 +49,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
 use crate::coordinator::platform::{Link, Machine, MemSpace, ProcType, Processor};
+use crate::coordinator::policy::{policy_by_name, SchedPolicy};
 use crate::coordinator::task::TaskKind;
 use crate::util::toml::{parse, Toml};
 
@@ -58,6 +59,10 @@ pub struct Platform {
     pub db: PerfDb,
     /// Bytes per element for this platform's experiments (4 = f32, 8 = f64).
     pub elem_bytes: u64,
+    /// Default scheduling policy for this platform's experiments, from the
+    /// optional top-level `policy = "pl/eft-p"` key — a registry name,
+    /// validated at load time. CLI `--policy` overrides it.
+    pub default_policy: Option<String>,
 }
 
 impl Platform {
@@ -70,6 +75,12 @@ impl Platform {
     pub fn from_str(text: &str) -> Result<Platform> {
         let doc = parse(text).map_err(|e| anyhow!(e))?;
         build(&doc)
+    }
+
+    /// Construct this platform's default policy (the registry build of the
+    /// `policy` key), or `None` when the config names no policy.
+    pub fn policy(&self) -> Option<Box<dyn SchedPolicy>> {
+        self.default_policy.as_deref().and_then(policy_by_name)
     }
 }
 
@@ -84,6 +95,19 @@ fn get_f64(t: &BTreeMap<String, Toml>, k: &str) -> Result<f64> {
 fn build(doc: &Toml) -> Result<Platform> {
     let name = doc.get("name").and_then(|v| v.as_str()).unwrap_or("unnamed").to_string();
     let elem_bytes = doc.get("elem_bytes").and_then(|v| v.as_i64()).unwrap_or(4) as u64;
+
+    // optional default scheduling policy, validated against the registry
+    // so a typo fails at load time rather than mid-experiment
+    let default_policy = match doc.get("policy").and_then(|v| v.as_str()) {
+        Some(p) => {
+            let canonical = policy_by_name(p)
+                .ok_or_else(|| anyhow!("unknown scheduling policy '{p}' (try `hesp policies` for the registry)"))?
+                .name()
+                .to_string();
+            Some(canonical)
+        }
+        None => None,
+    };
 
     // ---- memory spaces ----
     let mems = doc
@@ -185,7 +209,7 @@ fn build(doc: &Toml) -> Result<Platform> {
 
     let machine = Machine { name, spaces, links, proc_types, procs, main_space };
     machine.validate().map_err(|e| anyhow!(e))?;
-    Ok(Platform { machine, db, elem_bytes })
+    Ok(Platform { machine, db, elem_bytes, default_policy })
 }
 
 fn parse_curve(t: &Toml) -> Result<PerfCurve> {
@@ -330,6 +354,25 @@ type = "cpu"
 space = "host"
 "#;
         assert!(Platform::from_str(bad).is_err());
+    }
+
+    #[test]
+    fn policy_key_resolves_and_canonicalizes() {
+        let p = Platform::from_str(TOY).unwrap();
+        assert_eq!(p.default_policy, None, "TOY names no policy");
+        assert!(p.policy().is_none());
+        // alias spelling canonicalizes through the registry
+        let with = format!("policy = \"PL/EFT\"\n{TOY}");
+        let p = Platform::from_str(&with).unwrap();
+        assert_eq!(p.default_policy.as_deref(), Some("pl/eft-p"));
+        assert_eq!(p.policy().unwrap().name(), "pl/eft-p");
+    }
+
+    #[test]
+    fn unknown_policy_rejected_at_load() {
+        let bad = format!("policy = \"pl/does-not-exist\"\n{TOY}");
+        let err = Platform::from_str(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown scheduling policy"), "{err:#}");
     }
 
     #[test]

@@ -23,8 +23,9 @@ use super::ordering::critical_times;
 use super::partitioners::{snap_sub_edge, PartitionerSet};
 use super::perfmodel::PerfDb;
 use super::platform::Machine;
-use super::policies::{Ordering, ProcSelect};
-use super::task::TaskSpec;
+use super::policies::SchedConfig;
+use super::policy::{self, SchedContext, SchedPolicy};
+use super::task::{Task, TaskSpec};
 use super::taskdag::TaskDag;
 use crate::util::rng::Rng;
 
@@ -55,13 +56,29 @@ pub struct OnlineResult {
     pub splits: usize,
 }
 
-/// Run the constructive scheduler-partitioner over (a clone of) `dag0`.
+/// Run the constructive scheduler-partitioner over (a clone of) `dag0`,
+/// under the built-in policy named by `cfg.sim`'s shim fields.
 pub fn schedule_online(
     dag0: &TaskDag,
     machine: &Machine,
     db: &PerfDb,
     parts: &PartitionerSet,
     cfg: OnlineConfig,
+) -> OnlineResult {
+    let mut p = policy::policy_for(SchedConfig::new(cfg.sim.ordering, cfg.sim.select));
+    schedule_online_with(dag0, machine, db, parts, cfg, p.as_mut())
+}
+
+/// [`schedule_online`] under an arbitrary scheduling policy: ready-queue
+/// ordering and per-task processor selection both dispatch through
+/// `policy`, exactly as in the offline engine.
+pub fn schedule_online_with(
+    dag0: &TaskDag,
+    machine: &Machine,
+    db: &PerfDb,
+    parts: &PartitionerSet,
+    cfg: OnlineConfig,
+    policy: &mut dyn SchedPolicy,
 ) -> OnlineResult {
     let mut dag = dag0.clone();
     let flat = dag.flat_dag();
@@ -77,9 +94,10 @@ pub fn schedule_online(
     // --- dynamic DAG state, indexed by task id (not frontier position) ---
     // base edges from the initial frontier
     let n0 = flat.len();
-    let prio0 = match cfg.sim.ordering {
-        Ordering::PriorityList => critical_times(&dag, &flat, machine, db),
-        Ordering::Fcfs => vec![0.0; n0],
+    let prio0 = if policy.wants_critical_times() {
+        critical_times(&dag, &flat, machine, db)
+    } else {
+        vec![0.0; n0]
     };
     // per-task: remaining predecessor count, successors (task ids),
     // release time, priority, parent cluster (for completion counting)
@@ -114,42 +132,49 @@ pub fn schedule_online(
             self.key.total_cmp(&other.key).then(other.id.cmp(&self.id))
         }
     }
-    let key_of = |ordering: Ordering, rel: f64, pr: f64| match ordering {
-        Ordering::Fcfs => -rel,
-        Ordering::PriorityList => pr,
-    };
-
-    let mut ready: std::collections::BinaryHeap<HeapItem> = flat
-        .tasks
-        .iter()
-        .enumerate()
-        .filter(|&(i, _)| flat.preds[i].is_empty())
-        .map(|(i, &tid)| HeapItem { key: key_of(cfg.sim.ordering, 0.0, prio0[i]), id: tid })
-        .collect();
-
     let mut proc_avail = vec![0.0f64; machine.n_procs()];
     let mut link_busy = vec![0.0f64; machine.links.len()];
+
+    let mut ready: std::collections::BinaryHeap<HeapItem> = std::collections::BinaryHeap::new();
+    for (i, &tid) in flat.tasks.iter().enumerate() {
+        if flat.preds[i].is_empty() {
+            let mut ctx = SchedContext {
+                machine,
+                db,
+                proc_avail: &proc_avail,
+                link_busy: &link_busy,
+                coh: &mut coh,
+                rng: &mut rng,
+                successors: &[],
+            };
+            let key = policy.order(&mut ctx, dag.task(tid), 0.0, prio0[i]);
+            ready.push(HeapItem { key, id: tid });
+        }
+    }
+
     let mut sched = Schedule { proc_busy: vec![0.0; machine.n_procs()], ..Default::default() };
     let mut splits = 0usize;
 
-    // release `id`'s successors (or bubble completion up the cluster)
+    // Graph bookkeeping when `id` finishes at `end`: bubble completion up
+    // the cluster, decrement successor indegrees, record releases, and
+    // collect tasks that became ready (the caller keys + pushes them, so
+    // ordering stays a policy decision).
+    #[allow(clippy::too_many_arguments)]
     fn complete(
         id: usize,
         end: f64,
-        ordering: Ordering,
         succs: &FxHashMap<usize, Vec<usize>>,
         indeg: &mut FxHashMap<usize, usize>,
         release: &mut FxHashMap<usize, f64>,
-        prio: &FxHashMap<usize, f64>,
         cluster_left: &mut FxHashMap<usize, usize>,
         cluster_parent: &FxHashMap<usize, usize>,
-        ready: &mut std::collections::BinaryHeap<HeapItem>,
+        newly_ready: &mut Vec<usize>,
     ) {
         if let Some(&parent) = cluster_parent.get(&id) {
             let left = cluster_left.get_mut(&parent).expect("cluster counter");
             *left -= 1;
             if *left == 0 {
-                complete(parent, end, ordering, succs, indeg, release, prio, cluster_left, cluster_parent, ready);
+                complete(parent, end, succs, indeg, release, cluster_left, cluster_parent, newly_ready);
             }
         }
         if let Some(ss) = succs.get(&id) {
@@ -159,11 +184,7 @@ pub fn schedule_online(
                 let r = release.entry(s).or_insert(0.0);
                 *r = r.max(end);
                 if *d == 0 {
-                    let key = match ordering {
-                        Ordering::Fcfs => -*release.get(&s).unwrap(),
-                        Ordering::PriorityList => *prio.get(&s).unwrap_or(&0.0),
-                    };
-                    ready.push(HeapItem { key, id: s });
+                    newly_ready.push(s);
                 }
             }
         }
@@ -224,7 +245,17 @@ pub fn schedule_online(
                     release.insert(c, rel);
                     prio.insert(c, p_prio);
                     if edges.preds[ci].is_empty() {
-                        ready.push(HeapItem { key: key_of(cfg.sim.ordering, rel, p_prio), id: c });
+                        let mut ctx = SchedContext {
+                            machine,
+                            db,
+                            proc_avail: &proc_avail,
+                            link_busy: &link_busy,
+                            coh: &mut coh,
+                            rng: &mut rng,
+                            successors: &[],
+                        };
+                        let key = policy.order(&mut ctx, dag.task(c), rel, p_prio);
+                        ready.push(HeapItem { key, id: c });
                     }
                 }
                 continue; // the parent dispatches via its children
@@ -232,7 +263,27 @@ pub fn schedule_online(
         }
 
         // ---- dispatch (same machinery as the engine) ----
-        let proc = choose_proc(&t, rel, machine, db, &proc_avail, &mut coh, &link_busy, cfg.sim.select, &mut rng);
+        let proc = {
+            // successor tasks materialize only for lookahead-style policies
+            let succ_tasks: Vec<&Task> = if policy.wants_successors() {
+                succs
+                    .get(&id)
+                    .map(|v| v.iter().filter(|&&s| dag.is_live(s)).map(|&s| dag.task(s)).collect())
+                    .unwrap_or_default()
+            } else {
+                Vec::new()
+            };
+            let mut ctx = SchedContext {
+                machine,
+                db,
+                proc_avail: &proc_avail,
+                link_busy: &link_busy,
+                coh: &mut coh,
+                rng: &mut rng,
+                successors: &succ_tasks,
+            };
+            policy.select(&mut ctx, &t, rel)
+        };
         let space = machine.procs[proc].space;
         let mut data_ready = rel;
         for r in &t.reads {
@@ -265,7 +316,23 @@ pub fn schedule_online(
             let block = coh.register(*w);
             let _ = coh.complete_write(block, space);
         }
-        complete(id, end, cfg.sim.ordering, &succs, &mut indeg, &mut release, &prio, &mut cluster_left, &cluster_parent, &mut ready);
+        let mut newly_ready = Vec::new();
+        complete(id, end, &succs, &mut indeg, &mut release, &mut cluster_left, &cluster_parent, &mut newly_ready);
+        for s in newly_ready {
+            let rl = *release.get(&s).unwrap_or(&0.0);
+            let pr = *prio.get(&s).unwrap_or(&0.0);
+            let mut ctx = SchedContext {
+                machine,
+                db,
+                proc_avail: &proc_avail,
+                link_busy: &link_busy,
+                coh: &mut coh,
+                rng: &mut rng,
+                successors: &[],
+            };
+            let key = policy.order(&mut ctx, dag.task(s), rl, pr);
+            ready.push(HeapItem { key, id: s });
+        }
     }
 
     let task_end = sched.assignments.iter().map(|a| a.end).fold(0.0f64, f64::max);
@@ -293,62 +360,6 @@ fn internal_edges(specs: &[TaskSpec]) -> Edges {
     Edges { preds: flat.preds, succs: flat.succs }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn choose_proc(
-    t: &super::task::Task,
-    rel: f64,
-    machine: &Machine,
-    db: &PerfDb,
-    proc_avail: &[f64],
-    coh: &mut Coherence,
-    link_busy: &[f64],
-    select: ProcSelect,
-    rng: &mut Rng,
-) -> usize {
-    let exec = |p: usize| db.time(machine.procs[p].ptype, t.kind, t.char_edge(), t.flops);
-    match select {
-        ProcSelect::Random | ProcSelect::Fastest => {
-            let eps = 1e-12;
-            let idle: Vec<usize> = (0..machine.n_procs()).filter(|&p| proc_avail[p] <= rel + eps).collect();
-            let cands = if idle.is_empty() { (0..machine.n_procs()).collect() } else { idle };
-            match select {
-                ProcSelect::Random => *rng.choose(&cands),
-                _ => *cands.iter().min_by(|&&a, &&b| exec(a).total_cmp(&exec(b)).then(a.cmp(&b))).unwrap(),
-            }
-        }
-        ProcSelect::EarliestIdle => (0..machine.n_procs())
-            .min_by(|&a, &b| proc_avail[a].total_cmp(&proc_avail[b]).then(a.cmp(&b)))
-            .unwrap(),
-        ProcSelect::EarliestFinish => {
-            let mut space_ready: Vec<f64> = vec![f64::NAN; machine.spaces.len()];
-            let mut best = (f64::INFINITY, 0usize);
-            for p in 0..machine.n_procs() {
-                let sp = machine.procs[p].space;
-                if space_ready[sp].is_nan() {
-                    let mut dr = rel;
-                    for r in &t.reads {
-                        let block = coh.register(*r);
-                        for tr in coh.read_plan(block, sp) {
-                            let mut at = rel;
-                            for lid in machine.route(tr.from, tr.to) {
-                                let l = &machine.links[lid];
-                                at = at.max(link_busy[lid]) + l.latency + tr.bytes as f64 / l.bandwidth;
-                            }
-                            dr = dr.max(at);
-                        }
-                    }
-                    space_ready[sp] = dr;
-                }
-                let fin = space_ready[sp].max(proc_avail[p]) + exec(p);
-                if fin < best.0 {
-                    best = (fin, p);
-                }
-            }
-            best.1
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,7 +367,7 @@ mod tests {
     use crate::coordinator::partitioners::cholesky;
     use crate::coordinator::perfmodel::PerfCurve;
     use crate::coordinator::platform::MachineBuilder;
-    use crate::coordinator::policies::SchedConfig;
+    use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
 
     fn machine() -> (Machine, PerfDb) {
         let mut b = MachineBuilder::new("m");

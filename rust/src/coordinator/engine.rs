@@ -1,26 +1,37 @@
 //! The discrete-event schedule simulator.
 //!
 //! A list scheduler over the frontier DAG: tasks are released when all
-//! predecessors are scheduled, picked in FCFS or Priority-List order, and
-//! mapped to a processor by the configured heuristic. Data movement is
-//! simulated explicitly: reads that miss in the processor's memory space
-//! issue (pre)fetch transfers over the interconnect with per-link queuing,
-//! and writes update the coherence state per the caching policy (WB/WT/WA),
-//! possibly generating write-through/write-back traffic.
+//! predecessors are scheduled, ordered and mapped to processors by a
+//! [`SchedPolicy`] (the pluggable policy layer — see
+//! [`super::policy`]). Data movement is simulated explicitly: reads that
+//! miss in the processor's memory space issue (pre)fetch transfers over
+//! the interconnect with per-link queuing, and writes update the coherence
+//! state per the caching policy (WB/WT/WA), possibly generating
+//! write-through/write-back traffic.
+//!
+//! Entry points come in pairs: the legacy enum-configured ones
+//! ([`simulate`], [`simulate_flat`], [`simulate_mapped`]) construct the
+//! matching built-in policy from [`SimConfig`]'s shim fields, and the
+//! `_policy` variants take any `&mut dyn SchedPolicy`.
 
 use super::coherence::{CachePolicy, Coherence, SpaceId, Transfer};
 use super::ordering::critical_times;
 use super::perfmodel::PerfDb;
 use super::platform::{Machine, ProcId};
 use super::policies::{Ordering, ProcSelect, SchedConfig};
+use super::policy::{self, SchedContext, SchedPolicy};
+use super::task::{Task, TaskId};
 use super::taskdag::{FlatDag, TaskDag};
-use super::task::TaskId;
 use crate::util::rng::Rng;
 
 /// Simulation knobs beyond the platform itself.
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
+    /// Legacy ordering shim — used only to construct the matching built-in
+    /// policy when an enum-configured entry point is called. Prefer the
+    /// `_policy` entry points with a [`SchedPolicy`] value.
     pub ordering: Ordering,
+    /// Legacy selection shim (see `ordering`).
     pub select: ProcSelect,
     pub cache: CachePolicy,
     /// Bytes per matrix element (4 = f32, 8 = f64).
@@ -112,22 +123,50 @@ impl Schedule {
     }
 }
 
-/// Simulate scheduling `dag`'s frontier on `machine`.
+/// Simulate scheduling `dag`'s frontier on `machine` under the built-in
+/// policy named by `cfg`'s shim fields.
 pub fn simulate(dag: &TaskDag, machine: &Machine, db: &PerfDb, cfg: SimConfig) -> Schedule {
-    run(dag, machine, db, cfg, None, None)
+    let mut p = policy::policy_for(SchedConfig::new(cfg.ordering, cfg.select));
+    run(dag, machine, db, cfg, None, None, p.as_mut())
+}
+
+/// Simulate under an arbitrary scheduling policy.
+pub fn simulate_policy(
+    dag: &TaskDag,
+    machine: &Machine,
+    db: &PerfDb,
+    cfg: SimConfig,
+    policy: &mut dyn SchedPolicy,
+) -> Schedule {
+    run(dag, machine, db, cfg, None, None, policy)
 }
 
 /// Like [`simulate`], reusing an already-derived [`FlatDag`] (the solver
 /// needs the same frontier for candidate collection; deriving it twice per
 /// iteration was a measured hot spot — §Perf optimization 3).
 pub fn simulate_flat(dag: &TaskDag, flat: &FlatDag, machine: &Machine, db: &PerfDb, cfg: SimConfig) -> Schedule {
-    run(dag, machine, db, cfg, None, Some(flat))
+    let mut p = policy::policy_for(SchedConfig::new(cfg.ordering, cfg.select));
+    run(dag, machine, db, cfg, None, Some(flat), p.as_mut())
+}
+
+/// [`simulate_flat`] under an arbitrary scheduling policy.
+pub fn simulate_flat_policy(
+    dag: &TaskDag,
+    flat: &FlatDag,
+    machine: &Machine,
+    db: &PerfDb,
+    cfg: SimConfig,
+    policy: &mut dyn SchedPolicy,
+) -> Schedule {
+    run(dag, machine, db, cfg, None, Some(flat), policy)
 }
 
 /// Replay a fixed task→processor mapping (positions in frontier order) —
-/// the HESP-REPLICA mode used for framework validation (§3.1).
+/// the HESP-REPLICA mode used for framework validation (§3.1). The policy
+/// still orders the ready queue; selection is forced by `mapping`.
 pub fn simulate_mapped(dag: &TaskDag, machine: &Machine, db: &PerfDb, cfg: SimConfig, mapping: &[ProcId]) -> Schedule {
-    run(dag, machine, db, cfg, Some(mapping), None)
+    let mut p = policy::policy_for(SchedConfig::new(cfg.ordering, cfg.select));
+    run(dag, machine, db, cfg, Some(mapping), None, p.as_mut())
 }
 
 fn run(
@@ -137,6 +176,7 @@ fn run(
     cfg: SimConfig,
     forced: Option<&[ProcId]>,
     flat_in: Option<&FlatDag>,
+    policy: &mut dyn SchedPolicy,
 ) -> Schedule {
     let flat_owned;
     let flat: &FlatDag = match flat_in {
@@ -153,15 +193,17 @@ fn run(
     let mut rng = Rng::new(cfg.seed);
     let mut coh = Coherence::new(machine.spaces.len(), machine.main_space, cfg.cache, machine.capacities(), cfg.elem_bytes);
 
-    // priorities for PL ordering
-    let prio = match cfg.ordering {
-        Ordering::PriorityList => critical_times(dag, flat, machine, db),
-        Ordering::Fcfs => vec![0.0; n],
+    // backflow critical times, computed only for policies that order by
+    // them (the PL family); FCFS-like policies skip the O(V+E) pass
+    let prio = if policy.wants_critical_times() {
+        critical_times(dag, flat, machine, db)
+    } else {
+        vec![0.0; n]
     };
 
-    // max-heap: FCFS pushes key = -release (earliest release pops first),
-    // PL pushes key = critical time; ties break toward the smaller
-    // frontier position (program order).
+    // max-heap over policy-provided ordering keys (FCFS pushes -release so
+    // the earliest release pops first, PL pushes the critical time); ties
+    // break toward the smaller frontier position (program order).
     #[derive(PartialEq)]
     struct HeapItem {
         key: f64,
@@ -181,14 +223,27 @@ fn run(
 
     let mut indeg: Vec<usize> = flat.preds.iter().map(|p| p.len()).collect();
     let mut release = vec![0.0f64; n];
-    let mut ready: std::collections::BinaryHeap<HeapItem> = (0..n)
-        .filter(|&i| indeg[i] == 0)
-        .map(|i| HeapItem { key: if cfg.ordering == Ordering::Fcfs { 0.0 } else { prio[i] }, pos: i })
-        .collect();
 
     let mut proc_avail = vec![0.0f64; machine.n_procs()];
     let mut link_busy = vec![0.0f64; machine.links.len()];
     let mut done_at = vec![0.0f64; n];
+
+    let mut ready: std::collections::BinaryHeap<HeapItem> = std::collections::BinaryHeap::new();
+    for i in 0..n {
+        if indeg[i] == 0 {
+            let mut ctx = SchedContext {
+                machine,
+                db,
+                proc_avail: &proc_avail,
+                link_busy: &link_busy,
+                coh: &mut coh,
+                rng: &mut rng,
+                successors: &[],
+            };
+            let key = policy.order(&mut ctx, dag.task(flat.tasks[i]), 0.0, prio[i]);
+            ready.push(HeapItem { key, pos: i });
+        }
+    }
 
     let mut sched = Schedule {
         assignments: vec![
@@ -199,29 +254,6 @@ fn run(
         ..Default::default()
     };
 
-    // Estimate data-ready time + planned transfers for running `pos` on a
-    // processor in `space`, without mutating link or coherence state.
-    let estimate_data =
-        |coh: &mut Coherence, link_busy: &[f64], pos: usize, space: SpaceId, rel: f64| -> (f64, Vec<(usize, Transfer)>) {
-            let t = dag.task(flat.tasks[pos]);
-            let mut ready_t = rel;
-            let mut planned = Vec::new();
-            for r in t.reads.iter() {
-                let block = coh.register(*r);
-                for tr in coh.read_plan(block, space) {
-                    let mut at = rel;
-                    for lid in machine.route(tr.from, tr.to) {
-                        let l = &machine.links[lid];
-                        let s = at.max(link_busy[lid]);
-                        at = s + l.latency + tr.bytes as f64 / l.bandwidth;
-                    }
-                    ready_t = ready_t.max(at);
-                    planned.push((block, tr));
-                }
-            }
-            (ready_t, planned)
-        };
-
     let exec_time = |pos: usize, proc: ProcId| -> f64 {
         let t = dag.task(flat.tasks[pos]);
         db.time(machine.procs[proc].ptype, t.kind, t.char_edge(), t.flops)
@@ -230,65 +262,34 @@ fn run(
     while let Some(HeapItem { pos, .. }) = ready.pop() {
         let rel = release[pos];
 
-        // ---- choose a processor ----
+        // ---- choose a processor (policy dispatch) ----
         let proc: ProcId = if let Some(m) = forced {
             m[pos]
         } else {
-            match cfg.select {
-                ProcSelect::Random | ProcSelect::Fastest => {
-                    // choose among processors idle at the task's release
-                    // time (paper §2.1). When none is idle the task is
-                    // bound eagerly anyway — R-P queues on a uniformly
-                    // random processor and F-P on the one fastest for the
-                    // task, which is what produces the low processor loads
-                    // of the R-P/F-P rows in Table 1 (work piling up on
-                    // the fast processors while the rest drain).
-                    let eps = 1e-12;
-                    let idle: Vec<ProcId> =
-                        (0..machine.n_procs()).filter(|&p| proc_avail[p] <= rel + eps).collect();
-                    let cands: Vec<ProcId> =
-                        if idle.is_empty() { (0..machine.n_procs()).collect() } else { idle };
-                    match cfg.select {
-                        ProcSelect::Random => *rng.choose(&cands),
-                        _ => *cands
-                            .iter()
-                            .min_by(|&&a, &&b| exec_time(pos, a).total_cmp(&exec_time(pos, b)).then(a.cmp(&b)))
-                            .unwrap(),
-                    }
-                }
-                ProcSelect::EarliestIdle => (0..machine.n_procs())
-                    .min_by(|&a, &b| proc_avail[a].total_cmp(&proc_avail[b]).then(a.cmp(&b)))
-                    .unwrap(),
-                ProcSelect::EarliestFinish => {
-                    // data-ready time only depends on the processor's
-                    // memory space, and exec time only on its type —
-                    // estimate once per (space, type), not per processor
-                    // (28 procs -> 4 spaces x 3 types on BUJARUELO).
-                    let mut space_ready: Vec<f64> = vec![f64::NAN; machine.spaces.len()];
-                    let mut type_time: Vec<f64> = vec![f64::NAN; machine.proc_types.len()];
-                    let mut best = (f64::INFINITY, 0usize);
-                    for p in 0..machine.n_procs() {
-                        let sp = machine.procs[p].space;
-                        if space_ready[sp].is_nan() {
-                            space_ready[sp] = estimate_data(&mut coh, &link_busy, pos, sp, rel).0;
-                        }
-                        let ty = machine.procs[p].ptype;
-                        if type_time[ty].is_nan() {
-                            type_time[ty] = exec_time(pos, p);
-                        }
-                        let fin = space_ready[sp].max(proc_avail[p]) + type_time[ty];
-                        if fin < best.0 {
-                            best = (fin, p);
-                        }
-                    }
-                    best.1
-                }
-            }
+            // successor tasks materialize only for lookahead-style
+            // policies — dispatch is a hot path
+            let succ_tasks: Vec<&Task> = if policy.wants_successors() {
+                flat.succs[pos].iter().map(|&s| dag.task(flat.tasks[s])).collect()
+            } else {
+                Vec::new()
+            };
+            let mut ctx = SchedContext {
+                machine,
+                db,
+                proc_avail: &proc_avail,
+                link_busy: &link_busy,
+                coh: &mut coh,
+                rng: &mut rng,
+                successors: &succ_tasks,
+            };
+            policy.select(&mut ctx, dag.task(flat.tasks[pos]), rel)
         };
 
         // ---- commit transfers + execution ----
+        // plan through the same shared model the policy estimates used
         let space = machine.procs[proc].space;
-        let (_, planned) = estimate_data(&mut coh, &link_busy, pos, space, rel);
+        let (_, planned) =
+            policy::plan_reads(machine, &link_busy, &mut coh, dag.task(flat.tasks[pos]), space, rel);
         let mut data_ready = rel;
         let mut fetched_parents: Vec<usize> = Vec::new();
         for (parent, tr) in planned {
@@ -340,10 +341,16 @@ fn run(
             indeg[s] -= 1;
             release[s] = release[s].max(end);
             if indeg[s] == 0 {
-                let key = match cfg.ordering {
-                    Ordering::Fcfs => -release[s],
-                    Ordering::PriorityList => prio[s],
+                let mut ctx = SchedContext {
+                    machine,
+                    db,
+                    proc_avail: &proc_avail,
+                    link_busy: &link_busy,
+                    coh: &mut coh,
+                    rng: &mut rng,
+                    successors: &[],
                 };
+                let key = policy.order(&mut ctx, dag.task(flat.tasks[s]), release[s], prio[s]);
                 ready.push(HeapItem { key, pos: s });
             }
         }

@@ -6,8 +6,13 @@
 //!   RaW/WaR/WaW dependences.
 //! * [`platform`] / [`perfmodel`]: heterogeneous machine descriptions and
 //!   per-(processor, task, size) performance + transfer models.
-//! * [`engine`] / [`policies`] / [`ordering`]: the discrete-event schedule
-//!   simulator with R-P/F-P/EIT-P/EFT-P selection and FCFS/PL ordering.
+//! * [`engine`] / [`ordering`]: the discrete-event schedule simulator.
+//! * [`policy`]: the pluggable scheduling-policy layer — the
+//!   [`policy::SchedPolicy`] trait, the [`policy::SchedContext`] decision-time
+//!   view, and the string-keyed [`policy::PolicyRegistry`] (Table-1 rows
+//!   `fcfs/r-p` ... `pl/eft-p` plus `pl/affinity` and `pl/lookahead`).
+//! * [`policies`]: the legacy `Ordering`/`ProcSelect` enums, kept as thin
+//!   shims that map onto built-in `policy` impls.
 //! * [`partitioners`]: blocked algorithms emitting sub-task clusters.
 //! * [`solver`]: the iterative scheduler-partitioner (All/CP/Shallow x
 //!   Hard/Soft).
@@ -28,6 +33,7 @@ pub mod partitioners;
 pub mod perfmodel;
 pub mod platform;
 pub mod policies;
+pub mod policy;
 pub mod region;
 pub mod solver;
 pub mod task;

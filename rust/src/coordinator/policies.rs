@@ -1,7 +1,16 @@
-//! Scheduling policy knobs (paper §2.1, "Task and data scheduling
+//! Legacy scheduling-policy knobs (paper §2.1, "Task and data scheduling
 //! heuristics"): processor-selection heuristics and task-ordering choices.
 //! `PriorityList` + `EarliestFinish` is practically identical to HEFT
 //! (Topcuoglu et al., 2002).
+//!
+//! **Deprecated shim.** These closed enums predate the pluggable policy
+//! layer; they are kept so `SimConfig::new(SchedConfig::new(..))` call
+//! sites keep compiling, and they now only *name* built-in trait impls:
+//! every execution path dispatches through
+//! [`super::policy::SchedPolicy`]. New code should construct policies via
+//! [`super::policy::PolicyRegistry`] (e.g. `registry.get("pl/eft-p")`);
+//! new heuristics should implement the trait rather than extend these
+//! enums.
 
 /// Processor-selection heuristics.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -1,0 +1,79 @@
+//! The eight Table-1 policies as one parametric [`SchedPolicy`] impl.
+//!
+//! This is the only place in the crate that still branches on the legacy
+//! [`Ordering`]/[`ProcSelect`] enums — the engine, solver and constructive
+//! paths all dispatch through the trait. Semantics are bit-identical to
+//! the pre-trait enum dispatch (same tie-breaks, same memoization, same
+//! PRNG draw sequence), which the determinism tests in
+//! `rust/tests/policy_api.rs` pin down.
+
+use crate::coordinator::platform::ProcId;
+use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use crate::coordinator::task::Task;
+
+use super::{SchedContext, SchedPolicy};
+
+/// A Table-1 row: `ordering` picks the ready-queue key, `select` the
+/// processor heuristic (paper §2.1).
+pub struct BuiltinPolicy {
+    cfg: SchedConfig,
+    name: String,
+}
+
+impl BuiltinPolicy {
+    pub fn new(cfg: SchedConfig) -> BuiltinPolicy {
+        BuiltinPolicy { name: cfg.name().to_ascii_lowercase(), cfg }
+    }
+
+    pub fn config(&self) -> SchedConfig {
+        self.cfg
+    }
+}
+
+impl SchedPolicy for BuiltinPolicy {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn wants_critical_times(&self) -> bool {
+        self.cfg.ordering == Ordering::PriorityList
+    }
+
+    fn order(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, release: f64, critical_time: f64) -> f64 {
+        match self.cfg.ordering {
+            // earliest release pops first (max-heap → negate)
+            Ordering::Fcfs => -release,
+            // decreasing critical time (backflow upward rank)
+            Ordering::PriorityList => critical_time,
+        }
+    }
+
+    fn select(&mut self, ctx: &mut SchedContext<'_>, task: &Task, release: f64) -> ProcId {
+        match self.cfg.select {
+            ProcSelect::Random | ProcSelect::Fastest => {
+                // choose among processors idle at the task's release time
+                // (paper §2.1). When none is idle the task is bound eagerly
+                // anyway — R-P queues on a uniformly random processor and
+                // F-P on the one fastest for the task, which is what
+                // produces the low processor loads of the R-P/F-P rows in
+                // Table 1 (work piling up on the fast processors while the
+                // rest drain).
+                let idle = ctx.idle_procs(release);
+                let cands: Vec<ProcId> = if idle.is_empty() { (0..ctx.n_procs()).collect() } else { idle };
+                match self.cfg.select {
+                    ProcSelect::Random => *ctx.rng.choose(&cands),
+                    _ => *cands
+                        .iter()
+                        .min_by(|&&a, &&b| {
+                            ctx.exec_time(task, a).total_cmp(&ctx.exec_time(task, b)).then(a.cmp(&b))
+                        })
+                        .unwrap(),
+                }
+            }
+            ProcSelect::EarliestIdle => (0..ctx.n_procs())
+                .min_by(|&a, &b| ctx.proc_avail[a].total_cmp(&ctx.proc_avail[b]).then(a.cmp(&b)))
+                .unwrap(),
+            ProcSelect::EarliestFinish => ctx.earliest_finish(task, release).1,
+        }
+    }
+}

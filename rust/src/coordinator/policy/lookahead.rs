@@ -1,0 +1,75 @@
+//! One-step lookahead EFT (`pl/lookahead`).
+//!
+//! Plain EFT-P is myopic: it minimizes the popped task's own finish time,
+//! even when a marginally later finish on a faster processor would leave
+//! the task's critical successor far better placed. This policy extends
+//! the EFT estimate one dependence edge forward — the second policy the
+//! old enum API could not express, because selection needs visibility into
+//! the task's successor set ([`super::SchedContext::successors`]).
+//!
+//! Selection key, minimized: `finish(task, p) + exec_time(heaviest
+//! immediate successor, p)` — the finish of the chain's next link if it
+//! stayed on the same processor. Tasks without successors degrade to plain
+//! EFT-P exactly.
+
+use crate::coordinator::platform::ProcId;
+use crate::coordinator::task::Task;
+
+use super::{SchedContext, SchedPolicy};
+
+/// Priority-list ordering + successor-aware EFT selection.
+#[derive(Default)]
+pub struct LookaheadEftPolicy;
+
+impl LookaheadEftPolicy {
+    pub fn new() -> LookaheadEftPolicy {
+        LookaheadEftPolicy
+    }
+}
+
+impl SchedPolicy for LookaheadEftPolicy {
+    fn name(&self) -> &str {
+        "pl/lookahead"
+    }
+
+    fn wants_critical_times(&self) -> bool {
+        true
+    }
+
+    fn wants_successors(&self) -> bool {
+        true
+    }
+
+    fn order(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, _release: f64, critical_time: f64) -> f64 {
+        critical_time
+    }
+
+    fn select(&mut self, ctx: &mut SchedContext<'_>, task: &Task, release: f64) -> ProcId {
+        // the heaviest immediate successor carries the chain forward;
+        // deterministic tie-break by task id
+        let heavy: Option<&Task> = ctx
+            .successors
+            .iter()
+            .copied()
+            .max_by(|a, b| a.flops.total_cmp(&b.flops).then(b.id.cmp(&a.id)));
+        let mut la_time: Vec<f64> = vec![f64::NAN; ctx.machine.proc_types.len()];
+        let mut best = (f64::INFINITY, 0usize);
+        for (p, fin, _) in ctx.placement_estimates(task, release) {
+            let la = match heavy {
+                Some(s) => {
+                    let ty = ctx.machine.procs[p].ptype;
+                    if la_time[ty].is_nan() {
+                        la_time[ty] = ctx.exec_time(s, p);
+                    }
+                    la_time[ty]
+                }
+                None => 0.0,
+            };
+            let score = fin + la;
+            if score < best.0 {
+                best = (score, p);
+            }
+        }
+        best.1
+    }
+}

@@ -1,0 +1,294 @@
+//! The pluggable scheduling-policy layer.
+//!
+//! HeSP's stated goal (§5) is that "insights extracted from the framework
+//! can be further applied to actual runtime task schedulers" — which
+//! requires the framework to accept *user-defined* policies, not only the
+//! four baked-in heuristics of Table 1. This module turns scheduling into
+//! an open trait API (the dslab-dag `Scheduler`-trait idea, adapted to
+//! HeSP's eagerly-binding list scheduler):
+//!
+//! * [`SchedPolicy`] — the trait every policy implements: [`SchedPolicy::order`]
+//!   produces the ready-queue priority key of a task, [`SchedPolicy::select`]
+//!   maps a popped task to a processor.
+//! * [`SchedContext`] — the view of simulator state a policy may consult at
+//!   decision time: per-processor idle times, link queues, the coherence /
+//!   data-placement state, the performance model, and the popped task's
+//!   successor tasks (for lookahead).
+//! * [`PolicyRegistry`] — string-keyed construction (`"pl/eft-p"`,
+//!   `"pl/affinity"`, ...) so configs, the CLI and benches build policies
+//!   by name; user policies register under new names.
+//!
+//! Built-ins: the eight Table-1 rows ([`BuiltinPolicy`], the enum shim in
+//! [`super::policies`] maps onto them) plus two policies the old
+//! enum-dispatched API could not express — [`AffinityPolicy`]
+//! (data-placement-aware, XKaapi-style; Bleuse et al., arXiv:1402.6601)
+//! and [`LookaheadEftPolicy`] (EFT with one-step successor lookahead).
+//!
+//! The engine, the iterative solver and the constructive scheduler all
+//! dispatch through `&mut dyn SchedPolicy`; no execution path matches on
+//! the legacy enums anymore.
+
+mod affinity;
+mod builtin;
+mod lookahead;
+mod registry;
+
+pub use affinity::AffinityPolicy;
+pub use builtin::BuiltinPolicy;
+pub use lookahead::LookaheadEftPolicy;
+pub use registry::{policy_by_name, PolicyRegistry};
+
+use super::coherence::{Coherence, SpaceId, Transfer};
+use super::datadag::BlockId;
+use super::perfmodel::PerfDb;
+use super::platform::{Machine, ProcId};
+use super::policies::SchedConfig;
+use super::task::Task;
+use crate::util::rng::Rng;
+
+/// The shared transfer-cost model: earliest time `task`'s inputs can be
+/// resident in `space` starting transfers at `release` (given current link
+/// queues), plus the planned `(parent block, transfer)` pairs. The engine's
+/// commit path and every [`SchedContext`] estimate go through this one
+/// function so the estimate can never drift from what gets simulated.
+pub fn plan_reads(
+    machine: &Machine,
+    link_busy: &[f64],
+    coh: &mut Coherence,
+    task: &Task,
+    space: SpaceId,
+    release: f64,
+) -> (f64, Vec<(BlockId, Transfer)>) {
+    let mut ready = release;
+    let mut planned = Vec::new();
+    for r in task.reads.iter() {
+        let block = coh.register(*r);
+        for tr in coh.read_plan(block, space) {
+            let mut at = release;
+            for lid in machine.route(tr.from, tr.to) {
+                let l = &machine.links[lid];
+                let s = at.max(link_busy[lid]);
+                at = s + l.latency + tr.bytes as f64 / l.bandwidth;
+            }
+            ready = ready.max(at);
+            planned.push((block, tr));
+        }
+    }
+    (ready, planned)
+}
+
+/// Everything the simulator knows at a scheduling decision point.
+///
+/// Borrowed views of live engine state: a context is constructed per call
+/// and must not be stored. `coh` and `rng` are mutable because estimating
+/// data-ready times registers read regions in the data DAG, and stochastic
+/// policies draw from the simulation's seeded generator (which keeps runs
+/// reproducible per seed).
+pub struct SchedContext<'a> {
+    pub machine: &'a Machine,
+    pub db: &'a PerfDb,
+    /// Per-processor earliest-idle times (seconds).
+    pub proc_avail: &'a [f64],
+    /// Per-link queue tails (seconds): when each link drains.
+    pub link_busy: &'a [f64],
+    /// Coherence / data-placement state (which space holds which block).
+    pub coh: &'a mut Coherence,
+    /// The simulation's seeded PRNG.
+    pub rng: &'a mut Rng,
+    /// The popped task's immediate successor tasks. Populated only inside
+    /// [`SchedPolicy::select`] and only when the policy opts in via
+    /// [`SchedPolicy::wants_successors`]; empty otherwise.
+    pub successors: &'a [&'a Task],
+}
+
+impl SchedContext<'_> {
+    pub fn n_procs(&self) -> usize {
+        self.machine.n_procs()
+    }
+
+    /// Predicted execution time of `task` on processor `proc`.
+    pub fn exec_time(&self, task: &Task, proc: ProcId) -> f64 {
+        self.db.time(self.machine.procs[proc].ptype, task.kind, task.char_edge(), task.flops)
+    }
+
+    /// Processors idle at time `release` (paper §2.1's "idle at release").
+    pub fn idle_procs(&self, release: f64) -> Vec<ProcId> {
+        let eps = 1e-12;
+        (0..self.n_procs()).filter(|&p| self.proc_avail[p] <= release + eps).collect()
+    }
+
+    /// Earliest time `task`'s inputs can be resident in `space`, starting
+    /// transfers at `release`, accounting for current link queues (without
+    /// committing any transfer).
+    pub fn data_ready_at(&mut self, task: &Task, space: SpaceId, release: f64) -> f64 {
+        plan_reads(self.machine, self.link_busy, self.coh, task, space, release).0
+    }
+
+    /// Bytes that must move over the interconnect for `task`'s reads to be
+    /// resident in `space` (0 = full affinity: every input already there).
+    pub fn pending_read_bytes(&mut self, task: &Task, space: SpaceId) -> u64 {
+        plan_reads(self.machine, self.link_busy, self.coh, task, space, 0.0)
+            .1
+            .iter()
+            .map(|(_, tr)| tr.bytes)
+            .sum()
+    }
+
+    /// Per-processor `(proc, finish, pending input bytes)` estimates —
+    /// finish is `max(data ready, idle) + exec` — from ONE shared
+    /// [`plan_reads`] walk per memory space, memoized per space and per
+    /// processor type (28 procs → 4 spaces x 3 types on BUJARUELO). The
+    /// shared scan behind every placement-scoring policy.
+    pub fn placement_estimates(&mut self, task: &Task, release: f64) -> Vec<(ProcId, f64, u64)> {
+        let mut per_space: Vec<Option<(f64, u64)>> = vec![None; self.machine.spaces.len()];
+        let mut type_time: Vec<f64> = vec![f64::NAN; self.machine.proc_types.len()];
+        let mut out = Vec::with_capacity(self.n_procs());
+        for p in 0..self.n_procs() {
+            let sp = self.machine.procs[p].space;
+            let (ready, bytes) = match per_space[sp] {
+                Some(v) => v,
+                None => {
+                    let (r, planned) =
+                        plan_reads(self.machine, self.link_busy, self.coh, task, sp, release);
+                    let v = (r, planned.iter().map(|(_, tr)| tr.bytes).sum::<u64>());
+                    per_space[sp] = Some(v);
+                    v
+                }
+            };
+            let ty = self.machine.procs[p].ptype;
+            if type_time[ty].is_nan() {
+                type_time[ty] = self.exec_time(task, p);
+            }
+            out.push((p, ready.max(self.proc_avail[p]) + type_time[ty], bytes));
+        }
+        out
+    }
+
+    /// The EFT-P core: the processor finishing `task` first (transfer- and
+    /// queue-aware). Ties break toward the lower processor id.
+    pub fn earliest_finish(&mut self, task: &Task, release: f64) -> (f64, ProcId) {
+        let mut best = (f64::INFINITY, 0usize);
+        for (p, fin, _) in self.placement_estimates(task, release) {
+            if fin < best.0 {
+                best = (fin, p);
+            }
+        }
+        best
+    }
+}
+
+/// A scheduling policy: task ordering + processor selection.
+///
+/// Implementations may keep internal state (`&mut self`); the simulator
+/// constructs (or receives) one policy value per run. Determinism contract:
+/// for a fixed `SimConfig::seed`, a policy must make identical decisions
+/// across runs — draw randomness only from [`SchedContext::rng`].
+pub trait SchedPolicy {
+    /// Registry-canonical name, e.g. `"pl/eft-p"` (lowercase).
+    fn name(&self) -> &str;
+
+    /// Whether [`SchedPolicy::order`] consumes backflow critical times
+    /// (upward ranks). The engine computes them only when asked — FCFS-like
+    /// orderings skip the O(V+E) pass.
+    fn wants_critical_times(&self) -> bool {
+        false
+    }
+
+    /// Whether [`SchedPolicy::select`] reads [`SchedContext::successors`].
+    /// The engine materializes the successor-task list only when asked —
+    /// dispatch is a measured hot path, and most policies never look ahead.
+    fn wants_successors(&self) -> bool {
+        false
+    }
+
+    /// Priority key of a task entering the ready queue. The engine pops
+    /// the *largest* key first, ties broken toward program order. FCFS is
+    /// `-release`; priority-list is the critical time.
+    fn order(&mut self, ctx: &mut SchedContext<'_>, task: &Task, release: f64, critical_time: f64) -> f64;
+
+    /// Processor for a popped ready task.
+    fn select(&mut self, ctx: &mut SchedContext<'_>, task: &Task, release: f64) -> ProcId;
+}
+
+/// The enum-shim constructor: a boxed built-in policy for a legacy
+/// [`SchedConfig`] pair. `SimConfig::new(...)` paths funnel through this,
+/// which is what keeps the old API compiling unchanged.
+pub fn policy_for(cfg: SchedConfig) -> Box<dyn SchedPolicy> {
+    Box::new(BuiltinPolicy::new(cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::coherence::CachePolicy;
+    use crate::coordinator::perfmodel::PerfCurve;
+    use crate::coordinator::platform::MachineBuilder;
+    use crate::coordinator::policies::{Ordering, ProcSelect};
+    use crate::coordinator::region::Region;
+    use crate::coordinator::task::{TaskKind, TaskSpec};
+    use crate::coordinator::taskdag::TaskDag;
+
+    fn gpu_machine() -> (Machine, PerfDb) {
+        let mut b = MachineBuilder::new("g");
+        let h = b.space("host", u64::MAX);
+        let g = b.space("gpu", u64::MAX);
+        b.main(h);
+        b.connect(h, g, 1e-5, 1e9);
+        let cpu = b.proc_type("cpu", 1.0, 0.1);
+        let gpu = b.proc_type("gpu", 1.0, 0.1);
+        b.processors(1, "c", cpu, h);
+        b.processors(1, "g", gpu, g);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 1.0 });
+        db.set_fallback(1, PerfCurve::Const { gflops: 10.0 });
+        (m, db)
+    }
+
+    fn one_task() -> TaskDag {
+        let r = Region::new(0, 0, 100, 0, 100);
+        TaskDag::new(TaskSpec::new(TaskKind::Gemm, vec![r], vec![r]))
+    }
+
+    #[test]
+    fn context_estimates_match_machine_model() {
+        let (m, db) = gpu_machine();
+        let dag = one_task();
+        let task = dag.task(dag.root).clone();
+        let mut coh = Coherence::new(m.spaces.len(), m.main_space, CachePolicy::WriteBack, m.capacities(), 4);
+        let mut rng = Rng::new(0);
+        let proc_avail = vec![0.0; m.n_procs()];
+        let link_busy = vec![0.0; m.links.len()];
+        let mut ctx = SchedContext {
+            machine: &m,
+            db: &db,
+            proc_avail: &proc_avail,
+            link_busy: &link_busy,
+            coh: &mut coh,
+            rng: &mut rng,
+            successors: &[],
+        };
+        // input starts in main memory: host is data-ready instantly, the
+        // GPU space pays one 100x100xf32 transfer
+        assert_eq!(ctx.pending_read_bytes(&task, 0), 0);
+        assert_eq!(ctx.pending_read_bytes(&task, 1), 100 * 100 * 4);
+        assert!((ctx.data_ready_at(&task, 0, 0.0) - 0.0).abs() < 1e-15);
+        let expect = 1e-5 + (100.0 * 100.0 * 4.0) / 1e9;
+        assert!((ctx.data_ready_at(&task, 1, 0.0) - expect).abs() < 1e-12);
+        // EFT: GPU still wins (10x faster, transfer is cheap)
+        let (fin, p) = ctx.earliest_finish(&task, 0.0);
+        assert_eq!(p, 1);
+        assert!((fin - (expect + 2.0 * 100f64.powi(3) / 10e9)).abs() < 1e-12);
+        assert_eq!(ctx.idle_procs(0.0), vec![0, 1]);
+    }
+
+    #[test]
+    fn shim_produces_named_builtin() {
+        let p = policy_for(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish));
+        assert_eq!(p.name(), "pl/eft-p");
+        assert!(p.wants_critical_times());
+        let q = policy_for(SchedConfig::new(Ordering::Fcfs, ProcSelect::Random));
+        assert_eq!(q.name(), "fcfs/r-p");
+        assert!(!q.wants_critical_times());
+    }
+}

@@ -1,0 +1,161 @@
+//! String-keyed policy construction.
+//!
+//! Configs (`policy = "pl/eft-p"` in a platform TOML), the CLI
+//! (`--policy pl/affinity`) and the benches all build policies by name, so
+//! adding a policy means registering one builder — no call-site edits.
+
+use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+
+use super::{AffinityPolicy, BuiltinPolicy, LookaheadEftPolicy, SchedPolicy};
+
+type Builder = Box<dyn Fn() -> Box<dyn SchedPolicy> + Send + Sync>;
+
+/// Registry mapping canonical lowercase names to policy builders,
+/// preserving registration order for listings.
+pub struct PolicyRegistry {
+    entries: Vec<(String, Builder)>,
+}
+
+impl Default for PolicyRegistry {
+    fn default() -> Self {
+        PolicyRegistry::standard()
+    }
+}
+
+impl PolicyRegistry {
+    pub fn empty() -> PolicyRegistry {
+        PolicyRegistry { entries: Vec::new() }
+    }
+
+    /// The built-in set: the eight Table-1 rows (`fcfs/r-p` ... `pl/eft-p`)
+    /// plus `pl/affinity` and `pl/lookahead`.
+    pub fn standard() -> PolicyRegistry {
+        let mut reg = PolicyRegistry::empty();
+        for row in SchedConfig::table1_rows() {
+            reg.register(&row.name().to_ascii_lowercase(), move || {
+                Box::new(BuiltinPolicy::new(row)) as Box<dyn SchedPolicy>
+            });
+        }
+        reg.register("pl/affinity", || Box::new(AffinityPolicy::new()) as Box<dyn SchedPolicy>);
+        reg.register("pl/lookahead", || Box::new(LookaheadEftPolicy::new()) as Box<dyn SchedPolicy>);
+        reg
+    }
+
+    /// Register (or replace) a builder under `name` (stored lowercase).
+    pub fn register<F>(&mut self, name: &str, builder: F)
+    where
+        F: Fn() -> Box<dyn SchedPolicy> + Send + Sync + 'static,
+    {
+        let name = name.to_ascii_lowercase();
+        self.entries.retain(|(n, _)| *n != name);
+        self.entries.push((name, Box::new(builder)));
+    }
+
+    /// Construct a fresh policy by name (case-insensitive). Besides exact
+    /// registered names, accepts the legacy aliases the CLI always took:
+    /// `"<ordering>/<select>"` with the enum spellings (`"pl/eft"`,
+    /// `"fcfs/random"`, ...) and bare suffixes resolved as `"pl/<name>"`
+    /// (`"affinity"`, `"eft-p"`, ...).
+    pub fn get(&self, name: &str) -> Option<Box<dyn SchedPolicy>> {
+        let key = name.to_ascii_lowercase();
+        if let Some((_, b)) = self.entries.iter().find(|(n, _)| *n == key) {
+            return Some(b());
+        }
+        // bare name → priority-list variant ("affinity" == "pl/affinity")
+        if !key.contains('/') {
+            let pl = format!("pl/{key}");
+            if let Some((_, b)) = self.entries.iter().find(|(n, _)| *n == pl) {
+                return Some(b());
+            }
+        }
+        // legacy enum spellings ("pl/eft", "fcfs/random", ...) resolve to
+        // the canonical Table-1 name and re-enter THIS registry's entries,
+        // so overrides and removals are honored (an alias must construct
+        // the same policy as its canonical name)
+        if let Some((ord, sel)) = key.split_once('/') {
+            if let (Some(o), Some(s)) = (Ordering::from_name(ord), ProcSelect::from_name(sel)) {
+                let canonical = SchedConfig::new(o, s).name().to_ascii_lowercase();
+                if canonical != key {
+                    if let Some((_, b)) = self.entries.iter().find(|(n, _)| *n == canonical) {
+                        return Some(b());
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Registered canonical names, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Construct a policy from the standard registry — the one-liner the CLI
+/// and configs use.
+pub fn policy_by_name(name: &str) -> Option<Box<dyn SchedPolicy>> {
+    PolicyRegistry::standard().get(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_has_table1_plus_two() {
+        let reg = PolicyRegistry::standard();
+        assert_eq!(reg.len(), 10);
+        let names = reg.names();
+        for expect in ["fcfs/r-p", "pl/r-p", "fcfs/eft-p", "pl/eft-p", "pl/affinity", "pl/lookahead"] {
+            assert!(names.contains(&expect), "{expect} missing from {names:?}");
+        }
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive_with_aliases() {
+        let reg = PolicyRegistry::standard();
+        assert_eq!(reg.get("PL/EFT-P").unwrap().name(), "pl/eft-p");
+        assert_eq!(reg.get("pl/eft").unwrap().name(), "pl/eft-p");
+        assert_eq!(reg.get("fcfs/random").unwrap().name(), "fcfs/r-p");
+        assert_eq!(reg.get("affinity").unwrap().name(), "pl/affinity");
+        assert_eq!(reg.get("lookahead").unwrap().name(), "pl/lookahead");
+        assert!(reg.get("pl/zzz").is_none());
+        assert!(reg.get("zzz").is_none());
+    }
+
+    #[test]
+    fn aliases_resolve_through_this_registry() {
+        // an empty registry resolves nothing, aliases included
+        assert!(PolicyRegistry::empty().get("fcfs/random").is_none());
+        assert!(PolicyRegistry::empty().get("eft-p").is_none());
+        // an alias must construct whatever its canonical name constructs
+        let mut reg = PolicyRegistry::standard();
+        reg.register("pl/eft-p", || Box::new(AffinityPolicy::new()) as Box<dyn SchedPolicy>);
+        assert_eq!(reg.get("pl/eft").unwrap().name(), "pl/affinity", "alias follows the override");
+    }
+
+    #[test]
+    fn user_registration_and_replacement() {
+        use crate::coordinator::policies::{Ordering, ProcSelect};
+        let mut reg = PolicyRegistry::empty();
+        assert!(reg.is_empty());
+        reg.register("mine", || {
+            Box::new(BuiltinPolicy::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestIdle)))
+                as Box<dyn SchedPolicy>
+        });
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get("MINE").is_some());
+        // replacement keeps a single entry
+        reg.register("mine", || Box::new(AffinityPolicy::new()) as Box<dyn SchedPolicy>);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get("mine").unwrap().name(), "pl/affinity");
+    }
+}

@@ -18,11 +18,13 @@
 //! walk the search space even through locally-worse states (Soft mode).
 
 use super::energy::Objective;
-use super::engine::{simulate, simulate_flat, Schedule, SimConfig};
+use super::engine::{simulate_flat_policy, simulate_policy, Schedule, SimConfig};
 use super::ordering::{critical_path, critical_times};
 use super::partitioners::{snap_sub_edge, PartitionerSet};
 use super::perfmodel::PerfDb;
 use super::platform::Machine;
+use super::policies::SchedConfig;
+use super::policy::{self, SchedPolicy};
 use super::task::TaskId;
 use super::taskdag::TaskDag;
 use crate::util::rng::Rng;
@@ -139,13 +141,28 @@ pub struct SolveResult {
     pub history: Vec<IterLog>,
 }
 
-/// Run the iterative scheduler-partitioner starting from `dag`.
+/// Run the iterative scheduler-partitioner starting from `dag`, under the
+/// built-in policy named by `cfg.sim`'s shim fields.
 pub fn solve(
+    dag: TaskDag,
+    machine: &Machine,
+    db: &PerfDb,
+    parts: &PartitionerSet,
+    cfg: SolverConfig,
+) -> SolveResult {
+    let mut p = policy::policy_for(SchedConfig::new(cfg.sim.ordering, cfg.sim.select));
+    solve_with(dag, machine, db, parts, cfg, p.as_mut())
+}
+
+/// [`solve`] under an arbitrary scheduling policy: every schedule stage of
+/// the iteration loop dispatches through `policy`.
+pub fn solve_with(
     mut dag: TaskDag,
     machine: &Machine,
     db: &PerfDb,
     parts: &PartitionerSet,
     cfg: SolverConfig,
+    policy: &mut dyn SchedPolicy,
 ) -> SolveResult {
     let mut rng = Rng::new(cfg.seed);
     let mut history = Vec::new();
@@ -153,7 +170,7 @@ pub fn solve(
 
     for iter in 0..cfg.iters.max(1) {
         let flat = dag.flat_dag();
-        let sched = simulate_flat(&dag, &flat, machine, db, cfg.sim);
+        let sched = simulate_flat_policy(&dag, &flat, machine, db, cfg.sim, policy);
         let cost = cfg.objective.cost(&sched, machine);
         if best.as_ref().map(|b| cost < b.0).unwrap_or(true) {
             best = Some((cost, sched.clone(), dag.clone(), iter));
@@ -354,13 +371,29 @@ fn collect_candidates(
 
 /// Simulate the uniform (homogeneous) tilings of an n x n Cholesky root
 /// for each tile edge — the static baseline of Fig. 5 (right) and of the
-/// "Best Homogeneous" halves of Table 1.
+/// "Best Homogeneous" halves of Table 1 — under the built-in policy named
+/// by `sim`'s shim fields.
 pub fn homogeneous_sweep(
     n: u32,
     tiles: &[u32],
     machine: &Machine,
     db: &PerfDb,
     sim: SimConfig,
+) -> Vec<(u32, TaskDag, Schedule)> {
+    let mut p = policy::policy_for(SchedConfig::new(sim.ordering, sim.select));
+    homogeneous_sweep_with(n, tiles, machine, db, sim, p.as_mut())
+}
+
+/// [`homogeneous_sweep`] under an arbitrary scheduling policy (reused
+/// across the tile sizes; built-ins are stateless, custom policies should
+/// key any internal state per run off the simulation seed).
+pub fn homogeneous_sweep_with(
+    n: u32,
+    tiles: &[u32],
+    machine: &Machine,
+    db: &PerfDb,
+    sim: SimConfig,
+    policy: &mut dyn SchedPolicy,
 ) -> Vec<(u32, TaskDag, Schedule)> {
     use super::partitioners::cholesky;
     let mut out = Vec::new();
@@ -370,7 +403,7 @@ pub fn homogeneous_sweep(
         }
         let mut dag = cholesky::root(n);
         cholesky::partition_uniform(&mut dag, b);
-        let sched = simulate(&dag, machine, db, sim);
+        let sched = simulate_policy(&dag, machine, db, sim, policy);
         out.push((b, dag, sched));
     }
     out
@@ -385,7 +418,21 @@ pub fn best_homogeneous(
     sim: SimConfig,
     objective: Objective,
 ) -> Option<(u32, TaskDag, Schedule)> {
-    homogeneous_sweep(n, tiles, machine, db, sim)
+    let mut p = policy::policy_for(SchedConfig::new(sim.ordering, sim.select));
+    best_homogeneous_with(n, tiles, machine, db, sim, objective, p.as_mut())
+}
+
+/// [`best_homogeneous`] under an arbitrary scheduling policy.
+pub fn best_homogeneous_with(
+    n: u32,
+    tiles: &[u32],
+    machine: &Machine,
+    db: &PerfDb,
+    sim: SimConfig,
+    objective: Objective,
+    policy: &mut dyn SchedPolicy,
+) -> Option<(u32, TaskDag, Schedule)> {
+    homogeneous_sweep_with(n, tiles, machine, db, sim, policy)
         .into_iter()
         .min_by(|a, b| objective.cost(&a.2, machine).total_cmp(&objective.cost(&b.2, machine)))
 }
@@ -393,6 +440,7 @@ pub fn best_homogeneous(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::simulate;
     use crate::coordinator::partitioners::cholesky;
     use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
     use crate::coordinator::platform::{Machine, MachineBuilder};

@@ -10,19 +10,29 @@
 //! parallelism as the platform can absorb at each execution phase.
 //!
 //! The crate is organized as the three-layer architecture described in
-//! `DESIGN.md`:
+//! `DESIGN.md` (repository root):
 //!
 //! * [`coordinator`] — the simulation framework itself (task DAG, data DAG
-//!   + coherence, scheduling heuristics, iterative scheduler-partitioner,
-//!   metrics, traces, energy).
+//!   + coherence, the pluggable scheduling-policy layer, iterative
+//!   scheduler-partitioner, metrics, traces, energy).
 //! * [`runtime`] — the XLA/PJRT runtime that loads AOT-compiled JAX/Pallas
 //!   tile kernels (`artifacts/*.hlo.txt`) and executes scheduled DAGs for
 //!   real, providing the validation substrate of §3.1.
-//! * [`config`] — TOML platform/experiment descriptions (`configs/`).
+//! * [`config`] — TOML platform/experiment descriptions (`configs/`),
+//!   including the optional `policy = "..."` default-policy key.
 //! * [`util`] — offline-friendly substrates (PRNG, JSON, TOML, CLI).
 //! * [`bench`] — a small measurement harness used by `rust/benches/`.
 //! * [`proptest`] — a seeded property-testing helper used by the test
 //!   suite.
+//!
+//! Scheduling is an open API: implement
+//! [`coordinator::policy::SchedPolicy`] and register it in a
+//! [`coordinator::policy::PolicyRegistry`] to drive the engine, the
+//! iterative solver, and the constructive online scheduler with your own
+//! heuristic (see `examples/custom_policy.rs`). The classic Table-1
+//! configurations are registry entries `"fcfs/r-p"` ... `"pl/eft-p"`;
+//! `"pl/affinity"` and `"pl/lookahead"` extend them with data-placement
+//! awareness and one-step successor lookahead.
 
 pub mod bench;
 pub mod config;

@@ -10,28 +10,33 @@
 //! * `calibrate` — measure local kernel perf models, print TOML
 //! * `trace`     — write Paraver/CSV trace bundles (Figs. 2b & 6)
 //! * `dag`       — export the task DAG as Graphviz DOT (Fig. 2a)
+//! * `policies`  — list the scheduling-policy registry
 //!
 //! Examples:
 //!
 //! ```text
 //! hesp simulate --platform configs/bujaruelo.toml --n 32768 --tile 1024 \
-//!               --order pl --select eft
+//!               --policy pl/eft-p
 //! hesp solve --platform configs/odroid.toml --n 8192 --iters 200
+//! hesp simulate --platform configs/bujaruelo.toml --policy pl/affinity
 //! hesp validate --n 512 --tiles 64,128 --reps 3
 //! ```
 
 use anyhow::{anyhow, bail, Result};
 
+use hesp::bench::Table;
 use hesp::config::Platform;
 use hesp::coordinator::coherence::CachePolicy;
 use hesp::coordinator::energy::Objective;
-use hesp::coordinator::engine::{simulate, SimConfig};
+use hesp::coordinator::engine::{simulate_policy, SimConfig};
 use hesp::coordinator::metrics::report;
 use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
 use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
-use hesp::coordinator::solver::{best_homogeneous, homogeneous_sweep, solve, CandidateSelect, Sampling, SolverConfig};
+use hesp::coordinator::policy::{policy_by_name, policy_for, PolicyRegistry, SchedPolicy};
+use hesp::coordinator::solver::{
+    best_homogeneous_with, homogeneous_sweep_with, solve_with, CandidateSelect, Sampling, SolverConfig,
+};
 use hesp::coordinator::trace::write_bundle;
-use hesp::bench::Table;
 use hesp::util::cli::Args;
 
 fn main() {
@@ -47,6 +52,7 @@ fn main() {
         "calibrate" => cmd_calibrate(&args),
         "trace" => cmd_trace(&args),
         "dag" => cmd_dag(&args),
+        "policies" => cmd_policies(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -64,29 +70,75 @@ hesp — Heterogeneous Scheduler-Partitioner (Rey, Igual, Prieto-Matias 2016)
 
 USAGE: hesp <subcommand> [--flags]
 
-  simulate  --platform F --n N --tile B [--order fcfs|pl] [--select rp|fp|eit|eft]
-            [--cache wb|wt|wa] [--seed S]
-  sweep     --platform F --n N [--tiles 256,512,...]     (Fig. 5 right)
+  simulate  --platform F --n N --tile B [--policy NAME] [--cache wb|wt|wa] [--seed S]
+  sweep     --platform F --n N [--tiles 256,512,...] [--policy NAME]
+            (Fig. 5 right; sweeps every registered policy unless --policy given)
   solve     --platform F --n N [--tiles ...] [--iters K] [--candidates all|cp|shallow]
             [--sampling hard|soft] [--min-edge E] [--objective makespan|energy|edp]
-            [--order ...] [--select ...]                  (Table 1 rows)
-  online    --platform F --n N --tile B [--min-edge E] [--order ...] [--select ...]
+            [--policy NAME]                               (Table 1 rows)
+  online    --platform F --n N --tile B [--min-edge E] [--policy NAME]
             (constructive per-task-arrival partitioner, paper §4)
-  table1    --platform F --n N [--tiles ...] [--iters K]  (full Table 1)
+  table1    --platform F --n N [--tiles ...] [--iters K]  (full Table 1 + new policies)
   validate  [--n N] [--tiles 64,128] [--reps R]           (Fig. 5 left; needs artifacts)
   calibrate [--tiles 32,64,128] [--reps R]                (refresh configs/local.toml)
   trace     --platform F --n N --tile B [--out DIR] [--solve-iters K]  (Figs. 2b & 6)
   dag       --n N --tile B [--out FILE.dot]               (Fig. 2a)
+  policies                                                (list the policy registry)
+
+Scheduling policies are named registry entries (`hesp policies`):
+fcfs/r-p ... pl/eft-p (Table 1), pl/affinity, pl/lookahead. For the
+single-policy commands (simulate/solve/online/trace) the precedence is
+--policy > legacy --order/--select pair > the platform's `policy =` key >
+pl/eft-p. sweep and table1 run every registered policy by default; sweep
+restricts to one when --policy (or --order/--select) is given.
 ";
 
 fn sim_config(args: &Args, p: &Platform) -> Result<SimConfig> {
-    let ordering = Ordering::from_name(&args.str_or("order", "pl")).ok_or_else(|| anyhow!("bad --order"))?;
-    let select = ProcSelect::from_name(&args.str_or("select", "eft")).ok_or_else(|| anyhow!("bad --select"))?;
-    let cache = CachePolicy::from_name(&args.str_or("cache", "wb")).ok_or_else(|| anyhow!("bad --cache"))?;
+    // with --policy the legacy shim flags are dead — don't fail on them
+    let lenient = args.has("policy");
+    let ordering = match Ordering::from_name(&args.str_lower_or("order", "pl")) {
+        Some(o) => o,
+        None if lenient => Ordering::PriorityList,
+        None => return Err(anyhow!("bad --order")),
+    };
+    let select = match ProcSelect::from_name(&args.str_lower_or("select", "eft")) {
+        Some(s) => s,
+        None if lenient => ProcSelect::EarliestFinish,
+        None => return Err(anyhow!("bad --select")),
+    };
+    let cache = CachePolicy::from_name(&args.str_lower_or("cache", "wb")).ok_or_else(|| anyhow!("bad --cache"))?;
     Ok(SimConfig::new(SchedConfig::new(ordering, select))
         .with_cache(cache)
         .with_elem_bytes(p.elem_bytes)
         .with_seed(args.u64_or("seed", 0)))
+}
+
+/// Resolve the scheduling policy for a command: `--policy NAME` (registry
+/// lookup) beats the legacy `--order`/`--select` pair, which beats the
+/// platform config's `policy =` key, which beats the PL/EFT-P default.
+fn build_policy(args: &Args, p: &Platform) -> Result<Box<dyn SchedPolicy>> {
+    if let Some(name) = args.get_lower("policy") {
+        return policy_by_name(&name)
+            .ok_or_else(|| anyhow!("unknown --policy '{name}' (see `hesp policies`)"));
+    }
+    if !args.has("order") && !args.has("select") {
+        if let Some(pol) = p.policy() {
+            return Ok(pol);
+        }
+    }
+    let ordering = Ordering::from_name(&args.str_lower_or("order", "pl")).ok_or_else(|| anyhow!("bad --order"))?;
+    let select = ProcSelect::from_name(&args.str_lower_or("select", "eft")).ok_or_else(|| anyhow!("bad --select"))?;
+    Ok(policy_for(SchedConfig::new(ordering, select)))
+}
+
+fn cmd_policies() -> Result<()> {
+    let reg = PolicyRegistry::standard();
+    println!("registered scheduling policies ({} — Table 1 rows + extensions):", reg.len());
+    for name in reg.names() {
+        println!("  {name}");
+    }
+    println!("\naliases: enum spellings (pl/eft, fcfs/random, ...) and bare pl/ suffixes (affinity, eft-p, ...)");
+    Ok(())
 }
 
 fn load_platform(args: &Args) -> Result<Platform> {
@@ -113,10 +165,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 16384) as u32;
     let b = args.usize_or("tile", 1024) as u32;
     let cfg = sim_config(args, &p)?;
+    let mut pol = build_policy(args, &p)?;
     let mut dag = cholesky::root(n);
     cholesky::partition_uniform(&mut dag, b);
-    let sched = simulate(&dag, &p.machine, &p.db, cfg);
-    print_report(&format!("{} n={n} b={b}", p.machine.name), &dag, &sched);
+    let sched = simulate_policy(&dag, &p.machine, &p.db, cfg, pol.as_mut());
+    print_report(&format!("{} n={n} b={b} [{}]", p.machine.name, pol.name()), &dag, &sched);
     Ok(())
 }
 
@@ -131,18 +184,31 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let p = load_platform(args)?;
     let n = args.usize_or("n", 32768) as u32;
     let tiles: Vec<u32> = args.usize_list("tiles", &default_tiles(n)).into_iter().map(|x| x as u32).collect();
-    let mut table = Table::new(&["config", "tile", "GFLOPS", "load %", "makespan s"]);
-    for cfgrow in SchedConfig::table1_rows() {
-        let sim = SimConfig::new(cfgrow).with_elem_bytes(p.elem_bytes);
-        for (b, dag, sched) in homogeneous_sweep(n, &tiles, &p.machine, &p.db, sim) {
+    let sim = sim_config(args, &p)?;
+    let mut table = Table::new(&["policy", "tile", "GFLOPS", "load %", "makespan s"]);
+    let mut run_one = |name: &str, pol: &mut dyn SchedPolicy, table: &mut Table| {
+        for (b, dag, sched) in homogeneous_sweep_with(n, &tiles, &p.machine, &p.db, sim, pol) {
             let r = report(&dag, &sched);
             table.row(&[
-                cfgrow.name(),
+                name.to_string(),
                 b.to_string(),
                 format!("{:.2}", r.gflops),
                 format!("{:.1}", r.avg_load_pct),
                 format!("{:.4}", r.makespan),
             ]);
+        }
+    };
+    // explicit policy flags restrict the sweep to that one policy; the
+    // default sweeps the whole registry (Fig. 5 right)
+    if args.has("policy") || args.has("order") || args.has("select") {
+        let mut pol = build_policy(args, &p)?;
+        let name = pol.name().to_string();
+        run_one(&name, pol.as_mut(), &mut table);
+    } else {
+        let reg = PolicyRegistry::standard();
+        for name in reg.names() {
+            let mut pol = reg.get(name).expect("registered policy constructs");
+            run_one(name, pol.as_mut(), &mut table);
         }
     }
     table.print();
@@ -170,12 +236,14 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let tiles: Vec<u32> = args.usize_list("tiles", &default_tiles(n)).into_iter().map(|x| x as u32).collect();
     let sim = sim_config(args, &p)?;
     let scfg = solver_config(args, sim)?;
+    let mut pol = build_policy(args, &p)?;
 
-    let (hb, hdag, hsched) = best_homogeneous(n, &tiles, &p.machine, &p.db, sim, scfg.objective)
-        .ok_or_else(|| anyhow!("no legal tile size in {tiles:?} for n={n}"))?;
-    print_report(&format!("best homogeneous (b={hb})"), &hdag, &hsched);
+    let (hb, hdag, hsched) =
+        best_homogeneous_with(n, &tiles, &p.machine, &p.db, sim, scfg.objective, pol.as_mut())
+            .ok_or_else(|| anyhow!("no legal tile size in {tiles:?} for n={n}"))?;
+    print_report(&format!("best homogeneous (b={hb}, {})", pol.name()), &hdag, &hsched);
 
-    let res = solve(hdag, &p.machine, &p.db, &PartitionerSet::standard(), scfg);
+    let res = solve_with(hdag, &p.machine, &p.db, &PartitionerSet::standard(), scfg, pol.as_mut());
     print_report(&format!("best heterogeneous (iter {})", res.best_iter), &res.best_dag, &res.best_schedule);
     let imp = 100.0 * (hsched.makespan - res.best_schedule.makespan) / res.best_schedule.makespan;
     println!("improvement: {imp:.2}%");
@@ -183,18 +251,19 @@ fn cmd_solve(args: &Args) -> Result<()> {
 }
 
 fn cmd_online(args: &Args) -> Result<()> {
-    use hesp::coordinator::constructive::{schedule_online, OnlineConfig};
+    use hesp::coordinator::constructive::{schedule_online_with, OnlineConfig};
     let p = load_platform(args)?;
     let n = args.usize_or("n", 32768) as u32;
     let b = args.usize_or("tile", 2048) as u32;
     let sim = sim_config(args, &p)?;
+    let mut pol = build_policy(args, &p)?;
     let mut dag = cholesky::root(n);
     cholesky::partition_uniform(&mut dag, b);
-    let base = simulate(&dag, &p.machine, &p.db, sim);
-    print_report(&format!("static uniform b={b}"), &dag, &base);
+    let base = simulate_policy(&dag, &p.machine, &p.db, sim, pol.as_mut());
+    print_report(&format!("static uniform b={b} [{}]", pol.name()), &dag, &base);
     let mut cfg = OnlineConfig::new(sim, args.usize_or("min-edge", 128) as u32);
     cfg.gain_factor = args.f64_or("gain", 0.6);
-    let res = schedule_online(&dag, &p.machine, &p.db, &PartitionerSet::standard(), cfg);
+    let res = schedule_online_with(&dag, &p.machine, &p.db, &PartitionerSet::standard(), cfg, pol.as_mut());
     print_report(&format!("constructive ({} online splits)", res.splits), &res.dag, &res.schedule);
     let imp = 100.0 * (base.makespan - res.schedule.makespan) / res.schedule.makespan;
     println!("improvement: {imp:.2}%");
@@ -209,21 +278,24 @@ fn cmd_table1(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 32768) as u32;
     let tiles: Vec<u32> = args.usize_list("tiles", &default_tiles(n)).into_iter().map(|x| x as u32).collect();
     let iters = args.usize_or("iters", 150);
+    let reg = PolicyRegistry::standard();
     let mut table = Table::new(&[
-        "Config", "Hom GFLOPS", "Hom load%", "Hom b", "Het GFLOPS", "Improve %", "Het load%", "Het avg b", "depth",
+        "Policy", "Hom GFLOPS", "Hom load%", "Hom b", "Het GFLOPS", "Improve %", "Het load%", "Het avg b", "depth",
     ]);
-    for row in SchedConfig::table1_rows() {
-        let sim = SimConfig::new(row).with_elem_bytes(p.elem_bytes);
-        let (hb, hdag, hsched) = best_homogeneous(n, &tiles, &p.machine, &p.db, sim, Objective::Makespan)
-            .ok_or_else(|| anyhow!("no legal tiles"))?;
+    let sim = sim_config(args, &p)?;
+    for name in reg.names() {
+        let mut pol = reg.get(name).expect("registered policy constructs");
+        let (hb, hdag, hsched) =
+            best_homogeneous_with(n, &tiles, &p.machine, &p.db, sim, Objective::Makespan, pol.as_mut())
+                .ok_or_else(|| anyhow!("no legal tiles"))?;
         let hr = report(&hdag, &hsched);
         let mut scfg = solver_config(args, sim)?;
         scfg.iters = iters;
-        let res = solve(hdag, &p.machine, &p.db, &PartitionerSet::standard(), scfg);
+        let res = solve_with(hdag, &p.machine, &p.db, &PartitionerSet::standard(), scfg, pol.as_mut());
         let er = report(&res.best_dag, &res.best_schedule);
         let imp = 100.0 * (er.gflops - hr.gflops) / hr.gflops;
         table.row(&[
-            row.name(),
+            name.to_string(),
             format!("{:.2}", hr.gflops),
             format!("{:.1}", hr.avg_load_pct),
             hb.to_string(),
@@ -234,7 +306,7 @@ fn cmd_table1(args: &Args) -> Result<()> {
             er.dag_depth.to_string(),
         ]);
     }
-    println!("Table 1 — {} (n={n}, f{})", p.machine.name, p.elem_bytes * 8);
+    println!("Table 1 — {} (n={n}, f{}; 8 paper rows + policy extensions)", p.machine.name, p.elem_bytes * 8);
     table.print();
     Ok(())
 }
@@ -303,17 +375,18 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let b = args.usize_or("tile", 2048) as u32;
     let out = std::path::PathBuf::from(args.str_or("out", "traces"));
     let sim = sim_config(args, &p)?;
+    let mut pol = build_policy(args, &p)?;
 
     let mut dag = cholesky::root(n);
     cholesky::partition_uniform(&mut dag, b);
-    let sched = simulate(&dag, &p.machine, &p.db, sim);
+    let sched = simulate_policy(&dag, &p.machine, &p.db, sim, pol.as_mut());
     write_bundle(&out, &format!("{}_homog_b{b}", p.machine.name), &dag, &sched, &p.machine)?;
     print_report("homogeneous", &dag, &sched);
 
     let iters = args.usize_or("solve-iters", 150);
     let mut scfg = solver_config(args, sim)?;
     scfg.iters = iters;
-    let res = solve(dag, &p.machine, &p.db, &PartitionerSet::standard(), scfg);
+    let res = solve_with(dag, &p.machine, &p.db, &PartitionerSet::standard(), scfg, pol.as_mut());
     write_bundle(&out, &format!("{}_heterog", p.machine.name), &res.best_dag, &res.best_schedule, &p.machine)?;
     print_report("heterogeneous", &res.best_dag, &res.best_schedule);
     println!("trace bundles in {}", out.display());

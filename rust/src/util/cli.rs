@@ -56,6 +56,17 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Lowercased value, if the flag was passed — the form every
+    /// name-keyed lookup (policies, caching modes, objectives) wants.
+    pub fn get_lower(&self, name: &str) -> Option<String> {
+        self.get(name).map(|s| s.to_ascii_lowercase())
+    }
+
+    /// Lowercased value with a default.
+    pub fn str_lower_or(&self, name: &str, default: &str) -> String {
+        self.get_lower(name).unwrap_or_else(|| default.to_ascii_lowercase())
+    }
+
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
@@ -113,6 +124,15 @@ mod tests {
         assert_eq!(a.usize_list("other", &[64]), vec![64]);
         assert_eq!(a.f64_or("gamma", 1.5), 1.5);
         assert_eq!(a.str_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn lowercased_lookups() {
+        let a = parse("x --policy PL/EFT-P");
+        assert_eq!(a.get_lower("policy").as_deref(), Some("pl/eft-p"));
+        assert_eq!(a.get_lower("missing"), None);
+        assert_eq!(a.str_lower_or("policy", "fcfs/r-p"), "pl/eft-p");
+        assert_eq!(a.str_lower_or("missing", "FCFS/R-P"), "fcfs/r-p");
     }
 
     #[test]

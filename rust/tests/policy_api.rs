@@ -1,0 +1,229 @@
+//! Integration tests for the pluggable scheduling-policy API: registry
+//! round-trips, enum-shim vs trait-object determinism, the transfer
+//! behavior of the affinity policy, and user-defined policy registration.
+
+use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::constructive::{schedule_online_with, OnlineConfig};
+use hesp::coordinator::engine::{simulate, simulate_policy, SimConfig};
+use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
+use hesp::coordinator::perfmodel::{PerfCurve, PerfDb};
+use hesp::coordinator::platform::{Machine, MachineBuilder, ProcId};
+use hesp::coordinator::policies::SchedConfig;
+use hesp::coordinator::policy::{policy_by_name, PolicyRegistry, SchedContext, SchedPolicy};
+use hesp::coordinator::solver::{solve_with, SolverConfig};
+use hesp::coordinator::task::Task;
+use hesp::coordinator::taskdag::TaskDag;
+
+/// Host (2 CPUs) + 2 GPU memory spaces (1 fast GPU each) over PCIe-ish
+/// links — transfers are real and the GPUs dominate on every kernel, so
+/// EFT-P moves data while affinity can avoid it.
+fn gpu_machine() -> (Machine, PerfDb) {
+    let mut b = MachineBuilder::new("t");
+    let host = b.space("host", u64::MAX);
+    let g0 = b.space("gpu0", u64::MAX);
+    let g1 = b.space("gpu1", u64::MAX);
+    b.main(host);
+    b.connect(host, g0, 1e-5, 1e9);
+    b.connect(host, g1, 1e-5, 1e9);
+    let cpu = b.proc_type("cpu", 10.0, 1.0);
+    let gpu = b.proc_type("gpu", 100.0, 10.0);
+    b.processors(2, "c", cpu, host);
+    b.processors(1, "ga", gpu, g0);
+    b.processors(1, "gb", gpu, g1);
+    let m = b.build();
+    let mut db = PerfDb::new();
+    db.set_fallback(0, PerfCurve::Const { gflops: 1.0 });
+    db.set_fallback(1, PerfCurve::Const { gflops: 50.0 });
+    (m, db)
+}
+
+/// Single memory space, 2 slow + 2 fast CPUs with saturating curves.
+fn cpu_machine() -> (Machine, PerfDb) {
+    let mut b = MachineBuilder::new("c");
+    let h = b.space("host", u64::MAX);
+    b.main(h);
+    let slow = b.proc_type("slow", 1.0, 0.1);
+    let fast = b.proc_type("fast", 1.0, 0.1);
+    b.processors(2, "s", slow, h);
+    b.processors(2, "f", fast, h);
+    let m = b.build();
+    let mut db = PerfDb::new();
+    db.set_fallback(0, PerfCurve::Saturating { peak: 5.0, half: 64.0, exponent: 2.0 });
+    db.set_fallback(1, PerfCurve::Saturating { peak: 20.0, half: 64.0, exponent: 2.0 });
+    (m, db)
+}
+
+fn chol(n: u32, b: u32) -> TaskDag {
+    let mut dag = cholesky::root(n);
+    cholesky::partition_uniform(&mut dag, b);
+    dag
+}
+
+#[test]
+fn registry_round_trips_every_name() {
+    let reg = PolicyRegistry::standard();
+    let names = reg.names();
+    assert_eq!(names.len(), 10, "8 Table-1 rows + affinity + lookahead: {names:?}");
+    for &name in &names {
+        let p = reg.get(name).unwrap_or_else(|| panic!("'{name}' does not construct"));
+        assert_eq!(p.name(), name, "name() must round-trip through the registry");
+    }
+    // every Table-1 row resolves under its canonical lowercase name
+    for row in SchedConfig::table1_rows() {
+        let canonical = row.name().to_ascii_lowercase();
+        let p = reg.get(&canonical).unwrap_or_else(|| panic!("Table-1 '{canonical}' missing"));
+        assert_eq!(p.name(), canonical);
+    }
+    for extra in ["pl/affinity", "pl/lookahead"] {
+        assert!(names.contains(&extra), "{extra} not registered");
+    }
+}
+
+#[test]
+fn enum_shim_and_trait_object_are_bit_identical() {
+    // Same seed + same policy must produce the identical schedule whether
+    // the engine is entered through the legacy enum shim (`simulate`) or
+    // through a registry-built trait object (`simulate_policy`).
+    let (m, db) = gpu_machine();
+    let dag = chol(512, 128);
+    for row in SchedConfig::table1_rows() {
+        for seed in [0u64, 7, 0xBEEF] {
+            let cfg = SimConfig::new(row).with_seed(seed);
+            let via_enum = simulate(&dag, &m, &db, cfg);
+            let mut pol = policy_by_name(&row.name().to_ascii_lowercase()).unwrap();
+            let via_trait = simulate_policy(&dag, &m, &db, cfg, pol.as_mut());
+            assert_eq!(via_enum.mapping(), via_trait.mapping(), "{} seed {seed}", row.name());
+            assert_eq!(via_enum.makespan, via_trait.makespan, "{} seed {seed}", row.name());
+            assert_eq!(via_enum.transfer_bytes, via_trait.transfer_bytes, "{} seed {seed}", row.name());
+        }
+    }
+}
+
+#[test]
+fn trait_objects_are_deterministic_per_seed() {
+    let (m, db) = gpu_machine();
+    let dag = chol(512, 128);
+    let cfg = SimConfig::new(SchedConfig::table1_rows()[0]).with_seed(42); // fcfs/r-p
+    let mut p1 = policy_by_name("fcfs/r-p").unwrap();
+    let mut p2 = policy_by_name("fcfs/r-p").unwrap();
+    let a = simulate_policy(&dag, &m, &db, cfg, p1.as_mut());
+    let b = simulate_policy(&dag, &m, &db, cfg, p2.as_mut());
+    assert_eq!(a.mapping(), b.mapping());
+    assert_eq!(a.makespan, b.makespan);
+}
+
+#[test]
+fn affinity_strictly_reduces_transfer_bytes_vs_eft() {
+    // Transfer-heavy setup: the GPUs are 50x faster, so EFT-P ships tiles
+    // to device memory all factorization long. The affinity policy keeps
+    // tasks where their inputs already live (initially: main memory), so
+    // it must move strictly fewer bytes on the same Cholesky DAG.
+    let (m, db) = gpu_machine();
+    let dag = chol(512, 128);
+    let cfg = SimConfig::new(SchedConfig::table1_rows()[7]); // pl/eft-p shim fields
+    let mut eft = policy_by_name("pl/eft-p").unwrap();
+    let mut aff = policy_by_name("pl/affinity").unwrap();
+    let s_eft = simulate_policy(&dag, &m, &db, cfg, eft.as_mut());
+    let s_aff = simulate_policy(&dag, &m, &db, cfg, aff.as_mut());
+    assert_eq!(s_aff.assignments.len(), dag.frontier().len());
+    assert!(s_eft.transfer_bytes > 0, "EFT-P must be transfer-heavy here");
+    assert!(
+        s_aff.transfer_bytes < s_eft.transfer_bytes,
+        "affinity {} bytes vs EFT {} bytes",
+        s_aff.transfer_bytes,
+        s_eft.transfer_bytes
+    );
+    // WriteBack + all inputs initially in main memory: full affinity means
+    // no traffic at all
+    assert_eq!(cfg.cache, CachePolicy::WriteBack);
+    assert_eq!(s_aff.transfer_bytes, 0, "full-affinity run moves nothing");
+}
+
+#[test]
+fn lookahead_schedules_everything_and_stays_sane() {
+    let (m, db) = cpu_machine();
+    let dag = chol(512, 64);
+    let cfg = SimConfig::new(SchedConfig::table1_rows()[7]);
+    let mut la = policy_by_name("pl/lookahead").unwrap();
+    let mut eft = policy_by_name("pl/eft-p").unwrap();
+    let s_la = simulate_policy(&dag, &m, &db, cfg, la.as_mut());
+    let s_eft = simulate_policy(&dag, &m, &db, cfg, eft.as_mut());
+    assert_eq!(s_la.assignments.len(), dag.frontier().len());
+    assert!(s_la.makespan.is_finite() && s_la.makespan > 0.0);
+    // one-step lookahead is a heuristic, not an oracle — but it must stay
+    // in the same ballpark as plain EFT
+    assert!(s_la.makespan <= s_eft.makespan * 1.5, "{} vs {}", s_la.makespan, s_eft.makespan);
+    // dependence sanity under the new policy
+    for a in &s_la.assignments {
+        assert!(a.start >= a.release - 1e-12);
+    }
+}
+
+/// A user-defined policy: everything on processor 0, FCFS order.
+struct PinToZero;
+
+impl SchedPolicy for PinToZero {
+    fn name(&self) -> &str {
+        "test/pin-zero"
+    }
+
+    fn order(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, release: f64, _critical: f64) -> f64 {
+        -release
+    }
+
+    fn select(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, _release: f64) -> ProcId {
+        0
+    }
+}
+
+#[test]
+fn user_policies_register_and_drive_the_engine() {
+    let mut reg = PolicyRegistry::standard();
+    reg.register("test/pin-zero", || Box::new(PinToZero) as Box<dyn SchedPolicy>);
+    assert_eq!(reg.len(), 11);
+    let mut pol = reg.get("test/pin-zero").unwrap();
+    assert_eq!(pol.name(), "test/pin-zero");
+
+    let (m, db) = cpu_machine();
+    let dag = chol(256, 64);
+    let cfg = SimConfig::new(SchedConfig::table1_rows()[0]);
+    let sched = simulate_policy(&dag, &m, &db, cfg, pol.as_mut());
+    assert_eq!(sched.assignments.len(), dag.frontier().len());
+    assert!(sched.assignments.iter().all(|a| a.proc == 0), "user policy decides placement");
+    // serialized on one proc: load concentrates there
+    assert!(sched.proc_busy[0] > 0.0);
+    assert_eq!(sched.proc_busy[1..].iter().copied().fold(0.0f64, f64::max), 0.0);
+}
+
+#[test]
+fn solver_dispatches_through_trait_policies() {
+    let (m, db) = cpu_machine();
+    let dag = cholesky::root(1024);
+    let base = {
+        let mut eft = policy_by_name("pl/eft-p").unwrap();
+        simulate_policy(&dag, &m, &db, SimConfig::new(SchedConfig::table1_rows()[7]), eft.as_mut())
+    };
+    for name in ["pl/affinity", "pl/lookahead"] {
+        let mut pol = policy_by_name(name).unwrap();
+        let cfg = SolverConfig::all_soft(SimConfig::new(SchedConfig::table1_rows()[7]), 25, 64);
+        let res = solve_with(dag.clone(), &m, &db, &PartitionerSet::standard(), cfg, pol.as_mut());
+        assert!(res.best_cost.is_finite() && res.best_cost > 0.0, "{name}");
+        // single-space machine: the solver must at least match the
+        // unpartitioned root task it starts from
+        assert!(res.best_cost <= base.makespan * 10.0, "{name}: {res_cost} vs {base}", res_cost = res.best_cost, base = base.makespan);
+        assert!(!res.history.is_empty(), "{name}");
+    }
+}
+
+#[test]
+fn constructive_dispatches_through_trait_policies() {
+    let (m, db) = cpu_machine();
+    let dag = chol(512, 128);
+    for name in ["pl/lookahead", "pl/affinity", "fcfs/eit-p"] {
+        let mut pol = policy_by_name(name).unwrap();
+        let cfg = OnlineConfig::new(SimConfig::new(SchedConfig::table1_rows()[7]), 64);
+        let res = schedule_online_with(&dag, &m, &db, &PartitionerSet::standard(), cfg, pol.as_mut());
+        assert_eq!(res.schedule.assignments.len(), res.dag.frontier().len(), "{name}");
+        assert!(res.schedule.makespan.is_finite() && res.schedule.makespan > 0.0, "{name}");
+    }
+}

@@ -1,0 +1,187 @@
+//! Offline shim of the `anyhow` crate: the API subset HeSP uses
+//! (`anyhow!`, `bail!`, `ensure!`, `Context`, `Result`), backed by a plain
+//! message-chain error type. The build must work without a crates.io
+//! registry, so this vendored stand-in replaces the real dependency; it is
+//! drop-in for the call sites in this repository, not a general clone.
+
+use std::fmt;
+
+/// A message-chain error: the innermost message plus any context frames
+/// added via [`Context`], outermost last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Push an outer context frame (what `Context::context` does).
+    pub fn push_context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.push(c.to_string());
+        self
+    }
+
+    /// Context frames from outermost to innermost (anyhow's `chain()`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the full cause chain, outermost first.
+            let full: Vec<&str> = self.chain.iter().rev().map(|s| s.as_str()).collect();
+            write!(f, "{}", full.join(": "))
+        } else {
+            // `{}` prints the outermost message only.
+            write!(f, "{}", self.chain.last().map(|s| s.as_str()).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug (what `.unwrap()` prints) shows the full chain.
+        write!(f, "{self:#}")
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes the blanket conversion below coherent (same trick as the
+// real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazy context to `Result`/`Option` errors.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        // `{:#}` so an inner Error's full context chain survives wrapping
+        self.map_err(|e| Error::msg(format_args!("{e:#}")).push_context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format_args!("{e:#}")).push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file").with_context(|| "reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chain_renders() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let s = String::from("plain string error");
+        let e2 = anyhow!(s);
+        assert_eq!(e2.to_string(), "plain string error");
+        fn f(v: usize) -> Result<usize> {
+            ensure!(v < 10, "v too big: {v}");
+            if v == 5 {
+                bail!("five is right out");
+            }
+            Ok(v)
+        }
+        assert!(f(3).is_ok());
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+        assert!(f(5).is_err());
+    }
+
+    #[test]
+    fn bare_ensure_and_option_context() {
+        fn g(ok: bool) -> Result<()> {
+            ensure!(ok);
+            Ok(())
+        }
+        assert!(g(true).is_ok());
+        assert!(g(false).unwrap_err().to_string().contains("condition failed"));
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn h() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(h().is_err());
+    }
+}
