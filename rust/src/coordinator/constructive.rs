@@ -4,30 +4,37 @@
 //! basis ... can be applied directly on actual task schedulers".
 //!
 //! Instead of iterating whole schedule/partition rounds, partitioning
-//! decisions are taken **at task arrival to the scheduling queue**: when a
-//! ready task is popped, a local score (projected finish time unsplit vs.
-//! split across currently-idle processors at a finer grain) decides
-//! whether to dispatch it as-is or replace it, in place, by its blocked
-//! sub-task cluster.
+//! decisions are taken **at task arrival to the scheduling queue**: when
+//! the event clock reaches a ready task, a local score (projected finish
+//! time unsplit vs. split across currently-idle processors at a finer
+//! grain) decides whether to dispatch it as-is or replace it, in place,
+//! by its blocked sub-task cluster.
+//!
+//! The simulation itself runs on the engine's shared
+//! [`EventCore`](super::engine) — the same typed event queue, global
+//! clock, interval timelines, transfer booking and `TaskEnd`-time write
+//! effects as the offline engine, rather than a duplicated commit loop.
+//! Only the graph bookkeeping differs: tasks are keyed by id (the DAG
+//! grows as splits are taken), and a split cluster holds a completion
+//! counter that releases the parent's successors once every child is
+//! done.
 //!
 //! Key simplification that keeps the online DAG maintenance exact: a task
 //! is only split when it is *ready* (all predecessors finished), so its
 //! children can have no unfinished external predecessors — only
 //! cluster-internal edges (derived from the children's region accesses)
-//! plus a completion counter that releases the parent's successors once
-//! every child is done.
+//! plus the completion counter.
 
-use super::coherence::Coherence;
-use super::engine::{Assignment, Schedule, SimConfig, TransferRecord};
+use super::engine::{pick_best, Assignment, EventCore, EventKind, Schedule, SimConfig};
 use super::ordering::critical_times;
 use super::partitioners::{snap_sub_edge, PartitionerSet};
 use super::perfmodel::PerfDb;
 use super::platform::Machine;
 use super::policies::SchedConfig;
-use super::policy::{self, SchedContext, SchedPolicy};
+use super::policy::{self, SchedPolicy};
 use super::task::{Task, TaskSpec};
 use super::taskdag::TaskDag;
-use crate::util::rng::Rng;
+use crate::util::fxhash::FxHashMap;
 
 /// Knobs of the online partitioner.
 #[derive(Debug, Clone, Copy)]
@@ -69,9 +76,45 @@ pub fn schedule_online(
     schedule_online_with(dag0, machine, db, parts, cfg, p.as_mut())
 }
 
+/// Graph bookkeeping when `id` finishes at `end`: bubble completion up
+/// the cluster, decrement successor indegrees, record releases, and
+/// collect tasks that became ready (the caller keys + dispatches them, so
+/// ordering stays a policy decision).
+#[allow(clippy::too_many_arguments)]
+fn complete(
+    id: usize,
+    end: f64,
+    succs: &FxHashMap<usize, Vec<usize>>,
+    indeg: &mut FxHashMap<usize, usize>,
+    release: &mut FxHashMap<usize, f64>,
+    cluster_left: &mut FxHashMap<usize, usize>,
+    cluster_parent: &FxHashMap<usize, usize>,
+    newly_ready: &mut Vec<usize>,
+) {
+    if let Some(&parent) = cluster_parent.get(&id) {
+        let left = cluster_left.get_mut(&parent).expect("cluster counter");
+        *left -= 1;
+        if *left == 0 {
+            complete(parent, end, succs, indeg, release, cluster_left, cluster_parent, newly_ready);
+        }
+    }
+    if let Some(ss) = succs.get(&id) {
+        for &s in ss {
+            let d = indeg.get_mut(&s).expect("succ indeg");
+            *d -= 1;
+            let r = release.entry(s).or_insert(0.0);
+            *r = r.max(end);
+            if *d == 0 {
+                newly_ready.push(s);
+            }
+        }
+    }
+}
+
 /// [`schedule_online`] under an arbitrary scheduling policy: ready-queue
 /// ordering and per-task processor selection both dispatch through
-/// `policy`, exactly as in the offline engine.
+/// `policy`, exactly as in the offline engine (including decision-time
+/// key recomputation).
 pub fn schedule_online_with(
     dag0: &TaskDag,
     machine: &Machine,
@@ -82,26 +125,15 @@ pub fn schedule_online_with(
 ) -> OnlineResult {
     let mut dag = dag0.clone();
     let flat = dag.flat_dag();
-    let mut rng = Rng::new(cfg.sim.seed);
-    let mut coh = Coherence::new(
-        machine.spaces.len(),
-        machine.main_space,
-        cfg.sim.cache,
-        machine.capacities(),
-        cfg.sim.elem_bytes,
-    );
 
     // --- dynamic DAG state, indexed by task id (not frontier position) ---
-    // base edges from the initial frontier
-    let n0 = flat.len();
     let prio0 = if policy.wants_critical_times() {
         critical_times(&dag, &flat, machine, db)
     } else {
-        vec![0.0; n0]
+        vec![0.0; flat.len()]
     };
     // per-task: remaining predecessor count, successors (task ids),
     // release time, priority, parent cluster (for completion counting)
-    use crate::util::fxhash::FxHashMap;
     let mut indeg: FxHashMap<usize, usize> = FxHashMap::default();
     let mut succs: FxHashMap<usize, Vec<usize>> = FxHashMap::default();
     let mut release: FxHashMap<usize, f64> = FxHashMap::default();
@@ -116,229 +148,175 @@ pub fn schedule_online_with(
         prio.insert(tid, prio0[i]);
     }
 
-    #[derive(PartialEq)]
-    struct HeapItem {
-        key: f64,
-        id: usize,
-    }
-    impl Eq for HeapItem {}
-    impl PartialOrd for HeapItem {
-        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-            Some(self.cmp(other))
-        }
-    }
-    impl Ord for HeapItem {
-        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-            self.key.total_cmp(&other.key).then(other.id.cmp(&self.id))
-        }
-    }
-    let mut proc_avail = vec![0.0f64; machine.n_procs()];
-    let mut link_busy = vec![0.0f64; machine.links.len()];
-
-    let mut ready: std::collections::BinaryHeap<HeapItem> = std::collections::BinaryHeap::new();
-    for (i, &tid) in flat.tasks.iter().enumerate() {
-        if flat.preds[i].is_empty() {
-            let mut ctx = SchedContext {
-                machine,
-                db,
-                proc_avail: &proc_avail,
-                link_busy: &link_busy,
-                coh: &mut coh,
-                rng: &mut rng,
-                successors: &[],
-            };
-            let key = policy.order(&mut ctx, dag.task(tid), 0.0, prio0[i]);
-            ready.push(HeapItem { key, id: tid });
-        }
-    }
-
-    let mut sched = Schedule { proc_busy: vec![0.0; machine.n_procs()], ..Default::default() };
+    let mut core = EventCore::new(machine, db, cfg.sim);
+    let mut ready: Vec<usize> =
+        flat.tasks.iter().enumerate().filter(|(i, _)| flat.preds[*i].is_empty()).map(|(_, &t)| t).collect();
+    let mut batch: Vec<(usize, EventKind)> = Vec::new();
     let mut splits = 0usize;
-
-    // Graph bookkeeping when `id` finishes at `end`: bubble completion up
-    // the cluster, decrement successor indegrees, record releases, and
-    // collect tasks that became ready (the caller keys + pushes them, so
-    // ordering stays a policy decision).
-    #[allow(clippy::too_many_arguments)]
-    fn complete(
-        id: usize,
-        end: f64,
-        succs: &FxHashMap<usize, Vec<usize>>,
-        indeg: &mut FxHashMap<usize, usize>,
-        release: &mut FxHashMap<usize, f64>,
-        cluster_left: &mut FxHashMap<usize, usize>,
-        cluster_parent: &FxHashMap<usize, usize>,
-        newly_ready: &mut Vec<usize>,
-    ) {
-        if let Some(&parent) = cluster_parent.get(&id) {
-            let left = cluster_left.get_mut(&parent).expect("cluster counter");
-            *left -= 1;
-            if *left == 0 {
-                complete(parent, end, succs, indeg, release, cluster_left, cluster_parent, newly_ready);
-            }
+    // static-key policies are keyed once, when the task is released
+    let static_keys = !policy.dynamic_order();
+    let mut keys: FxHashMap<usize, f64> = FxHashMap::default();
+    if static_keys {
+        for &id in &ready {
+            let pr = *prio.get(&id).unwrap_or(&0.0);
+            let mut ctx = core.ctx(&[]);
+            keys.insert(id, policy.order(&mut ctx, dag.task(id), 0.0, pr));
         }
-        if let Some(ss) = succs.get(&id) {
-            for &s in ss {
-                let d = indeg.get_mut(&s).expect("succ indeg");
-                *d -= 1;
-                let r = release.entry(s).or_insert(0.0);
-                *r = r.max(end);
-                if *d == 0 {
-                    newly_ready.push(s);
+    }
+
+    loop {
+        // ---- decision round at `core.now`: dispatch (or split) every
+        // ready task, recomputing dynamic ordering keys between picks ----
+        loop {
+            let Some(i) = pop_best_online(&mut core, policy, &dag, &ready, &release, &prio, &keys) else {
+                break;
+            };
+            let id = ready.swap_remove(i);
+            let rel = *release.get(&id).unwrap_or(&0.0);
+            let t = dag.task(id).clone();
+
+            // ---- local split decision (the constructive move) ----
+            let edge = t.char_edge().round() as u32;
+            let mut split_edge = None;
+            if t.depth < cfg.max_depth + dag.task(dag.root).depth
+                && parts.can_partition(t.kind)
+                && edge / 2 >= cfg.min_edge
+            {
+                let eps = 1e-12;
+                let idle: Vec<usize> =
+                    (0..machine.n_procs()).filter(|&p| !core.procs[p].busy_after(rel + eps)).collect();
+                if idle.len() >= 2 {
+                    // projected finish unsplit on the best processor
+                    let unsplit = (0..machine.n_procs())
+                        .map(|p| {
+                            core.procs[p].tail().max(rel)
+                                + db.time(machine.procs[p].ptype, t.kind, edge as f64, t.flops)
+                        })
+                        .fold(f64::INFINITY, f64::min);
+                    let s_target = ((idle.len() as f64).sqrt().ceil() as u32).max(2);
+                    if let Some(sub) = snap_sub_edge(edge, edge as f64 / s_target as f64, cfg.min_edge) {
+                        // projected finish split across the idle processors
+                        let rate: f64 = idle
+                            .iter()
+                            .map(|&p| db.curve(machine.procs[p].ptype, t.kind).gflops(sub as f64))
+                            .sum();
+                        let est = rel + t.flops / (rate * 1e9);
+                        if est < unsplit * cfg.gain_factor {
+                            split_edge = Some(sub);
+                        }
+                    }
+                }
+            }
+
+            if let Some(sub) = split_edge {
+                if let Some(children) = parts.apply(&mut dag, id, sub) {
+                    splits += 1;
+                    // derive cluster-internal edges from the children's specs
+                    let specs: Vec<TaskSpec> = children
+                        .iter()
+                        .map(|&c| {
+                            let ct = dag.task(c);
+                            TaskSpec::new(ct.kind, ct.reads.clone(), ct.writes.clone())
+                        })
+                        .collect();
+                    let edges = internal_edges(&specs);
+                    cluster_left.insert(id, children.len());
+                    // the parent's priority is inherited; FCFS keys use release
+                    let p_prio = *prio.get(&id).unwrap_or(&0.0);
+                    for (ci, &c) in children.iter().enumerate() {
+                        cluster_parent.insert(c, id);
+                        indeg.insert(c, edges.preds[ci].len());
+                        succs.insert(c, edges.succs[ci].iter().map(|&j| children[j]).collect());
+                        release.insert(c, rel);
+                        prio.insert(c, p_prio);
+                        if edges.preds[ci].is_empty() {
+                            if static_keys {
+                                let mut ctx = core.ctx(&[]);
+                                keys.insert(c, policy.order(&mut ctx, dag.task(c), rel, p_prio));
+                            }
+                            ready.push(c); // joins the current decision round
+                        }
+                    }
+                    continue; // the parent dispatches via its children
+                }
+            }
+
+            // ---- dispatch through the shared event core ----
+            let proc = {
+                // successor tasks materialize only for lookahead-style policies
+                let succ_tasks: Vec<&Task> = if policy.wants_successors() {
+                    succs
+                        .get(&id)
+                        .map(|v| v.iter().filter(|&&s| dag.is_live(s)).map(|&s| dag.task(s)).collect())
+                        .unwrap_or_default()
+                } else {
+                    Vec::new()
+                };
+                let mut ctx = core.ctx(&succ_tasks);
+                policy.select(&mut ctx, &t, rel)
+            };
+            let (start, end) = core.commit(&t, id, proc, rel);
+            let pos = core.sched.assignments.len();
+            core.sched.assignments.push(Assignment { task: id, pos, proc, release: rel, start, end });
+        }
+
+        // ---- advance the clock to the next event batch ----
+        if !core.pop_event_batch(&mut batch) {
+            break;
+        }
+        for &(key, kind) in &batch {
+            if let EventKind::TaskEnd { proc, .. } = kind {
+                let id = key;
+                core.apply_writes(dag.task(id), proc, core.now);
+                let mut newly_ready = Vec::new();
+                complete(id, core.now, &succs, &mut indeg, &mut release, &mut cluster_left, &cluster_parent, &mut newly_ready);
+                for s in newly_ready {
+                    if static_keys {
+                        let rl = *release.get(&s).unwrap_or(&0.0);
+                        let pr = *prio.get(&s).unwrap_or(&0.0);
+                        let mut ctx = core.ctx(&[]);
+                        keys.insert(s, policy.order(&mut ctx, dag.task(s), rl, pr));
+                    }
+                    ready.push(s);
                 }
             }
         }
     }
 
-    while let Some(HeapItem { id, .. }) = ready.pop() {
-        let rel = *release.get(&id).unwrap_or(&0.0);
-        let t = dag.task(id).clone();
+    OnlineResult { schedule: core.finish(), dag, splits }
+}
 
-        // ---- local split decision (the constructive move) ----
-        let edge = t.char_edge().round() as u32;
-        let mut split_edge = None;
-        if t.depth < cfg.max_depth + dag.task(dag.root).depth
-            && parts.can_partition(t.kind)
-            && edge / 2 >= cfg.min_edge
-        {
-            let eps = 1e-12;
-            let idle: Vec<usize> = (0..machine.n_procs()).filter(|&p| proc_avail[p] <= rel + eps).collect();
-            if idle.len() >= 2 {
-                // projected finish unsplit on the best processor
-                let unsplit = (0..machine.n_procs())
-                    .map(|p| {
-                        proc_avail[p].max(rel) + db.time(machine.procs[p].ptype, t.kind, edge as f64, t.flops)
-                    })
-                    .fold(f64::INFINITY, f64::min);
-                let s_target = ((idle.len() as f64).sqrt().ceil() as u32).max(2);
-                if let Some(sub) = snap_sub_edge(edge, edge as f64 / s_target as f64, cfg.min_edge) {
-                    // projected finish split across the idle processors
-                    let rate: f64 =
-                        idle.iter().map(|&p| db.curve(machine.procs[p].ptype, t.kind).gflops(sub as f64)).sum();
-                    let est = rel + t.flops / (rate * 1e9);
-                    if est < unsplit * cfg.gain_factor {
-                        split_edge = Some(sub);
-                    }
-                }
-            }
-        }
-
-        if let Some(sub) = split_edge {
-            if let Some(children) = parts.apply(&mut dag, id, sub) {
-                splits += 1;
-                // derive cluster-internal edges from the children's specs
-                let specs: Vec<TaskSpec> = children
-                    .iter()
-                    .map(|&c| {
-                        let ct = dag.task(c);
-                        TaskSpec::new(ct.kind, ct.reads.clone(), ct.writes.clone())
-                    })
-                    .collect();
-                let edges = internal_edges(&specs);
-                cluster_left.insert(id, children.len());
-                // the parent's priority is inherited; FCFS keys use release
-                let p_prio = *prio.get(&id).unwrap_or(&0.0);
-                for (ci, &c) in children.iter().enumerate() {
-                    cluster_parent.insert(c, id);
-                    indeg.insert(c, edges.preds[ci].len());
-                    succs.insert(c, edges.succs[ci].iter().map(|&j| children[j]).collect());
-                    release.insert(c, rel);
-                    prio.insert(c, p_prio);
-                    if edges.preds[ci].is_empty() {
-                        let mut ctx = SchedContext {
-                            machine,
-                            db,
-                            proc_avail: &proc_avail,
-                            link_busy: &link_busy,
-                            coh: &mut coh,
-                            rng: &mut rng,
-                            successors: &[],
-                        };
-                        let key = policy.order(&mut ctx, dag.task(c), rel, p_prio);
-                        ready.push(HeapItem { key, id: c });
-                    }
-                }
-                continue; // the parent dispatches via its children
-            }
-        }
-
-        // ---- dispatch (same machinery as the engine) ----
-        let proc = {
-            // successor tasks materialize only for lookahead-style policies
-            let succ_tasks: Vec<&Task> = if policy.wants_successors() {
-                succs
-                    .get(&id)
-                    .map(|v| v.iter().filter(|&&s| dag.is_live(s)).map(|&s| dag.task(s)).collect())
-                    .unwrap_or_default()
+/// Index into `ready` of the task with the largest decision-time policy
+/// key (ties toward the smaller task id — creation order tracks program
+/// order for the dynamic DAG). Same selection semantics as the offline
+/// engine via [`pick_best`]; static-key policies read the key cached at
+/// release time.
+#[allow(clippy::too_many_arguments)]
+fn pop_best_online(
+    core: &mut EventCore<'_>,
+    policy: &mut dyn SchedPolicy,
+    dag: &TaskDag,
+    ready: &[usize],
+    release: &FxHashMap<usize, f64>,
+    prio: &FxHashMap<usize, f64>,
+    keys: &FxHashMap<usize, f64>,
+) -> Option<usize> {
+    let dynamic = policy.dynamic_order();
+    pick_best(
+        ready.len(),
+        |i| {
+            let id = ready[i];
+            if dynamic {
+                let rl = *release.get(&id).unwrap_or(&0.0);
+                let pr = *prio.get(&id).unwrap_or(&0.0);
+                let mut ctx = core.ctx(&[]);
+                policy.order(&mut ctx, dag.task(id), rl, pr)
             } else {
-                Vec::new()
-            };
-            let mut ctx = SchedContext {
-                machine,
-                db,
-                proc_avail: &proc_avail,
-                link_busy: &link_busy,
-                coh: &mut coh,
-                rng: &mut rng,
-                successors: &succ_tasks,
-            };
-            policy.select(&mut ctx, &t, rel)
-        };
-        let space = machine.procs[proc].space;
-        let mut data_ready = rel;
-        for r in &t.reads {
-            let block = coh.register(*r);
-            for tr in coh.read_plan(block, space) {
-                let mut at = rel;
-                let (mut first, mut last) = (f64::INFINITY, rel);
-                for lid in machine.route(tr.from, tr.to) {
-                    let l = &machine.links[lid];
-                    let s = at.max(link_busy[lid]);
-                    let e = s + l.latency + tr.bytes as f64 / l.bandwidth;
-                    link_busy[lid] = e;
-                    first = first.min(s);
-                    last = e;
-                    at = e;
-                }
-                data_ready = data_ready.max(last);
-                sched.transfers.push(TransferRecord { from: tr.from, to: tr.to, bytes: tr.bytes, start: first, end: last });
-                sched.transfer_bytes += tr.bytes;
-                coh.complete_read(tr.block, tr.to);
+                *keys.get(&id).unwrap_or(&0.0)
             }
-            coh.complete_read(block, space);
-        }
-        let start = proc_avail[proc].max(data_ready);
-        let end = start + db.time(machine.procs[proc].ptype, t.kind, t.char_edge(), t.flops);
-        proc_avail[proc] = end;
-        sched.proc_busy[proc] += end - start;
-        sched.assignments.push(Assignment { task: id, pos: sched.assignments.len(), proc, release: rel, start, end });
-        for w in &t.writes {
-            let block = coh.register(*w);
-            let _ = coh.complete_write(block, space);
-        }
-        let mut newly_ready = Vec::new();
-        complete(id, end, &succs, &mut indeg, &mut release, &mut cluster_left, &cluster_parent, &mut newly_ready);
-        for s in newly_ready {
-            let rl = *release.get(&s).unwrap_or(&0.0);
-            let pr = *prio.get(&s).unwrap_or(&0.0);
-            let mut ctx = SchedContext {
-                machine,
-                db,
-                proc_avail: &proc_avail,
-                link_busy: &link_busy,
-                coh: &mut coh,
-                rng: &mut rng,
-                successors: &[],
-            };
-            let key = policy.order(&mut ctx, dag.task(s), rl, pr);
-            ready.push(HeapItem { key, id: s });
-        }
-    }
-
-    let task_end = sched.assignments.iter().map(|a| a.end).fold(0.0f64, f64::max);
-    let xfer_end = sched.transfers.iter().map(|t| t.end).fold(0.0f64, f64::max);
-    sched.makespan = task_end.max(xfer_end);
-    OnlineResult { schedule: sched, dag, splits }
+        },
+        |i| ready[i],
+    )
 }
 
 /// Dependence edges among a cluster's children (sequential stream over
@@ -463,6 +441,26 @@ mod tests {
         // assignment list (each assignment's release <= start)
         for a in &res.schedule.assignments {
             assert!(a.start >= a.release - 1e-12);
+        }
+    }
+
+    #[test]
+    fn online_emits_the_shared_event_log() {
+        // the constructive path runs on the same event core: its schedule
+        // carries the typed event log, one TaskStart/TaskEnd pair per
+        // dispatched leaf
+        let (m, db) = machine();
+        let mut dag = cholesky::root(512);
+        cholesky::partition_uniform(&mut dag, 128);
+        let sim = SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestFinish));
+        let res = schedule_online(&dag, &m, &db, &PartitionerSet::standard(), cfg(sim));
+        let n = res.schedule.assignments.len();
+        let starts = res.schedule.events.iter().filter(|e| matches!(e.kind, EventKind::TaskStart { .. })).count();
+        let ends = res.schedule.events.iter().filter(|e| matches!(e.kind, EventKind::TaskEnd { .. })).count();
+        assert_eq!(starts, n);
+        assert_eq!(ends, n);
+        for w in res.schedule.events.windows(2) {
+            assert!(w[1].time >= w[0].time - 1e-15, "event log out of order");
         }
     }
 }

@@ -98,6 +98,7 @@ mod tests {
             makespan,
             proc_busy: vec![busy0, busy1],
             transfer_bytes: bytes,
+            ..Default::default()
         }
     }
 

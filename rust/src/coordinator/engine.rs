@@ -1,13 +1,26 @@
 //! The discrete-event schedule simulator.
 //!
-//! A list scheduler over the frontier DAG: tasks are released when all
-//! predecessors are scheduled, ordered and mapped to processors by a
-//! [`SchedPolicy`] (the pluggable policy layer — see
-//! [`super::policy`]). Data movement is simulated explicitly: reads that
-//! miss in the processor's memory space issue (pre)fetch transfers over
-//! the interconnect with per-link queuing, and writes update the coherence
-//! state per the caching policy (WB/WT/WA), possibly generating
-//! write-through/write-back traffic.
+//! A list scheduler over the frontier DAG, driven by a **typed event
+//! queue** and a global clock. Scheduling decisions happen in simulated
+//! -time order: when the clock reaches a task's release (the `TaskEnd`
+//! of its last predecessor), the ready set is dispatched by a
+//! [`SchedPolicy`] with ordering keys **recomputed at decision time** —
+//! a policy always sees current processor/link occupancy, never the
+//! state at push time.
+//!
+//! Resources are modeled as [`Timeline`]s — bookable interval sets, not
+//! scalar high-water marks. Data movement is simulated explicitly: reads
+//! that miss in the processor's memory space issue fetch transfers over
+//! the interconnect with per-link queuing resolved in simulated-time
+//! order, and transfers may *backfill* idle link windows left open by
+//! earlier bookings. Write effects (coherence updates per the WB/WT/WA
+//! caching policy, plus their backflow traffic) are applied when the
+//! `TaskEnd` event fires, not when the decision is taken.
+//!
+//! The same event core ([`EventCore`]) also powers schedule replay
+//! ([`simulate_mapped`]) and the constructive online scheduler
+//! ([`super::constructive`]), so all three paths share one clock and one
+//! commit path.
 //!
 //! Entry points come in pairs: the legacy enum-configured ones
 //! ([`simulate`], [`simulate_flat`], [`simulate_mapped`]) construct the
@@ -15,11 +28,12 @@
 //! `_policy` variants take any `&mut dyn SchedPolicy`.
 
 use super::coherence::{CachePolicy, Coherence, SpaceId, Transfer};
+use super::datadag::BlockId;
 use super::ordering::critical_times;
 use super::perfmodel::PerfDb;
-use super::platform::{Machine, ProcId};
+use super::platform::{Machine, ProcId, Timeline};
 use super::policies::{Ordering, ProcSelect, SchedConfig};
-use super::policy::{self, SchedContext, SchedPolicy};
+use super::policy::{self, ArrivalTable, SchedContext, SchedPolicy};
 use super::task::{Task, TaskId};
 use super::taskdag::{FlatDag, TaskDag};
 use crate::util::rng::Rng;
@@ -89,6 +103,30 @@ pub struct Assignment {
     pub end: f64,
 }
 
+/// A typed occurrence in simulated time — the currency of the event
+/// queue, and (via [`Schedule::events`]) the time-ordered trace the
+/// simulation emits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// A transfer began occupying its first link.
+    TransferStart { from: SpaceId, to: SpaceId, bytes: u64 },
+    /// A transfer's payload arrived in the destination space.
+    TransferEnd { from: SpaceId, to: SpaceId, bytes: u64 },
+    /// A task began executing.
+    TaskStart { task: TaskId, proc: ProcId },
+    /// A task finished; its write effects apply at this instant.
+    TaskEnd { task: TaskId, proc: ProcId },
+    /// A processor ran out of booked work.
+    ProcIdle { proc: ProcId },
+}
+
+/// An [`EventKind`] stamped with its simulated time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimEvent {
+    pub time: f64,
+    pub kind: EventKind,
+}
+
 /// The simulation result.
 #[derive(Debug, Clone, Default)]
 pub struct Schedule {
@@ -100,6 +138,9 @@ pub struct Schedule {
     pub proc_busy: Vec<f64>,
     /// Total bytes moved between memory spaces.
     pub transfer_bytes: u64,
+    /// The full time-ordered event log the run emitted
+    /// (`TaskStart`/`TaskEnd`/`TransferStart`/`TransferEnd`/`ProcIdle`).
+    pub events: Vec<SimEvent>,
 }
 
 impl Schedule {
@@ -169,6 +210,330 @@ pub fn simulate_mapped(dag: &TaskDag, machine: &Machine, db: &PerfDb, cfg: SimCo
     run(dag, machine, db, cfg, Some(mapping), None, p.as_mut())
 }
 
+/// A queued event: `(time, seq)` orders the queue (seq = push order, so
+/// simultaneous events pop FIFO and runs are deterministic). `key` is the
+/// caller's task handle (frontier position offline, task id online),
+/// meaningful only for `TaskEnd`.
+#[derive(Debug, Clone, Copy)]
+struct QEvent {
+    time: f64,
+    seq: u64,
+    key: usize,
+    kind: EventKind,
+}
+
+impl PartialEq for QEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for QEvent {}
+impl PartialOrd for QEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QEvent {
+    // reversed: BinaryHeap is a max-heap, we want the earliest event first
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.time.total_cmp(&self.time).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The shared discrete-event core: global clock, typed event queue,
+/// per-processor and per-link [`Timeline`]s, coherence state and the
+/// schedule under construction. The offline engine, replay and the
+/// constructive online scheduler are all loops over this one struct —
+/// they differ only in graph bookkeeping (who becomes ready when).
+pub(crate) struct EventCore<'a> {
+    pub machine: &'a Machine,
+    pub db: &'a PerfDb,
+    /// The global clock: the time of the event batch being processed
+    /// (and of every scheduling decision taken in the current round).
+    pub now: f64,
+    queue: std::collections::BinaryHeap<QEvent>,
+    seq: u64,
+    /// Per-processor booked execution windows.
+    pub procs: Vec<Timeline>,
+    /// Per-link booked transfer windows.
+    pub links: Vec<Timeline>,
+    pub coh: Coherence,
+    pub rng: Rng,
+    pub sched: Schedule,
+    /// Physical arrival time of committed-but-in-flight blocks per
+    /// destination space. Coherence validity flips at commit time (so a
+    /// second reader of the same block does not double-fetch it), but a
+    /// task reading a block another decision is still transferring must
+    /// wait for the bytes, not the bookkeeping. Estimates see the same
+    /// table through [`SchedContext::arrivals`].
+    arrivals: ArrivalTable,
+    /// `(went-idle-at, proc)` candidates from popped `TaskEnd` events.
+    /// `ProcIdle` emission is deferred until after the decision round at
+    /// that timestamp, so a processor immediately re-booked at the same
+    /// instant does not log a spurious idle transition.
+    idle_candidates: Vec<(f64, ProcId)>,
+}
+
+impl<'a> EventCore<'a> {
+    pub fn new(machine: &'a Machine, db: &'a PerfDb, cfg: SimConfig) -> EventCore<'a> {
+        EventCore {
+            machine,
+            db,
+            now: 0.0,
+            queue: std::collections::BinaryHeap::new(),
+            seq: 0,
+            procs: vec![Timeline::new(); machine.n_procs()],
+            links: vec![Timeline::new(); machine.links.len()],
+            coh: Coherence::new(machine.spaces.len(), machine.main_space, cfg.cache, machine.capacities(), cfg.elem_bytes),
+            rng: Rng::new(cfg.seed),
+            sched: Schedule { proc_busy: vec![0.0; machine.n_procs()], ..Default::default() },
+            arrivals: ArrivalTable::default(),
+            idle_candidates: Vec::new(),
+        }
+    }
+
+    /// A decision-time view for policy dispatch. Constructed fresh per
+    /// call; never stored.
+    pub fn ctx<'s>(&'s mut self, successors: &'s [&'s Task]) -> SchedContext<'s> {
+        SchedContext {
+            machine: self.machine,
+            db: self.db,
+            now: self.now,
+            procs: &self.procs,
+            links: &self.links,
+            arrivals: &self.arrivals,
+            coh: &mut self.coh,
+            rng: &mut self.rng,
+            successors,
+        }
+    }
+
+    fn push_event(&mut self, time: f64, key: usize, kind: EventKind) {
+        self.seq += 1;
+        self.queue.push(QEvent { time, seq: self.seq, key, kind });
+    }
+
+    /// Book `bytes` along the route `from -> to`, each hop in the
+    /// earliest fitting window at or after `at` (gap backfill). Returns
+    /// `(start of first hop, end of last hop)`. Panics — via
+    /// [`Machine::route`] — if the spaces are distinct but disconnected;
+    /// callers must never pass `from == to`.
+    fn book_route(&mut self, from: SpaceId, to: SpaceId, bytes: u64, at: f64) -> (f64, f64) {
+        debug_assert_ne!(from, to, "same-space transfers are no-ops, not bookings");
+        let route = self.machine.route(from, to);
+        assert!(!route.is_empty(), "empty route between distinct spaces {from} and {to}");
+        let mut t = at;
+        let mut first = f64::INFINITY;
+        for lid in route {
+            let l = &self.machine.links[lid];
+            let dur = l.latency + bytes as f64 / l.bandwidth;
+            let s = self.links[lid].earliest_fit(t, dur);
+            self.links[lid].book(s, dur);
+            if first.is_infinite() {
+                first = s;
+            }
+            t = s + dur;
+        }
+        (first, t)
+    }
+
+    fn record_transfer(&mut self, from: SpaceId, to: SpaceId, bytes: u64, start: f64, end: f64) {
+        debug_assert!(start.is_finite() && end >= start, "malformed transfer record");
+        self.sched.transfers.push(TransferRecord { from, to, bytes, start, end });
+        self.sched.transfer_bytes += bytes;
+        self.push_event(start, usize::MAX, EventKind::TransferStart { from, to, bytes });
+        self.push_event(end, usize::MAX, EventKind::TransferEnd { from, to, bytes });
+    }
+
+    fn note_arrival(&mut self, block: BlockId, space: SpaceId, at: f64) {
+        let slot = self.arrivals.entry((block, space)).or_insert(at);
+        *slot = slot.max(at);
+    }
+
+    /// Charge write-through/write-back/eviction traffic on the
+    /// interconnect starting at `at` (it does not delay the issuing task,
+    /// but occupies link windows and counts toward transfer volume).
+    fn charge_background(&mut self, at: f64, transfers: &[Transfer]) {
+        for tr in transfers {
+            if tr.from == tr.to {
+                continue; // same-space: explicit no-op
+            }
+            let (start, end) = self.book_route(tr.from, tr.to, tr.bytes, at);
+            self.record_transfer(tr.from, tr.to, tr.bytes, start, end);
+            self.note_arrival(tr.block, tr.to, end);
+        }
+    }
+
+    /// Commit a dispatch decision taken at time `rel` (== `self.now`):
+    /// book the task's input transfers (backfilling idle link windows),
+    /// book execution in the earliest fitting window of `proc`, and push
+    /// the `TransferStart`/`TransferEnd`/`TaskStart`/`TaskEnd` events.
+    /// `key` is the caller's handle, returned with the `TaskEnd` event.
+    /// Write effects are NOT applied here — they happen when `TaskEnd`
+    /// fires (see [`EventCore::apply_writes`]). Returns `(start, end)`.
+    pub fn commit(&mut self, task: &Task, key: usize, proc: ProcId, rel: f64) -> (f64, f64) {
+        let space = self.machine.procs[proc].space;
+        let (_, planned) =
+            policy::plan_reads(self.machine, &self.links, &mut self.coh, &self.arrivals, task, space, rel);
+        let mut data_ready = rel;
+        let mut fetched_parents: Vec<BlockId> = Vec::new();
+        for (parent, tr) in planned {
+            if tr.from == tr.to {
+                continue; // data already local: explicit no-op
+            }
+            let (start, end) = self.book_route(tr.from, tr.to, tr.bytes, rel);
+            data_ready = data_ready.max(end);
+            self.record_transfer(tr.from, tr.to, tr.bytes, start, end);
+            self.note_arrival(tr.block, tr.to, end);
+            let evict = self.coh.complete_read(tr.block, tr.to);
+            self.charge_background(end, &evict);
+            if tr.block != parent && !fetched_parents.contains(&parent) {
+                fetched_parents.push(parent);
+            }
+        }
+        // a reassembled coarse block is fully present once all fragments land
+        for parent in fetched_parents {
+            let evict = self.coh.complete_read(parent, space);
+            self.note_arrival(parent, space, data_ready);
+            self.charge_background(data_ready, &evict);
+        }
+        // blocks already valid here but still physically in flight (fetched
+        // by an earlier decision, arriving later) gate the start too — the
+        // same gate the estimate path applies inside plan_reads
+        data_ready = policy::arrival_gate(&mut self.coh, &self.arrivals, task, space, data_ready);
+        let dur = self.db.time(self.machine.procs[proc].ptype, task.kind, task.char_edge(), task.flops);
+        let start = self.procs[proc].earliest_fit(data_ready, dur);
+        self.procs[proc].book(start, dur);
+        let end = start + dur;
+        self.sched.proc_busy[proc] += end - start;
+        self.push_event(start, usize::MAX, EventKind::TaskStart { task: task.id, proc });
+        self.push_event(end, key, EventKind::TaskEnd { task: task.id, proc });
+        (start, end)
+    }
+
+    /// Apply `task`'s write effects at its `TaskEnd` time `end`:
+    /// coherence invalidation/validation per the caching policy, plus
+    /// any backflow traffic (write-through pushes, write-around streams,
+    /// evictions) charged on the interconnect from `end`.
+    pub fn apply_writes(&mut self, task: &Task, proc: ProcId, end: f64) {
+        let space = self.machine.procs[proc].space;
+        for w in task.writes.iter() {
+            let block = self.coh.register(*w);
+            let extra = self.coh.complete_write(block, space);
+            self.charge_background(end, &extra);
+        }
+    }
+
+    /// Advance the clock to the next pending event and drain every event
+    /// at that timestamp into `batch` (in push order). A `TaskEnd` whose
+    /// processor has no further booked work marks an idle *candidate*;
+    /// the `ProcIdle` event is emitted on the next call — i.e. after the
+    /// decision round at that timestamp — and only if the processor was
+    /// not re-booked in the meantime, so a busy chain does not log
+    /// spurious idle transitions. Returns `false` when the queue is
+    /// empty (the simulation is over).
+    pub fn pop_event_batch(&mut self, batch: &mut Vec<(usize, EventKind)>) -> bool {
+        batch.clear();
+        // flush idle candidates from the previous batch: still nothing
+        // booked after their idle instant means the processor truly idled
+        for (at, proc) in std::mem::take(&mut self.idle_candidates) {
+            if !self.procs[proc].busy_after(at) {
+                self.push_event(at, usize::MAX, EventKind::ProcIdle { proc });
+            }
+        }
+        let Some(head) = self.queue.peek() else {
+            return false;
+        };
+        let t = head.time;
+        debug_assert!(t >= self.now, "event clock went backwards");
+        self.now = t;
+        while let Some(head) = self.queue.peek() {
+            if head.time > t {
+                break;
+            }
+            let ev = self.queue.pop().expect("peeked");
+            self.sched.events.push(SimEvent { time: ev.time, kind: ev.kind });
+            if let EventKind::TaskEnd { proc, .. } = ev.kind {
+                if !self.procs[proc].busy_after(t) {
+                    self.idle_candidates.push((t, proc));
+                }
+            }
+            batch.push((ev.key, ev.kind));
+        }
+        true
+    }
+
+    /// Close out: compute the makespan (tasks and trailing transfers both
+    /// count) and hand over the schedule.
+    pub fn finish(mut self) -> Schedule {
+        let task_end = self.sched.assignments.iter().map(|a| a.end).fold(0.0f64, f64::max);
+        let xfer_end = self.sched.transfers.iter().map(|t| t.end).fold(0.0f64, f64::max);
+        self.sched.makespan = task_end.max(xfer_end);
+        self.sched
+    }
+}
+
+/// The decision-time selection scan shared by the offline and online
+/// loops: index of the entry (of `n`) with the largest key, ties broken
+/// toward the smaller `ord_of` value (frontier position offline, task id
+/// online — both track program order). `key_of` is consulted fresh for
+/// every entry on every pick, which is what makes ordering keys
+/// decision-time state for dynamic policies.
+pub(crate) fn pick_best(
+    n: usize,
+    mut key_of: impl FnMut(usize) -> f64,
+    ord_of: impl Fn(usize) -> usize,
+) -> Option<usize> {
+    let mut best: Option<(usize, f64, usize)> = None; // (index, key, ord)
+    for i in 0..n {
+        let key = key_of(i);
+        let o = ord_of(i);
+        let better = match best {
+            None => true,
+            Some((_, bk, bo)) => match key.total_cmp(&bk) {
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Equal => o < bo,
+                std::cmp::Ordering::Less => false,
+            },
+        };
+        if better {
+            best = Some((i, key, o));
+        }
+    }
+    best.map(|(i, _, _)| i)
+}
+
+/// Pick the ready task with the largest policy key (ties toward the
+/// smaller frontier position, i.e. program order) and remove it.
+/// Dynamic-order policies are re-keyed against live state on every pick;
+/// static-key policies use the key cached when the task was released.
+#[allow(clippy::too_many_arguments)]
+fn pop_best(
+    core: &mut EventCore<'_>,
+    policy: &mut dyn SchedPolicy,
+    dag: &TaskDag,
+    flat: &FlatDag,
+    ready: &[usize],
+    release: &[f64],
+    prio: &[f64],
+    keys: &[f64],
+) -> Option<usize> {
+    let dynamic = policy.dynamic_order();
+    pick_best(
+        ready.len(),
+        |i| {
+            let pos = ready[i];
+            if dynamic {
+                let mut ctx = core.ctx(&[]);
+                policy.order(&mut ctx, dag.task(flat.tasks[pos]), release[pos], prio[pos])
+            } else {
+                keys[pos]
+            }
+        },
+        |i| ready[i],
+    )
+}
+
 fn run(
     dag: &TaskDag,
     machine: &Machine,
@@ -190,8 +555,6 @@ fn run(
     if let Some(m) = forced {
         assert_eq!(m.len(), n, "mapping length != frontier size");
     }
-    let mut rng = Rng::new(cfg.seed);
-    let mut coh = Coherence::new(machine.spaces.len(), machine.main_space, cfg.cache, machine.capacities(), cfg.elem_bytes);
 
     // backflow critical times, computed only for policies that order by
     // them (the PL family); FCFS-like policies skip the O(V+E) pass
@@ -201,188 +564,78 @@ fn run(
         vec![0.0; n]
     };
 
-    // max-heap over policy-provided ordering keys (FCFS pushes -release so
-    // the earliest release pops first, PL pushes the critical time); ties
-    // break toward the smaller frontier position (program order).
-    #[derive(PartialEq)]
-    struct HeapItem {
-        key: f64,
-        pos: usize,
-    }
-    impl Eq for HeapItem {}
-    impl PartialOrd for HeapItem {
-        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-            Some(self.cmp(other))
-        }
-    }
-    impl Ord for HeapItem {
-        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-            self.key.total_cmp(&other.key).then(other.pos.cmp(&self.pos))
-        }
-    }
+    let mut core = EventCore::new(machine, db, cfg);
+    core.sched.assignments = vec![
+        Assignment { task: 0, pos: 0, proc: 0, release: 0.0, start: 0.0, end: 0.0 };
+        n
+    ];
 
     let mut indeg: Vec<usize> = flat.preds.iter().map(|p| p.len()).collect();
     let mut release = vec![0.0f64; n];
-
-    let mut proc_avail = vec![0.0f64; machine.n_procs()];
-    let mut link_busy = vec![0.0f64; machine.links.len()];
-    let mut done_at = vec![0.0f64; n];
-
-    let mut ready: std::collections::BinaryHeap<HeapItem> = std::collections::BinaryHeap::new();
-    for i in 0..n {
-        if indeg[i] == 0 {
-            let mut ctx = SchedContext {
-                machine,
-                db,
-                proc_avail: &proc_avail,
-                link_busy: &link_busy,
-                coh: &mut coh,
-                rng: &mut rng,
-                successors: &[],
-            };
-            let key = policy.order(&mut ctx, dag.task(flat.tasks[i]), 0.0, prio[i]);
-            ready.push(HeapItem { key, pos: i });
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut batch: Vec<(usize, EventKind)> = Vec::new();
+    // static-key policies are keyed once, when the task is released
+    let static_keys = !policy.dynamic_order();
+    let mut keys = vec![0.0f64; n];
+    if static_keys {
+        for &pos in &ready {
+            let mut ctx = core.ctx(&[]);
+            keys[pos] = policy.order(&mut ctx, dag.task(flat.tasks[pos]), release[pos], prio[pos]);
         }
     }
 
-    let mut sched = Schedule {
-        assignments: vec![
-            Assignment { task: 0, pos: 0, proc: 0, release: 0.0, start: 0.0, end: 0.0 };
-            n
-        ],
-        proc_busy: vec![0.0; machine.n_procs()],
-        ..Default::default()
-    };
-
-    let exec_time = |pos: usize, proc: ProcId| -> f64 {
-        let t = dag.task(flat.tasks[pos]);
-        db.time(machine.procs[proc].ptype, t.kind, t.char_edge(), t.flops)
-    };
-
-    while let Some(HeapItem { pos, .. }) = ready.pop() {
-        let rel = release[pos];
-
-        // ---- choose a processor (policy dispatch) ----
-        let proc: ProcId = if let Some(m) = forced {
-            m[pos]
-        } else {
-            // successor tasks materialize only for lookahead-style
-            // policies — dispatch is a hot path
-            let succ_tasks: Vec<&Task> = if policy.wants_successors() {
-                flat.succs[pos].iter().map(|&s| dag.task(flat.tasks[s])).collect()
+    loop {
+        // ---- decision round: dispatch everything ready at `core.now`,
+        // recomputing dynamic ordering keys between picks ----
+        loop {
+            let Some(i) = pop_best(&mut core, policy, dag, flat, &ready, &release, &prio, &keys) else {
+                break;
+            };
+            let pos = ready.swap_remove(i);
+            let rel = release[pos];
+            let task = dag.task(flat.tasks[pos]);
+            let proc: ProcId = if let Some(m) = forced {
+                m[pos]
             } else {
-                Vec::new()
-            };
-            let mut ctx = SchedContext {
-                machine,
-                db,
-                proc_avail: &proc_avail,
-                link_busy: &link_busy,
-                coh: &mut coh,
-                rng: &mut rng,
-                successors: &succ_tasks,
-            };
-            policy.select(&mut ctx, dag.task(flat.tasks[pos]), rel)
-        };
-
-        // ---- commit transfers + execution ----
-        // plan through the same shared model the policy estimates used
-        let space = machine.procs[proc].space;
-        let (_, planned) =
-            policy::plan_reads(machine, &link_busy, &mut coh, dag.task(flat.tasks[pos]), space, rel);
-        let mut data_ready = rel;
-        let mut fetched_parents: Vec<usize> = Vec::new();
-        for (parent, tr) in planned {
-            let mut at = rel;
-            let route = machine.route(tr.from, tr.to);
-            let (mut first_start, mut last_end) = (f64::INFINITY, rel);
-            for lid in route {
-                let l = &machine.links[lid];
-                let s = at.max(link_busy[lid]);
-                let e = s + l.latency + tr.bytes as f64 / l.bandwidth;
-                link_busy[lid] = e;
-                first_start = first_start.min(s);
-                last_end = e;
-                at = e;
-            }
-            data_ready = data_ready.max(last_end);
-            sched.transfers.push(TransferRecord { from: tr.from, to: tr.to, bytes: tr.bytes, start: first_start, end: last_end });
-            sched.transfer_bytes += tr.bytes;
-            let evict = coh.complete_read(tr.block, tr.to);
-            charge_background(machine, &mut link_busy, &mut sched, last_end, &evict);
-            if tr.block != parent && !fetched_parents.contains(&parent) {
-                fetched_parents.push(parent);
-            }
-        }
-        // a reassembled coarse block is now fully present in `space`
-        for parent in fetched_parents {
-            let evict = coh.complete_read(parent, space);
-            charge_background(machine, &mut link_busy, &mut sched, data_ready, &evict);
-        }
-
-        let start = proc_avail[proc].max(data_ready);
-        let end = start + exec_time(pos, proc);
-        proc_avail[proc] = end;
-        done_at[pos] = end;
-        sched.proc_busy[proc] += end - start;
-        sched.assignments[pos] = Assignment { task: flat.tasks[pos], pos, proc, release: rel, start, end };
-
-        // write effects at task end
-        let t = dag.task(flat.tasks[pos]);
-        let writes: Vec<_> = t.writes.clone();
-        for w in writes {
-            let block = coh.register(w);
-            let extra = coh.complete_write(block, space);
-            charge_background(machine, &mut link_busy, &mut sched, end, &extra);
-        }
-
-        // release successors
-        for &s in &flat.succs[pos] {
-            indeg[s] -= 1;
-            release[s] = release[s].max(end);
-            if indeg[s] == 0 {
-                let mut ctx = SchedContext {
-                    machine,
-                    db,
-                    proc_avail: &proc_avail,
-                    link_busy: &link_busy,
-                    coh: &mut coh,
-                    rng: &mut rng,
-                    successors: &[],
+                // successor tasks materialize only for lookahead-style
+                // policies — dispatch is a hot path
+                let succ_tasks: Vec<&Task> = if policy.wants_successors() {
+                    flat.succs[pos].iter().map(|&s| dag.task(flat.tasks[s])).collect()
+                } else {
+                    Vec::new()
                 };
-                let key = policy.order(&mut ctx, dag.task(flat.tasks[s]), release[s], prio[s]);
-                ready.push(HeapItem { key, pos: s });
+                let mut ctx = core.ctx(&succ_tasks);
+                policy.select(&mut ctx, task, rel)
+            };
+            let (start, end) = core.commit(task, pos, proc, rel);
+            core.sched.assignments[pos] =
+                Assignment { task: flat.tasks[pos], pos, proc, release: rel, start, end };
+        }
+
+        // ---- advance the clock to the next event batch ----
+        if !core.pop_event_batch(&mut batch) {
+            break;
+        }
+        for &(key, kind) in &batch {
+            if let EventKind::TaskEnd { proc, .. } = kind {
+                let pos = key;
+                core.apply_writes(dag.task(flat.tasks[pos]), proc, core.now);
+                for &s in &flat.succs[pos] {
+                    indeg[s] -= 1;
+                    release[s] = release[s].max(core.now);
+                    if indeg[s] == 0 {
+                        if static_keys {
+                            let mut ctx = core.ctx(&[]);
+                            keys[s] = policy.order(&mut ctx, dag.task(flat.tasks[s]), release[s], prio[s]);
+                        }
+                        ready.push(s);
+                    }
+                }
             }
         }
     }
 
-    let task_end = sched.assignments.iter().map(|a| a.end).fold(0.0f64, f64::max);
-    let xfer_end = sched.transfers.iter().map(|t| t.end).fold(0.0f64, f64::max);
-    sched.makespan = task_end.max(xfer_end);
-    sched
-}
-
-/// Charge write-through/write-back/eviction traffic on the interconnect
-/// (it does not delay the issuing task, but occupies links and counts
-/// toward transfer volume).
-fn charge_background(machine: &Machine, link_busy: &mut [f64], sched: &mut Schedule, at: f64, transfers: &[Transfer]) {
-    for tr in transfers {
-        let mut t = at;
-        let (mut first_start, mut last_end) = (f64::INFINITY, at);
-        for lid in machine.route(tr.from, tr.to) {
-            let l = &machine.links[lid];
-            let s = t.max(link_busy[lid]);
-            let e = s + l.latency + tr.bytes as f64 / l.bandwidth;
-            link_busy[lid] = e;
-            first_start = first_start.min(s);
-            last_end = e;
-            t = e;
-        }
-        if last_end > at {
-            sched.transfers.push(TransferRecord { from: tr.from, to: tr.to, bytes: tr.bytes, start: first_start, end: last_end });
-            sched.transfer_bytes += tr.bytes;
-        }
-    }
+    core.finish()
 }
 
 #[cfg(test)]
@@ -613,5 +866,217 @@ mod tests {
         let s = simulate(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::Fastest).with_cache(CachePolicy::WriteThrough));
         let last_transfer = s.transfers.iter().map(|t| t.end).fold(0.0f64, f64::max);
         assert!(s.makespan >= last_transfer - 1e-12);
+    }
+
+    // ---- event-core-specific behavior ----
+
+    /// host(1 cpu, 2 GFLOPS) + two GPU spaces (1 proc each, 4 GFLOPS),
+    /// zero-latency 40 MB/s links — transfer of a 100x100 f32 tile takes
+    /// exactly 1 ms per hop, a 50x50 tile 0.25 ms.
+    fn three_space_machine() -> (Machine, PerfDb) {
+        let mut b = MachineBuilder::new("t");
+        let h = b.space("host", u64::MAX);
+        let g0 = b.space("g0", u64::MAX);
+        let g1 = b.space("g1", u64::MAX);
+        b.main(h);
+        b.connect(h, g0, 0.0, 4e7);
+        b.connect(h, g1, 0.0, 4e7);
+        let cpu = b.proc_type("cpu", 1.0, 0.1);
+        let gpu = b.proc_type("gpu", 1.0, 0.1);
+        b.processors(1, "c", cpu, h);
+        b.processors(1, "a", gpu, g0);
+        b.processors(1, "b", gpu, g1);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 2.0 });
+        db.set_fallback(1, PerfCurve::Const { gflops: 4.0 });
+        (m, db)
+    }
+
+    #[test]
+    fn link_contention_serializes_transfers_in_time_order() {
+        // Two independent tasks forced onto the same GPU, each fetching
+        // its own 100x100 tile over the single host->g0 link: the second
+        // transfer queues behind the first with exactly 1 ms of delay.
+        let (m, db) = three_space_machine();
+        let a = reg(0, 100, 0, 100);
+        let a2 = reg(100, 200, 0, 100);
+        let bb = reg(200, 300, 0, 100);
+        let b2 = reg(300, 400, 0, 100);
+        let root = reg(0, 400, 0, 100);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![root], vec![root]));
+        dag.partition(
+            0,
+            vec![
+                TaskSpec::new(TaskKind::Gemm, vec![a], vec![a2]),
+                TaskSpec::new(TaskKind::Gemm, vec![bb], vec![b2]),
+            ],
+            100,
+        );
+        let s = simulate_mapped(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestIdle), &[1, 1]);
+        let hop = 100.0 * 100.0 * 4.0 / 4e7; // 1 ms
+        let exec = GEMM100 / 4e9; // 0.5 ms
+        assert_eq!(s.transfers.len(), 2);
+        let (t0, t1) = (s.transfers[0], s.transfers[1]);
+        assert!((t0.start - 0.0).abs() < 1e-12 && (t0.end - hop).abs() < 1e-12);
+        assert!((t1.start - hop).abs() < 1e-12, "second transfer queues at {}, want {hop}", t1.start);
+        assert!((t1.end - 2.0 * hop).abs() < 1e-12, "queuing delay must be exactly one hop");
+        // each task starts when ITS data is in, not at ready-pop order time
+        assert!((s.assignments[0].start - hop).abs() < 1e-12);
+        assert!((s.assignments[1].start - 2.0 * hop).abs() < 1e-12);
+        assert!((s.makespan - (2.0 * hop + exec)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfers_backfill_idle_link_gaps() {
+        // A two-hop g0->host->g1 transfer decided at t=0.5ms books the
+        // host->g1 link for [1.5ms, 2.5ms). A later decision (t=1.0ms)
+        // moving a small 50x50 tile host->g1 must slot into the idle
+        // [1.0ms, 1.5ms) window — the old high-water-mark accounting
+        // would queue it at 2.5ms and idle the link for 1.5ms.
+        let (m, db) = three_space_machine();
+        let r0 = reg(0, 100, 0, 100);
+        let r1o = reg(100, 200, 0, 100);
+        let rf = reg(200, 300, 0, 100);
+        let rf_sub = reg(200, 250, 0, 50);
+        let r2o = reg(300, 350, 0, 50);
+        let root = reg(0, 350, 0, 100);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![root], vec![root]));
+        dag.partition(
+            0,
+            vec![
+                // producer on g0: writes r0 there (0.5 ms exec)
+                TaskSpec::new(TaskKind::Gemm, vec![], vec![r0]),
+                // consumer on g1: two-hop fetch of r0 after the producer
+                TaskSpec::new(TaskKind::Gemm, vec![r0], vec![r1o]),
+                // filler on the host cpu: writes rf in main (1.0 ms exec)
+                TaskSpec::new(TaskKind::Gemm, vec![], vec![rf]),
+                // late consumer on g1: fetches the 50x50 sub-tile of rf
+                TaskSpec::new(TaskKind::Gemm, vec![rf_sub], vec![r2o]),
+            ],
+            100,
+        );
+        let s = simulate_mapped(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestIdle), &[1, 2, 0, 2]);
+        let ms = 1e-3;
+        // producer [0, 0.5ms); two-hop transfer books g0->h [0.5, 1.5),
+        // h->g1 [1.5, 2.5); consumer runs [2.5, 3.0)
+        let big = s.transfers.iter().find(|t| t.bytes == 40_000).expect("two-hop transfer");
+        assert!((big.start - 0.5 * ms).abs() < 1e-12 && (big.end - 2.5 * ms).abs() < 1e-12);
+        assert!((s.assignments[1].start - 2.5 * ms).abs() < 1e-12);
+        assert!((s.assignments[1].end - 3.0 * ms).abs() < 1e-12);
+        // the 50x50 fetch (decided at 1.0ms) backfills h->g1's idle
+        // [1.0, 1.5) window: 10 KB over 40 MB/s = 0.25 ms
+        let small = s.transfers.iter().find(|t| t.bytes == 10_000).expect("small transfer");
+        assert!(
+            (small.start - 1.0 * ms).abs() < 1e-12 && (small.end - 1.25 * ms).abs() < 1e-12,
+            "small transfer [{}, {}] did not backfill the gap",
+            small.start,
+            small.end
+        );
+        // and its task slots into g1's idle window before the consumer
+        assert!((s.assignments[3].start - 1.25 * ms).abs() < 1e-12);
+        assert!((s.assignments[3].end - (1.25 * ms + 2.0 * 50f64.powi(3) / 4e9)).abs() < 1e-12);
+        assert!((s.makespan - 3.0 * ms).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_space_reads_are_noops_not_transfers() {
+        // A task running in main memory reading main-resident data must
+        // produce zero transfers and zero transfer events (same-space
+        // movement is an explicit no-op, never a free "transfer").
+        let (m, db) = gpu_machine();
+        let dag = chain(2);
+        let s = simulate_mapped(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestIdle), &[0, 0]);
+        assert_eq!(s.transfer_bytes, 0);
+        assert!(s.transfers.is_empty());
+        assert!(!s
+            .events
+            .iter()
+            .any(|e| matches!(e.kind, EventKind::TransferStart { .. } | EventKind::TransferEnd { .. })));
+        // every transfer record the engine ever emits has finite times
+        let (m, db) = three_space_machine();
+        let s = simulate(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestFinish));
+        assert!(s.transfers.iter().all(|t| t.start.is_finite() && t.end.is_finite()));
+    }
+
+    /// An EFT-*ordering* policy (highest priority = earliest finish) that
+    /// records what it observes at key-computation time. Under push-time
+    /// keying it would only ever see empty processors (all tasks are
+    /// released at t=0); decision-time recomputation shows it the
+    /// bookings of earlier picks.
+    struct EftOrdering {
+        order_calls: usize,
+        max_tail_seen: f64,
+    }
+
+    impl SchedPolicy for EftOrdering {
+        fn name(&self) -> &str {
+            "test/eft-ordering"
+        }
+
+        fn order(&mut self, ctx: &mut SchedContext<'_>, task: &Task, release: f64, _ct: f64) -> f64 {
+            self.order_calls += 1;
+            self.max_tail_seen = self.max_tail_seen.max(ctx.proc_avail(0));
+            let (fin, _) = ctx.earliest_finish(task, release);
+            -fin
+        }
+
+        fn select(&mut self, ctx: &mut SchedContext<'_>, task: &Task, release: f64) -> ProcId {
+            ctx.earliest_finish(task, release).1
+        }
+    }
+
+    #[test]
+    fn ready_keys_are_recomputed_at_decision_time() {
+        // 3 equal independent tasks, 1 processor (1 GFLOPS → 2 ms each).
+        // The old engine computed each key once, at push time, when
+        // proc_avail[0] was still 0 for all three; the event core re-keys
+        // the remaining ready set after every pick, so the policy observes
+        // the growing booking tail (2 ms, then 4 ms).
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let t = b.proc_type("cpu", 1.0, 0.1);
+        b.processors(1, "c", t, h);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 1.0 });
+        let dag = independent(3);
+        let mut pol = EftOrdering { order_calls: 0, max_tail_seen: 0.0 };
+        let s = simulate_policy(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestIdle), &mut pol);
+        let per = GEMM100 / 1e9; // 2 ms
+        // re-keying: 3 + 2 + 1 calls, not one per task
+        assert_eq!(pol.order_calls, 6, "keys must be recomputed for the remaining ready set");
+        // at the last pick the policy saw 4 ms of booked work on proc 0
+        assert!(
+            (pol.max_tail_seen - 2.0 * per).abs() < 1e-12,
+            "decision-time proc_avail observed {} (stale push-time state would be 0)",
+            pol.max_tail_seen
+        );
+        assert!((s.makespan - 3.0 * per).abs() < 1e-12);
+    }
+
+    #[test]
+    fn event_log_is_time_ordered_and_complete() {
+        let (m, db) = gpu_machine();
+        let dag = chain(3);
+        let s = simulate(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::Fastest).with_cache(CachePolicy::WriteThrough));
+        // monotone non-decreasing times
+        for w in s.events.windows(2) {
+            assert!(w[1].time >= w[0].time - 1e-15, "event log out of order");
+        }
+        let count = |f: fn(&EventKind) -> bool| s.events.iter().filter(|e| f(&e.kind)).count();
+        assert_eq!(count(|k| matches!(k, EventKind::TaskStart { .. })), 3);
+        assert_eq!(count(|k| matches!(k, EventKind::TaskEnd { .. })), 3);
+        assert_eq!(count(|k| matches!(k, EventKind::TransferStart { .. })), s.transfers.len());
+        assert_eq!(count(|k| matches!(k, EventKind::TransferEnd { .. })), s.transfers.len());
+        assert!(count(|k| matches!(k, EventKind::ProcIdle { .. })) >= 1, "the GPU must go idle at the end");
+        // every TaskStart/TaskEnd pair brackets the matching assignment
+        for a in &s.assignments {
+            assert!(s.events.iter().any(|e| e.kind == EventKind::TaskStart { task: a.task, proc: a.proc }
+                && (e.time - a.start).abs() < 1e-15));
+            assert!(s.events.iter().any(|e| e.kind == EventKind::TaskEnd { task: a.task, proc: a.proc }
+                && (e.time - a.end).abs() < 1e-15));
+        }
     }
 }

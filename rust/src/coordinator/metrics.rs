@@ -73,6 +73,27 @@ pub fn load_trace(sched: &Schedule, samples: usize) -> Vec<(f64, usize)> {
     out
 }
 
+/// Maximum number of simultaneously in-flight transfers, computed from
+/// the typed event log (`TransferStart`/`TransferEnd`). A link-contention
+/// diagnostic the old scalar accounting could not express: under
+/// high-water-mark time the engine never knew *when* transfers
+/// overlapped, only their queue tails.
+pub fn peak_in_flight_transfers(sched: &Schedule) -> usize {
+    use super::engine::EventKind;
+    let (mut cur, mut peak) = (0usize, 0usize);
+    for e in &sched.events {
+        match e.kind {
+            EventKind::TransferStart { .. } => {
+                cur += 1;
+                peak = peak.max(cur);
+            }
+            EventKind::TransferEnd { .. } => cur = cur.saturating_sub(1),
+            _ => {}
+        }
+    }
+    peak
+}
+
 /// Idle fraction during `[t0, t1)` given per-proc busy intervals — used by
 /// the solver to estimate available parallelism around a task.
 pub fn idle_procs_during(sched: &Schedule, n_procs: usize, t0: f64, t1: f64) -> usize {
@@ -136,6 +157,53 @@ mod tests {
         assert!(trace.iter().any(|&(_, a)| a > 0));
         // final stage of cholesky is sequential: last sample lightly loaded
         assert!(trace.last().unwrap().1 <= 2);
+    }
+
+    #[test]
+    fn peak_in_flight_counts_transfer_overlap() {
+        use crate::coordinator::engine::simulate_mapped;
+        use crate::coordinator::region::Region;
+        use crate::coordinator::task::{TaskKind, TaskSpec};
+        use crate::coordinator::taskdag::TaskDag;
+        // host + two GPU spaces over separate links
+        let mut b = MachineBuilder::new("g2");
+        let h = b.space("host", u64::MAX);
+        let g0 = b.space("g0", u64::MAX);
+        let g1 = b.space("g1", u64::MAX);
+        b.main(h);
+        b.connect(h, g0, 0.0, 1e8);
+        b.connect(h, g1, 0.0, 1e8);
+        let cpu = b.proc_type("cpu", 1.0, 0.1);
+        let gpu = b.proc_type("gpu", 1.0, 0.1);
+        b.processors(1, "c", cpu, h);
+        b.processors(1, "a", gpu, g0);
+        b.processors(1, "b", gpu, g1);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 1.0 });
+        db.set_fallback(1, PerfCurve::Const { gflops: 10.0 });
+        // two independent tasks reading disjoint tiles
+        let r0 = Region::new(0, 0, 100, 0, 100);
+        let w0 = Region::new(0, 100, 200, 0, 100);
+        let r1 = Region::new(0, 200, 300, 0, 100);
+        let w1 = Region::new(0, 300, 400, 0, 100);
+        let root = Region::new(0, 0, 400, 0, 100);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![root], vec![root]));
+        dag.partition(
+            0,
+            vec![
+                TaskSpec::new(TaskKind::Gemm, vec![r0], vec![w0]),
+                TaskSpec::new(TaskKind::Gemm, vec![r1], vec![w1]),
+            ],
+            100,
+        );
+        let sim = SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestIdle));
+        // separate GPUs: both fetches run concurrently over their own links
+        let spread = simulate_mapped(&dag, &m, &db, sim, &[1, 2]);
+        assert_eq!(peak_in_flight_transfers(&spread), 2);
+        // same GPU: the shared link serializes the fetches
+        let packed = simulate_mapped(&dag, &m, &db, sim, &[1, 1]);
+        assert_eq!(peak_in_flight_transfers(&packed), 1);
     }
 
     #[test]

@@ -1,13 +1,105 @@
 //! Heterogeneous platform descriptions: memory spaces connected by an
 //! interconnect topology, with a (possibly heterogeneous) set of
 //! processors tied to them (paper §2: the "hardware platform description"
-//! input).
+//! input) — plus the [`Timeline`] booking primitive the event-driven
+//! engine uses to model per-processor and per-link occupancy as *bookable
+//! intervals* instead of scalar high-water marks.
 
 use super::coherence::SpaceId;
 
 pub type ProcId = usize;
 pub type ProcTypeId = usize;
 pub type LinkId = usize;
+
+/// A bookable occupancy timeline for one resource (a processor or an
+/// interconnect link): a sorted list of disjoint busy intervals
+/// `[start, end)`.
+///
+/// Unlike the scalar availability the engine used to keep (`proc_avail`,
+/// `link_busy` high-water marks), a timeline remembers *gaps*: a transfer
+/// decided later in simulated time can still occupy an idle link window
+/// that an earlier decision left open (`earliest_fit` + `book`), and a
+/// task can slot into a processor's idle window before work that was
+/// booked further in the future. The estimate paths
+/// ([`super::policy::plan_reads`], `SchedContext::placement_estimates`)
+/// and the engine's commit path share exactly this arithmetic, so
+/// policy-visible predictions match what gets simulated.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    /// Sorted, disjoint busy intervals `(start, end)` with `start < end`.
+    busy: Vec<(f64, f64)>,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline { busy: Vec::new() }
+    }
+
+    /// End of the last booked interval — the legacy "high-water mark"
+    /// (0.0 when nothing is booked). After this instant the resource is
+    /// free forever.
+    pub fn tail(&self) -> f64 {
+        self.busy.last().map(|&(_, e)| e).unwrap_or(0.0)
+    }
+
+    /// Earliest `start >= ready` such that `[start, start + dur)` lies
+    /// entirely in free time. This is the gap-backfill query: it returns
+    /// the start of the first idle window at or after `ready` wide enough
+    /// for `dur`, falling back to the tail.
+    pub fn earliest_fit(&self, ready: f64, dur: f64) -> f64 {
+        let mut t = ready;
+        // first interval that ends after `t` — everything before is past
+        let start_idx = self.busy.partition_point(|&(_, e)| e <= t);
+        for &(s, e) in &self.busy[start_idx..] {
+            if t + dur <= s {
+                break; // fits in the gap before this interval
+            }
+            t = t.max(e);
+        }
+        t
+    }
+
+    /// Book `[start, start + dur)`. The window must be free (callers
+    /// obtain `start` from [`Timeline::earliest_fit`]); zero-duration
+    /// bookings are no-ops. Adjacent intervals are merged so the list
+    /// stays compact.
+    pub fn book(&mut self, start: f64, dur: f64) {
+        if dur <= 0.0 {
+            return;
+        }
+        let end = start + dur;
+        let i = self.busy.partition_point(|&(s, _)| s < start);
+        debug_assert!(i == 0 || self.busy[i - 1].1 <= start, "booking overlaps previous interval");
+        debug_assert!(i == self.busy.len() || end <= self.busy[i].0, "booking overlaps next interval");
+        let merge_prev = i > 0 && self.busy[i - 1].1 == start;
+        let merge_next = i < self.busy.len() && self.busy[i].0 == end;
+        match (merge_prev, merge_next) {
+            (true, true) => {
+                self.busy[i - 1].1 = self.busy[i].1;
+                self.busy.remove(i);
+            }
+            (true, false) => self.busy[i - 1].1 = end,
+            (false, true) => self.busy[i].0 = start,
+            (false, false) => self.busy.insert(i, (start, end)),
+        }
+    }
+
+    /// Whether the resource has booked work strictly after time `t`
+    /// (an idle-from-`t` test; the event core emits `ProcIdle` with it).
+    pub fn busy_after(&self, t: f64) -> bool {
+        self.tail() > t
+    }
+
+    /// The booked intervals, sorted and disjoint (diagnostics/tests).
+    pub fn intervals(&self) -> &[(f64, f64)] {
+        &self.busy
+    }
+
+    /// Total booked seconds.
+    pub fn booked(&self) -> f64 {
+        self.busy.iter().map(|&(s, e)| e - s).sum()
+    }
+}
 
 /// A finite-size memory space (host DRAM, one GPU's device memory, ...).
 #[derive(Debug, Clone)]
@@ -95,6 +187,9 @@ impl Machine {
             if l.from >= self.spaces.len() || l.to >= self.spaces.len() {
                 return Err(format!("link {} connects unknown spaces", l.id));
             }
+            if l.from == l.to {
+                return Err(format!("link {} is a self-loop on space {}", l.id, l.from));
+            }
             if l.bandwidth <= 0.0 {
                 return Err(format!("link {} has non-positive bandwidth", l.id));
             }
@@ -120,6 +215,13 @@ impl Machine {
     /// Transfer route `from -> to`: the direct link, or a two-hop staging
     /// through main memory (the common PCIe topology where GPU<->GPU moves
     /// bounce through the host).
+    ///
+    /// A same-space "route" is explicitly empty — data is already local
+    /// and the engine treats it as a no-op, never a free transfer.
+    /// *Distinct* spaces with no connecting links are a hard error: a
+    /// disconnected machine cannot silently simulate instantaneous
+    /// transfers (the old engine pushed `TransferRecord`s with
+    /// `start = inf` in that case).
     pub fn route(&self, from: SpaceId, to: SpaceId) -> Vec<LinkId> {
         if from == to {
             return Vec::new();
@@ -130,8 +232,13 @@ impl Machine {
         let up = self.link_between(from, self.main_space);
         let down = self.link_between(self.main_space, to);
         match (up, down) {
-            (Some(a), Some(b)) => vec![a.id, b.id],
-            _ => panic!("no route between spaces {from} and {to}"),
+            (Some(a), Some(b)) if from != self.main_space && to != self.main_space => {
+                vec![a.id, b.id]
+            }
+            _ => panic!(
+                "no route between distinct spaces {from} ({}) and {to} ({}): machine '{}' is disconnected",
+                self.spaces[from].name, self.spaces[to].name, self.name
+            ),
         }
     }
 
@@ -288,6 +395,71 @@ mod tests {
         let m = toy_gpu_machine();
         assert!(m.route(1, 1).is_empty());
         assert_eq!(m.transfer_time(1, 1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "disconnected")]
+    fn route_between_disconnected_spaces_is_a_hard_error() {
+        // hand-built (unvalidated) machine: two spaces, zero links
+        let m = Machine {
+            name: "island".into(),
+            spaces: vec![
+                MemSpace { id: 0, name: "a".into(), capacity: u64::MAX },
+                MemSpace { id: 1, name: "b".into(), capacity: u64::MAX },
+            ],
+            links: vec![],
+            proc_types: vec![ProcType { id: 0, name: "cpu".into(), busy_watts: 1.0, idle_watts: 0.1 }],
+            procs: vec![Processor { id: 0, name: "c0".into(), ptype: 0, space: 0 }],
+            main_space: 0,
+        };
+        let _ = m.route(0, 1);
+    }
+
+    #[test]
+    fn validate_rejects_self_loop_links() {
+        let mut b = MachineBuilder::new("loopy");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let t = b.proc_type("cpu", 1.0, 0.1);
+        b.processors(1, "c", t, h);
+        let mut m = b.build();
+        m.links.push(Link { id: 0, from: h, to: h, latency: 1e-6, bandwidth: 1e9 });
+        assert!(m.validate().unwrap_err().contains("self-loop"));
+    }
+
+    #[test]
+    fn timeline_books_and_backfills_gaps() {
+        let mut tl = Timeline::new();
+        assert_eq!(tl.tail(), 0.0);
+        assert_eq!(tl.earliest_fit(3.0, 2.0), 3.0, "empty timeline starts at ready");
+        tl.book(5.0, 5.0); // busy [5,10)
+        assert_eq!(tl.tail(), 10.0);
+        // a 2s job at ready=1 fits the [_,5) gap
+        assert_eq!(tl.earliest_fit(1.0, 2.0), 1.0);
+        // a 6s job does not: it goes after the tail
+        assert_eq!(tl.earliest_fit(1.0, 6.0), 10.0);
+        // book into the gap, then the remaining gap shrinks
+        tl.book(1.0, 2.0); // busy [1,3) [5,10)
+        assert_eq!(tl.earliest_fit(0.0, 2.0), 3.0, "only [3,5) is left before the tail");
+        assert_eq!(tl.earliest_fit(4.0, 2.0), 10.0, "from 4.0 the [4,5) remnant is too small");
+        assert_eq!(tl.intervals().len(), 2);
+        assert!((tl.booked() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_merges_adjacent_bookings() {
+        let mut tl = Timeline::new();
+        tl.book(0.0, 1.0);
+        tl.book(2.0, 1.0);
+        tl.book(1.0, 1.0); // bridges the two
+        assert_eq!(tl.intervals(), &[(0.0, 3.0)][..]);
+        tl.book(3.0, 1.0); // extends the tail in place
+        assert_eq!(tl.intervals(), &[(0.0, 4.0)][..]);
+        assert!(!tl.busy_after(4.0));
+        assert!(tl.busy_after(3.5));
+        // zero-duration bookings are no-ops
+        tl.book(10.0, 0.0);
+        assert_eq!(tl.intervals(), &[(0.0, 4.0)][..]);
     }
 
     #[test]

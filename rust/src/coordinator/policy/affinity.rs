@@ -10,9 +10,12 @@
 //!
 //! Selection key, minimized lexicographically:
 //! `(pending input bytes into the processor's space, finish time, proc id)`.
-//! On a transfer-heavy DAG this trades some load balance for locality,
-//! cutting `Schedule::transfer_bytes` relative to EFT-P (checked in
-//! `rust/tests/policy_api.rs`).
+//! Both terms come from [`super::SchedContext::placement_estimates`], so
+//! under the event core they are timeline-aware: finish times account for
+//! link queuing resolved in simulated-time order and for idle windows a
+//! task can backfill. On a transfer-heavy DAG this trades some load
+//! balance for locality, cutting `Schedule::transfer_bytes` relative to
+//! EFT-P (checked in `rust/tests/policy_api.rs`).
 
 use crate::coordinator::platform::ProcId;
 use crate::coordinator::task::Task;
@@ -36,6 +39,11 @@ impl SchedPolicy for AffinityPolicy {
 
     fn wants_critical_times(&self) -> bool {
         true
+    }
+
+    // the key is the (static) critical time — no re-keying needed
+    fn dynamic_order(&self) -> bool {
+        false
     }
 
     fn order(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, _release: f64, critical_time: f64) -> f64 {

@@ -39,6 +39,11 @@ impl SchedPolicy for BuiltinPolicy {
         self.cfg.ordering == Ordering::PriorityList
     }
 
+    // both built-in keys are pure functions of (release, critical_time)
+    fn dynamic_order(&self) -> bool {
+        false
+    }
+
     fn order(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, release: f64, critical_time: f64) -> f64 {
         match self.cfg.ordering {
             // earliest release pops first (max-heap → negate)
@@ -71,7 +76,7 @@ impl SchedPolicy for BuiltinPolicy {
                 }
             }
             ProcSelect::EarliestIdle => (0..ctx.n_procs())
-                .min_by(|&a, &b| ctx.proc_avail[a].total_cmp(&ctx.proc_avail[b]).then(a.cmp(&b)))
+                .min_by(|&a, &b| ctx.proc_avail(a).total_cmp(&ctx.proc_avail(b)).then(a.cmp(&b)))
                 .unwrap(),
             ProcSelect::EarliestFinish => ctx.earliest_finish(task, release).1,
         }

@@ -9,8 +9,10 @@
 //!
 //! Selection key, minimized: `finish(task, p) + exec_time(heaviest
 //! immediate successor, p)` — the finish of the chain's next link if it
-//! stayed on the same processor. Tasks without successors degrade to plain
-//! EFT-P exactly.
+//! stayed on the same processor. `finish` comes from the shared
+//! timeline-aware [`super::SchedContext::placement_estimates`] scan
+//! (gap backfill and per-link queuing included). Tasks without
+//! successors degrade to plain EFT-P exactly.
 
 use crate::coordinator::platform::ProcId;
 use crate::coordinator::task::Task;
@@ -38,6 +40,11 @@ impl SchedPolicy for LookaheadEftPolicy {
 
     fn wants_successors(&self) -> bool {
         true
+    }
+
+    // the key is the (static) critical time — no re-keying needed
+    fn dynamic_order(&self) -> bool {
+        false
     }
 
     fn order(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, _release: f64, critical_time: f64) -> f64 {

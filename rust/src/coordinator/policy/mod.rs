@@ -11,9 +11,10 @@
 //!   produces the ready-queue priority key of a task, [`SchedPolicy::select`]
 //!   maps a popped task to a processor.
 //! * [`SchedContext`] — the view of simulator state a policy may consult at
-//!   decision time: per-processor idle times, link queues, the coherence /
-//!   data-placement state, the performance model, and the popped task's
-//!   successor tasks (for lookahead).
+//!   decision time: the event clock (`now`), per-processor and per-link
+//!   occupancy timelines (bookable gaps, not scalar availability), the
+//!   coherence / data-placement state, the performance model, and the
+//!   popped task's successor tasks (for lookahead).
 //! * [`PolicyRegistry`] — string-keyed construction (`"pl/eft-p"`,
 //!   `"pl/affinity"`, ...) so configs, the CLI and benches build policies
 //!   by name; user policies register under new names.
@@ -41,40 +42,90 @@ pub use registry::{policy_by_name, PolicyRegistry};
 use super::coherence::{Coherence, SpaceId, Transfer};
 use super::datadag::BlockId;
 use super::perfmodel::PerfDb;
-use super::platform::{Machine, ProcId};
+use super::platform::{Machine, ProcId, Timeline};
 use super::policies::SchedConfig;
 use super::task::Task;
+use crate::util::fxhash::FxHashMap;
 use crate::util::rng::Rng;
 
-/// The shared transfer-cost model: earliest time `task`'s inputs can be
-/// resident in `space` starting transfers at `release` (given current link
-/// queues), plus the planned `(parent block, transfer)` pairs. The engine's
-/// commit path and every [`SchedContext`] estimate go through this one
-/// function so the estimate can never drift from what gets simulated.
-pub fn plan_reads(
-    machine: &Machine,
-    link_busy: &[f64],
+/// Physical arrival times of committed-but-in-flight blocks, keyed by
+/// `(block, destination space)`. Coherence validity flips at commit time
+/// (so a second reader of the same block does not double-fetch it); this
+/// table records when the bytes actually land, and both the estimate
+/// path ([`plan_reads`]) and the engine's commit gate on it via
+/// [`arrival_gate`].
+pub type ArrivalTable = FxHashMap<(BlockId, SpaceId), f64>;
+
+/// Latest physical-arrival instant among `task`'s input blocks that are
+/// already valid in `space` but still in flight — fetched by an earlier
+/// decision, landing later. Checks both containing blocks (an in-flight
+/// ancestor covers the read) and contained ones (the read's content may
+/// exist only as in-flight fragments that `read_plan` treats as local).
+/// Returns `base` raised to the latest such arrival.
+pub fn arrival_gate(
     coh: &mut Coherence,
+    arrivals: &ArrivalTable,
     task: &Task,
     space: SpaceId,
-    release: f64,
+    base: f64,
+) -> f64 {
+    let mut ready = base;
+    if arrivals.is_empty() {
+        return ready;
+    }
+    for r in task.reads.iter() {
+        let b = coh.register(*r);
+        let region = coh.dag.block(b).region;
+        let candidates = coh.dag.containing(&region).into_iter().chain(coh.dag.contained_in(&region));
+        for cand in candidates {
+            if let Some(&t) = arrivals.get(&(cand, space)) {
+                if t > ready && coh.is_valid(cand, space) {
+                    ready = t;
+                }
+            }
+        }
+    }
+    ready
+}
+
+/// The shared transfer-cost model: earliest time `task`'s inputs can be
+/// resident in `space` starting transfers at `at` (given the current link
+/// timelines and the in-flight [`ArrivalTable`]), plus the planned
+/// `(parent block, transfer)` pairs. The engine's commit path books
+/// through the same [`Timeline::earliest_fit`] arithmetic and applies the
+/// same [`arrival_gate`], so the estimate cannot drift from what gets
+/// simulated — including gap backfill, where a transfer slots into an
+/// idle link window left open by earlier bookings.
+///
+/// Each planned transfer is estimated independently against the current
+/// timelines (the first one booked matches exactly; later ones may shift
+/// once their predecessors occupy the links).
+pub fn plan_reads(
+    machine: &Machine,
+    links: &[Timeline],
+    coh: &mut Coherence,
+    arrivals: &ArrivalTable,
+    task: &Task,
+    space: SpaceId,
+    at: f64,
 ) -> (f64, Vec<(BlockId, Transfer)>) {
-    let mut ready = release;
+    let mut ready = at;
     let mut planned = Vec::new();
     for r in task.reads.iter() {
         let block = coh.register(*r);
         for tr in coh.read_plan(block, space) {
-            let mut at = release;
+            debug_assert_ne!(tr.from, tr.to, "coherence planned a same-space transfer");
+            let mut t = at;
             for lid in machine.route(tr.from, tr.to) {
                 let l = &machine.links[lid];
-                let s = at.max(link_busy[lid]);
-                at = s + l.latency + tr.bytes as f64 / l.bandwidth;
+                let dur = l.latency + tr.bytes as f64 / l.bandwidth;
+                t = links[lid].earliest_fit(t, dur) + dur;
             }
-            ready = ready.max(at);
+            ready = ready.max(t);
             planned.push((block, tr));
         }
     }
-    (ready, planned)
+    (arrival_gate(coh, arrivals, task, space, ready), planned)
 }
 
 /// Everything the simulator knows at a scheduling decision point.
@@ -87,10 +138,19 @@ pub fn plan_reads(
 pub struct SchedContext<'a> {
     pub machine: &'a Machine,
     pub db: &'a PerfDb,
-    /// Per-processor earliest-idle times (seconds).
-    pub proc_avail: &'a [f64],
-    /// Per-link queue tails (seconds): when each link drains.
-    pub link_busy: &'a [f64],
+    /// The global event clock: the simulated time this decision is taken
+    /// at. Ready-queue keys are recomputed at decision time, so a policy
+    /// reading `now` (or any timeline) always sees current state, never
+    /// the state at push time.
+    pub now: f64,
+    /// Per-processor booked execution timelines (bookable gaps, not
+    /// scalar availability).
+    pub procs: &'a [Timeline],
+    /// Per-link booked transfer timelines.
+    pub links: &'a [Timeline],
+    /// In-flight block arrivals — when committed transfers physically
+    /// land (estimates gate on this exactly as the engine does).
+    pub arrivals: &'a ArrivalTable,
     /// Coherence / data-placement state (which space holds which block).
     pub coh: &'a mut Coherence,
     /// The simulation's seeded PRNG.
@@ -111,23 +171,32 @@ impl SchedContext<'_> {
         self.db.time(self.machine.procs[proc].ptype, task.kind, task.char_edge(), task.flops)
     }
 
-    /// Processors idle at time `release` (paper §2.1's "idle at release").
+    /// Time processor `proc`'s booked work drains (the tail of its
+    /// timeline — the quantity the scalar engine called `proc_avail`).
+    /// Gap-aware placement goes through [`SchedContext::placement_estimates`],
+    /// which can start a task inside an idle window before this instant.
+    pub fn proc_avail(&self, proc: ProcId) -> f64 {
+        self.procs[proc].tail()
+    }
+
+    /// Processors idle at time `release` with no booked work after it
+    /// (paper §2.1's "idle at release").
     pub fn idle_procs(&self, release: f64) -> Vec<ProcId> {
         let eps = 1e-12;
-        (0..self.n_procs()).filter(|&p| self.proc_avail[p] <= release + eps).collect()
+        (0..self.n_procs()).filter(|&p| !self.procs[p].busy_after(release + eps)).collect()
     }
 
     /// Earliest time `task`'s inputs can be resident in `space`, starting
-    /// transfers at `release`, accounting for current link queues (without
-    /// committing any transfer).
+    /// transfers at `release`, accounting for current link bookings
+    /// (without committing any transfer).
     pub fn data_ready_at(&mut self, task: &Task, space: SpaceId, release: f64) -> f64 {
-        plan_reads(self.machine, self.link_busy, self.coh, task, space, release).0
+        plan_reads(self.machine, self.links, self.coh, self.arrivals, task, space, release).0
     }
 
     /// Bytes that must move over the interconnect for `task`'s reads to be
     /// resident in `space` (0 = full affinity: every input already there).
     pub fn pending_read_bytes(&mut self, task: &Task, space: SpaceId) -> u64 {
-        plan_reads(self.machine, self.link_busy, self.coh, task, space, 0.0)
+        plan_reads(self.machine, self.links, self.coh, self.arrivals, task, space, 0.0)
             .1
             .iter()
             .map(|(_, tr)| tr.bytes)
@@ -135,10 +204,12 @@ impl SchedContext<'_> {
     }
 
     /// Per-processor `(proc, finish, pending input bytes)` estimates —
-    /// finish is `max(data ready, idle) + exec` — from ONE shared
-    /// [`plan_reads`] walk per memory space, memoized per space and per
-    /// processor type (28 procs → 4 spaces x 3 types on BUJARUELO). The
-    /// shared scan behind every placement-scoring policy.
+    /// finish is `earliest_fit(data ready, exec) + exec` on the
+    /// processor's timeline, so an idle window before already-booked
+    /// work counts — from ONE shared [`plan_reads`] walk per memory
+    /// space, memoized per space and per processor type (28 procs →
+    /// 4 spaces x 3 types on BUJARUELO). The shared scan behind every
+    /// placement-scoring policy.
     pub fn placement_estimates(&mut self, task: &Task, release: f64) -> Vec<(ProcId, f64, u64)> {
         let mut per_space: Vec<Option<(f64, u64)>> = vec![None; self.machine.spaces.len()];
         let mut type_time: Vec<f64> = vec![f64::NAN; self.machine.proc_types.len()];
@@ -149,7 +220,7 @@ impl SchedContext<'_> {
                 Some(v) => v,
                 None => {
                     let (r, planned) =
-                        plan_reads(self.machine, self.link_busy, self.coh, task, sp, release);
+                        plan_reads(self.machine, self.links, self.coh, self.arrivals, task, sp, release);
                     let v = (r, planned.iter().map(|(_, tr)| tr.bytes).sum::<u64>());
                     per_space[sp] = Some(v);
                     v
@@ -159,7 +230,8 @@ impl SchedContext<'_> {
             if type_time[ty].is_nan() {
                 type_time[ty] = self.exec_time(task, p);
             }
-            out.push((p, ready.max(self.proc_avail[p]) + type_time[ty], bytes));
+            let start = self.procs[p].earliest_fit(ready, type_time[ty]);
+            out.push((p, start + type_time[ty], bytes));
         }
         out
     }
@@ -201,9 +273,29 @@ pub trait SchedPolicy {
         false
     }
 
-    /// Priority key of a task entering the ready queue. The engine pops
-    /// the *largest* key first, ties broken toward program order. FCFS is
-    /// `-release`; priority-list is the critical time.
+    /// Whether ordering keys depend on mutable simulator state and must
+    /// be recomputed at every decision (the default, and always safe).
+    /// Policies whose key is a pure function of `(release, critical_time)`
+    /// — all the built-ins — return `false`, letting the engine compute
+    /// each key once at release instead of re-keying the whole ready set
+    /// per pick (an O(ready²) saving on wide frontiers).
+    fn dynamic_order(&self) -> bool {
+        true
+    }
+
+    /// Priority key of a ready task. The engine dispatches the *largest*
+    /// key first, ties broken toward program order. FCFS is `-release`;
+    /// priority-list is the critical time.
+    ///
+    /// For dynamic-order policies (the [`SchedPolicy::dynamic_order`]
+    /// default) keys are recomputed **at decision time**: the event core
+    /// calls `order` for every still-ready task each time it picks the
+    /// next one to dispatch, so the key may consult live state
+    /// (`ctx.now`, the processor/link timelines, coherence) and is never
+    /// stale. A policy must therefore treat `order` as a pure function
+    /// of `ctx` and its own state — it can be called several times per
+    /// task per run. Static-key policies (`dynamic_order() == false`)
+    /// are called exactly once per task, when it is released.
     fn order(&mut self, ctx: &mut SchedContext<'_>, task: &Task, release: f64, critical_time: f64) -> f64;
 
     /// Processor for a popped ready task.
@@ -257,13 +349,16 @@ mod tests {
         let task = dag.task(dag.root).clone();
         let mut coh = Coherence::new(m.spaces.len(), m.main_space, CachePolicy::WriteBack, m.capacities(), 4);
         let mut rng = Rng::new(0);
-        let proc_avail = vec![0.0; m.n_procs()];
-        let link_busy = vec![0.0; m.links.len()];
+        let procs = vec![Timeline::new(); m.n_procs()];
+        let links = vec![Timeline::new(); m.links.len()];
+        let arrivals = ArrivalTable::default();
         let mut ctx = SchedContext {
             machine: &m,
             db: &db,
-            proc_avail: &proc_avail,
-            link_busy: &link_busy,
+            now: 0.0,
+            procs: &procs,
+            links: &links,
+            arrivals: &arrivals,
             coh: &mut coh,
             rng: &mut rng,
             successors: &[],

@@ -220,8 +220,11 @@ fn apply(dag: &mut TaskDag, parts: &PartitionerSet, action: Action) {
     }
 }
 
-/// Build the scored candidate list for one iteration (positive scores only).
-fn collect_candidates(
+/// Build the scored candidate list for one partition-stage iteration
+/// (positive scores only). Public for diagnostics and tests: it exposes
+/// exactly what the solver would sample from a given (dag, schedule)
+/// state.
+pub fn collect_candidates(
     dag: &TaskDag,
     flat: &super::taskdag::FlatDag,
     sched: &Schedule,
@@ -347,18 +350,26 @@ fn collect_candidates(
                 let idle = (0..n_procs).filter(|&p| !busy_during(p, t0, t1)).count();
                 if let Some(coarser) = snap_sub_edge(edge, cur as f64 * 2.0, cfg.min_edge) {
                     if coarser != cur {
-                        // fewer, bigger tasks: better per-task efficiency;
-                        // estimate with the same busy-work at the coarser
-                        // grain's best rate, same parallelism
-                        let rate_now = db
-                            .curve(0, c.kind)
-                            .gflops(cur as f64)
-                            .max(1e-9);
-                        let rate_new = db.curve(0, c.kind).gflops(coarser as f64);
-                        let est = span * rate_now / rate_new;
-                        let score = (span - est) * if idle == 0 { 1.0 } else { 0.1 };
-                        if score > 0.0 {
-                            out.push((Action::Repartition { cluster, sub_edge: coarser }, score));
+                        // fewer, bigger tasks: better per-task efficiency.
+                        // Rate the move against the processor types that
+                        // actually executed the cluster's leaves in the
+                        // current schedule — summed current-grain vs
+                        // coarser-grain rates over those same processors,
+                        // same parallelism.
+                        let (mut rate_now, mut rate_new) = (0.0f64, 0.0f64);
+                        for l in &leaves {
+                            if let Some(&p) = pos_of.get(l) {
+                                let ty = machine.procs[sched.assignments[p].proc].ptype;
+                                rate_now += db.curve(ty, c.kind).gflops(cur as f64);
+                                rate_new += db.curve(ty, c.kind).gflops(coarser as f64);
+                            }
+                        }
+                        if rate_now > 1e-12 && rate_new > 1e-12 {
+                            let est = span * rate_now / rate_new;
+                            let score = (span - est) * if idle == 0 { 1.0 } else { 0.1 };
+                            if score > 0.0 {
+                                out.push((Action::Repartition { cluster, sub_edge: coarser }, score));
+                            }
                         }
                     }
                 }
@@ -554,6 +565,58 @@ mod tests {
             "heterogeneous {} vs homogeneous {}",
             res.best_cost,
             hsched.makespan
+        );
+    }
+
+    #[test]
+    fn repartition_scores_against_executing_processor_types() {
+        // Heterogeneous regression for the old hard-coded `db.curve(0, ..)`
+        // scoring: type 0 is a SLOW processor with a flat (grain-
+        // independent) curve, type 1 a fast saturating one that strongly
+        // prefers coarser tiles. When the cluster's leaves all ran on the
+        // fast type, coarsening is a clear win — but scoring it with type
+        // 0's flat curve yields est == span, score 0, and the move is
+        // never proposed.
+        use crate::coordinator::engine::simulate_mapped;
+        let mut b = MachineBuilder::new("het");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let slow = b.proc_type("slow", 1.0, 0.1);
+        let fast = b.proc_type("fast", 1.0, 0.1);
+        b.processors(1, "s", slow, h);
+        b.processors(2, "f", fast, h);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 1.0 }); // flat: same rate at any grain
+        db.set_fallback(1, PerfCurve::Saturating { peak: 20.0, half: 64.0, exponent: 2.0 });
+
+        let parts = PartitionerSet::standard();
+        let mut dag = cholesky::root(256);
+        parts.apply(&mut dag, 0, 64).expect("partition root at 64");
+        let flat = dag.flat_dag();
+        let n = flat.len();
+        let cfg = SolverConfig::all_soft(simcfg(), 1, 32);
+
+        // every leaf executed on the fast type -> coarsening to 128 must
+        // be a positively-scored candidate
+        let sched = simulate_mapped(&dag, &m, &db, simcfg(), &vec![1; n]);
+        let cands = collect_candidates(&dag, &flat, &sched, &m, &db, &parts, &cfg);
+        let score = cands
+            .iter()
+            .find_map(|(a, s)| match a {
+                Action::Repartition { cluster, sub_edge } if *cluster == dag.root && *sub_edge == 128 => Some(*s),
+                _ => None,
+            })
+            .expect("repartition move must be proposed when the executing type prefers coarser tiles");
+        assert!(score > 0.0, "score={score}");
+
+        // same cluster executed on the flat-curve slow type -> coarsening
+        // buys nothing, and no repartition move may be proposed
+        let sched0 = simulate_mapped(&dag, &m, &db, simcfg(), &vec![0; n]);
+        let cands0 = collect_candidates(&dag, &flat, &sched0, &m, &db, &parts, &cfg);
+        assert!(
+            !cands0.iter().any(|(a, _)| matches!(a, Action::Repartition { .. })),
+            "flat-curve executions must not propose repartitions: {cands0:?}"
         );
     }
 

@@ -1,13 +1,44 @@
-//! Trace generation: CSV load/granularity traces (Figs. 2b and 6) and
-//! Paraver-compatible `.prv`/`.pcf`/`.row` files (footnote 3 of the paper).
+//! Trace generation: CSV load/granularity traces (Figs. 2b and 6),
+//! Paraver-compatible `.prv`/`.pcf`/`.row` files (footnote 3 of the
+//! paper), and the typed event log the discrete-event core emits
+//! ([`event_log_csv`]).
 
 use std::fmt::Write as _;
 
-use super::engine::Schedule;
+use super::engine::{EventKind, Schedule};
 use super::metrics::load_trace;
 use super::platform::Machine;
 use super::task::TaskKind;
 use super::taskdag::TaskDag;
+
+/// CSV of the engine's typed event log, in simulated-time order:
+/// `time_s,event,task,proc,from,to,bytes` (unused columns empty). This is
+/// the raw material of every other trace — the rows are emitted by the
+/// event queue itself, so transfer and execution intervals appear exactly
+/// as the simulation resolved them (queuing and gap backfill included).
+pub fn event_log_csv(sched: &Schedule) -> String {
+    let mut out = String::from("time_s,event,task,proc,from,to,bytes\n");
+    for e in &sched.events {
+        let _ = match e.kind {
+            EventKind::TaskStart { task, proc } => {
+                writeln!(out, "{:.9},task_start,{task},{proc},,,", e.time)
+            }
+            EventKind::TaskEnd { task, proc } => {
+                writeln!(out, "{:.9},task_end,{task},{proc},,,", e.time)
+            }
+            EventKind::TransferStart { from, to, bytes } => {
+                writeln!(out, "{:.9},transfer_start,,,{from},{to},{bytes}", e.time)
+            }
+            EventKind::TransferEnd { from, to, bytes } => {
+                writeln!(out, "{:.9},transfer_end,,,{from},{to},{bytes}", e.time)
+            }
+            EventKind::ProcIdle { proc } => {
+                writeln!(out, "{:.9},proc_idle,,{proc},,,", e.time)
+            }
+        };
+    }
+    out
+}
 
 /// CSV of `(time_us, active_processors)` — the Fig. 2b compute-load trace.
 pub fn load_trace_csv(sched: &Schedule, samples: usize) -> String {
@@ -187,7 +218,8 @@ pub fn ascii_gantt(dag: &TaskDag, sched: &Schedule, machine: &Machine, cols: usi
     out
 }
 
-/// Write the full trace bundle `<stem>.prv/.pcf/.row` plus the two CSVs.
+/// Write the full trace bundle `<stem>.prv/.pcf/.row` plus the CSVs
+/// (schedule, load, and the raw event log).
 pub fn write_bundle(dir: &std::path::Path, stem: &str, dag: &TaskDag, sched: &Schedule, machine: &Machine) -> std::io::Result<()> {
     std::fs::create_dir_all(dir)?;
     std::fs::write(dir.join(format!("{stem}.prv")), paraver_prv(dag, sched, machine))?;
@@ -195,6 +227,7 @@ pub fn write_bundle(dir: &std::path::Path, stem: &str, dag: &TaskDag, sched: &Sc
     std::fs::write(dir.join(format!("{stem}.row")), paraver_row(machine))?;
     std::fs::write(dir.join(format!("{stem}_schedule.csv")), schedule_csv(dag, sched, machine))?;
     std::fs::write(dir.join(format!("{stem}_load.csv")), load_trace_csv(sched, 200))?;
+    std::fs::write(dir.join(format!("{stem}_events.csv")), event_log_csv(sched))?;
     Ok(())
 }
 
@@ -268,14 +301,33 @@ mod tests {
     }
 
     #[test]
-    fn bundle_writes_five_files() {
+    fn bundle_writes_six_files() {
         let (m, _, dag, s) = setup();
         let dir = std::env::temp_dir().join("hesp_trace_test");
         let _ = std::fs::remove_dir_all(&dir);
         write_bundle(&dir, "t", &dag, &s, &m).unwrap();
-        for f in ["t.prv", "t.pcf", "t.row", "t_schedule.csv", "t_load.csv"] {
+        for f in ["t.prv", "t.pcf", "t.row", "t_schedule.csv", "t_load.csv", "t_events.csv"] {
             assert!(dir.join(f).exists(), "{f}");
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn event_log_csv_mirrors_the_event_queue() {
+        let (_, _, dag, s) = setup();
+        let csv = event_log_csv(&s);
+        // header + one row per logged event
+        assert_eq!(csv.lines().count(), 1 + s.events.len());
+        assert!(csv.starts_with("time_s,event,task,proc,from,to,bytes"));
+        let n = dag.frontier().len();
+        assert_eq!(csv.matches(",task_start,").count(), n);
+        assert_eq!(csv.matches(",task_end,").count(), n);
+        // time column is non-decreasing (the queue pops in time order)
+        let mut last = -1.0f64;
+        for line in csv.lines().skip(1) {
+            let t: f64 = line.split(',').next().unwrap().parse().unwrap();
+            assert!(t >= last - 1e-15, "{line}");
+            last = t;
+        }
     }
 }
