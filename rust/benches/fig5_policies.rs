@@ -1,47 +1,57 @@
-//! FIG5-right regenerator: performance of every *registered* scheduling
-//! policy (the 8 paper rows plus `pl/affinity` and `pl/lookahead`) across
-//! homogeneous tile sizes on BUJARUELO (n=32768, f32). The paper's three
-//! observations are checked in-line: (1) the optimal tile depends on the
-//! policy, (2) each curve peaks at an interior trade-off tile, (3) policy
-//! choice matters more at large tiles.
+//! FIG5-right regenerator, on the parallel sweep harness: performance of
+//! every *registered* scheduling policy (the 8 paper rows plus
+//! `pl/affinity` and `pl/lookahead`) across homogeneous tile sizes on
+//! BUJARUELO (n=32768, f32). The paper's three observations are checked
+//! in-line: (1) the optimal tile depends on the policy, (2) each curve
+//! peaks at an interior trade-off tile, (3) policy choice matters more at
+//! large tiles.
+//!
+//! Flags: --n N, --tiles A,B,..., --threads T.
 
 use hesp::bench::Table;
-use hesp::config::Platform;
-use hesp::coordinator::engine::SimConfig;
-use hesp::coordinator::metrics::report;
-use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::coherence::CachePolicy;
 use hesp::coordinator::policy::PolicyRegistry;
-use hesp::coordinator::solver::homogeneous_sweep_with;
+use hesp::coordinator::sweep::{self, CellMode, SweepGrid, SweepPlatform, Workload};
 use hesp::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
     let n = args.usize_or("n", 32_768) as u32;
-    let tiles: Vec<u32> = args.usize_list("tiles", &[512, 1024, 2048, 4096]).into_iter().map(|x| x as u32).collect();
-    let p = Platform::from_file("configs/bujaruelo.toml").expect("config");
+    let tiles: Vec<u32> =
+        args.usize_list("tiles", &[512, 1024, 2048, 4096]).into_iter().map(|x| x as u32).collect();
+    let threads = args.usize_or("threads", sweep::default_threads());
+    let platform = SweepPlatform::from_file("configs/bujaruelo.toml").expect("config");
+    let machine_name = platform.name.clone();
+    println!("== FIG 5 (right): policies x tile size, {machine_name} n={n} ==");
 
-    println!("== FIG 5 (right): policies x tile size, {} n={n} ==", p.machine.name);
-    let reg = PolicyRegistry::standard();
-    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
-        .with_elem_bytes(p.elem_bytes);
+    let policies: Vec<String> = PolicyRegistry::standard().names().iter().map(|s| s.to_string()).collect();
+    let grid = SweepGrid {
+        platforms: vec![platform],
+        workloads: vec![Workload::Cholesky { n }],
+        policies: policies.clone(),
+        tiles,
+        modes: vec![CellMode::Simulate],
+        seeds: vec![0],
+        cache: CachePolicy::WriteBack,
+    };
+    let results = sweep::run_sweep(&grid, threads);
+
     let mut table = Table::new(&["policy", "tile", "GFLOPS", "load %", "makespan s", "xfer MB"]);
     let mut series: Vec<(String, Vec<(u32, f64)>)> = Vec::new();
-    for name in reg.names() {
-        let mut pol = reg.get(name).expect("registered policy constructs");
+    for name in &policies {
         let mut pts = Vec::new();
-        for (b, dag, sched) in homogeneous_sweep_with(n, &tiles, &p.machine, &p.db, sim, pol.as_mut()) {
-            let r = report(&dag, &sched);
+        for r in results.iter().filter(|r| &r.policy == name) {
             table.row(&[
-                name.to_string(),
-                b.to_string(),
+                r.policy.clone(),
+                r.tile.to_string(),
                 format!("{:.1}", r.gflops),
                 format!("{:.1}", r.avg_load_pct),
                 format!("{:.4}", r.makespan),
                 format!("{:.1}", r.transfer_bytes as f64 / 1e6),
             ]);
-            pts.push((b, r.gflops));
+            pts.push((r.tile, r.gflops));
         }
-        series.push((name.to_string(), pts));
+        series.push((name.clone(), pts));
     }
     table.print();
 
@@ -58,9 +68,11 @@ fn main() {
     println!("distinct optima across policies: {distinct:?} (paper: optimum depends on policy)");
 
     // paper fact 3: spread between best and worst policy grows with tile
-    for &b in &tiles {
-        let vals: Vec<f64> = series.iter().filter_map(|(_, pts)| pts.iter().find(|x| x.0 == b).map(|x| x.1)).collect();
-        let (min, max) = (vals.iter().cloned().fold(f64::INFINITY, f64::min), vals.iter().cloned().fold(0.0, f64::max));
+    for &b in &grid.tiles {
+        let vals: Vec<f64> =
+            series.iter().filter_map(|(_, pts)| pts.iter().find(|x| x.0 == b).map(|x| x.1)).collect();
+        let (min, max) =
+            (vals.iter().cloned().fold(f64::INFINITY, f64::min), vals.iter().cloned().fold(0.0, f64::max));
         println!("tile {b:>5}: policy spread {:.2}x", max / min);
     }
 
@@ -72,5 +84,9 @@ fn main() {
         }
     }
     std::fs::write("bench_out/fig5_right.csv", csv).ok();
-    println!("CSV -> bench_out/fig5_right.csv");
+    // the full per-cell bundle rides along for the perf trajectory, under
+    // fig5-specific names so it cannot clobber `hesp sweep`'s sweep.csv
+    std::fs::write("bench_out/fig5_cells.csv", sweep::to_csv(&results)).ok();
+    std::fs::write("bench_out/fig5_cells.json", sweep::to_json(&results)).ok();
+    println!("CSV -> bench_out/fig5_right.csv (+ fig5_cells.csv / fig5_cells.json per-cell bundle)");
 }

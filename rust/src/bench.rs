@@ -7,7 +7,10 @@
 
 use std::time::Instant;
 
-/// Timing statistics over n samples.
+/// Timing statistics over n samples. `stddev_s` is the *sample* standard
+/// deviation (Bessel-corrected, `/ (n-1)`): bench sample counts are small,
+/// and the population formula (`/ n`) systematically understates the
+/// noise of exactly those runs. A single sample reports 0.
 #[derive(Debug, Clone, Copy)]
 pub struct Stats {
     pub n: usize,
@@ -24,7 +27,8 @@ impl Stats {
         xs.sort_by(|a, b| a.total_cmp(b));
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
-        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let ss = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>();
+        let var = if n > 1 { ss / (n - 1) as f64 } else { 0.0 };
         Stats {
             n,
             mean_s: mean,
@@ -163,6 +167,19 @@ mod tests {
         assert_eq!((s.min_s, s.max_s), (1.0, 5.0));
         let s2 = Stats::from_samples(vec![1.0, 2.0]);
         assert_eq!(s2.median_s, 1.5);
+    }
+
+    #[test]
+    fn stddev_is_sample_not_population() {
+        // sum of squares around the mean = 10 over 5 samples:
+        // population sd would be sqrt(10/5), sample sd is sqrt(10/4)
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((s.stddev_s - 2.5f64.sqrt()).abs() < 1e-12, "{}", s.stddev_s);
+        // two samples: sd = |a - b| / sqrt(2)
+        let s2 = Stats::from_samples(vec![1.0, 2.0]);
+        assert!((s2.stddev_s - 0.5f64.sqrt()).abs() < 1e-12, "{}", s2.stddev_s);
+        // a single sample carries no spread information
+        assert_eq!(Stats::from_samples(vec![3.0]).stddev_s, 0.0);
     }
 
     #[test]

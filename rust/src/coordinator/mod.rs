@@ -19,6 +19,11 @@
 //! * [`constructive`]: the online per-task-arrival scheduler-partitioner
 //!   (the paper's §4 follow-up).
 //! * [`workloads`]: synthetic DAG generators beyond dense linear algebra.
+//! * [`sweep`]: the parallel multi-scenario experiment harness — a
+//!   declarative platform x workload x policy x tile x mode x seed grid
+//!   expanded into cells and executed across scoped worker threads, with
+//!   deterministic per-cell seeds (parallel runs are byte-identical to
+//!   serial ones).
 //! * [`metrics`] / [`energy`] / [`trace`]: Table-1 metrics, the energy
 //!   objective, Paraver traces and ASCII Gantt rendering.
 
@@ -36,6 +41,7 @@ pub mod policies;
 pub mod policy;
 pub mod region;
 pub mod solver;
+pub mod sweep;
 pub mod task;
 pub mod taskdag;
 pub mod trace;

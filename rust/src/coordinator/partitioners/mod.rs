@@ -76,13 +76,22 @@ impl PartitionerSet {
         self.map.contains_key(&kind)
     }
 
+    /// Plan the split of `task` at `sub_edge` without touching any DAG:
+    /// the sub-task specs a partitioner would emit, or `None` when no
+    /// partitioner applies / the edge is illegal for this task. The
+    /// solver uses this to validate a `Repartition` *before* merging the
+    /// cluster it would re-split.
+    pub fn plan(&self, task: &Task, sub_edge: u32) -> Option<Vec<TaskSpec>> {
+        let specs = self.map.get(&task.kind)?.partition(task, sub_edge)?;
+        debug_assert!(!specs.is_empty());
+        Some(specs)
+    }
+
     /// Split leaf `id` of `dag` at `sub_edge`; returns the new child ids,
     /// or `None` if no partitioner applies / the edge is illegal.
     pub fn apply(&self, dag: &mut TaskDag, id: usize, sub_edge: u32) -> Option<Vec<usize>> {
         let task = dag.task(id).clone();
-        let p = self.map.get(&task.kind)?;
-        let specs = p.partition(&task, sub_edge)?;
-        debug_assert!(!specs.is_empty());
+        let specs = self.plan(&task, sub_edge)?;
         Some(dag.partition(id, specs, sub_edge))
     }
 }
@@ -131,6 +140,17 @@ mod tests {
         assert_eq!(snap_sub_edge(1024, 512.0, 64), Some(512));
         assert_eq!(snap_sub_edge(1024, 1.0, 64), Some(64));
         assert_eq!(snap_sub_edge(64, 32.0, 64), None);
+    }
+
+    #[test]
+    fn plan_previews_apply_without_mutation() {
+        let s = PartitionerSet::standard();
+        let dag = cholesky::root(256);
+        let task = dag.task(dag.root).clone();
+        let specs = s.plan(&task, 64).expect("legal split");
+        assert_eq!(specs.len() as u64, cholesky::task_count(4));
+        assert!(s.plan(&task, 48).is_none(), "non-divisor rejected");
+        assert!(s.plan(&task, 256).is_none(), "trivial blocking rejected");
     }
 
     #[test]

@@ -130,6 +130,11 @@ pub struct IterLog {
     pub n_tasks: usize,
     pub action: Option<Action>,
     pub score: f64,
+    /// Whether the sampled action actually mutated the DAG. A
+    /// `Repartition` whose re-partition step is rejected by the
+    /// partitioner is *not* applied (the cluster keeps its current
+    /// tiling) and logs `false` here.
+    pub applied: bool,
 }
 
 /// Solver output: best state found + full iteration history.
@@ -177,7 +182,8 @@ pub fn solve_with(
         }
 
         let cands = collect_candidates(&dag, &flat, &sched, machine, db, parts, &cfg);
-        let mut entry = IterLog { iter, cost, n_tasks: dag.frontier().len(), action: None, score: 0.0 };
+        let mut entry =
+            IterLog { iter, cost, n_tasks: dag.frontier().len(), action: None, score: 0.0, applied: false };
         if cands.is_empty() {
             history.push(entry);
             break;
@@ -192,12 +198,15 @@ pub fn solve_with(
                     .unwrap()
             }
             Sampling::Soft => {
+                // collect_candidates only emits finite positive scores, so
+                // the weight sum cannot be poisoned by an inf/NaN estimate
                 let weights: Vec<f64> = cands.iter().map(|c| c.1).collect();
+                debug_assert!(weights.iter().all(|w| w.is_finite() && *w > 0.0), "{weights:?}");
                 rng.weighted(&weights)
             }
         };
         let (action, score) = cands[idx];
-        apply(&mut dag, parts, action);
+        entry.applied = apply_action(&mut dag, parts, action);
         entry.action = Some(action);
         entry.score = score;
         history.push(entry);
@@ -207,15 +216,41 @@ pub fn solve_with(
     SolveResult { best_cost, best_schedule, best_dag, best_iter, history }
 }
 
-fn apply(dag: &mut TaskDag, parts: &PartitionerSet, action: Action) {
+/// Apply one sampled move to the DAG. Returns whether the move actually
+/// mutated it.
+///
+/// A `Repartition` is merge-then-split; the split is *planned first*
+/// against the merged task's shape, and if the partitioner rejects the
+/// proposed `sub_edge` the cluster is left exactly as it was. (The old
+/// code merged unconditionally and ignored the re-partition failure,
+/// silently turning the move into an unintended `Merge` — a corrupted
+/// search trajectory the iteration log could not even show.) Public for
+/// diagnostics and tests, like [`collect_candidates`].
+pub fn apply_action(dag: &mut TaskDag, parts: &PartitionerSet, action: Action) -> bool {
     match action {
-        Action::Partition { task, sub_edge } => {
-            parts.apply(dag, task, sub_edge);
-        }
-        Action::Merge { cluster } => dag.merge(cluster),
-        Action::Repartition { cluster, sub_edge } => {
+        Action::Partition { task, sub_edge } => parts.apply(dag, task, sub_edge).is_some(),
+        Action::Merge { cluster } => {
             dag.merge(cluster);
-            parts.apply(dag, cluster, sub_edge);
+            true
+        }
+        Action::Repartition { cluster, sub_edge } => {
+            // plan against the merged shape (the partitioner only reads the
+            // task's kind/regions, which merging does not change)
+            let before = dag.task(cluster).clone();
+            if parts.plan(&before, sub_edge).is_none() {
+                return false;
+            }
+            dag.merge(cluster);
+            if parts.apply(dag, cluster, sub_edge).is_some() {
+                return true;
+            }
+            // defensive: the plan succeeded but the apply did not — re-split
+            // at the old edge so the DAG shape is preserved
+            if let Some(old) = before.partition_edge {
+                let restored = parts.apply(dag, cluster, old).is_some();
+                debug_assert!(restored, "re-split at the cluster's own edge {old} must succeed");
+            }
+            false
         }
     }
 }
@@ -301,7 +336,10 @@ pub fn collect_candidates(
         }
         let est = t.flops / (rate * 1e9);
         let score = dur - est;
-        if score > 0.0 {
+        // finite-only: a zero-rate curve makes `est` (or an inf-duration
+        // assignment makes `dur`) non-finite, and one inf/NaN weight
+        // poisons the Soft sampling sum downstream
+        if score.is_finite() && score > 0.0 {
             out.push((Action::Partition { task: tid, sub_edge }, score));
         }
     }
@@ -342,7 +380,7 @@ pub fn collect_candidates(
                 .fold(0.0f64, f64::max);
             let est_merged = c.flops / (best_rate * 1e9);
             let merge_score = span - est_merged;
-            if merge_score > 0.0 {
+            if merge_score.is_finite() && merge_score > 0.0 {
                 out.push((Action::Merge { cluster }, merge_score));
             }
             // re-partition at one step coarser granularity than current
@@ -367,7 +405,7 @@ pub fn collect_candidates(
                         if rate_now > 1e-12 && rate_new > 1e-12 {
                             let est = span * rate_now / rate_new;
                             let score = (span - est) * if idle == 0 { 1.0 } else { 0.1 };
-                            if score > 0.0 {
+                            if score.is_finite() && score > 0.0 {
                                 out.push((Action::Repartition { cluster, sub_edge: coarser }, score));
                             }
                         }
@@ -629,5 +667,113 @@ mod tests {
         let res = solve(cholesky::root(512), &m, &db, &parts, cfg);
         assert!(res.history.iter().any(|h| h.action.is_some()));
         assert!(res.history.iter().all(|h| h.cost.is_finite()));
+        // the standard partitioners accept every snapped sub-edge, so every
+        // sampled move must report as applied
+        assert!(res.history.iter().filter(|h| h.action.is_some()).all(|h| h.applied));
+    }
+
+    /// A POTRF partitioner that refuses every sub-edge except `only` —
+    /// the shape of failure a user partitioner (non-divisible constraint,
+    /// minimum kernel size, ...) can produce for a solver-proposed edge.
+    struct PickyPartitioner {
+        only: u32,
+    }
+
+    impl crate::coordinator::partitioners::Partitioner for PickyPartitioner {
+        fn kinds(&self) -> Vec<crate::coordinator::task::TaskKind> {
+            vec![crate::coordinator::task::TaskKind::Potrf]
+        }
+
+        fn partition(
+            &self,
+            task: &crate::coordinator::task::Task,
+            sub_edge: u32,
+        ) -> Option<Vec<crate::coordinator::task::TaskSpec>> {
+            use crate::coordinator::partitioners::Partitioner;
+            if sub_edge == self.only {
+                cholesky::CholeskyPartitioner.partition(task, sub_edge)
+            } else {
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn rejected_repartition_leaves_cluster_intact() {
+        // regression: `apply` used to merge the cluster first and ignore
+        // the re-partition failure, silently turning the sampled
+        // Repartition into an unintended Merge
+        let mut parts = PartitionerSet::empty();
+        parts.register(std::sync::Arc::new(PickyPartitioner { only: 64 }));
+        let mut dag = cholesky::root(256);
+        parts.apply(&mut dag, 0, 64).expect("64 is the allowed edge");
+        let root = dag.root;
+        let frontier_before = dag.frontier();
+
+        let applied = apply_action(&mut dag, &parts, Action::Repartition { cluster: root, sub_edge: 128 });
+        assert!(!applied, "a rejected re-partition must not be applied");
+        assert_eq!(dag.frontier(), frontier_before, "the cluster must be left exactly as it was");
+        assert_eq!(dag.task(root).partition_edge, Some(64), "still partitioned at the old edge");
+
+        // the allowed edge still re-partitions fine through the same path
+        assert!(apply_action(&mut dag, &parts, Action::Repartition { cluster: root, sub_edge: 64 }));
+        assert_eq!(dag.task(root).partition_edge, Some(64));
+    }
+
+    #[test]
+    fn non_finite_scores_are_filtered_at_source() {
+        // an inf-duration assignment (what a zero-rate curve produces for
+        // any task landed on that processor) used to push a +inf partition
+        // score; one inf weight degenerates Soft sampling's weighted draw
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let cfg = SolverConfig::all_soft(simcfg(), 1, 64);
+        // s = 2: four nearly-serial tasks, so the untouched ones keep
+        // plenty of idle parallelism around them (finite positive scores)
+        let mut dag = cholesky::root(1024);
+        parts.apply(&mut dag, 0, 512).expect("partition root at 512");
+        let flat = dag.flat_dag();
+        let mut sched = simulate(&dag, &m, &db, simcfg());
+        let last = sched.assignments.len() - 1;
+        sched.assignments[last].end = f64::INFINITY;
+
+        let cands = collect_candidates(&dag, &flat, &sched, &m, &db, &parts, &cfg);
+        assert!(!cands.is_empty(), "finite candidates must survive");
+        assert!(cands.iter().all(|(_, s)| s.is_finite() && *s > 0.0), "{cands:?}");
+        // and the surviving weights sample without panicking
+        let weights: Vec<f64> = cands.iter().map(|c| c.1).collect();
+        let idx = Rng::new(1).weighted(&weights);
+        assert!(idx < weights.len());
+    }
+
+    #[test]
+    fn zero_rate_curve_does_not_poison_soft_solve() {
+        // a curve that is zero below 256: estimates at finer grains are
+        // inf and must never become sampled weights; the solve completes
+        let mut b = MachineBuilder::new("z");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let t = b.proc_type("cpu", 1.0, 0.1);
+        b.processors(4, "c", t, h);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(
+            0,
+            PerfCurve::Table { points: vec![(64.0, 0.0), (128.0, 0.0), (256.0, 20.0), (512.0, 30.0)] },
+        );
+        let parts = PartitionerSet::standard();
+        let mut dag = cholesky::root(1024);
+        parts.apply(&mut dag, 0, 256).expect("partition root at 256");
+        let mut cfg = SolverConfig::all_soft(simcfg(), 10, 64);
+        cfg.seed = 3;
+        let res = solve(dag, &m, &db, &parts, cfg);
+        assert!(res.best_cost.is_finite());
+        for h in &res.history {
+            assert!(h.score.is_finite(), "sampled score must be finite: {h:?}");
+        }
+        // no leaf may have been split into the zero-rate region
+        for t in res.best_dag.frontier() {
+            assert!(res.best_dag.task(t).char_edge() >= 256.0 - 1e-9);
+        }
     }
 }

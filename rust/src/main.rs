@@ -33,9 +33,8 @@ use hesp::coordinator::metrics::report;
 use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
 use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
 use hesp::coordinator::policy::{policy_by_name, policy_for, PolicyRegistry, SchedPolicy};
-use hesp::coordinator::solver::{
-    best_homogeneous_with, homogeneous_sweep_with, solve_with, CandidateSelect, Sampling, SolverConfig,
-};
+use hesp::coordinator::solver::{best_homogeneous_with, solve_with, CandidateSelect, Sampling, SolverConfig};
+use hesp::coordinator::sweep::{self, CellMode, SweepGrid, SweepPlatform, Workload};
 use hesp::coordinator::trace::write_bundle;
 use hesp::util::cli::Args;
 
@@ -71,8 +70,14 @@ hesp — Heterogeneous Scheduler-Partitioner (Rey, Igual, Prieto-Matias 2016)
 USAGE: hesp <subcommand> [--flags]
 
   simulate  --platform F --n N --tile B [--policy NAME] [--cache wb|wt|wa] [--seed S]
-  sweep     --platform F --n N [--tiles 256,512,...] [--policy NAME]
-            (Fig. 5 right; sweeps every registered policy unless --policy given)
+  sweep     --platform F | --platforms F1,F2 | --grid FILE.toml | --quick
+            [--workloads cholesky:N,lu:N,qr:N,layered:LxW,stencil:CxS,random:N]
+            [--policies all|name,...] [--tiles 256,512,...] [--threads T]
+            [--modes sim,solve:ITERS:MINEDGE | --solve --iters K --min-edge E]
+            [--seeds 0,1,...] [--cache wb|wt|wa] [--out bench_out/sweep.csv]
+            (parallel scenario grid; cells get content-derived seeds, so any
+            --threads count emits a byte-identical aggregate CSV/JSON bundle.
+            bare --quick = the self-contained 320-cell CI smoke grid)
   solve     --platform F --n N [--tiles ...] [--iters K] [--candidates all|cp|shallow]
             [--sampling hard|soft] [--min-edge E] [--objective makespan|energy|edp]
             [--policy NAME]                               (Table 1 rows)
@@ -180,38 +185,194 @@ fn default_tiles(n: u32) -> Vec<usize> {
         .collect()
 }
 
-fn cmd_sweep(args: &Args) -> Result<()> {
-    let p = load_platform(args)?;
+/// Build the declarative scenario grid for `hesp sweep`: an explicit
+/// `--grid FILE.toml` wins; `--quick` (without a platform) is the
+/// self-contained CI smoke grid; otherwise the grid comes from flags.
+fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
+    use anyhow::Context;
+    if let Some(path) = args.get("grid") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading grid file {path}"))?;
+        return sweep::grid_from_toml(&text);
+    }
+
+    let reg = PolicyRegistry::standard();
+    let all_policies = || reg.names().iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    let cache = CachePolicy::from_name(&args.str_lower_or("cache", "wb")).ok_or_else(|| anyhow!("bad --cache"))?;
+
+    if args.has("quick") && !args.has("platform") && !args.has("platforms") {
+        // the CI smoke grid: 2 platforms x 4 workloads x 10 policies x
+        // 2 tiles x 2 seeds = 320 cells, sized to finish in seconds
+        return Ok(SweepGrid {
+            platforms: vec![
+                SweepPlatform::from_file("configs/bujaruelo.toml")?,
+                SweepPlatform::from_file("configs/odroid.toml")?,
+            ],
+            workloads: vec![
+                Workload::Cholesky { n: 4096 },
+                Workload::Lu { n: 4096 },
+                Workload::Layered { layers: 6, width: 12 },
+                Workload::Stencil { cells: 24, steps: 8 },
+            ],
+            policies: all_policies(),
+            tiles: vec![256, 512],
+            modes: vec![CellMode::Simulate],
+            seeds: vec![0, 1],
+            cache,
+        });
+    }
+
+    let mut platforms = Vec::new();
+    if let Some(list) = args.get("platforms") {
+        for p in list.split(',') {
+            platforms.push(SweepPlatform::from_file(p.trim())?);
+        }
+    } else if let Some(p) = args.get("platform") {
+        platforms.push(SweepPlatform::from_file(p)?);
+    } else {
+        bail!("--platform F | --platforms F1,F2 | --grid FILE.toml required (or bare --quick)");
+    }
+
     let n = args.usize_or("n", 32768) as u32;
+    let workloads = match args.get("workloads") {
+        Some(list) => {
+            let mut out = Vec::new();
+            for w in list.split(',') {
+                let w = w.trim();
+                out.push(Workload::parse(w).ok_or_else(|| anyhow!("bad workload spec '{w}'"))?);
+            }
+            out
+        }
+        None => vec![Workload::Cholesky { n }],
+    };
+
+    let policies: Vec<String> = if let Some(list) = args.get_lower("policies") {
+        if list == "all" {
+            all_policies()
+        } else {
+            let mut out = Vec::new();
+            for name in list.split(',') {
+                let name = name.trim();
+                let pol = reg.get(name).ok_or_else(|| anyhow!("unknown policy '{name}' (see `hesp policies`)"))?;
+                out.push(pol.name().to_string());
+            }
+            out
+        }
+    } else if args.has("policy") {
+        let name = args.get_lower("policy").unwrap();
+        let pol = reg.get(&name).ok_or_else(|| anyhow!("unknown --policy '{name}' (see `hesp policies`)"))?;
+        vec![pol.name().to_string()]
+    } else if args.has("order") || args.has("select") {
+        // legacy shim pair restricts to the matching built-in
+        let ordering = Ordering::from_name(&args.str_lower_or("order", "pl")).ok_or_else(|| anyhow!("bad --order"))?;
+        let select =
+            ProcSelect::from_name(&args.str_lower_or("select", "eft")).ok_or_else(|| anyhow!("bad --select"))?;
+        vec![policy_for(SchedConfig::new(ordering, select)).name().to_string()]
+    } else {
+        all_policies()
+    };
+
     let tiles: Vec<u32> = args.usize_list("tiles", &default_tiles(n)).into_iter().map(|x| x as u32).collect();
-    let sim = sim_config(args, &p)?;
-    let mut table = Table::new(&["policy", "tile", "GFLOPS", "load %", "makespan s"]);
-    let mut run_one = |name: &str, pol: &mut dyn SchedPolicy, table: &mut Table| {
-        for (b, dag, sched) in homogeneous_sweep_with(n, &tiles, &p.machine, &p.db, sim, pol) {
-            let r = report(&dag, &sched);
+
+    let modes = match args.get_lower("modes") {
+        Some(list) => {
+            let mut out = Vec::new();
+            for m in list.split(',') {
+                let m = m.trim();
+                out.push(CellMode::parse(m).ok_or_else(|| anyhow!("bad mode spec '{m}' (sim | solve:<iters>:<min_edge>)"))?);
+            }
+            out
+        }
+        None if args.has("solve") => vec![CellMode::Solve {
+            iters: args.usize_or("iters", 150),
+            min_edge: args.usize_or("min-edge", 64) as u32,
+        }],
+        None => vec![CellMode::Simulate],
+    };
+
+    let seeds: Vec<u64> = match args.get("seeds") {
+        Some(s) => {
+            let mut out = Vec::new();
+            for x in s.split(',') {
+                let x = x.trim();
+                out.push(x.parse().map_err(|_| anyhow!("bad --seeds entry '{x}'"))?);
+            }
+            out
+        }
+        None => vec![args.u64_or("seed", 0)],
+    };
+
+    Ok(SweepGrid { platforms, workloads, policies, tiles, modes, seeds, cache })
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let threads = args.usize_or("threads", sweep::default_threads());
+    let grid = build_sweep_grid(args)?;
+    let cells = grid.expand();
+    anyhow::ensure!(!cells.is_empty(), "sweep grid expanded to zero feasible cells");
+
+    let t0 = std::time::Instant::now();
+    let results = sweep::run_cells(&grid, &cells, threads);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "sweep: {} cells x {} threads in {:.2}s ({:.1} cells/s)",
+        results.len(),
+        threads,
+        dt,
+        results.len() as f64 / dt.max(1e-9)
+    );
+
+    if results.len() <= 64 {
+        let mut table =
+            Table::new(&["platform", "workload", "policy", "tile", "mode", "GFLOPS", "load %", "makespan s", "xfer MB"]);
+        for r in &results {
             table.row(&[
-                name.to_string(),
-                b.to_string(),
+                r.platform.clone(),
+                r.workload.clone(),
+                r.policy.clone(),
+                r.tile.to_string(),
+                r.mode.clone(),
                 format!("{:.2}", r.gflops),
                 format!("{:.1}", r.avg_load_pct),
                 format!("{:.4}", r.makespan),
+                format!("{:.1}", r.transfer_bytes as f64 / 1e6),
             ]);
         }
-    };
-    // explicit policy flags restrict the sweep to that one policy; the
-    // default sweeps the whole registry (Fig. 5 right)
-    if args.has("policy") || args.has("order") || args.has("select") {
-        let mut pol = build_policy(args, &p)?;
-        let name = pol.name().to_string();
-        run_one(&name, pol.as_mut(), &mut table);
+        table.print();
     } else {
-        let reg = PolicyRegistry::standard();
-        for name in reg.names() {
-            let mut pol = reg.get(name).expect("registered policy constructs");
-            run_one(name, pol.as_mut(), &mut table);
+        // large grid: print the per-(platform, workload, mode) winners
+        let mut best: std::collections::BTreeMap<(String, String, String), &sweep::CellResult> =
+            std::collections::BTreeMap::new();
+        for r in &results {
+            let k = (r.platform.clone(), r.workload.clone(), r.mode.clone());
+            let e = best.entry(k).or_insert(r);
+            if r.makespan < e.makespan {
+                *e = r;
+            }
         }
+        let mut table = Table::new(&["platform", "workload", "mode", "best policy", "tile", "GFLOPS", "makespan s"]);
+        for ((pf, wl, mode), r) in &best {
+            table.row(&[
+                pf.clone(),
+                wl.clone(),
+                mode.clone(),
+                r.policy.clone(),
+                r.tile.to_string(),
+                format!("{:.2}", r.gflops),
+                format!("{:.4}", r.makespan),
+            ]);
+        }
+        println!("{} cells; per-(platform, workload, mode) winners:", results.len());
+        table.print();
     }
-    table.print();
+
+    let out = std::path::PathBuf::from(args.str_or("out", "bench_out/sweep.csv"));
+    if let Some(dir) = out.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, sweep::to_csv(&results))?;
+    let json = out.with_extension("json");
+    std::fs::write(&json, sweep::to_json(&results))?;
+    println!("aggregate bundle -> {} + {}", out.display(), json.display());
     Ok(())
 }
 

@@ -1,0 +1,207 @@
+//! Sweep-harness determinism contract: a parallel run is byte-identical
+//! to the single-threaded run on the same grid, and per-cell seeds are a
+//! function of grid *coordinates* (stable under axis reordering).
+
+use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::perfmodel::{PerfCurve, PerfDb};
+use hesp::coordinator::platform::MachineBuilder;
+use hesp::coordinator::sweep::{self, cell_seed, workload_seed, CellMode, SweepGrid, SweepPlatform, Workload};
+
+/// A small in-memory platform (no config files in unit tests).
+fn platform(name: &str, ncpu: usize, peak: f64) -> SweepPlatform {
+    let mut b = MachineBuilder::new(name);
+    let h = b.space("host", u64::MAX);
+    b.main(h);
+    let t = b.proc_type("cpu", 1.0, 0.1);
+    b.processors(ncpu, "c", t, h);
+    let mut db = PerfDb::new();
+    db.set_fallback(0, PerfCurve::Saturating { peak, half: 64.0, exponent: 2.0 });
+    SweepPlatform::new(name, b.build(), db, 8)
+}
+
+fn grid() -> SweepGrid {
+    SweepGrid {
+        platforms: vec![platform("alpha", 4, 20.0), platform("beta", 2, 35.0)],
+        workloads: vec![
+            Workload::Cholesky { n: 128 },
+            Workload::Stencil { cells: 4, steps: 3 },
+            Workload::Random { n: 16 },
+        ],
+        policies: vec!["fcfs/eit-p".into(), "pl/eft-p".into()],
+        tiles: vec![32, 64],
+        modes: vec![CellMode::Simulate, CellMode::Solve { iters: 2, min_edge: 16 }],
+        seeds: vec![0, 1],
+        cache: CachePolicy::WriteBack,
+    }
+}
+
+/// The coordinate key that identifies a cell independent of grid order.
+fn key(r: &sweep::CellResult) -> (String, String, String, u32, String, u64) {
+    (r.platform.clone(), r.workload.clone(), r.policy.clone(), r.tile, r.mode.clone(), r.seed)
+}
+
+#[test]
+fn parallel_run_is_byte_identical_to_serial() {
+    let g = grid();
+    let serial = sweep::run_sweep(&g, 1);
+    let parallel = sweep::run_sweep(&g, 4);
+    assert!(!serial.is_empty());
+    assert_eq!(
+        sweep::to_csv(&serial),
+        sweep::to_csv(&parallel),
+        "aggregate CSV must not depend on the thread count"
+    );
+    assert_eq!(sweep::to_json(&serial), sweep::to_json(&parallel));
+}
+
+#[test]
+fn cell_seeds_are_stable_under_grid_reordering() {
+    let g = grid();
+    let forward = sweep::run_sweep(&g, 2);
+
+    // reverse every axis: every cell keeps its identity, only its
+    // position in the grid changes
+    let mut rev = grid();
+    rev.platforms.reverse();
+    rev.workloads.reverse();
+    rev.policies.reverse();
+    rev.tiles.reverse();
+    rev.modes.reverse();
+    rev.seeds.reverse();
+    let backward = sweep::run_sweep(&rev, 2);
+
+    assert_eq!(forward.len(), backward.len());
+    for f in &forward {
+        let b = backward
+            .iter()
+            .find(|b| key(b) == key(f))
+            .unwrap_or_else(|| panic!("cell {:?} missing from reordered run", key(f)));
+        assert_eq!(f.cell_seed, b.cell_seed, "seed must derive from coordinates, not position");
+        assert_eq!(f.makespan, b.makespan, "same cell, same trajectory: {:?}", key(f));
+        assert_eq!(f.transfer_bytes, b.transfer_bytes);
+    }
+}
+
+#[test]
+fn infeasible_tiles_are_skipped_not_errors() {
+    let mut g = grid();
+    g.tiles = vec![32, 48]; // 48 does not divide 128
+    let cells = g.expand();
+    assert!(cells
+        .iter()
+        .all(|c| c.workload.feasible(c.tile)));
+    // cholesky dropped tile 48; the synthetic shapes kept it
+    assert!(cells.iter().any(|c| c.tile == 48));
+    assert!(!cells
+        .iter()
+        .any(|c| c.tile == 48 && matches!(c.workload, Workload::Cholesky { .. })));
+}
+
+#[test]
+fn solve_cells_never_lose_to_their_baseline() {
+    let g = grid();
+    let results = sweep::run_sweep(&g, 4);
+    let mut solved = 0;
+    for r in results.iter().filter(|r| r.mode.starts_with("solve")) {
+        solved += 1;
+        assert!(
+            r.makespan <= r.hom_makespan * 1.0001,
+            "{}/{}/{}: solver kept a worse state ({} > {})",
+            r.platform,
+            r.workload,
+            r.policy,
+            r.makespan,
+            r.hom_makespan
+        );
+    }
+    assert!(solved > 0, "the grid must contain solve cells");
+}
+
+#[test]
+fn csv_rows_match_cells_and_header() {
+    let g = grid();
+    let results = sweep::run_sweep(&g, 2);
+    let csv = sweep::to_csv(&results);
+    let mut lines = csv.lines();
+    let header = lines.next().unwrap();
+    assert_eq!(header, sweep::CSV_HEADER);
+    let n_fields = header.split(',').count();
+    let mut rows = 0;
+    for line in lines {
+        assert_eq!(line.split(',').count(), n_fields, "{line}");
+        rows += 1;
+    }
+    assert_eq!(rows, results.len());
+    assert_eq!(results.len(), g.expand().len());
+}
+
+#[test]
+fn explicit_cell_lists_run_in_order() {
+    // two-phase usage (Table 1): pick winners from one sweep, run an
+    // explicit follow-up cell list through the same executor
+    let g = grid();
+    let mut cells = g.expand();
+    cells.truncate(6);
+    let a = sweep::run_cells(&g, &cells, 1);
+    let b = sweep::run_cells(&g, &cells, 3);
+    assert_eq!(a.len(), 6);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(key(x), key(y), "results must come back in cell-list order");
+        assert_eq!(x.makespan, y.makespan);
+    }
+}
+
+#[test]
+fn seed_axis_actually_varies_random_workloads() {
+    // the DAG-structure seed is a function of (workload, tile, declared
+    // seed) ONLY — the policy and mode axes must not enter, or every
+    // policy would schedule a different random instance and cross-policy
+    // comparisons would be meaningless
+    let s0 = workload_seed("random:16", 32, 0);
+    let s1 = workload_seed("random:16", 32, 1);
+    assert_ne!(s0, s1, "the declared seed axis varies the instance");
+    // … while the full cell seed (scheduler RNG) does key on policy/mode
+    assert_ne!(
+        cell_seed("alpha", "random:16", "pl/eft-p", 32, "sim", 0),
+        cell_seed("alpha", "random:16", "fcfs/eit-p", 32, "sim", 0)
+    );
+    let d0 = Workload::Random { n: 16 }.build(32, s0).unwrap();
+    let d1 = Workload::Random { n: 16 }.build(32, s1).unwrap();
+    let (e0, e1) = (d0.flat_dag().edge_count(), d1.flat_dag().edge_count());
+    // reproducible for the same seed
+    let d0b = Workload::Random { n: 16 }.build(32, s0).unwrap();
+    assert_eq!(e0, d0b.flat_dag().edge_count());
+    // (edge counts *can* coincide by chance; the structural check above
+    // is the reproducibility contract, the inequality below is a smoke
+    // check on this specific pair of seeds)
+    assert_ne!((s0, e0), (s1, e1));
+}
+
+#[test]
+fn workload_structure_is_mode_independent() {
+    // a solve cell's internal baseline and the sim cell at the same
+    // (platform, workload, policy, tile, seed) coordinates must simulate
+    // the SAME DAG instance. Both policies in this grid are deterministic
+    // (no RNG draws), so the baseline makespans must agree exactly — for
+    // the random workload this fails if the DAG-structure seed is keyed
+    // on the mode label (the regression `workload_seed` guards against).
+    let g = grid();
+    let results = sweep::run_sweep(&g, 2);
+    let mut checked = 0;
+    for r in results.iter().filter(|r| r.mode.starts_with("solve")) {
+        let twin = results
+            .iter()
+            .find(|o| {
+                o.mode == "sim"
+                    && o.platform == r.platform
+                    && o.workload == r.workload
+                    && o.policy == r.policy
+                    && o.tile == r.tile
+                    && o.seed == r.seed
+            })
+            .expect("every solve cell has a sim twin in this grid");
+        assert_eq!(r.hom_makespan, twin.makespan, "same DAG, same policy, same baseline: {:?}", key(r));
+        checked += 1;
+    }
+    assert!(checked > 0);
+}
