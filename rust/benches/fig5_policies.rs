@@ -33,6 +33,8 @@ fn main() {
         modes: vec![CellMode::Simulate],
         seeds: vec![0],
         cache: CachePolicy::WriteBack,
+        solve_lanes: 1,
+        solve_batch: 1,
     };
     let results = sweep::run_sweep(&grid, threads);
 

@@ -10,10 +10,13 @@
 //!
 //! Two sweep phases per platform, both executed across worker threads:
 //! phase 1 simulates the full policy x tile grid, phase 2 runs one solver
-//! cell per policy from its best homogeneous tile.
+//! cell per policy from its best homogeneous tile. Phase 2's cells run
+//! the portfolio solver (`--lanes M --batch K`, default the classic 1x1):
+//! with 10 solve cells and T threads the leftover budget T/10 flows into
+//! each cell's portfolio automatically.
 //!
-//! Flags: --iters N (default 250), --threads T, --quick (smaller
-//! problems for CI).
+//! Flags: --iters N (default 250), --threads T, --lanes M, --batch K,
+//! --quick (smaller problems for CI).
 
 use hesp::bench::Table;
 use hesp::coordinator::coherence::CachePolicy;
@@ -21,7 +24,17 @@ use hesp::coordinator::policy::PolicyRegistry;
 use hesp::coordinator::sweep::{self, CellMode, SweepCell, SweepGrid, SweepPlatform, Workload};
 use hesp::util::cli::Args;
 
-fn run_platform(config: &str, n: u32, tiles: &[u32], min_edge: u32, iters: usize, threads: usize, csv: &mut String) {
+#[allow(clippy::too_many_arguments)]
+fn run_platform(
+    config: &str,
+    n: u32,
+    tiles: &[u32],
+    min_edge: u32,
+    iters: usize,
+    threads: usize,
+    portfolio: (usize, usize),
+    csv: &mut String,
+) {
     let platform = SweepPlatform::from_file(config).expect("config");
     let machine_name = platform.name.clone();
     let policies: Vec<String> = PolicyRegistry::standard().names().iter().map(|s| s.to_string()).collect();
@@ -36,6 +49,8 @@ fn run_platform(config: &str, n: u32, tiles: &[u32], min_edge: u32, iters: usize
         modes: vec![CellMode::Simulate],
         seeds: vec![0],
         cache: CachePolicy::WriteBack,
+        solve_lanes: portfolio.0,
+        solve_batch: portfolio.1,
     };
     let hom = sweep::run_sweep(&grid, threads);
 
@@ -106,16 +121,17 @@ fn main() {
     let args = Args::from_env();
     let iters = args.usize_or("iters", 250);
     let threads = args.usize_or("threads", sweep::default_threads());
+    let portfolio = (args.usize_or("lanes", 1).max(1), args.usize_or("batch", 1).max(1));
     let quick = args.has("quick");
     let mut csv = String::from(
         "platform,policy,hom_gflops,hom_block,het_gflops,improve_pct,het_load,depth,het_transfer_bytes\n",
     );
     if quick {
-        run_platform("configs/bujaruelo.toml", 16_384, &[512, 1024, 2048, 4096], 128, iters.min(120), threads, &mut csv);
-        run_platform("configs/odroid.toml", 4_096, &[128, 256, 512, 1024], 64, iters.min(120), threads, &mut csv);
+        run_platform("configs/bujaruelo.toml", 16_384, &[512, 1024, 2048, 4096], 128, iters.min(120), threads, portfolio, &mut csv);
+        run_platform("configs/odroid.toml", 4_096, &[128, 256, 512, 1024], 64, iters.min(120), threads, portfolio, &mut csv);
     } else {
-        run_platform("configs/bujaruelo.toml", 32_768, &[512, 1024, 2048, 4096], 128, iters, threads, &mut csv);
-        run_platform("configs/odroid.toml", 8_192, &[128, 256, 512, 1024], 64, iters, threads, &mut csv);
+        run_platform("configs/bujaruelo.toml", 32_768, &[512, 1024, 2048, 4096], 128, iters, threads, portfolio, &mut csv);
+        run_platform("configs/odroid.toml", 8_192, &[128, 256, 512, 1024], 64, iters, threads, portfolio, &mut csv);
     }
     std::fs::create_dir_all("bench_out").ok();
     std::fs::write("bench_out/table1.csv", csv).ok();

@@ -31,7 +31,7 @@ use super::coherence::{CachePolicy, Coherence, SpaceId, Transfer};
 use super::datadag::BlockId;
 use super::ordering::critical_times;
 use super::perfmodel::PerfDb;
-use super::platform::{Machine, ProcId, Timeline};
+use super::platform::{LinkId, Machine, ProcId, Timeline};
 use super::policies::{Ordering, ProcSelect, SchedConfig};
 use super::policy::{self, ArrivalTable, SchedContext, SchedPolicy};
 use super::task::{Task, TaskId};
@@ -88,6 +88,12 @@ pub struct TransferRecord {
     pub bytes: u64,
     pub start: f64,
     pub end: f64,
+    /// Task whose dispatch booked this transfer as an input fetch — its
+    /// execution must not start before `end` (the arrival gate the
+    /// [`super::validate`] oracle checks). `None` for background traffic
+    /// (write-through pushes, write-back evictions, write-around streams),
+    /// which occupies links but gates no task.
+    pub dst_task: Option<TaskId>,
 }
 
 /// One task placement in the simulated schedule.
@@ -141,6 +147,13 @@ pub struct Schedule {
     /// The full time-ordered event log the run emitted
     /// (`TaskStart`/`TaskEnd`/`TransferStart`/`TransferEnd`/`ProcIdle`).
     pub events: Vec<SimEvent>,
+    /// Per-hop link bookings `(link, start, end)`, one entry per link a
+    /// transfer occupied, in booking order. A [`TransferRecord`] spans its
+    /// whole route (first-hop start to last-hop end, with possible idle
+    /// gaps between hops); this list is the exact occupancy, which is what
+    /// lets the [`super::validate`] oracle prove no two transfers ever
+    /// overlap on one link without trusting [`Timeline`]'s own arithmetic.
+    pub link_occupancy: Vec<(LinkId, f64, f64)>,
 }
 
 impl Schedule {
@@ -329,6 +342,7 @@ impl<'a> EventCore<'a> {
             let dur = l.latency + bytes as f64 / l.bandwidth;
             let s = self.links[lid].earliest_fit(t, dur);
             self.links[lid].book(s, dur);
+            self.sched.link_occupancy.push((lid, s, s + dur));
             if first.is_infinite() {
                 first = s;
             }
@@ -337,9 +351,17 @@ impl<'a> EventCore<'a> {
         (first, t)
     }
 
-    fn record_transfer(&mut self, from: SpaceId, to: SpaceId, bytes: u64, start: f64, end: f64) {
+    fn record_transfer(
+        &mut self,
+        from: SpaceId,
+        to: SpaceId,
+        bytes: u64,
+        start: f64,
+        end: f64,
+        dst_task: Option<TaskId>,
+    ) {
         debug_assert!(start.is_finite() && end >= start, "malformed transfer record");
-        self.sched.transfers.push(TransferRecord { from, to, bytes, start, end });
+        self.sched.transfers.push(TransferRecord { from, to, bytes, start, end, dst_task });
         self.sched.transfer_bytes += bytes;
         self.push_event(start, usize::MAX, EventKind::TransferStart { from, to, bytes });
         self.push_event(end, usize::MAX, EventKind::TransferEnd { from, to, bytes });
@@ -359,7 +381,7 @@ impl<'a> EventCore<'a> {
                 continue; // same-space: explicit no-op
             }
             let (start, end) = self.book_route(tr.from, tr.to, tr.bytes, at);
-            self.record_transfer(tr.from, tr.to, tr.bytes, start, end);
+            self.record_transfer(tr.from, tr.to, tr.bytes, start, end, None);
             self.note_arrival(tr.block, tr.to, end);
         }
     }
@@ -383,7 +405,7 @@ impl<'a> EventCore<'a> {
             }
             let (start, end) = self.book_route(tr.from, tr.to, tr.bytes, rel);
             data_ready = data_ready.max(end);
-            self.record_transfer(tr.from, tr.to, tr.bytes, start, end);
+            self.record_transfer(tr.from, tr.to, tr.bytes, start, end, Some(task.id));
             self.note_arrival(tr.block, tr.to, end);
             let evict = self.coh.complete_read(tr.block, tr.to);
             self.charge_background(end, &evict);

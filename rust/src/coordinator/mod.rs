@@ -15,7 +15,13 @@
 //!   shims that map onto built-in `policy` impls.
 //! * [`partitioners`]: blocked algorithms emitting sub-task clusters.
 //! * [`solver`]: the iterative scheduler-partitioner (All/CP/Shallow x
-//!   Hard/Soft).
+//!   Hard/Soft), rebuilt as a parallel *portfolio* solver — K-candidate
+//!   batched evaluation on cheap copy-on-write scratch DAGs plus M
+//!   independent restart lanes with content-derived seeds, byte-identical
+//!   output for any thread count.
+//! * [`validate`]: the schedule-invariant oracle — an independent checker
+//!   (processor/link exclusivity, dependences, arrival gates, makespan)
+//!   the solver runs on every accepted schedule in debug builds.
 //! * [`constructive`]: the online per-task-arrival scheduler-partitioner
 //!   (the paper's §4 follow-up).
 //! * [`workloads`]: synthetic DAG generators beyond dense linear algebra.
@@ -45,4 +51,5 @@ pub mod sweep;
 pub mod task;
 pub mod taskdag;
 pub mod trace;
+pub mod validate;
 pub mod workloads;

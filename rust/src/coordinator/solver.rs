@@ -1,4 +1,5 @@
-//! The iterative scheduler-partitioner (paper §2.1, "Iterative solver").
+//! The iterative scheduler-partitioner (paper §2.1, "Iterative solver"),
+//! rebuilt as a **parallel portfolio solver**.
 //!
 //! Each iteration runs a *schedule stage* (full discrete-event simulation
 //! of the current hierarchical DAG) followed by a *partition stage*:
@@ -16,6 +17,39 @@
 //!
 //! The solver keeps the best (dag, schedule) pair seen; the applied moves
 //! walk the search space even through locally-worse states (Soft mode).
+//!
+//! ## Batched candidate evaluation
+//!
+//! Instead of blindly applying the one sampled move and discovering its
+//! cost a full iteration later, each iteration samples a **batch of K
+//! candidates** (`Hard`: top-K by score; `Soft`: K weighted draws without
+//! replacement), evaluates every one on a scratch copy-on-write DAG clone
+//! (apply → re-derive edges → [`simulate_flat_policy`]) and accepts the
+//! lowest-finite-cost evaluation; the accepted evaluation *is* the next
+//! iteration's schedule stage, so a batch of K costs K simulations, not
+//! K + 1. A batch in which every candidate is rejected (partitioner
+//! refusal or non-finite cost) leaves the DAG and the incumbent untouched
+//! and is recorded in the [`IterLog`] (`evaluated == rejected`). With
+//! `K = 1` the walk consumes exactly the classic loop's RNG draws and
+//! applies the same actions; the two deliberate differences from the
+//! pre-portfolio solver are that the final accepted state is also scored
+//! (the old loop never simulated it, so `best` can only improve) and
+//! that a non-finite evaluation is rejected instead of walked into.
+//!
+//! ## Restart portfolio
+//!
+//! [`solve_portfolio`] runs **M independent lanes** (restart trajectories)
+//! concurrently: lane 0 uses the base seed, lanes 1.. derive distinct
+//! SplitMix64 streams from *content* (base seed, lane index, policy /
+//! sampling / candidate names — [`lane_seed`]), and lanes may override the
+//! policy, sampling and candidate selection per [`LaneSpec`]. The best
+//! finite-cost lane wins, ties broken toward the lower lane index, so the
+//! returned [`SolveResult`] (history included) is **byte-identical for
+//! any thread count**. Worker threads come from the same scoped-thread
+//! machinery as the sweep harness ([`crate::util::par::par_map`]); the
+//! budget is split lanes-first, leftover threads parallelize each lane's
+//! batch. In debug builds every accepted schedule passes the
+//! [`super::validate`] oracle.
 
 use super::energy::Objective;
 use super::engine::{simulate_flat_policy, simulate_policy, Schedule, SimConfig};
@@ -24,9 +58,11 @@ use super::partitioners::{snap_sub_edge, PartitionerSet};
 use super::perfmodel::PerfDb;
 use super::platform::Machine;
 use super::policies::SchedConfig;
-use super::policy::{self, SchedPolicy};
+use super::policy::{self, PolicyRegistry, SchedPolicy};
 use super::task::TaskId;
-use super::taskdag::TaskDag;
+use super::taskdag::{FlatDag, TaskDag};
+use crate::util::fxhash::content_seed;
+use crate::util::par::par_map;
 use crate::util::rng::Rng;
 
 /// Which tasks enter the partition-candidate list (paper: All/CP/Shallow).
@@ -122,19 +158,40 @@ pub enum Action {
     Repartition { cluster: TaskId, sub_edge: u32 },
 }
 
+impl Action {
+    /// Stable text form (iteration logs, the canonical solver JSON).
+    pub fn label(&self) -> String {
+        match *self {
+            Action::Partition { task, sub_edge } => format!("partition:{task}:{sub_edge}"),
+            Action::Merge { cluster } => format!("merge:{cluster}"),
+            Action::Repartition { cluster, sub_edge } => format!("repartition:{cluster}:{sub_edge}"),
+        }
+    }
+}
+
 /// Per-iteration log entry.
 #[derive(Debug, Clone)]
 pub struct IterLog {
     pub iter: usize,
+    /// Cost of the state this iteration *started* from.
     pub cost: f64,
     pub n_tasks: usize,
+    /// The accepted move — or, when the whole batch was rejected, the
+    /// primary (first-sampled) move that was attempted.
     pub action: Option<Action>,
     pub score: f64,
-    /// Whether the sampled action actually mutated the DAG. A
-    /// `Repartition` whose re-partition step is rejected by the
-    /// partitioner is *not* applied (the cluster keeps its current
-    /// tiling) and logs `false` here.
+    /// Whether any sampled action actually mutated the DAG. A candidate
+    /// whose apply step is rejected by the partitioner, or whose
+    /// evaluated cost is non-finite, is *not* applied; an iteration whose
+    /// entire batch was rejected logs `false` here (the DAG and the
+    /// incumbent are left exactly as they were).
     pub applied: bool,
+    /// Candidates sampled and evaluated this iteration (0 only when the
+    /// candidate list was empty and the search stopped).
+    pub evaluated: usize,
+    /// Evaluated candidates that were rejected (partitioner refusal or
+    /// non-finite evaluated cost).
+    pub rejected: usize,
 }
 
 /// Solver output: best state found + full iteration history.
@@ -142,8 +199,304 @@ pub struct SolveResult {
     pub best_cost: f64,
     pub best_schedule: Schedule,
     pub best_dag: TaskDag,
+    /// Iteration index at which `best_cost` first became the current
+    /// state's cost (`cfg.iters` when the final accepted evaluation won).
     pub best_iter: usize,
+    /// Portfolio lane that produced this result (0 for single-lane runs).
+    pub lane: usize,
+    /// Final best cost of every lane, in lane order (length 1 for
+    /// [`solve`] / [`solve_with`]).
+    pub lane_costs: Vec<f64>,
+    /// Iteration history of the winning lane.
     pub history: Vec<IterLog>,
+}
+
+/// Per-lane override of the portfolio's search knobs: a lane may run a
+/// different registry policy and different partition-stage settings than
+/// the portfolio's base, diversifying the restart trajectories beyond
+/// their seeds.
+#[derive(Debug, Clone)]
+pub struct LaneSpec {
+    /// Registry policy name; `None` = the portfolio's base policy.
+    pub policy: Option<String>,
+    pub sampling: Sampling,
+    pub candidates: CandidateSelect,
+}
+
+/// Configuration of [`solve_portfolio`].
+#[derive(Debug, Clone)]
+pub struct PortfolioConfig {
+    pub base: SolverConfig,
+    /// Candidate actions sampled and evaluated per iteration (K >= 1;
+    /// 1 = the classic single-candidate walk).
+    pub batch: usize,
+    /// Independent restart trajectories (M >= 1).
+    pub lanes: usize,
+    /// Total worker-thread budget, split lanes-first: `min(threads,
+    /// lanes)` lanes run concurrently and each lane parallelizes its
+    /// batch over `max(1, threads / lanes)` workers. The thread count
+    /// never changes the result, only the wall-clock.
+    pub threads: usize,
+    /// Optional per-lane overrides, indexed by lane (cycled when shorter
+    /// than `lanes`; empty = every lane runs the base settings).
+    pub lane_specs: Vec<LaneSpec>,
+}
+
+impl PortfolioConfig {
+    /// Single lane, single candidate, single thread — exactly the classic
+    /// solver.
+    pub fn new(base: SolverConfig) -> PortfolioConfig {
+        PortfolioConfig { base, batch: 1, lanes: 1, threads: 1, lane_specs: Vec::new() }
+    }
+
+    /// Resolve lane `lane`'s solver config + registry policy name.
+    /// Lane 0 keeps the base *seed* verbatim — so with empty `lane_specs`
+    /// (no overrides apply to any lane) a 1-lane portfolio is
+    /// byte-identical to [`solve_with`]; when `lane_specs` is non-empty,
+    /// every lane including lane 0 takes its spec's policy/sampling/
+    /// candidates, and only the seeding rule distinguishes lane 0. Lanes
+    /// 1.. derive content-based seeds for both the partition-stage RNG
+    /// and the simulation RNG.
+    fn lane_cfg(&self, lane: usize, base_policy: &str) -> (SolverConfig, String) {
+        let mut cfg = self.base;
+        let mut pol = base_policy.to_string();
+        if !self.lane_specs.is_empty() {
+            let spec = &self.lane_specs[lane % self.lane_specs.len()];
+            cfg.sampling = spec.sampling;
+            cfg.candidates = spec.candidates;
+            if let Some(p) = &spec.policy {
+                pol = p.clone();
+            }
+        }
+        if lane > 0 {
+            let s = lane_seed(self.base.seed, lane, &pol, cfg.sampling, cfg.candidates);
+            cfg.seed = s;
+            cfg.sim.seed = Rng::new(s).next_u64();
+        }
+        (cfg, pol)
+    }
+}
+
+/// Deterministic per-lane RNG seed, derived from the lane's *content*
+/// (base seed, lane index, policy/sampling/candidate names) through the
+/// same [`content_seed`] recipe the sweep harness uses for
+/// [`super::sweep::cell_seed`]: FxHash of the labels, mixed once through
+/// SplitMix64 so near-identical lanes do not get correlated streams.
+pub fn lane_seed(
+    base_seed: u64,
+    lane: usize,
+    policy: &str,
+    sampling: Sampling,
+    candidates: CandidateSelect,
+) -> u64 {
+    content_seed(&[policy, sampling.name(), candidates.name()], &[base_seed, lane as u64])
+}
+
+/// Where a lane gets its scheduling policy from.
+enum PolicyProvider<'a> {
+    /// One caller-owned policy, reused sequentially for every simulation
+    /// (the [`solve_with`] contract — supports stateful user policies;
+    /// batch evaluation stays serial).
+    Shared(&'a mut dyn SchedPolicy),
+    /// A fresh policy per simulation. Evaluations become order-independent
+    /// pure functions, which is what makes lanes and batches parallel-safe
+    /// and thread-count-invariant.
+    Factory(&'a (dyn Fn() -> Box<dyn SchedPolicy> + Sync)),
+}
+
+/// One evaluated candidate: the scratch state a lane adopts on acceptance.
+struct Eval {
+    cost: f64,
+    sched: Schedule,
+    dag: TaskDag,
+    flat: FlatDag,
+}
+
+/// Evaluate one candidate action on a scratch clone of `dag` (cheap:
+/// copy-on-write task storage). `None` = rejected — the apply step
+/// refused the move or the evaluated cost is non-finite.
+fn evaluate(
+    dag: &TaskDag,
+    action: Action,
+    machine: &Machine,
+    db: &PerfDb,
+    parts: &PartitionerSet,
+    cfg: &SolverConfig,
+    policy: &mut dyn SchedPolicy,
+) -> Option<Eval> {
+    let mut scratch = dag.clone();
+    if !apply_action(&mut scratch, parts, action) {
+        return None;
+    }
+    let flat = scratch.flat_dag();
+    let sched = simulate_flat_policy(&scratch, &flat, machine, db, cfg.sim, policy);
+    let cost = cfg.objective.cost(&sched, machine);
+    if !cost.is_finite() {
+        return None;
+    }
+    Some(Eval { cost, sched, dag: scratch, flat })
+}
+
+/// Sample the iteration's candidate batch: indices into `cands`, in
+/// preference order. `Hard` takes the top-K by score with ties broken
+/// toward the higher index — the first element is exactly the classic
+/// argmax (`max_by` keeps the *last* maximum). `Soft` makes K weighted
+/// draws without replacement, so `K = 1` consumes exactly one RNG draw,
+/// identical to the classic walk.
+fn sample_batch(cands: &[(Action, f64)], k: usize, sampling: Sampling, rng: &mut Rng) -> Vec<usize> {
+    let k = k.max(1).min(cands.len());
+    match sampling {
+        Sampling::Hard => {
+            let mut idx: Vec<usize> = (0..cands.len()).collect();
+            idx.sort_by(|&a, &b| cands[b].1.total_cmp(&cands[a].1).then(b.cmp(&a)));
+            idx.truncate(k);
+            idx
+        }
+        Sampling::Soft => {
+            // collect_candidates only emits finite positive scores, so
+            // the weight sum cannot be poisoned by an inf/NaN estimate
+            debug_assert!(cands.iter().all(|c| c.1.is_finite() && c.1 > 0.0), "{cands:?}");
+            let mut alive: Vec<usize> = (0..cands.len()).collect();
+            let mut weights: Vec<f64> = cands.iter().map(|c| c.1).collect();
+            let mut out = Vec::with_capacity(k);
+            for _ in 0..k {
+                let j = rng.weighted(&weights);
+                out.push(alive[j]);
+                alive.swap_remove(j);
+                weights.swap_remove(j);
+            }
+            out
+        }
+    }
+}
+
+fn lane_simulate(
+    prov: &mut PolicyProvider<'_>,
+    dag: &TaskDag,
+    flat: &FlatDag,
+    machine: &Machine,
+    db: &PerfDb,
+    sim: SimConfig,
+) -> Schedule {
+    match prov {
+        PolicyProvider::Shared(p) => simulate_flat_policy(dag, flat, machine, db, sim, &mut **p),
+        PolicyProvider::Factory(f) => {
+            let mut p = f();
+            simulate_flat_policy(dag, flat, machine, db, sim, p.as_mut())
+        }
+    }
+}
+
+/// One search trajectory: the batched iteration loop. The accepted
+/// evaluation of iteration `i` *is* iteration `i + 1`'s schedule stage.
+#[allow(clippy::too_many_arguments)]
+fn run_lane(
+    dag0: &TaskDag,
+    machine: &Machine,
+    db: &PerfDb,
+    parts: &PartitionerSet,
+    cfg: &SolverConfig,
+    batch: usize,
+    eval_threads: usize,
+    prov: &mut PolicyProvider<'_>,
+) -> SolveResult {
+    let mut rng = Rng::new(cfg.seed);
+    let mut history: Vec<IterLog> = Vec::new();
+
+    let mut dag = dag0.clone();
+    let mut flat = dag.flat_dag();
+    let mut sched = lane_simulate(prov, &dag, &flat, machine, db, cfg.sim);
+    let mut cost = cfg.objective.cost(&sched, machine);
+    // an infeasible start (zero-rate curve -> inf durations) is a valid
+    // inf-cost incumbent, not an invariant violation
+    #[cfg(debug_assertions)]
+    if cost.is_finite() {
+        super::validate::assert_valid(&dag, &flat, machine, &sched);
+    }
+    let mut best: (f64, Schedule, TaskDag, usize) = (cost, sched.clone(), dag.clone(), 0);
+
+    for iter in 0..cfg.iters.max(1) {
+        let cands = collect_candidates(&dag, &flat, &sched, machine, db, parts, cfg);
+        let mut entry = IterLog {
+            iter,
+            cost,
+            n_tasks: flat.len(),
+            action: None,
+            score: 0.0,
+            applied: false,
+            evaluated: 0,
+            rejected: 0,
+        };
+        if cands.is_empty() {
+            history.push(entry);
+            break;
+        }
+
+        let picked: Vec<(Action, f64)> =
+            sample_batch(&cands, batch, cfg.sampling, &mut rng).into_iter().map(|i| cands[i]).collect();
+        entry.evaluated = picked.len();
+
+        let mut evals: Vec<Option<Eval>> = match prov {
+            PolicyProvider::Factory(f) => {
+                let f = *f; // reborrow the shared factory out of &mut
+                par_map(eval_threads, &picked, |_, &(action, _)| {
+                    let mut p = f();
+                    evaluate(&dag, action, machine, db, parts, cfg, p.as_mut())
+                })
+            }
+            PolicyProvider::Shared(p) => picked
+                .iter()
+                .map(|&(action, _)| evaluate(&dag, action, machine, db, parts, cfg, &mut **p))
+                .collect(),
+        };
+        entry.rejected = evals.iter().filter(|e| e.is_none()).count();
+
+        // accept the lowest evaluated cost; ties toward sample order
+        let mut accepted: Option<(usize, f64)> = None;
+        for (j, e) in evals.iter().enumerate() {
+            if let Some(e) = e {
+                let better = match accepted {
+                    None => true,
+                    Some((_, c)) => e.cost < c,
+                };
+                if better {
+                    accepted = Some((j, e.cost));
+                }
+            }
+        }
+        match accepted {
+            Some((j, _)) => {
+                let e = evals[j].take().expect("accepted evaluation exists");
+                // the oracle runs on every ACCEPTED schedule (discarded
+                // batch members were simulated by the same engine path;
+                // re-validating them would only multiply debug wall-clock)
+                #[cfg(debug_assertions)]
+                super::validate::assert_valid(&e.dag, &e.flat, machine, &e.sched);
+                let (action, score) = picked[j];
+                entry.action = Some(action);
+                entry.score = score;
+                entry.applied = true;
+                if e.cost < best.0 {
+                    best = (e.cost, e.sched.clone(), e.dag.clone(), iter + 1);
+                }
+                dag = e.dag;
+                flat = e.flat;
+                sched = e.sched;
+                cost = e.cost;
+            }
+            None => {
+                // every candidate rejected: the DAG and incumbent stay
+                // untouched; log the primary move that was attempted
+                let (action, score) = picked[0];
+                entry.action = Some(action);
+                entry.score = score;
+            }
+        }
+        history.push(entry);
+    }
+
+    let (best_cost, best_schedule, best_dag, best_iter) = best;
+    SolveResult { best_cost, best_schedule, best_dag, best_iter, lane: 0, lane_costs: vec![best_cost], history }
 }
 
 /// Run the iterative scheduler-partitioner starting from `dag`, under the
@@ -160,60 +513,110 @@ pub fn solve(
 }
 
 /// [`solve`] under an arbitrary scheduling policy: every schedule stage of
-/// the iteration loop dispatches through `policy`.
+/// the iteration loop dispatches through `policy`. Single lane, batch of
+/// one — the classic sequential walk (stateful user policies are safe:
+/// the policy value is reused, never cloned or rebuilt).
 pub fn solve_with(
-    mut dag: TaskDag,
+    dag: TaskDag,
     machine: &Machine,
     db: &PerfDb,
     parts: &PartitionerSet,
     cfg: SolverConfig,
     policy: &mut dyn SchedPolicy,
 ) -> SolveResult {
-    let mut rng = Rng::new(cfg.seed);
-    let mut history = Vec::new();
-    let mut best: Option<(f64, Schedule, TaskDag, usize)> = None;
+    let mut prov = PolicyProvider::Shared(policy);
+    run_lane(&dag, machine, db, parts, &cfg, 1, 1, &mut prov)
+}
 
-    for iter in 0..cfg.iters.max(1) {
-        let flat = dag.flat_dag();
-        let sched = simulate_flat_policy(&dag, &flat, machine, db, cfg.sim, policy);
-        let cost = cfg.objective.cost(&sched, machine);
-        if best.as_ref().map(|b| cost < b.0).unwrap_or(true) {
-            best = Some((cost, sched.clone(), dag.clone(), iter));
-        }
-
-        let cands = collect_candidates(&dag, &flat, &sched, machine, db, parts, &cfg);
-        let mut entry =
-            IterLog { iter, cost, n_tasks: dag.frontier().len(), action: None, score: 0.0, applied: false };
-        if cands.is_empty() {
-            history.push(entry);
-            break;
-        }
-        let idx = match cfg.sampling {
-            Sampling::Hard => {
-                cands
-                    .iter()
-                    .enumerate()
-                    .max_by(|(_, a), (_, b)| a.1.total_cmp(&b.1))
-                    .map(|(i, _)| i)
-                    .unwrap()
-            }
-            Sampling::Soft => {
-                // collect_candidates only emits finite positive scores, so
-                // the weight sum cannot be poisoned by an inf/NaN estimate
-                let weights: Vec<f64> = cands.iter().map(|c| c.1).collect();
-                debug_assert!(weights.iter().all(|w| w.is_finite() && *w > 0.0), "{weights:?}");
-                rng.weighted(&weights)
-            }
-        };
-        let (action, score) = cands[idx];
-        entry.applied = apply_action(&mut dag, parts, action);
-        entry.action = Some(action);
-        entry.score = score;
-        history.push(entry);
+/// Run the full parallel portfolio: `cfg.lanes` independent trajectories
+/// of `cfg.batch`-wide batched search across `cfg.threads` workers. The
+/// winner is the lowest-cost lane (ties toward the lower lane index), so
+/// the result — history, costs, DAG — is byte-identical for any thread
+/// count. `policy` is the base registry policy name; [`LaneSpec`]s may
+/// override it per lane.
+pub fn solve_portfolio(
+    dag: &TaskDag,
+    machine: &Machine,
+    db: &PerfDb,
+    parts: &PartitionerSet,
+    reg: &PolicyRegistry,
+    policy: &str,
+    cfg: &PortfolioConfig,
+) -> SolveResult {
+    let lanes = cfg.lanes.max(1);
+    let batch = cfg.batch.max(1);
+    let threads = cfg.threads.max(1);
+    // resolve every lane's policy up front: a typo'd registry name must
+    // fail fast on the caller's thread, not inside a worker
+    let lane_cfgs: Vec<(SolverConfig, String)> = (0..lanes).map(|l| cfg.lane_cfg(l, policy)).collect();
+    for (_, name) in &lane_cfgs {
+        assert!(reg.get(name).is_some(), "unknown policy '{name}' in portfolio");
     }
+    let eval_threads = (threads / lanes).max(1);
+    let mut results: Vec<SolveResult> = par_map(threads.min(lanes), &lane_cfgs, |_, (lcfg, name)| {
+        let factory = || reg.get(name).expect("validated above");
+        let mut prov = PolicyProvider::Factory(&factory);
+        run_lane(dag, machine, db, parts, lcfg, batch, eval_threads, &mut prov)
+    });
+    let lane_costs: Vec<f64> = results.iter().map(|r| r.best_cost).collect();
+    let mut win = 0usize;
+    for i in 1..results.len() {
+        if results[i].best_cost.total_cmp(&results[win].best_cost).is_lt() {
+            win = i;
+        }
+    }
+    let mut out = results.swap_remove(win);
+    out.lane = win;
+    out.lane_costs = lane_costs;
+    out
+}
 
-    let (best_cost, best_schedule, best_dag, best_iter) = best.unwrap();
-    SolveResult { best_cost, best_schedule, best_dag, best_iter, history }
+/// Canonical byte-stable JSON of a [`SolveResult`] — what `hesp solve
+/// --out` writes, what the CI determinism smoke `cmp`s across thread
+/// counts, and what the golden-trace test pins. Float fields carry their
+/// exact bit patterns (hex) alongside a human-readable value, so equality
+/// of the serialization is equality of the trajectory.
+pub fn result_json(res: &SolveResult) -> String {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let bits = |x: f64| Json::Str(format!("{:016x}", x.to_bits()));
+    let mut o = BTreeMap::new();
+    o.insert("best_cost".to_string(), Json::Num(res.best_cost));
+    o.insert("best_cost_bits".to_string(), bits(res.best_cost));
+    o.insert("best_iter".to_string(), Json::Num(res.best_iter as f64));
+    o.insert("lane".to_string(), Json::Num(res.lane as f64));
+    o.insert(
+        "lane_cost_bits".to_string(),
+        Json::Arr(res.lane_costs.iter().map(|&c| bits(c)).collect()),
+    );
+    o.insert("makespan_bits".to_string(), bits(res.best_schedule.makespan));
+    o.insert("n_tasks".to_string(), Json::Num(res.best_dag.frontier().len() as f64));
+    o.insert("dag_depth".to_string(), Json::Num(res.best_dag.depth() as f64));
+    o.insert("transfer_bytes".to_string(), Json::Num(res.best_schedule.transfer_bytes as f64));
+    let hist: Vec<Json> = res
+        .history
+        .iter()
+        .map(|h| {
+            let mut e = BTreeMap::new();
+            e.insert("iter".to_string(), Json::Num(h.iter as f64));
+            e.insert("cost_bits".to_string(), bits(h.cost));
+            e.insert("n_tasks".to_string(), Json::Num(h.n_tasks as f64));
+            e.insert(
+                "action".to_string(),
+                match &h.action {
+                    Some(a) => Json::Str(a.label()),
+                    None => Json::Null,
+                },
+            );
+            e.insert("score_bits".to_string(), bits(h.score));
+            e.insert("applied".to_string(), Json::Bool(h.applied));
+            e.insert("evaluated".to_string(), Json::Num(h.evaluated as f64));
+            e.insert("rejected".to_string(), Json::Num(h.rejected as f64));
+            Json::Obj(e)
+        })
+        .collect();
+    o.insert("history".to_string(), Json::Arr(hist));
+    Json::Obj(o).to_string()
 }
 
 /// Apply one sampled move to the DAG. Returns whether the move actually
@@ -718,6 +1121,134 @@ mod tests {
         // the allowed edge still re-partitions fine through the same path
         assert!(apply_action(&mut dag, &parts, Action::Repartition { cluster: root, sub_edge: 64 }));
         assert_eq!(dag.task(root).partition_edge, Some(64));
+    }
+
+    #[test]
+    fn fully_rejected_batch_leaves_state_untouched() {
+        // the batched analogue of `rejected_repartition_leaves_cluster_intact`:
+        // every candidate of every batch is a Partition the picky
+        // partitioner refuses, so no iteration may mutate the DAG or the
+        // incumbent, and the rejection must be visible in the IterLog
+        let (m, db) = setup();
+        let mut parts = PartitionerSet::empty();
+        parts.register(std::sync::Arc::new(PickyPartitioner { only: 128 }));
+        let mut dag = cholesky::root(512);
+        parts.apply(&mut dag, 0, 128).expect("128 is the allowed edge");
+        let frontier0 = dag.frontier();
+        let base = simulate(&dag, &m, &db, simcfg());
+
+        let mut cfg = SolverConfig::all_soft(simcfg(), 4, 64);
+        cfg.allow_merge = false; // leaf Partition moves only
+        cfg.seed = 11;
+        let reg = crate::coordinator::policy::PolicyRegistry::standard();
+        let mut pcfg = PortfolioConfig::new(cfg);
+        pcfg.batch = 2;
+        pcfg.threads = 2;
+        let res = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &pcfg);
+
+        assert_eq!(res.best_cost.to_bits(), base.makespan.to_bits(), "incumbent is the initial state");
+        assert_eq!(res.best_iter, 0);
+        assert_eq!(res.best_dag.frontier(), frontier0, "the DAG must be left exactly as it was");
+        assert!(!res.history.is_empty());
+        for h in &res.history {
+            assert!(h.action.is_some(), "the attempted primary move is recorded: {h:?}");
+            assert!(!h.applied, "{h:?}");
+            assert!(h.evaluated >= 1, "{h:?}");
+            assert_eq!(h.rejected, h.evaluated, "every candidate must be rejected: {h:?}");
+            assert_eq!(h.cost.to_bits(), base.makespan.to_bits(), "state never changes: {h:?}");
+        }
+    }
+
+    #[test]
+    fn portfolio_single_lane_batch_one_matches_classic_walk() {
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let reg = crate::coordinator::policy::PolicyRegistry::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 10, 64);
+        cfg.seed = 9;
+        let legacy = solve(cholesky::root(512), &m, &db, &parts, cfg);
+        let port = solve_portfolio(&cholesky::root(512), &m, &db, &parts, &reg, "pl/eft-p", &PortfolioConfig::new(cfg));
+        assert_eq!(legacy.best_cost.to_bits(), port.best_cost.to_bits());
+        assert_eq!(legacy.best_iter, port.best_iter);
+        assert_eq!(legacy.history.len(), port.history.len());
+        for (a, b) in legacy.history.iter().zip(&port.history) {
+            assert_eq!(a.action, b.action);
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            assert_eq!(a.applied, b.applied);
+        }
+        assert_eq!(port.lane, 0);
+        assert_eq!(port.lane_costs.len(), 1);
+    }
+
+    #[test]
+    fn portfolio_thread_count_never_changes_the_result() {
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let reg = crate::coordinator::policy::PolicyRegistry::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 8, 64);
+        cfg.seed = 21;
+        let mut p1 = PortfolioConfig::new(cfg);
+        p1.lanes = 3;
+        p1.batch = 2;
+        p1.threads = 1;
+        let mut p4 = p1.clone();
+        p4.threads = 4;
+        let dag = cholesky::root(512);
+        let r1 = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &p1);
+        let r4 = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &p4);
+        assert_eq!(result_json(&r1), result_json(&r4), "canonical bytes must not depend on threads");
+        assert_eq!(r1.lane, r4.lane);
+        assert_eq!(r1.lane_costs.len(), 3);
+        // the winner is the lane minimum
+        assert!(r1.lane_costs.iter().all(|&c| r1.best_cost <= c));
+        // and the portfolio never loses to its own single-lane prefix
+        assert!(r1.best_cost <= r1.lane_costs[0]);
+    }
+
+    #[test]
+    fn lane_seeds_are_content_derived_and_distinct() {
+        let a = lane_seed(7, 1, "pl/eft-p", Sampling::Soft, CandidateSelect::All);
+        assert_eq!(a, lane_seed(7, 1, "pl/eft-p", Sampling::Soft, CandidateSelect::All));
+        assert_ne!(a, lane_seed(7, 2, "pl/eft-p", Sampling::Soft, CandidateSelect::All));
+        assert_ne!(a, lane_seed(8, 1, "pl/eft-p", Sampling::Soft, CandidateSelect::All));
+        assert_ne!(a, lane_seed(7, 1, "pl/affinity", Sampling::Soft, CandidateSelect::All));
+        assert_ne!(a, lane_seed(7, 1, "pl/eft-p", Sampling::Hard, CandidateSelect::All));
+        assert_ne!(a, lane_seed(7, 1, "pl/eft-p", Sampling::Soft, CandidateSelect::Shallow));
+    }
+
+    #[test]
+    fn hard_batch_matches_the_classic_argmax_and_orders_by_score() {
+        let cands = vec![
+            (Action::Merge { cluster: 0 }, 1.0),
+            (Action::Merge { cluster: 1 }, 3.0),
+            (Action::Merge { cluster: 2 }, 3.0),
+            (Action::Merge { cluster: 3 }, 2.0),
+        ];
+        let mut rng = Rng::new(0);
+        let legacy = cands
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.1.total_cmp(&b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        let picked = sample_batch(&cands, 3, Sampling::Hard, &mut rng);
+        assert_eq!(picked[0], legacy, "first Hard pick is the classic argmax (last max wins ties)");
+        assert_eq!(picked, vec![2, 1, 3]);
+
+        // Soft without replacement: k distinct indices
+        let mut rng = Rng::new(5);
+        let soft = sample_batch(&cands, 4, Sampling::Soft, &mut rng);
+        let mut s = soft.clone();
+        s.sort();
+        s.dedup();
+        assert_eq!(s.len(), 4);
+
+        // Soft k=1 consumes exactly the classic single weighted draw
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let w: Vec<f64> = cands.iter().map(|c| c.1).collect();
+        assert_eq!(sample_batch(&cands, 1, Sampling::Soft, &mut r1)[0], r2.weighted(&w));
+        assert_eq!(r1.next_u64(), r2.next_u64(), "RNG streams stay aligned");
     }
 
     #[test]

@@ -25,8 +25,6 @@
 //! on this harness.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrder};
-use std::sync::Mutex;
 
 use super::coherence::CachePolicy;
 use super::energy::{energy, DEFAULT_J_PER_BYTE};
@@ -37,12 +35,12 @@ use super::perfmodel::PerfDb;
 use super::platform::Machine;
 use super::policies::{Ordering, ProcSelect, SchedConfig};
 use super::policy::PolicyRegistry;
-use super::solver::{solve_with, SolverConfig};
+use super::solver::{solve_portfolio, PortfolioConfig, SolverConfig};
 use super::taskdag::TaskDag;
 use super::workloads;
-use crate::util::fxhash::FxHasher;
+use crate::util::fxhash::content_seed;
 use crate::util::json::Json;
-use crate::util::rng::Rng;
+use crate::util::par::par_map;
 
 /// One platform axis entry: a loaded machine + performance database.
 /// Built from a `configs/*.toml` file ([`SweepPlatform::from_file`]) or
@@ -221,6 +219,15 @@ pub struct SweepGrid {
     /// Write-caching policy for every cell's simulation (a global grid
     /// knob, like the platform's `elem_bytes` — not a seed coordinate).
     pub cache: CachePolicy,
+    /// Portfolio lanes for `solve`-mode cells (grid-level search knob,
+    /// like `cache` — not a seed coordinate). 1 = the classic single
+    /// trajectory: same seed, same sampling draws, same applied actions
+    /// (the batched loop additionally scores the final accepted state and
+    /// rejects non-finite evaluations, so a cell's reported best can only
+    /// improve on the pre-portfolio solver's).
+    pub solve_lanes: usize,
+    /// Candidates evaluated per solver iteration in `solve`-mode cells.
+    pub solve_batch: usize,
 }
 
 /// One executable point of the grid.
@@ -272,19 +279,12 @@ impl SweepGrid {
 
 /// Deterministic per-cell RNG seed, derived from the cell's grid
 /// *coordinates* (labels, not positions): identical across thread counts
-/// and stable under any reordering of the grid axes. The raw label hash
-/// is passed once through SplitMix64 so near-identical labels do not
-/// yield correlated streams.
+/// and stable under any reordering of the grid axes. One instantiation of
+/// the shared [`content_seed`] recipe (FxHash + separators, mixed once
+/// through SplitMix64), like [`workload_seed`] and the portfolio solver's
+/// [`super::solver::lane_seed`].
 pub fn cell_seed(platform: &str, workload: &str, policy: &str, tile: u32, mode: &str, seed: u64) -> u64 {
-    use std::hash::Hasher;
-    let mut h = FxHasher::default();
-    for part in [platform, workload, policy, mode] {
-        h.write(part.as_bytes());
-        h.write_u8(0xff); // field separator: ("a","bc") must differ from ("ab","c")
-    }
-    h.write_u32(tile);
-    h.write_u64(seed);
-    Rng::new(h.finish()).next_u64()
+    content_seed(&[platform, workload, policy, mode], &[tile as u64, seed])
 }
 
 /// Seed for the workload *generator* (DAG structure) — a function of the
@@ -294,13 +294,7 @@ pub fn cell_seed(platform: &str, workload: &str, policy: &str, tile: u32, mode: 
 /// comparisons would rank whoever drew the easiest graph. The scheduler
 /// RNG uses [`cell_seed`] instead.
 pub fn workload_seed(workload: &str, tile: u32, seed: u64) -> u64 {
-    use std::hash::Hasher;
-    let mut h = FxHasher::default();
-    h.write(workload.as_bytes());
-    h.write_u8(0xff);
-    h.write_u32(tile);
-    h.write_u64(seed);
-    Rng::new(h.finish()).next_u64()
+    content_seed(&[workload], &[tile as u64, seed])
 }
 
 /// Everything one cell reports — the columns of `bench_out/sweep.csv`.
@@ -353,33 +347,32 @@ pub fn run_sweep(grid: &SweepGrid, threads: usize) -> Vec<CellResult> {
 
 /// Execute an explicit cell list (for two-phase experiments like Table 1:
 /// sweep homogeneous tilings, pick winners, solve from them). Workers
-/// pull cells off a shared atomic cursor; results land in cell-list
+/// ([`par_map`] — the same scoped-thread machinery the portfolio solver
+/// uses) pull cells off a shared atomic cursor; results land in cell-list
 /// order, so the aggregate is identical for any thread count.
+///
+/// Solve-mode cells receive the *leftover* thread budget (`threads /
+/// n_cells`, min 1) instead of nesting a second full pool: a grid with
+/// fewer cells than workers — a single Table-1 solve cell, say — spends
+/// the spare threads inside the portfolio solver, while a wide grid keeps
+/// every thread on cells. Either split yields identical bytes; only the
+/// wall-clock changes.
 pub fn run_cells(grid: &SweepGrid, cells: &[SweepCell], threads: usize) -> Vec<CellResult> {
-    let threads = threads.clamp(1, cells.len().max(1));
+    let requested = threads.max(1);
+    let workers = requested.clamp(1, cells.len().max(1));
+    let cell_threads = (requested / cells.len().max(1)).max(1);
     let parts = PartitionerSet::standard();
     let reg = PolicyRegistry::standard();
-    let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<CellResult>>> = Mutex::new(vec![None; cells.len()]);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, AtomicOrder::Relaxed);
-                let Some(cell) = cells.get(i) else { break };
-                let r = run_cell(grid, cell, &parts, &reg);
-                slots.lock().unwrap()[i] = Some(r);
-            });
-        }
-    });
-    slots
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|r| r.expect("a worker ran every cell"))
-        .collect()
+    par_map(workers, cells, |_, cell| run_cell(grid, cell, &parts, &reg, cell_threads))
 }
 
-fn run_cell(grid: &SweepGrid, cell: &SweepCell, parts: &PartitionerSet, reg: &PolicyRegistry) -> CellResult {
+fn run_cell(
+    grid: &SweepGrid,
+    cell: &SweepCell,
+    parts: &PartitionerSet,
+    reg: &PolicyRegistry,
+    cell_threads: usize,
+) -> CellResult {
     let p = &grid.platforms[cell.platform];
     let wl = cell.workload.label();
     let ml = cell.mode.label();
@@ -397,6 +390,12 @@ fn run_cell(grid: &SweepGrid, cell: &SweepCell, parts: &PartitionerSet, reg: &Po
         .expect("expand() emits only feasible cells");
 
     let base = simulate_policy(&dag, &p.machine, &p.db, sim, pol.as_mut());
+    // debug-build oracle pass over every cell baseline (inf-makespan cells
+    // — zero-rate curves — are infeasible results, not violations)
+    #[cfg(debug_assertions)]
+    if base.makespan.is_finite() {
+        super::validate::assert_valid(&dag, &dag.flat_dag(), &p.machine, &base);
+    }
     let base_r = report(&dag, &base);
 
     let (sched, r, failed) = match cell.mode {
@@ -404,7 +403,14 @@ fn run_cell(grid: &SweepGrid, cell: &SweepCell, parts: &PartitionerSet, reg: &Po
         CellMode::Solve { iters, min_edge } => {
             let mut cfg = SolverConfig::all_soft(sim, iters, min_edge);
             cfg.seed = cseed;
-            let res = solve_with(dag, &p.machine, &p.db, parts, cfg, pol.as_mut());
+            let pcfg = PortfolioConfig {
+                base: cfg,
+                batch: grid.solve_batch.max(1),
+                lanes: grid.solve_lanes.max(1),
+                threads: cell_threads,
+                lane_specs: Vec::new(),
+            };
+            let res = solve_portfolio(&dag, &p.machine, &p.db, parts, reg, &cell.policy, &pcfg);
             let failed = res.history.iter().filter(|h| h.action.is_some() && !h.applied).count();
             let r = report(&res.best_dag, &res.best_schedule);
             (res.best_schedule, r, failed)
@@ -515,13 +521,15 @@ pub fn write_sweep_bundle(dir: &Path, results: &[CellResult]) -> std::io::Result
 /// Load a declarative grid from a TOML file:
 ///
 /// ```toml
-/// platforms = ["configs/bujaruelo.toml", "configs/odroid.toml"]
-/// workloads = ["cholesky:16384", "lu:8192", "stencil:32x8"]
-/// policies  = ["all"]            # or explicit registry names
-/// tiles     = [512, 1024, 2048]
-/// modes     = ["sim", "solve:120:128"]
-/// seeds     = [0, 1]
-/// cache     = "wb"               # optional: wb | wt | wa
+/// platforms   = ["configs/bujaruelo.toml", "configs/odroid.toml"]
+/// workloads   = ["cholesky:16384", "lu:8192", "stencil:32x8"]
+/// policies    = ["all"]            # or explicit registry names
+/// tiles       = [512, 1024, 2048]
+/// modes       = ["sim", "solve:120:128"]
+/// seeds       = [0, 1]
+/// cache       = "wb"               # optional: wb | wt | wa
+/// solve_lanes = 4                  # optional: portfolio lanes per solve cell
+/// solve_batch = 2                  # optional: candidates evaluated per iter
 /// ```
 pub fn grid_from_toml(text: &str) -> anyhow::Result<SweepGrid> {
     use anyhow::anyhow;
@@ -612,7 +620,22 @@ pub fn grid_from_toml(text: &str) -> anyhow::Result<SweepGrid> {
         None => CachePolicy::WriteBack,
     };
 
-    Ok(SweepGrid { platforms, workloads, policies, tiles, modes, seeds, cache })
+    let pos_int = |key: &str| -> anyhow::Result<usize> {
+        match doc.get(key) {
+            None => Ok(1),
+            Some(v) => {
+                let x = v.as_i64().ok_or_else(|| anyhow!("{key} must be an integer"))?;
+                if x <= 0 {
+                    return Err(anyhow!("{key} must be positive, got {x}"));
+                }
+                Ok(x as usize)
+            }
+        }
+    };
+    let solve_lanes = pos_int("solve_lanes")?;
+    let solve_batch = pos_int("solve_batch")?;
+
+    Ok(SweepGrid { platforms, workloads, policies, tiles, modes, seeds, cache, solve_lanes, solve_batch })
 }
 
 #[cfg(test)]
@@ -692,6 +715,8 @@ mod tests {
             modes: vec![CellMode::Simulate],
             seeds: vec![0],
             cache: CachePolicy::WriteBack,
+            solve_lanes: 1,
+            solve_batch: 1,
         };
         let cells = grid.expand();
         // cholesky keeps only tile 64; stencil keeps both tiles

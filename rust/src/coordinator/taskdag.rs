@@ -13,6 +13,7 @@
 //! granularity (paper §2.1).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::util::fxhash::FxHashMap;
 
@@ -20,9 +21,17 @@ use super::region::Region;
 use super::task::{Task, TaskId, TaskKind, TaskSpec};
 
 /// Hierarchical task DAG (arena + tree structure + derived edges).
+///
+/// Task storage is **copy-on-write**: the arena holds `Arc<Task>` handles,
+/// so cloning a DAG copies only the handle vector (refcount bumps, no
+/// per-task region vectors) and a clone deep-copies a task lazily, the
+/// first time *that clone* mutates it ([`Arc::make_mut`]). This is what
+/// makes the portfolio solver's per-candidate scratch DAGs cheap: a batch
+/// of K candidate evaluations takes K handle-vector clones plus at most
+/// one deep task copy per mutated cluster, instead of K full deep clones.
 #[derive(Debug, Clone)]
 pub struct TaskDag {
-    tasks: Vec<Task>,
+    tasks: Vec<Arc<Task>>,
     /// Tombstones for tasks removed by merges.
     removed: Vec<bool>,
     pub root: TaskId,
@@ -83,7 +92,7 @@ impl TaskDag {
     pub fn new(root: TaskSpec) -> TaskDag {
         let flops = root.flops();
         TaskDag {
-            tasks: vec![Task {
+            tasks: vec![Arc::new(Task {
                 id: 0,
                 kind: root.kind,
                 reads: root.reads,
@@ -93,7 +102,7 @@ impl TaskDag {
                 children: None,
                 depth: 0,
                 partition_edge: None,
-            }],
+            })],
             removed: vec![false],
             root: 0,
         }
@@ -124,7 +133,7 @@ impl TaskDag {
         for s in specs {
             let nid = self.tasks.len();
             let flops = s.flops();
-            self.tasks.push(Task {
+            self.tasks.push(Arc::new(Task {
                 id: nid,
                 kind: s.kind,
                 reads: s.reads,
@@ -134,12 +143,13 @@ impl TaskDag {
                 children: None,
                 depth,
                 partition_edge: None,
-            });
+            }));
             self.removed.push(false);
             ids.push(nid);
         }
-        self.tasks[id].children = Some(ids.clone());
-        self.tasks[id].partition_edge = Some(edge);
+        let t = Arc::make_mut(&mut self.tasks[id]);
+        t.children = Some(ids.clone());
+        t.partition_edge = Some(edge);
         ids
     }
 
@@ -147,15 +157,18 @@ impl TaskDag {
     /// descendant subtree. The task becomes schedulable again.
     pub fn merge(&mut self, id: TaskId) {
         assert!(self.is_live(id), "merge of dead task {id}");
-        let children = match self.tasks[id].children.take() {
-            Some(c) => c,
-            None => return, // already a leaf
-        };
-        self.tasks[id].partition_edge = None;
+        if self.tasks[id].children.is_none() {
+            return; // already a leaf
+        }
+        let t = Arc::make_mut(&mut self.tasks[id]);
+        let children = t.children.take().expect("checked above");
+        t.partition_edge = None;
+        // descendants are only tombstoned, never deep-copied: their stale
+        // child lists are unreachable (nothing traverses a removed task)
         let mut stack = children;
         while let Some(c) = stack.pop() {
-            if let Some(gc) = self.tasks[c].children.take() {
-                stack.extend(gc);
+            if let Some(gc) = &self.tasks[c].children {
+                stack.extend(gc.iter().copied());
             }
             self.removed[c] = true;
         }
@@ -494,6 +507,28 @@ mod tests {
         let dot = dag.to_dot();
         assert_eq!(dot.matches("fillcolor").count(), 3);
         assert!(dot.contains("digraph"));
+    }
+
+    #[test]
+    fn clone_is_copy_on_write() {
+        use std::sync::Arc;
+        let mut dag = TaskDag::new(root_chol(8));
+        let a = reg(0, 4, 0, 4);
+        dag.partition(0, vec![spec(TaskKind::Potrf, vec![a], vec![a]); 3], 4);
+        let snap = dag.clone();
+        // a clone shares task storage until one side mutates
+        assert!(Arc::ptr_eq(&dag.tasks[1], &snap.tasks[1]));
+        assert!(Arc::ptr_eq(&dag.tasks[0], &snap.tasks[0]));
+        dag.merge(0);
+        // the snapshot kept the pre-merge shape
+        assert_eq!(snap.frontier().len(), 3);
+        assert_eq!(snap.task(0).partition_edge, Some(4));
+        assert_eq!(dag.frontier(), vec![0]);
+        // only the mutated root diverged; tombstoned children stay shared
+        assert!(!Arc::ptr_eq(&dag.tasks[0], &snap.tasks[0]));
+        assert!(Arc::ptr_eq(&dag.tasks[1], &snap.tasks[1]));
+        // and the snapshot still schedules independently
+        assert_eq!(snap.flat_dag().len(), 3);
     }
 
     #[test]

@@ -1,0 +1,376 @@
+//! The schedule-invariant oracle: an independent checker that proves a
+//! simulated [`Schedule`] is *physically realizable* on its [`Machine`],
+//! without trusting any of the engine's own booking arithmetic.
+//!
+//! Checked invariants (each violation reported with context):
+//!
+//! 1. **Finite, ordered times** — every assignment and transfer has finite
+//!    `0 <= release <= start <= end`; no NaN/inf anywhere.
+//! 2. **Processor exclusivity** — no two assignments overlap on one
+//!    processor.
+//! 3. **Link exclusivity** — no two bookings overlap on one interconnect
+//!    link (checked on the exact per-hop [`Schedule::link_occupancy`]
+//!    records, not the route-spanning transfer records).
+//! 4. **Dependences** — a task starts only after every predecessor's write
+//!    effects have landed (`start >= pred.end` for every derived edge).
+//! 5. **Arrival gate** — a task starts only after every input transfer
+//!    booked for it has physically arrived (`start >= transfer.end` for
+//!    every transfer with `dst_task == task`).
+//! 6. **Makespan** — equals the max end over assignments and transfers,
+//!    and no event in the log is stamped later; the event log is
+//!    time-ordered and contains exactly one `TaskStart`/`TaskEnd` pair per
+//!    assignment, at the assignment's own times.
+//! 7. **Busy accounting** — per-processor busy seconds equal the summed
+//!    assignment durations.
+//!
+//! The portfolio solver runs this oracle on every accepted candidate
+//! schedule in debug builds, and the sweep harness on every cell baseline;
+//! `rust/tests/schedule_oracle.rs` drives it over randomized workloads for
+//! every registry policy (CI also runs that suite under `--release`, so
+//! optimized-build arithmetic goes through the same checks).
+
+use super::engine::{EventKind, Schedule};
+use super::platform::Machine;
+use super::task::TaskId;
+use super::taskdag::{FlatDag, TaskDag};
+use crate::util::fxhash::FxHashMap;
+
+/// Absolute slack for time comparisons. Simulated times are seconds built
+/// from f64 sums/divisions; real overlaps in this codebase are whole
+/// task/transfer durations (>= microseconds), ten orders above this.
+const EPS: f64 = 1e-9;
+
+/// Check every schedule invariant; `Err` carries one line per violation.
+pub fn validate_schedule(
+    dag: &TaskDag,
+    flat: &FlatDag,
+    machine: &Machine,
+    sched: &Schedule,
+) -> Result<(), String> {
+    let mut errs: Vec<String> = Vec::new();
+    let n = flat.len();
+
+    // ---- shape: one assignment per frontier position, ids consistent ----
+    if sched.assignments.len() != n {
+        return Err(format!(
+            "schedule has {} assignments for a {}-task frontier",
+            sched.assignments.len(),
+            n
+        ));
+    }
+    for (pos, a) in sched.assignments.iter().enumerate() {
+        if a.pos != pos {
+            errs.push(format!("assignment at slot {pos} carries pos {}", a.pos));
+        }
+        if a.task != flat.tasks[pos] {
+            errs.push(format!("assignment {pos} schedules task {} but the frontier holds {}", a.task, flat.tasks[pos]));
+        }
+        if a.proc >= machine.n_procs() {
+            errs.push(format!("assignment {pos} placed on unknown processor {}", a.proc));
+        }
+        if !dag.is_live(a.task) {
+            errs.push(format!("assignment {pos} schedules dead task {}", a.task));
+        }
+    }
+    if !errs.is_empty() {
+        return Err(errs.join("\n")); // later checks index by these fields
+    }
+
+    // ---- 1. finite, ordered times ----
+    for a in &sched.assignments {
+        let ok = a.release.is_finite() && a.start.is_finite() && a.end.is_finite();
+        if !ok {
+            errs.push(format!("task {} has non-finite times [{}, {}] release {}", a.task, a.start, a.end, a.release));
+            continue;
+        }
+        if a.release < -EPS || a.start < a.release - EPS || a.end < a.start {
+            errs.push(format!(
+                "task {} violates 0 <= release <= start <= end: release {} start {} end {}",
+                a.task, a.release, a.start, a.end
+            ));
+        }
+    }
+    for (i, t) in sched.transfers.iter().enumerate() {
+        if !t.start.is_finite() || !t.end.is_finite() {
+            errs.push(format!("transfer {i} ({} -> {}) has non-finite times", t.from, t.to));
+        } else if t.start < -EPS || t.end < t.start {
+            errs.push(format!("transfer {i} runs backwards: [{}, {}]", t.start, t.end));
+        }
+    }
+    for &(lid, s, e) in &sched.link_occupancy {
+        if !s.is_finite() || !e.is_finite() || e < s {
+            errs.push(format!("link {lid} booking [{s}, {e}] is malformed"));
+        }
+    }
+    if !errs.is_empty() {
+        return Err(errs.join("\n")); // interval checks assume finite times
+    }
+
+    // ---- 2. processor exclusivity ----
+    let mut per_proc: Vec<Vec<(f64, f64, TaskId)>> = vec![Vec::new(); machine.n_procs()];
+    for a in &sched.assignments {
+        per_proc[a.proc].push((a.start, a.end, a.task));
+    }
+    for (p, ivs) in per_proc.iter_mut().enumerate() {
+        ivs.sort_by(|x, y| x.0.total_cmp(&y.0));
+        for w in ivs.windows(2) {
+            if w[0].1 > w[1].0 + EPS {
+                errs.push(format!(
+                    "processor {p}: tasks {} [{}, {}] and {} [{}, {}] overlap",
+                    w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
+                ));
+            }
+        }
+    }
+
+    // ---- 3. link exclusivity ----
+    let mut per_link: Vec<Vec<(f64, f64)>> = vec![Vec::new(); machine.links.len()];
+    for &(lid, s, e) in &sched.link_occupancy {
+        if lid >= per_link.len() {
+            errs.push(format!("booking on unknown link {lid}"));
+            continue;
+        }
+        per_link[lid].push((s, e));
+    }
+    for (l, ivs) in per_link.iter_mut().enumerate() {
+        ivs.sort_by(|x, y| x.0.total_cmp(&y.0));
+        for w in ivs.windows(2) {
+            if w[0].1 > w[1].0 + EPS {
+                errs.push(format!(
+                    "link {l}: bookings [{}, {}] and [{}, {}] overlap",
+                    w[0].0, w[0].1, w[1].0, w[1].1
+                ));
+            }
+        }
+    }
+
+    // ---- 4. dependences ----
+    for pos in 0..n {
+        let a = &sched.assignments[pos];
+        for &p in &flat.preds[pos] {
+            let dep = &sched.assignments[p];
+            if a.start < dep.end - EPS {
+                errs.push(format!(
+                    "task {} starts at {} before predecessor {} finishes at {}",
+                    a.task, a.start, dep.task, dep.end
+                ));
+            }
+        }
+    }
+
+    // ---- 5. arrival gate ----
+    let pos_of: FxHashMap<TaskId, usize> =
+        flat.tasks.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+    for (i, t) in sched.transfers.iter().enumerate() {
+        let Some(tid) = t.dst_task else { continue };
+        let Some(&pos) = pos_of.get(&tid) else {
+            errs.push(format!("transfer {i} fetches input for unknown task {tid}"));
+            continue;
+        };
+        let a = &sched.assignments[pos];
+        if a.start < t.end - EPS {
+            errs.push(format!(
+                "task {tid} starts at {} before its input transfer {i} ({} -> {}) lands at {}",
+                a.start, t.from, t.to, t.end
+            ));
+        }
+    }
+
+    // ---- 6. makespan + event log ----
+    let task_end = sched.assignments.iter().map(|a| a.end).fold(0.0f64, f64::max);
+    let xfer_end = sched.transfers.iter().map(|t| t.end).fold(0.0f64, f64::max);
+    let expect = task_end.max(xfer_end);
+    if !sched.makespan.is_finite() || (sched.makespan - expect).abs() > EPS {
+        errs.push(format!("makespan {} != max event end {}", sched.makespan, expect));
+    }
+    for w in sched.events.windows(2) {
+        if w[1].time < w[0].time - EPS {
+            errs.push(format!("event log out of order: {} after {}", w[1].time, w[0].time));
+            break;
+        }
+    }
+    for e in &sched.events {
+        if !e.time.is_finite() || e.time > sched.makespan + EPS {
+            errs.push(format!("event {:?} at {} past the makespan {}", e.kind, e.time, sched.makespan));
+        }
+    }
+    let mut starts: FxHashMap<(TaskId, usize), Vec<f64>> = FxHashMap::default();
+    let mut ends: FxHashMap<(TaskId, usize), Vec<f64>> = FxHashMap::default();
+    for e in &sched.events {
+        match e.kind {
+            EventKind::TaskStart { task, proc } => starts.entry((task, proc)).or_default().push(e.time),
+            EventKind::TaskEnd { task, proc } => ends.entry((task, proc)).or_default().push(e.time),
+            _ => {}
+        }
+    }
+    for a in &sched.assignments {
+        let s_ok = starts
+            .get(&(a.task, a.proc))
+            .map_or(0, |v| v.iter().filter(|&&t| (t - a.start).abs() <= EPS).count());
+        let e_ok = ends
+            .get(&(a.task, a.proc))
+            .map_or(0, |v| v.iter().filter(|&&t| (t - a.end).abs() <= EPS).count());
+        if s_ok != 1 || e_ok != 1 {
+            errs.push(format!(
+                "task {} has {s_ok} TaskStart / {e_ok} TaskEnd events at its assignment times",
+                a.task
+            ));
+        }
+    }
+
+    // ---- 7. busy accounting ----
+    for (p, ivs) in per_proc.iter().enumerate() {
+        let sum: f64 = ivs.iter().map(|&(s, e, _)| e - s).sum();
+        let booked = sched.proc_busy.get(p).copied().unwrap_or(0.0);
+        // tolerance scales with the number of summed intervals
+        if (sum - booked).abs() > EPS * (ivs.len() as f64 + 1.0) {
+            errs.push(format!("processor {p}: proc_busy {booked} != summed assignment durations {sum}"));
+        }
+    }
+
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs.join("\n"))
+    }
+}
+
+/// Panic with the full violation list unless `sched` is valid — the
+/// debug-build hook the solver and sweep call on every schedule they keep.
+pub fn assert_valid(dag: &TaskDag, flat: &FlatDag, machine: &Machine, sched: &Schedule) {
+    if let Err(e) = validate_schedule(dag, flat, machine, sched) {
+        panic!("schedule failed invariant validation:\n{e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{simulate, SimConfig};
+    use crate::coordinator::partitioners::cholesky;
+    use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
+    use crate::coordinator::platform::MachineBuilder;
+    use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+
+    fn setup() -> (Machine, PerfDb) {
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        let g = b.space("gpu", u64::MAX);
+        b.main(h);
+        b.connect(h, g, 1e-5, 1e9);
+        let cpu = b.proc_type("cpu", 1.0, 0.1);
+        let gpu = b.proc_type("gpu", 1.0, 0.1);
+        b.processors(2, "c", cpu, h);
+        b.processors(1, "g", gpu, g);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 2.0 });
+        db.set_fallback(1, PerfCurve::Const { gflops: 8.0 });
+        (m, db)
+    }
+
+    fn sim() -> SimConfig {
+        SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+    }
+
+    #[test]
+    fn engine_schedules_pass() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(256);
+        cholesky::partition_uniform(&mut dag, 64);
+        let flat = dag.flat_dag();
+        let sched = simulate(&dag, &m, &db, sim());
+        validate_schedule(&dag, &flat, &m, &sched).expect("engine output must satisfy every invariant");
+    }
+
+    #[test]
+    fn overlapping_assignments_are_rejected() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(256);
+        cholesky::partition_uniform(&mut dag, 64);
+        let flat = dag.flat_dag();
+        let mut sched = simulate(&dag, &m, &db, sim());
+        // force two tasks onto one processor at the same instant
+        let a0 = sched.assignments[0];
+        sched.assignments[1].proc = a0.proc;
+        sched.assignments[1].start = a0.start;
+        sched.assignments[1].end = a0.end.max(sched.assignments[1].end);
+        let err = validate_schedule(&dag, &flat, &m, &sched).unwrap_err();
+        assert!(err.contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn broken_dependence_is_rejected() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(256);
+        cholesky::partition_uniform(&mut dag, 64);
+        let flat = dag.flat_dag();
+        let mut sched = simulate(&dag, &m, &db, sim());
+        // pull a dependent task before its predecessor finishes
+        let pos = (0..flat.len()).find(|&i| !flat.preds[i].is_empty()).expect("dag has edges");
+        sched.assignments[pos].release = 0.0;
+        sched.assignments[pos].start = 0.0;
+        let err = validate_schedule(&dag, &flat, &m, &sched).unwrap_err();
+        assert!(err.contains("before predecessor"), "{err}");
+    }
+
+    #[test]
+    fn non_finite_time_is_rejected() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(256);
+        cholesky::partition_uniform(&mut dag, 64);
+        let flat = dag.flat_dag();
+        let mut sched = simulate(&dag, &m, &db, sim());
+        sched.assignments[2].end = f64::INFINITY;
+        let err = validate_schedule(&dag, &flat, &m, &sched).unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn wrong_makespan_is_rejected() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(256);
+        cholesky::partition_uniform(&mut dag, 64);
+        let flat = dag.flat_dag();
+        let mut sched = simulate(&dag, &m, &db, sim());
+        sched.makespan *= 0.5;
+        let err = validate_schedule(&dag, &flat, &m, &sched).unwrap_err();
+        assert!(err.contains("makespan"), "{err}");
+    }
+
+    #[test]
+    fn violated_arrival_gate_is_rejected() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(256);
+        cholesky::partition_uniform(&mut dag, 64);
+        let flat = dag.flat_dag();
+        let mut sched = simulate(&dag, &m, &db, sim());
+        // find a gating input transfer and pretend it lands after its task
+        // started (keep it before the makespan so only one check can fire)
+        let Some(i) = (0..sched.transfers.len()).find(|&i| sched.transfers[i].dst_task.is_some()) else {
+            // every task ran CPU-local — not this machine/db combination
+            panic!("the gpu machine must fetch at least one input");
+        };
+        let tid = sched.transfers[i].dst_task.unwrap();
+        let pos = flat.tasks.iter().position(|&t| t == tid).unwrap();
+        sched.transfers[i].end = sched.assignments[pos].start + 1e-3;
+        let err = validate_schedule(&dag, &flat, &m, &sched).unwrap_err();
+        assert!(err.contains("input transfer"), "{err}");
+    }
+
+    #[test]
+    fn overlapping_link_bookings_are_rejected() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(256);
+        cholesky::partition_uniform(&mut dag, 64);
+        let flat = dag.flat_dag();
+        let mut sched = simulate(&dag, &m, &db, sim());
+        let Some(&(lid, s, e)) = sched.link_occupancy.first() else {
+            panic!("the gpu machine must book at least one link window");
+        };
+        // duplicate a booking shifted half a width into itself
+        sched.link_occupancy.push((lid, s + (e - s) * 0.5, e + (e - s) * 0.5));
+        let err = validate_schedule(&dag, &flat, &m, &sched).unwrap_err();
+        assert!(err.contains("link"), "{err}");
+    }
+}

@@ -33,7 +33,10 @@ use hesp::coordinator::metrics::report;
 use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
 use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
 use hesp::coordinator::policy::{policy_by_name, policy_for, PolicyRegistry, SchedPolicy};
-use hesp::coordinator::solver::{best_homogeneous_with, solve_with, CandidateSelect, Sampling, SolverConfig};
+use hesp::coordinator::solver::{
+    best_homogeneous_with, result_json, solve_portfolio, solve_with, CandidateSelect, PortfolioConfig, Sampling,
+    SolverConfig,
+};
 use hesp::coordinator::sweep::{self, CellMode, SweepGrid, SweepPlatform, Workload};
 use hesp::coordinator::trace::write_bundle;
 use hesp::util::cli::Args;
@@ -74,13 +77,20 @@ USAGE: hesp <subcommand> [--flags]
             [--workloads cholesky:N,lu:N,qr:N,layered:LxW,stencil:CxS,random:N]
             [--policies all|name,...] [--tiles 256,512,...] [--threads T]
             [--modes sim,solve:ITERS:MINEDGE | --solve --iters K --min-edge E]
-            [--seeds 0,1,...] [--cache wb|wt|wa] [--out bench_out/sweep.csv]
+            [--solve-lanes M] [--solve-batch K] [--seeds 0,1,...]
+            [--cache wb|wt|wa] [--out bench_out/sweep.csv]
             (parallel scenario grid; cells get content-derived seeds, so any
             --threads count emits a byte-identical aggregate CSV/JSON bundle.
             bare --quick = the self-contained 320-cell CI smoke grid)
-  solve     --platform F --n N [--tiles ...] [--iters K] [--candidates all|cp|shallow]
-            [--sampling hard|soft] [--min-edge E] [--objective makespan|energy|edp]
-            [--policy NAME]                               (Table 1 rows)
+  solve     --platform F | --quick   --n N [--tiles ...] [--iters K]
+            [--candidates all|cp|shallow] [--sampling hard|soft] [--min-edge E]
+            [--objective makespan|energy|edp] [--policy NAME]
+            [--threads T] [--portfolio M] [--batch K] [--out FILE.json]
+            (Table 1 rows; the parallel portfolio solver runs M restart
+            lanes x K-candidate batches over T workers — byte-identical
+            output for any T. --out writes the canonical solver JSON the
+            CI determinism smoke cmps; bare --quick = self-contained
+            bujaruelo smoke cell)
   online    --platform F --n N --tile B [--min-edge E] [--policy NAME]
             (constructive per-task-arrival partitioner, paper §4)
   table1    --platform F --n N [--tiles ...] [--iters K]  (full Table 1 + new policies)
@@ -218,6 +228,8 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
             modes: vec![CellMode::Simulate],
             seeds: vec![0, 1],
             cache,
+            solve_lanes: 1,
+            solve_batch: 1,
         });
     }
 
@@ -301,7 +313,10 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
         None => vec![args.u64_or("seed", 0)],
     };
 
-    Ok(SweepGrid { platforms, workloads, policies, tiles, modes, seeds, cache })
+    let solve_lanes = args.usize_or("solve-lanes", 1).max(1);
+    let solve_batch = args.usize_or("solve-batch", 1).max(1);
+
+    Ok(SweepGrid { platforms, workloads, policies, tiles, modes, seeds, cache, solve_lanes, solve_batch })
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
@@ -392,22 +407,56 @@ fn solver_config(args: &Args, sim: SimConfig) -> Result<SolverConfig> {
 }
 
 fn cmd_solve(args: &Args) -> Result<()> {
-    let p = load_platform(args)?;
-    let n = args.usize_or("n", 32768) as u32;
+    // bare --quick (no platform): the self-contained determinism-smoke
+    // cell CI runs at several thread counts and cmps byte-for-byte
+    let quick = args.has("quick") && !args.has("platform");
+    let p = if quick { Platform::from_file("configs/bujaruelo.toml")? } else { load_platform(args)? };
+    let n = args.usize_or("n", if quick { 4096 } else { 32768 }) as u32;
     let tiles: Vec<u32> = args.usize_list("tiles", &default_tiles(n)).into_iter().map(|x| x as u32).collect();
     let sim = sim_config(args, &p)?;
-    let scfg = solver_config(args, sim)?;
+    let mut scfg = solver_config(args, sim)?;
+    if quick && !args.has("iters") {
+        scfg.iters = 40;
+    }
+    let threads = args.usize_or("threads", sweep::default_threads());
+    let lanes = args.usize_or("portfolio", if quick { 4 } else { 1 });
+    let batch = args.usize_or("batch", if quick { 2 } else { 1 });
     let mut pol = build_policy(args, &p)?;
+    let policy_name = pol.name().to_string();
 
     let (hb, hdag, hsched) =
         best_homogeneous_with(n, &tiles, &p.machine, &p.db, sim, scfg.objective, pol.as_mut())
             .ok_or_else(|| anyhow!("no legal tile size in {tiles:?} for n={n}"))?;
-    print_report(&format!("best homogeneous (b={hb}, {})", pol.name()), &hdag, &hsched);
+    print_report(&format!("best homogeneous (b={hb}, {policy_name})"), &hdag, &hsched);
 
-    let res = solve_with(hdag, &p.machine, &p.db, &PartitionerSet::standard(), scfg, pol.as_mut());
-    print_report(&format!("best heterogeneous (iter {})", res.best_iter), &res.best_dag, &res.best_schedule);
+    let pcfg = PortfolioConfig { base: scfg, batch, lanes, threads, lane_specs: Vec::new() };
+    let reg = PolicyRegistry::standard();
+    anyhow::ensure!(
+        reg.get(&policy_name).is_some(),
+        "policy '{policy_name}' is not registry-constructible; the portfolio solver needs a registered name"
+    );
+    let t0 = std::time::Instant::now();
+    let res = solve_portfolio(&hdag, &p.machine, &p.db, &PartitionerSet::standard(), &reg, &policy_name, &pcfg);
+    let dt = t0.elapsed().as_secs_f64();
+    print_report(
+        &format!("best heterogeneous (iter {}, lane {}/{lanes})", res.best_iter, res.lane),
+        &res.best_dag,
+        &res.best_schedule,
+    );
     let imp = 100.0 * (hsched.makespan - res.best_schedule.makespan) / res.best_schedule.makespan;
-    println!("improvement: {imp:.2}%");
+    println!(
+        "improvement: {imp:.2}%  ({lanes} lanes x {batch}-candidate batches x {} iters on {threads} threads, {dt:.2}s)",
+        scfg.iters
+    );
+
+    if let Some(out) = args.get("out") {
+        let path = std::path::PathBuf::from(out);
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, result_json(&res))?;
+        println!("canonical solver JSON -> {}", path.display());
+    }
     Ok(())
 }
 

@@ -1,10 +1,12 @@
 //! Small self-contained substrates that replace ecosystem crates
 //! (the build is fully offline — see Cargo.toml): a seeded PRNG, a JSON
 //! parser for the artifact manifest, a TOML-subset parser for platform
-//! configs, and a tiny CLI flag parser.
+//! configs, a tiny CLI flag parser, and the deterministic scoped-thread
+//! parallel map the sweep harness and portfolio solver share.
 
 pub mod cli;
 pub mod fxhash;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod toml;

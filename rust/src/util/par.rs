@@ -1,0 +1,83 @@
+//! Deterministic scoped-thread parallel map — the worker machinery shared
+//! by the sweep harness and the portfolio solver.
+//!
+//! The build is vendored-deps-only (no rayon): workers are plain
+//! `std::thread::scope` threads pulling item indices off a shared atomic
+//! cursor. Results land in a slot vector **by item index**, so the output
+//! order — and, because every `f(i, item)` call is required to be a pure
+//! deterministic function of its inputs, the output *bytes* — are
+//! independent of the thread count and of work-stealing order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Apply `f` to every item of `items` across up to `threads` scoped worker
+/// threads; returns the results in item order.
+///
+/// `threads <= 1` (or a single item) runs inline on the caller's thread
+/// with no spawn overhead — the hot path for nested uses (a solver lane
+/// inside a sweep worker). `f` must not depend on execution order: it is
+/// called exactly once per item, from an arbitrary worker.
+pub fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(item) = items.get(i) else { break };
+                let r = f(i, item);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("a worker ran every item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_item_order() {
+        let items: Vec<usize> = (0..97).collect();
+        let serial = par_map(1, &items, |i, &x| (i, x * x));
+        let parallel = par_map(8, &items, |i, &x| (i, x * x));
+        assert_eq!(serial, parallel);
+        for (i, &(j, sq)) in serial.iter().enumerate() {
+            assert_eq!(i, j);
+            assert_eq!(sq, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(4, &none, |_, &x| x).is_empty());
+        assert_eq!(par_map(4, &[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn oversubscribed_thread_count_is_clamped() {
+        let items = [1u32, 2, 3];
+        assert_eq!(par_map(64, &items, |_, &x| x * 10), vec![10, 20, 30]);
+    }
+}

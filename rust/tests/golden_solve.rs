@@ -1,0 +1,86 @@
+//! Golden-trace pin for the portfolio solver: one bujaruelo Cholesky cell
+//! whose canonical solver output (`solver::result_json` — costs as exact
+//! f64 bit patterns, full action log) must stay **byte-stable across
+//! refactors**. Any change to candidate scoring, sampling order, seeding,
+//! the event core or the acceptance rule shows up here as a diff.
+//!
+//! ## Updating the golden (intended-change workflow)
+//!
+//! 1. Re-materialize: `UPDATE_GOLDEN=1 cargo test --test golden_solve`
+//!    (or delete `bench_out/golden_solve.json` and run the test once —
+//!    a missing golden is materialized, not failed, so a fresh checkout
+//!    bootstraps itself).
+//! 2. Inspect the diff of `bench_out/golden_solve.json` — every changed
+//!    `*_bits` field is a changed trajectory; make sure the change is the
+//!    one you intended.
+//! 3. Commit the new file together with the code change that moved it.
+//!
+//! Until the golden is committed, CI still enforces byte-stability
+//! *within* every job: the debug `cargo test` run materializes the file
+//! and a later `cargo test --release --test golden_solve` step must
+//! reproduce it byte-for-byte (debug and release must take the same
+//! trajectory). The in-test thread-count comparison below runs
+//! unconditionally either way.
+
+use std::path::Path;
+
+use hesp::config::Platform;
+use hesp::coordinator::partitioners::PartitionerSet;
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::policy::PolicyRegistry;
+use hesp::coordinator::engine::SimConfig;
+use hesp::coordinator::solver::{result_json, solve_portfolio, PortfolioConfig, SolverConfig};
+use hesp::coordinator::sweep::{cell_seed, workload_seed, Workload};
+
+#[test]
+fn bujaruelo_cholesky_solve_output_is_byte_stable() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let p = Platform::from_file(manifest.join("configs/bujaruelo.toml")).expect("bujaruelo config ships with the repo");
+
+    // one small solve cell, addressed exactly like a sweep cell so the
+    // golden pins the seeding chain too
+    let workload = Workload::Cholesky { n: 4096 };
+    let (tile, policy, mode, seed) = (1024u32, "pl/eft-p", "solve:12:256", 0u64);
+    let wl = workload.label();
+    let cseed = cell_seed(&p.machine.name, &wl, policy, tile, mode, seed);
+    let dag = workload.build(tile, workload_seed(&wl, tile, seed)).expect("1024 divides 4096");
+
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(p.elem_bytes)
+        .with_seed(cseed);
+    let mut base = SolverConfig::all_soft(sim, 12, 256);
+    base.seed = cseed;
+    let mut pcfg = PortfolioConfig::new(base);
+    pcfg.lanes = 2;
+    pcfg.batch = 2;
+    pcfg.threads = 2;
+
+    let parts = PartitionerSet::standard();
+    let reg = PolicyRegistry::standard();
+    let res = solve_portfolio(&dag, &p.machine, &p.db, &parts, &reg, policy, &pcfg);
+    let js = result_json(&res);
+
+    // determinism before byte-stability: the same cell at another thread
+    // count must already serialize identically
+    let mut serial = pcfg.clone();
+    serial.threads = 1;
+    let res1 = solve_portfolio(&dag, &p.machine, &p.db, &parts, &reg, policy, &serial);
+    assert_eq!(js, result_json(&res1), "thread count changed the canonical bytes");
+
+    let golden_path = manifest.join("bench_out/golden_solve.json");
+    if std::env::var_os("UPDATE_GOLDEN").is_some() || !golden_path.exists() {
+        std::fs::create_dir_all(golden_path.parent().unwrap()).expect("create bench_out/");
+        std::fs::write(&golden_path, &js).expect("write golden");
+        eprintln!(
+            "golden_solve.json (re)materialized at {} — commit it to pin this trajectory",
+            golden_path.display()
+        );
+        return;
+    }
+    let golden = std::fs::read_to_string(&golden_path).expect("read committed golden");
+    assert_eq!(
+        golden, js,
+        "solver output drifted from the committed golden trajectory; if this change is \
+         intended, re-materialize per the instructions in this test's header"
+    );
+}

@@ -1,0 +1,164 @@
+//! The schedule-invariant oracle, driven over randomized DAGs for every
+//! registry policy on heterogeneous machines (ISSUE 4 satellite).
+//!
+//! `validate_schedule` re-derives realizability from the schedule alone —
+//! processor/link exclusivity, dependence and arrival-gate ordering,
+//! makespan and busy accounting — so this suite is an end-to-end proof
+//! that the event core books what it claims, under every policy the
+//! registry knows, for regular and randomized workload shapes, in both
+//! plain simulation and full portfolio solves. CI runs it under
+//! `--release` too, so optimized-build arithmetic goes through the same
+//! checks as the debug build.
+
+use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::engine::{simulate_policy, SimConfig};
+use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
+use hesp::coordinator::perfmodel::{PerfCurve, PerfDb};
+use hesp::coordinator::platform::{Machine, MachineBuilder};
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::policy::PolicyRegistry;
+use hesp::coordinator::solver::{solve_portfolio, PortfolioConfig, SolverConfig};
+use hesp::coordinator::taskdag::TaskDag;
+use hesp::coordinator::validate::validate_schedule;
+use hesp::coordinator::workloads;
+
+/// 4 equal CPUs in one space: the contention-free baseline.
+fn flat_machine() -> (Machine, PerfDb) {
+    let mut b = MachineBuilder::new("flat");
+    let h = b.space("host", u64::MAX);
+    b.main(h);
+    let t = b.proc_type("cpu", 1.0, 0.1);
+    b.processors(4, "c", t, h);
+    let mut db = PerfDb::new();
+    db.set_fallback(0, PerfCurve::Saturating { peak: 20.0, half: 64.0, exponent: 2.0 });
+    (b.build(), db)
+}
+
+/// CPU + 2 GPUs in separate spaces behind narrow links: transfers, link
+/// contention and arrival gates all exercised.
+fn het_machine() -> (Machine, PerfDb) {
+    let mut b = MachineBuilder::new("het");
+    let h = b.space("host", u64::MAX);
+    let g0 = b.space("g0", u64::MAX);
+    let g1 = b.space("g1", u64::MAX);
+    b.main(h);
+    b.connect(h, g0, 1e-6, 5e7);
+    b.connect(h, g1, 1e-6, 5e7);
+    let cpu = b.proc_type("cpu", 1.0, 0.1);
+    let gpu = b.proc_type("gpu", 2.0, 0.2);
+    b.processors(2, "c", cpu, h);
+    b.processors(1, "a", gpu, g0);
+    b.processors(1, "b", gpu, g1);
+    let mut db = PerfDb::new();
+    db.set_fallback(0, PerfCurve::Const { gflops: 2.0 });
+    db.set_fallback(1, PerfCurve::Saturating { peak: 30.0, half: 48.0, exponent: 2.0 });
+    (b.build(), db)
+}
+
+fn workload_set() -> Vec<(String, TaskDag)> {
+    let mut out = Vec::new();
+    let mut chol = cholesky::root(256);
+    cholesky::partition_uniform(&mut chol, 64);
+    out.push(("cholesky:256/64".to_string(), chol));
+    out.push(("layered:4x6".to_string(), workloads::layered(4, 6, 32)));
+    out.push(("stencil:6x4".to_string(), workloads::stencil(6, 4, 32)));
+    for seed in 0..4u64 {
+        out.push((format!("random:48#{seed}"), workloads::random_layered(48, 32, seed)));
+    }
+    out
+}
+
+#[test]
+fn every_policy_emits_valid_schedules_on_every_workload() {
+    let reg = PolicyRegistry::standard();
+    let machines = [flat_machine(), het_machine()];
+    let mut checked = 0usize;
+    for (m, db) in &machines {
+        for (label, dag) in workload_set() {
+            let flat = dag.flat_dag();
+            for name in reg.names() {
+                for cache in [CachePolicy::WriteBack, CachePolicy::WriteThrough] {
+                    let mut pol = reg.get(name).expect("registered policy constructs");
+                    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+                        .with_cache(cache)
+                        .with_seed(0xc0ffee ^ checked as u64);
+                    let sched = simulate_policy(&dag, m, db, sim, pol.as_mut());
+                    validate_schedule(&dag, &flat, m, &sched).unwrap_or_else(|e| {
+                        panic!("{}/{label}/{name}/{}: invalid schedule:\n{e}", m.name, cache.name())
+                    });
+                    checked += 1;
+                }
+            }
+        }
+    }
+    assert!(checked >= 10 * 7 * 2 * 2, "coverage shrank: {checked} schedules checked");
+}
+
+#[test]
+fn portfolio_solver_schedules_validate_end_to_end() {
+    // the oracle over full solver output: every lane winner, the final
+    // best schedule and the re-simulated best DAG must all validate
+    let reg = PolicyRegistry::standard();
+    let parts = PartitionerSet::standard();
+    for (m, db) in [flat_machine(), het_machine()] {
+        let dag = cholesky::root(512);
+        let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+            .with_seed(7);
+        let mut base = SolverConfig::all_soft(sim, 10, 64);
+        base.seed = 7;
+        let mut pcfg = PortfolioConfig::new(base);
+        pcfg.lanes = 2;
+        pcfg.batch = 3;
+        pcfg.threads = 4;
+        let res = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &pcfg);
+        let flat = res.best_dag.flat_dag();
+        validate_schedule(&res.best_dag, &flat, &m, &res.best_schedule)
+            .unwrap_or_else(|e| panic!("{}: solver kept an invalid schedule:\n{e}", m.name));
+        assert!(res.best_cost.is_finite());
+        // replaying the winning DAG through the engine reproduces a valid
+        // schedule with the same makespan
+        let mut pol = reg.get("pl/eft-p").unwrap();
+        let replay = simulate_policy(&res.best_dag, &m, &db, sim, pol.as_mut());
+        validate_schedule(&res.best_dag, &flat, &m, &replay)
+            .unwrap_or_else(|e| panic!("{}: replay invalid:\n{e}", m.name));
+        assert_eq!(replay.makespan.to_bits(), res.best_schedule.makespan.to_bits());
+    }
+}
+
+#[test]
+fn oracle_rejects_tampered_schedules() {
+    // sensitivity: the oracle must reject what the engine would never emit
+    let (m, db) = het_machine();
+    let mut dag = cholesky::root(256);
+    cholesky::partition_uniform(&mut dag, 64);
+    let flat = dag.flat_dag();
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish));
+    let mut pol = PolicyRegistry::standard().get("pl/eft-p").unwrap();
+    let good = simulate_policy(&dag, &m, &db, sim, pol.as_mut());
+    validate_schedule(&dag, &flat, &m, &good).expect("baseline must validate");
+
+    // (a) same-processor overlap
+    let mut s = good.clone();
+    let p0 = s.assignments[0].proc;
+    s.assignments[1].proc = p0;
+    s.assignments[1].start = s.assignments[0].start;
+    s.assignments[1].end = s.assignments[0].end.max(s.assignments[1].end);
+    assert!(validate_schedule(&dag, &flat, &m, &s).is_err());
+
+    // (b) dependence inversion
+    let mut s = good.clone();
+    let pos = (0..flat.len()).find(|&i| !flat.preds[i].is_empty()).unwrap();
+    s.assignments[pos].release = 0.0;
+    s.assignments[pos].start = 0.0;
+    assert!(validate_schedule(&dag, &flat, &m, &s).is_err());
+
+    // (c) understated makespan
+    let mut s = good.clone();
+    s.makespan *= 0.9;
+    assert!(validate_schedule(&dag, &flat, &m, &s).is_err());
+
+    // (d) non-finite time
+    let mut s = good.clone();
+    s.transfers[0].end = f64::NAN;
+    assert!(validate_schedule(&dag, &flat, &m, &s).is_err());
+}

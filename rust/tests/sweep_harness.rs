@@ -1,10 +1,16 @@
 //! Sweep-harness determinism contract: a parallel run is byte-identical
-//! to the single-threaded run on the same grid, and per-cell seeds are a
-//! function of grid *coordinates* (stable under axis reordering).
+//! to the single-threaded run on the same grid, per-cell seeds are a
+//! function of grid *coordinates* (stable under axis reordering), and the
+//! portfolio solver inside solve-mode cells is thread-count-invariant.
 
 use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::engine::SimConfig;
+use hesp::coordinator::partitioners::PartitionerSet;
 use hesp::coordinator::perfmodel::{PerfCurve, PerfDb};
 use hesp::coordinator::platform::MachineBuilder;
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::policy::PolicyRegistry;
+use hesp::coordinator::solver::{result_json, solve_portfolio, PortfolioConfig, SolverConfig};
 use hesp::coordinator::sweep::{self, cell_seed, workload_seed, CellMode, SweepGrid, SweepPlatform, Workload};
 
 /// A small in-memory platform (no config files in unit tests).
@@ -32,6 +38,8 @@ fn grid() -> SweepGrid {
         modes: vec![CellMode::Simulate, CellMode::Solve { iters: 2, min_edge: 16 }],
         seeds: vec![0, 1],
         cache: CachePolicy::WriteBack,
+        solve_lanes: 1,
+        solve_batch: 1,
     }
 }
 
@@ -175,6 +183,107 @@ fn seed_axis_actually_varies_random_workloads() {
     // is the reproducibility contract, the inequality below is a smoke
     // check on this specific pair of seeds)
     assert_ne!((s0, e0), (s1, e1));
+}
+
+/// ISSUE-4 property test: a portfolio solve at `--threads 1` and
+/// `--threads 4` produces an identical `SolveResult` — cost, action log
+/// and final DAG shape — across 16 seeded grid cells (2 platforms x 2
+/// workloads x 2 policies x 2 seeds, 3 lanes x 2-candidate batches each).
+#[test]
+fn portfolio_solve_is_identical_at_1_and_4_threads_across_16_cells() {
+    let parts = PartitionerSet::standard();
+    let reg = PolicyRegistry::standard();
+    let platforms = [platform("alpha", 4, 20.0), platform("beta", 2, 35.0)];
+    let workloads = [Workload::Cholesky { n: 128 }, Workload::Stencil { cells: 4, steps: 3 }];
+    let policies = ["pl/eft-p", "fcfs/eit-p"];
+    let seeds = [0u64, 1];
+    let mode = "solve:3:16";
+    let mut checked = 0;
+    for p in &platforms {
+        for w in &workloads {
+            for pol in policies {
+                for &seed in &seeds {
+                    let wl = w.label();
+                    let cseed = cell_seed(&p.name, &wl, pol, 32, mode, seed);
+                    let dag = w.build(32, workload_seed(&wl, 32, seed)).expect("feasible cell");
+                    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+                        .with_elem_bytes(p.elem_bytes)
+                        .with_seed(cseed);
+                    let mut base = SolverConfig::all_soft(sim, 3, 16);
+                    base.seed = cseed;
+                    let mut p1 = PortfolioConfig::new(base);
+                    p1.lanes = 3;
+                    p1.batch = 2;
+                    p1.threads = 1;
+                    let mut p4 = p1.clone();
+                    p4.threads = 4;
+                    let r1 = solve_portfolio(&dag, &p.machine, &p.db, &parts, &reg, pol, &p1);
+                    let r4 = solve_portfolio(&dag, &p.machine, &p.db, &parts, &reg, pol, &p4);
+                    // cost, lane, per-lane costs, full action log: one
+                    // canonical serialization covers them all, bit-exact
+                    assert_eq!(
+                        result_json(&r1),
+                        result_json(&r4),
+                        "{}/{}/{pol}/seed{seed}: threads changed the solve trajectory",
+                        p.name,
+                        wl
+                    );
+                    // final DAG shape
+                    assert_eq!(r1.best_dag.frontier(), r4.best_dag.frontier());
+                    assert_eq!(r1.best_dag.depth(), r4.best_dag.depth());
+                    assert_eq!(r1.best_dag.live_count(), r4.best_dag.live_count());
+                    checked += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(checked, 16);
+}
+
+#[test]
+fn portfolio_grid_knobs_keep_parallel_serial_identity() {
+    // a grid with real portfolio width in its solve cells must still obey
+    // the harness byte-identity contract (and exercises the thread-budget
+    // passthrough: 8 requested threads over few cells leaves spare budget
+    // inside each cell's portfolio)
+    fn small() -> SweepGrid {
+        let mut g = grid();
+        g.platforms.truncate(1);
+        g.workloads.truncate(1);
+        g.policies.truncate(1);
+        g.seeds.truncate(1);
+        g
+    }
+    let mut g = small();
+    g.solve_lanes = 3;
+    g.solve_batch = 2;
+    // 4 cells, 8 requested threads: each cell's portfolio receives the
+    // spare budget (8 / 4 = 2 inner workers) — and must not change bytes
+    let serial = sweep::run_sweep(&g, 1);
+    let parallel = sweep::run_sweep(&g, 8);
+    assert!(!serial.is_empty());
+    assert_eq!(sweep::to_csv(&serial), sweep::to_csv(&parallel));
+
+    // never-lose is only an invariant at MATCHED batch width: extra lanes
+    // can't hurt (lane 0 of a lanes=3/batch=1 run IS the lanes=1/batch=1
+    // trajectory), but a different batch width changes lane 0's RNG walk
+    // and has no ordering guarantee against it
+    let mut g_lanes = small();
+    g_lanes.solve_lanes = 3;
+    let multi = sweep::run_sweep(&g_lanes, 2);
+    let single = sweep::run_sweep(&small(), 2);
+    let mut compared = 0;
+    for (m, one) in multi.iter().zip(&single).filter(|(m, _)| m.mode.starts_with("solve")) {
+        assert!(
+            m.makespan <= one.makespan + 1e-12,
+            "{}: a 3-lane portfolio lost to its own lane 0 ({} > {})",
+            m.policy,
+            m.makespan,
+            one.makespan
+        );
+        compared += 1;
+    }
+    assert!(compared > 0);
 }
 
 #[test]
