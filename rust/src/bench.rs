@@ -11,6 +11,10 @@ use std::time::Instant;
 /// deviation (Bessel-corrected, `/ (n-1)`): bench sample counts are small,
 /// and the population formula (`/ n`) systematically understates the
 /// noise of exactly those runs. A single sample reports 0.
+///
+/// All arithmetic lives in [`crate::util::stats`] — the same percentile
+/// and spread formulas the service-layer metrics report, so a bench
+/// median and a serve p50 can never disagree on definition.
 #[derive(Debug, Clone, Copy)]
 pub struct Stats {
     pub n: usize,
@@ -23,19 +27,17 @@ pub struct Stats {
 
 impl Stats {
     pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        use crate::util::stats::{mean, percentile, sample_stddev};
         assert!(!xs.is_empty());
         xs.sort_by(|a, b| a.total_cmp(b));
         let n = xs.len();
-        let mean = xs.iter().sum::<f64>() / n as f64;
-        let ss = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>();
-        let var = if n > 1 { ss / (n - 1) as f64 } else { 0.0 };
         Stats {
             n,
-            mean_s: mean,
-            median_s: if n % 2 == 1 { xs[n / 2] } else { 0.5 * (xs[n / 2 - 1] + xs[n / 2]) },
+            mean_s: mean(&xs),
+            median_s: percentile(&xs, 0.5),
             min_s: xs[0],
             max_s: xs[n - 1],
-            stddev_s: var.sqrt(),
+            stddev_s: sample_stddev(&xs),
         }
     }
 }

@@ -33,7 +33,7 @@ use super::ordering::critical_times;
 use super::perfmodel::PerfDb;
 use super::platform::{LinkId, Machine, ProcId, Timeline};
 use super::policies::{Ordering, ProcSelect, SchedConfig};
-use super::policy::{self, ArrivalTable, SchedContext, SchedPolicy};
+use super::policy::{self, ArrivalTable, JobInfo, SchedContext, SchedPolicy};
 use super::task::{Task, TaskId};
 use super::taskdag::{FlatDag, TaskDag};
 use crate::util::rng::Rng;
@@ -308,6 +308,14 @@ impl<'a> EventCore<'a> {
     /// A decision-time view for policy dispatch. Constructed fresh per
     /// call; never stored.
     pub fn ctx<'s>(&'s mut self, successors: &'s [&'s Task]) -> SchedContext<'s> {
+        self.ctx_job(successors, None)
+    }
+
+    /// [`EventCore::ctx`] with the owning job's identity attached — the
+    /// service layer's multi-job loop exposes job id / deadline slack to
+    /// job-aware policies this way. Single-DAG callers pass `None` and
+    /// those policies degrade to their job-oblivious fallbacks.
+    pub fn ctx_job<'s>(&'s mut self, successors: &'s [&'s Task], job: Option<JobInfo>) -> SchedContext<'s> {
         SchedContext {
             machine: self.machine,
             db: self.db,
@@ -318,7 +326,15 @@ impl<'a> EventCore<'a> {
             coh: &mut self.coh,
             rng: &mut self.rng,
             successors,
+            job,
         }
+    }
+
+    /// Time of the earliest pending event, if any — the service layer
+    /// interleaves job arrivals with the event stream by comparing the
+    /// next arrival against this before popping a batch.
+    pub fn next_event_time(&self) -> Option<f64> {
+        self.queue.peek().map(|e| e.time)
     }
 
     fn push_event(&mut self, time: f64, key: usize, kind: EventKind) {

@@ -1,0 +1,140 @@
+//! Makespan lower bounds: the classical critical-path / area argument.
+//!
+//! Any schedule must (a) execute the longest dependence chain serially,
+//! even with every task on its best processor, and (b) fit the total
+//! best-case work onto `n` processors. The larger of the two is a valid
+//! lower bound on the makespan of *any* schedule of the frontier — it
+//! ignores transfer costs and processor-type contention, so it is
+//! optimistic, which is exactly what a bound must be. The sweep harness
+//! reports `makespan / lb` per cell, and the service layer uses the
+//! per-job bound both as a slowdown denominator and to resolve relative
+//! deadlines (`deadline = arrival + slack * lb`).
+
+use super::perfmodel::PerfDb;
+use super::platform::Machine;
+use super::taskdag::{FlatDag, TaskDag};
+
+/// Best-case (min over processor types) execution time of each frontier
+/// task. The sibling of [`super::ordering::avg_times`], with `min` where
+/// the priority-list heuristic averages.
+pub fn min_times(dag: &TaskDag, flat: &FlatDag, machine: &Machine, db: &PerfDb) -> Vec<f64> {
+    let mut ptypes: Vec<usize> = machine.procs.iter().map(|p| p.ptype).collect();
+    ptypes.sort_unstable();
+    ptypes.dedup();
+    flat.tasks
+        .iter()
+        .map(|&tid| {
+            let t = dag.task(tid);
+            ptypes
+                .iter()
+                .map(|&ty| db.time(ty, t.kind, t.char_edge(), t.flops))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect()
+}
+
+/// `max(critical-path bound, area bound)` over the frontier:
+///
+/// * critical path — backflow of min-times along dependence chains
+///   (program order is topological, one reverse sweep suffices);
+/// * area — total min-time work spread perfectly over all processors.
+///
+/// An empty frontier bounds trivially at 0.
+pub fn makespan_lower_bound(dag: &TaskDag, flat: &FlatDag, machine: &Machine, db: &PerfDb) -> f64 {
+    if flat.is_empty() {
+        return 0.0;
+    }
+    let mt = min_times(dag, flat, machine, db);
+    let mut cp = vec![0.0f64; flat.len()];
+    for i in (0..flat.len()).rev() {
+        let down = flat.succs[i].iter().map(|&s| cp[s]).fold(0.0f64, f64::max);
+        cp[i] = mt[i] + down;
+    }
+    let cp_bound = cp.iter().fold(0.0f64, |a, &b| a.max(b));
+    let area_bound = mt.iter().sum::<f64>() / machine.procs.len().max(1) as f64;
+    cp_bound.max(area_bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{simulate, SimConfig};
+    use crate::coordinator::perfmodel::PerfCurve;
+    use crate::coordinator::platform::MachineBuilder;
+    use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+    use crate::coordinator::region::Region;
+    use crate::coordinator::task::{TaskKind, TaskSpec};
+
+    fn machine_two_types() -> Machine {
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let slow = b.proc_type("slow", 1.0, 0.1);
+        let fast = b.proc_type("fast", 1.0, 0.1);
+        b.processors(1, "s", slow, h);
+        b.processors(1, "f", fast, h);
+        b.build()
+    }
+
+    fn db() -> PerfDb {
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 1.0 });
+        db.set_fallback(1, PerfCurve::Const { gflops: 3.0 });
+        db
+    }
+
+    #[test]
+    fn chain_is_bound_by_critical_path() {
+        // t0 -> t1 -> t2 over the same region; 2e6 flops each, best rate
+        // 3 GFLOPS. CP = 3 * 2e-3/3 = 2e-3 beats area = 3 * (2e-3/3) / 2.
+        let r = Region::new(0, 0, 100, 0, 100);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![r], vec![r]));
+        dag.partition(0, vec![TaskSpec::new(TaskKind::Gemm, vec![r], vec![r]); 3], 100);
+        let flat = dag.flat_dag();
+        let lb = makespan_lower_bound(&dag, &flat, &machine_two_types(), &db());
+        assert!((lb - 2e-3).abs() < 1e-12, "{lb}");
+    }
+
+    #[test]
+    fn independent_tasks_are_bound_by_area() {
+        // 4 independent 2e6-flop tasks on disjoint regions, 2 processors:
+        // CP = 2e-3/3 (one task), area = 4 * (2e-3/3) / 2 wins.
+        let w = Region::new(0, 0, 400, 0, 400);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![w], vec![w]));
+        let specs: Vec<TaskSpec> = (0..4)
+            .map(|i| {
+                let r = Region::new(0, 100 * i, 100 * (i + 1), 0, 100);
+                TaskSpec::new(TaskKind::Gemm, vec![r], vec![r])
+            })
+            .collect();
+        dag.partition(0, specs, 100);
+        let flat = dag.flat_dag();
+        assert!(flat.preds.iter().all(|p| p.is_empty()), "tasks must be independent");
+        let lb = makespan_lower_bound(&dag, &flat, &machine_two_types(), &db());
+        assert!((lb - 4.0 * (2e-3 / 3.0) / 2.0).abs() < 1e-12, "{lb}");
+    }
+
+    #[test]
+    fn bound_never_exceeds_simulated_makespan() {
+        let r = Region::new(0, 0, 100, 0, 100);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![r], vec![r]));
+        dag.partition(0, vec![TaskSpec::new(TaskKind::Gemm, vec![r], vec![r]); 5], 100);
+        let flat = dag.flat_dag();
+        let m = machine_two_types();
+        let d = db();
+        let lb = makespan_lower_bound(&dag, &flat, &m, &d);
+        let cfg = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish));
+        let sched = simulate(&dag, &m, &d, cfg);
+        assert!(lb > 0.0);
+        assert!(lb <= sched.makespan + 1e-12, "lb {lb} vs makespan {}", sched.makespan);
+    }
+
+    #[test]
+    fn empty_frontier_bounds_at_zero() {
+        let r = Region::new(0, 0, 8, 0, 8);
+        let dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![r], vec![r]));
+        let flat = dag.flat_dag();
+        // a lone root is a 1-task frontier; the bound must still be positive
+        assert!(makespan_lower_bound(&dag, &flat, &machine_two_types(), &db()) > 0.0);
+    }
+}

@@ -7,10 +7,14 @@
 //! * [`platform`] / [`perfmodel`]: heterogeneous machine descriptions and
 //!   per-(processor, task, size) performance + transfer models.
 //! * [`engine`] / [`ordering`]: the discrete-event schedule simulator.
+//! * [`lower_bound`]: critical-path / area makespan lower bounds — the
+//!   optimality yardstick behind the sweep's `makespan_over_lb` column
+//!   and the service layer's slowdown/deadline arithmetic.
 //! * [`policy`]: the pluggable scheduling-policy layer — the
 //!   [`policy::SchedPolicy`] trait, the [`policy::SchedContext`] decision-time
 //!   view, and the string-keyed [`policy::PolicyRegistry`] (Table-1 rows
-//!   `fcfs/r-p` ... `pl/eft-p` plus `pl/affinity` and `pl/lookahead`).
+//!   `fcfs/r-p` ... `pl/eft-p` plus `pl/affinity`, `pl/lookahead`, and
+//!   the job-aware `pl/edf-p` / `pl/sjf-p`).
 //! * [`policies`]: the legacy `Ordering`/`ProcSelect` enums, kept as thin
 //!   shims that map onto built-in `policy` impls.
 //! * [`partitioners`]: blocked algorithms emitting sub-task clusters.
@@ -25,6 +29,10 @@
 //! * [`constructive`]: the online per-task-arrival scheduler-partitioner
 //!   (the paper's §4 follow-up).
 //! * [`workloads`]: synthetic DAG generators beyond dense linear algebra.
+//! * [`service`]: the streaming multi-DAG service layer — deterministic
+//!   arrival processes, admission control, and a multi-job simulator
+//!   co-scheduling concurrent `TaskDag`s on the shared event core, with
+//!   sojourn/deadline/fairness metrics (the `hesp serve` subcommand).
 //! * [`sweep`]: the parallel multi-scenario experiment harness — a
 //!   declarative platform x workload x policy x tile x mode x seed grid
 //!   expanded into cells and executed across scoped worker threads, with
@@ -38,6 +46,7 @@ pub mod constructive;
 pub mod datadag;
 pub mod energy;
 pub mod engine;
+pub mod lower_bound;
 pub mod metrics;
 pub mod ordering;
 pub mod partitioners;
@@ -46,6 +55,7 @@ pub mod platform;
 pub mod policies;
 pub mod policy;
 pub mod region;
+pub mod service;
 pub mod solver;
 pub mod sweep;
 pub mod task;

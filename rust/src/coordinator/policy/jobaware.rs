@@ -1,0 +1,198 @@
+//! Job-aware service-mode policies: EDF and shortest-job-first orderings
+//! over transfer-aware EFT selection.
+//!
+//! In single-DAG simulation, `pl/eft-p`'s critical-time ordering is the
+//! paper's best heuristic. Under a *stream* of concurrent jobs it turns
+//! into longest-job-first: a freshly admitted large DAG out-prioritizes
+//! every task of a nearly finished small one, so small jobs starve and
+//! the p99 sojourn blows up. These two policies order by *job*-level
+//! urgency instead, read from [`SchedContext::job`]:
+//!
+//! * [`DeadlinePolicy`] (`pl/edf-p`) — earliest absolute deadline first,
+//!   the classic result for bounding lateness;
+//! * [`ShortestJobPolicy`] (`pl/sjf-p`) — smallest makespan lower bound
+//!   first, the sojourn-time optimizer.
+//!
+//! Both keys are constants of the owning job, so `dynamic_order` stays
+//! `false` (one key per task at release). When no job is attached —
+//! every single-DAG code path — both degrade to FCFS ordering, keeping
+//! them well-defined (if uninteresting) in `hesp sweep` grids.
+
+use crate::coordinator::platform::ProcId;
+use crate::coordinator::task::Task;
+
+use super::{SchedContext, SchedPolicy};
+
+/// `pl/edf-p`: earliest-deadline-first ordering, EFT-P selection. Jobs
+/// without a declared deadline (`deadline == INFINITY`) sort behind every
+/// deadline-carrying job, tie-broken FCFS by arrival.
+pub struct DeadlinePolicy;
+
+impl DeadlinePolicy {
+    pub fn new() -> DeadlinePolicy {
+        DeadlinePolicy
+    }
+}
+
+impl Default for DeadlinePolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SchedPolicy for DeadlinePolicy {
+    fn name(&self) -> &str {
+        "pl/edf-p"
+    }
+
+    // the key is a constant of the owning job (or of the task's release)
+    fn dynamic_order(&self) -> bool {
+        false
+    }
+
+    fn order(&mut self, ctx: &mut SchedContext<'_>, _task: &Task, release: f64, _critical_time: f64) -> f64 {
+        match ctx.job {
+            // max-heap → negate: the earliest deadline pops first
+            Some(j) if j.deadline.is_finite() => -j.deadline,
+            // no declared deadline: behind every finite deadline, FCFS by
+            // arrival among themselves (finite, so arrival still orders —
+            // -INF would collapse all such jobs onto one key)
+            Some(j) => -1e30 - j.arrival,
+            None => -release,
+        }
+    }
+
+    fn select(&mut self, ctx: &mut SchedContext<'_>, task: &Task, release: f64) -> ProcId {
+        ctx.earliest_finish(task, release).1
+    }
+}
+
+/// `pl/sjf-p`: shortest-job-first by makespan lower bound, EFT-P
+/// selection — the mean/percentile-sojourn optimizer under contention.
+pub struct ShortestJobPolicy;
+
+impl ShortestJobPolicy {
+    pub fn new() -> ShortestJobPolicy {
+        ShortestJobPolicy
+    }
+}
+
+impl Default for ShortestJobPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SchedPolicy for ShortestJobPolicy {
+    fn name(&self) -> &str {
+        "pl/sjf-p"
+    }
+
+    fn dynamic_order(&self) -> bool {
+        false
+    }
+
+    fn order(&mut self, ctx: &mut SchedContext<'_>, _task: &Task, release: f64, _critical_time: f64) -> f64 {
+        match ctx.job {
+            // smallest lower bound pops first; equal-size jobs fall back
+            // to the engine's program-order tie-break (admission order)
+            Some(j) => -j.lower_bound,
+            None => -release,
+        }
+    }
+
+    fn select(&mut self, ctx: &mut SchedContext<'_>, task: &Task, release: f64) -> ProcId {
+        ctx.earliest_finish(task, release).1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::JobInfo;
+    use super::*;
+    use crate::coordinator::coherence::{CachePolicy, Coherence};
+    use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
+    use crate::coordinator::platform::{MachineBuilder, Timeline};
+    use crate::coordinator::policy::ArrivalTable;
+    use crate::coordinator::region::Region;
+    use crate::coordinator::task::{TaskKind, TaskSpec};
+    use crate::coordinator::taskdag::TaskDag;
+    use crate::util::rng::Rng;
+
+    fn with_ctx<R>(job: Option<JobInfo>, f: impl FnOnce(&mut SchedContext<'_>) -> R) -> R {
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let t = b.proc_type("cpu", 1.0, 0.1);
+        b.processors(2, "c", t, h);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 1.0 });
+        let mut coh = Coherence::new(m.spaces.len(), m.main_space, CachePolicy::WriteBack, m.capacities(), 4);
+        let mut rng = Rng::new(0);
+        let procs = vec![Timeline::new(); m.n_procs()];
+        let links: Vec<Timeline> = Vec::new();
+        let arrivals = ArrivalTable::default();
+        let mut ctx = SchedContext {
+            machine: &m,
+            db: &db,
+            now: 0.0,
+            procs: &procs,
+            links: &links,
+            arrivals: &arrivals,
+            coh: &mut coh,
+            rng: &mut rng,
+            successors: &[],
+            job,
+        };
+        f(&mut ctx)
+    }
+
+    fn task() -> Task {
+        let r = Region::new(0, 0, 8, 0, 8);
+        let dag = TaskDag::new(TaskSpec::new(TaskKind::Gemm, vec![r], vec![r]));
+        dag.task(dag.root).clone()
+    }
+
+    fn job(id: usize, arrival: f64, deadline: f64, lb: f64) -> JobInfo {
+        JobInfo { id, arrival, deadline, lower_bound: lb }
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_then_degrades_to_fcfs() {
+        let t = task();
+        let mut p = DeadlinePolicy::new();
+        let tight = with_ctx(Some(job(0, 0.0, 1.0, 0.5)), |c| p.order(c, &t, 0.0, 0.0));
+        let loose = with_ctx(Some(job(1, 0.0, 5.0, 0.5)), |c| p.order(c, &t, 0.0, 0.0));
+        let none = with_ctx(Some(job(2, 0.0, f64::INFINITY, 0.5)), |c| p.order(c, &t, 0.0, 0.0));
+        assert!(tight > loose, "tighter deadline pops first");
+        assert!(loose > none, "deadline-free jobs sort last");
+        // no job attached: FCFS on release
+        let a = with_ctx(None, |c| p.order(c, &t, 1.0, 9.9));
+        let b = with_ctx(None, |c| p.order(c, &t, 2.0, 9.9));
+        assert!(a > b);
+        assert!(!p.dynamic_order());
+    }
+
+    #[test]
+    fn sjf_orders_by_lower_bound() {
+        let t = task();
+        let mut p = ShortestJobPolicy::new();
+        let small = with_ctx(Some(job(0, 0.0, f64::INFINITY, 0.1)), |c| p.order(c, &t, 0.0, 0.0));
+        let big = with_ctx(Some(job(1, 0.0, f64::INFINITY, 7.0)), |c| p.order(c, &t, 0.0, 0.0));
+        assert!(small > big, "smaller job pops first");
+        let a = with_ctx(None, |c| p.order(c, &t, 1.0, 9.9));
+        let b = with_ctx(None, |c| p.order(c, &t, 2.0, 9.9));
+        assert!(a > b, "degrades to FCFS without a job");
+    }
+
+    #[test]
+    fn both_select_earliest_finish() {
+        let t = task();
+        let sel_edf = with_ctx(None, |c| DeadlinePolicy::new().select(c, &t, 0.0));
+        let sel_sjf = with_ctx(None, |c| ShortestJobPolicy::new().select(c, &t, 0.0));
+        // empty timelines, equal processors: EFT tie-breaks to proc 0
+        assert_eq!(sel_edf, 0);
+        assert_eq!(sel_sjf, 0);
+    }
+}

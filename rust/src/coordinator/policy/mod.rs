@@ -23,7 +23,10 @@
 //! [`super::policies`] maps onto them) plus two policies the old
 //! enum-dispatched API could not express — [`AffinityPolicy`]
 //! (data-placement-aware, XKaapi-style; Bleuse et al., arXiv:1402.6601)
-//! and [`LookaheadEftPolicy`] (EFT with one-step successor lookahead).
+//! and [`LookaheadEftPolicy`] (EFT with one-step successor lookahead) —
+//! and two job-aware service-mode policies ([`DeadlinePolicy`],
+//! [`ShortestJobPolicy`]) that read the owning job's identity from
+//! [`SchedContext::job`] when the service layer attaches one.
 //!
 //! The engine, the iterative solver and the constructive scheduler all
 //! dispatch through `&mut dyn SchedPolicy`; no execution path matches on
@@ -31,11 +34,13 @@
 
 mod affinity;
 mod builtin;
+mod jobaware;
 mod lookahead;
 mod registry;
 
 pub use affinity::AffinityPolicy;
 pub use builtin::BuiltinPolicy;
+pub use jobaware::{DeadlinePolicy, ShortestJobPolicy};
 pub use lookahead::LookaheadEftPolicy;
 pub use registry::{policy_by_name, PolicyRegistry};
 
@@ -159,6 +164,30 @@ pub struct SchedContext<'a> {
     /// [`SchedPolicy::select`] and only when the policy opts in via
     /// [`SchedPolicy::wants_successors`]; empty otherwise.
     pub successors: &'a [&'a Task],
+    /// Identity of the job this task belongs to, attached by the service
+    /// layer's multi-job loop ([`super::service`]). `None` in every
+    /// single-DAG simulation — job-aware policies must degrade to a
+    /// job-oblivious fallback when absent.
+    pub job: Option<JobInfo>,
+}
+
+/// What a job-aware policy may know about the job that owns the task
+/// under decision: its admission order, arrival instant, absolute
+/// deadline (`f64::INFINITY` when none was declared) and critical-path /
+/// area makespan lower bound ([`super::lower_bound`]) — enough to
+/// implement EDF- and shortest-job-style orderings without exposing the
+/// service layer's internal queue state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobInfo {
+    /// Admission-order job id (unique within one stream).
+    pub id: usize,
+    /// When the job arrived at the cluster.
+    pub arrival: f64,
+    /// Absolute completion deadline; `f64::INFINITY` if none.
+    pub deadline: f64,
+    /// The job DAG's makespan lower bound — a size proxy for
+    /// shortest-job-first orderings and slowdown metrics.
+    pub lower_bound: f64,
 }
 
 impl SchedContext<'_> {
@@ -362,6 +391,7 @@ mod tests {
             coh: &mut coh,
             rng: &mut rng,
             successors: &[],
+            job: None,
         };
         // input starts in main memory: host is data-ready instantly, the
         // GPU space pays one 100x100xf32 transfer

@@ -6,7 +6,7 @@
 
 use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
 
-use super::{AffinityPolicy, BuiltinPolicy, LookaheadEftPolicy, SchedPolicy};
+use super::{AffinityPolicy, BuiltinPolicy, DeadlinePolicy, LookaheadEftPolicy, ShortestJobPolicy, SchedPolicy};
 
 type Builder = Box<dyn Fn() -> Box<dyn SchedPolicy> + Send + Sync>;
 
@@ -28,7 +28,8 @@ impl PolicyRegistry {
     }
 
     /// The built-in set: the eight Table-1 rows (`fcfs/r-p` ... `pl/eft-p`)
-    /// plus `pl/affinity` and `pl/lookahead`.
+    /// plus `pl/affinity`, `pl/lookahead`, and the job-aware service-mode
+    /// pair `pl/edf-p` / `pl/sjf-p`.
     pub fn standard() -> PolicyRegistry {
         let mut reg = PolicyRegistry::empty();
         for row in SchedConfig::table1_rows() {
@@ -38,6 +39,8 @@ impl PolicyRegistry {
         }
         reg.register("pl/affinity", || Box::new(AffinityPolicy::new()) as Box<dyn SchedPolicy>);
         reg.register("pl/lookahead", || Box::new(LookaheadEftPolicy::new()) as Box<dyn SchedPolicy>);
+        reg.register("pl/edf-p", || Box::new(DeadlinePolicy::new()) as Box<dyn SchedPolicy>);
+        reg.register("pl/sjf-p", || Box::new(ShortestJobPolicy::new()) as Box<dyn SchedPolicy>);
         reg
     }
 
@@ -110,11 +113,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn standard_has_table1_plus_two() {
+    fn standard_has_table1_plus_four() {
         let reg = PolicyRegistry::standard();
-        assert_eq!(reg.len(), 10);
+        assert_eq!(reg.len(), 12);
         let names = reg.names();
-        for expect in ["fcfs/r-p", "pl/r-p", "fcfs/eft-p", "pl/eft-p", "pl/affinity", "pl/lookahead"] {
+        for expect in [
+            "fcfs/r-p",
+            "pl/r-p",
+            "fcfs/eft-p",
+            "pl/eft-p",
+            "pl/affinity",
+            "pl/lookahead",
+            "pl/edf-p",
+            "pl/sjf-p",
+        ] {
             assert!(names.contains(&expect), "{expect} missing from {names:?}");
         }
     }
@@ -127,6 +139,8 @@ mod tests {
         assert_eq!(reg.get("fcfs/random").unwrap().name(), "fcfs/r-p");
         assert_eq!(reg.get("affinity").unwrap().name(), "pl/affinity");
         assert_eq!(reg.get("lookahead").unwrap().name(), "pl/lookahead");
+        assert_eq!(reg.get("edf-p").unwrap().name(), "pl/edf-p");
+        assert_eq!(reg.get("sjf-p").unwrap().name(), "pl/sjf-p");
         assert!(reg.get("pl/zzz").is_none());
         assert!(reg.get("zzz").is_none());
     }

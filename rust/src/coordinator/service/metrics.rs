@@ -1,0 +1,323 @@
+//! Service-level objectives of one stream scenario, and their canonical
+//! CSV/JSON emission (the byte-stable twin-format bundle, like
+//! [`crate::coordinator::sweep`]'s).
+//!
+//! Sojourn percentiles and means come from [`crate::util::stats`];
+//! fairness is Jain's index over per-priority-class mean *slowdown*
+//! (sojourn / makespan lower bound — raw sojourns would let one class of
+//! intrinsically bigger jobs read as "unfair" on any policy).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::util::stats::{jain, mean, percentile};
+
+use super::sim::StreamOutcome;
+
+/// One row of a serve bundle: a (platform, arrival process, policy)
+/// scenario reduced to its service-level objectives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeResult {
+    pub platform: String,
+    pub arrivals: String,
+    pub policy: String,
+    pub seed: u64,
+    pub scenario_seed: u64,
+    /// Arrival horizon (seconds); the run itself continues to drain.
+    pub duration: f64,
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    /// Completed jobs per second of drain time.
+    pub throughput_jps: f64,
+    pub p50_sojourn: f64,
+    pub p99_sojourn: f64,
+    pub mean_sojourn: f64,
+    pub max_sojourn: f64,
+    /// Mean sojourn / lower bound over completed jobs — how far service
+    /// sits from each job's private best case.
+    pub mean_slowdown: f64,
+    /// Percent of deadline-carrying completed jobs that missed.
+    pub deadline_miss_pct: f64,
+    /// Jain's index over per-class mean slowdown: 1 = perfectly even.
+    pub fairness: f64,
+    pub avg_load_pct: f64,
+    pub transfer_bytes: u64,
+    /// When the system went empty.
+    pub drain: f64,
+}
+
+/// Reduce a [`StreamOutcome`] to its scenario row.
+pub fn summarize(
+    platform: &str,
+    arrivals: &str,
+    policy: &str,
+    seed: u64,
+    scenario_seed: u64,
+    duration: f64,
+    out: &StreamOutcome,
+) -> ServeResult {
+    let mut sojourns: Vec<f64> = out.jobs.iter().map(|j| j.sojourn).collect();
+    sojourns.sort_by(|a, b| a.total_cmp(b));
+    let completed = sojourns.len();
+    let (p50, p99, mean_s, max_s) = if completed == 0 {
+        (0.0, 0.0, 0.0, 0.0)
+    } else {
+        (percentile(&sojourns, 0.5), percentile(&sojourns, 0.99), mean(&sojourns), sojourns[completed - 1])
+    };
+
+    let slowdowns: Vec<f64> =
+        out.jobs.iter().filter(|j| j.lower_bound > 0.0).map(|j| j.sojourn / j.lower_bound).collect();
+    let mean_slowdown = if slowdowns.is_empty() { 0.0 } else { mean(&slowdowns) };
+
+    let with_deadline = out.jobs.iter().filter(|j| j.deadline.is_finite()).count();
+    let missed = out.jobs.iter().filter(|j| j.missed).count();
+    let deadline_miss_pct =
+        if with_deadline == 0 { 0.0 } else { 100.0 * missed as f64 / with_deadline as f64 };
+
+    // per-class mean slowdown, classes in ascending priority order
+    let mut classes: Vec<u8> = out.jobs.iter().map(|j| j.priority).collect();
+    classes.sort_unstable();
+    classes.dedup();
+    let class_means: Vec<f64> = classes
+        .iter()
+        .filter_map(|&c| {
+            let xs: Vec<f64> = out
+                .jobs
+                .iter()
+                .filter(|j| j.priority == c && j.lower_bound > 0.0)
+                .map(|j| j.sojourn / j.lower_bound)
+                .collect();
+            (!xs.is_empty()).then(|| mean(&xs))
+        })
+        .collect();
+    let fairness = jain(&class_means);
+
+    let throughput_jps = if out.drain > 0.0 { completed as f64 / out.drain } else { 0.0 };
+    let avg_load_pct = if out.drain > 0.0 && !out.proc_busy.is_empty() {
+        100.0 * out.proc_busy.iter().sum::<f64>() / (out.drain * out.proc_busy.len() as f64)
+    } else {
+        0.0
+    };
+
+    ServeResult {
+        platform: platform.to_string(),
+        arrivals: arrivals.to_string(),
+        policy: policy.to_string(),
+        seed,
+        scenario_seed,
+        duration,
+        submitted: out.submitted,
+        completed,
+        rejected: out.rejected,
+        throughput_jps,
+        p50_sojourn: p50,
+        p99_sojourn: p99,
+        mean_sojourn: mean_s,
+        max_sojourn: max_s,
+        mean_slowdown,
+        deadline_miss_pct,
+        fairness,
+        avg_load_pct,
+        transfer_bytes: out.transfer_bytes,
+        drain: out.drain,
+    }
+}
+
+/// CSV header of [`to_csv`] rows.
+pub const SERVE_CSV_HEADER: &str = "platform,arrivals,policy,seed,scenario_seed,duration_s,\
+submitted,completed,rejected,throughput_jps,p50_sojourn_s,p99_sojourn_s,mean_sojourn_s,\
+max_sojourn_s,mean_slowdown,deadline_miss_pct,fairness,avg_load_pct,transfer_bytes,drain_s";
+
+/// Serve results as CSV, one row per scenario in grid order. Fixed-width
+/// float formatting keeps the output byte-stable across runs and thread
+/// counts.
+pub fn to_csv(results: &[ServeResult]) -> String {
+    let mut out = String::with_capacity(160 * (results.len() + 1));
+    out.push_str(SERVE_CSV_HEADER);
+    out.push('\n');
+    for r in results {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.3},{},{},{},{:.4},{:.6},{:.6},{:.6},{:.6},{:.4},{:.2},{:.4},{:.2},{},{:.6}\n",
+            r.platform,
+            r.arrivals,
+            r.policy,
+            r.seed,
+            r.scenario_seed,
+            r.duration,
+            r.submitted,
+            r.completed,
+            r.rejected,
+            r.throughput_jps,
+            r.p50_sojourn,
+            r.p99_sojourn,
+            r.mean_sojourn,
+            r.max_sojourn,
+            r.mean_slowdown,
+            r.deadline_miss_pct,
+            r.fairness,
+            r.avg_load_pct,
+            r.transfer_bytes,
+            r.drain,
+        ));
+    }
+    out
+}
+
+/// Serve results as a JSON array (machine-readable twin of the CSV).
+pub fn to_json(results: &[ServeResult]) -> String {
+    let arr: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("platform".into(), Json::Str(r.platform.clone()));
+            o.insert("arrivals".into(), Json::Str(r.arrivals.clone()));
+            o.insert("policy".into(), Json::Str(r.policy.clone()));
+            o.insert("seed".into(), Json::Num(r.seed as f64));
+            o.insert("duration_s".into(), Json::Num(r.duration));
+            o.insert("submitted".into(), Json::Num(r.submitted as f64));
+            o.insert("completed".into(), Json::Num(r.completed as f64));
+            o.insert("rejected".into(), Json::Num(r.rejected as f64));
+            o.insert("throughput_jps".into(), Json::Num(r.throughput_jps));
+            o.insert("p50_sojourn_s".into(), Json::Num(r.p50_sojourn));
+            o.insert("p99_sojourn_s".into(), Json::Num(r.p99_sojourn));
+            o.insert("mean_sojourn_s".into(), Json::Num(r.mean_sojourn));
+            o.insert("max_sojourn_s".into(), Json::Num(r.max_sojourn));
+            o.insert("mean_slowdown".into(), Json::Num(r.mean_slowdown));
+            o.insert("deadline_miss_pct".into(), Json::Num(r.deadline_miss_pct));
+            o.insert("fairness".into(), Json::Num(r.fairness));
+            o.insert("avg_load_pct".into(), Json::Num(r.avg_load_pct));
+            o.insert("transfer_bytes".into(), Json::Num(r.transfer_bytes as f64));
+            o.insert("drain_s".into(), Json::Num(r.drain));
+            Json::Obj(o)
+        })
+        .collect();
+    Json::Arr(arr).to_string()
+}
+
+/// Write the serve bundle: `out` (CSV) plus its `.json` twin next to it.
+pub fn write_serve_bundle(out: &Path, results: &[ServeResult]) -> std::io::Result<(PathBuf, PathBuf)> {
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out, to_csv(results))?;
+    let json = out.with_extension("json");
+    std::fs::write(&json, to_json(results))?;
+    Ok((out.to_path_buf(), json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sim::{JobRecord, StreamOutcome};
+    use super::*;
+
+    fn rec(id: usize, priority: u8, sojourn: f64, lb: f64, deadline: f64, missed: bool) -> JobRecord {
+        JobRecord {
+            id,
+            workload: "cholesky:1024".into(),
+            tile: 256,
+            priority,
+            t_arrival: id as f64,
+            admitted: id as f64,
+            finished: id as f64 + sojourn,
+            sojourn,
+            lower_bound: lb,
+            deadline,
+            missed,
+            n_tasks: 10,
+        }
+    }
+
+    fn outcome(jobs: Vec<JobRecord>) -> StreamOutcome {
+        StreamOutcome {
+            jobs,
+            submitted: 5,
+            admitted: 4,
+            rejected: 1,
+            drain: 10.0,
+            proc_busy: vec![5.0, 3.0],
+            transfer_bytes: 1234,
+        }
+    }
+
+    #[test]
+    fn summarize_closed_form() {
+        let out = outcome(vec![
+            rec(0, 0, 1.0, 0.5, 2.0, false),
+            rec(1, 0, 2.0, 0.5, 2.0, false),
+            rec(2, 1, 3.0, 1.0, 4.0, false),
+            rec(3, 1, 4.0, 1.0, 4.0, true),
+        ]);
+        let r = summarize("p", "poisson:8", "pl/edf-p", 7, 99, 3.0, &out);
+        assert_eq!((r.submitted, r.completed, r.rejected), (5, 4, 1));
+        assert_eq!(r.seed, 7);
+        assert_eq!(r.scenario_seed, 99);
+        assert_eq!(r.p50_sojourn, 2.5, "median of 1,2,3,4");
+        assert_eq!(r.max_sojourn, 4.0);
+        assert_eq!(r.mean_sojourn, 2.5);
+        // slowdowns: 2, 4, 3, 4 -> mean 3.25
+        assert_eq!(r.mean_slowdown, 3.25);
+        assert_eq!(r.deadline_miss_pct, 25.0, "1 of 4 deadline-carrying jobs missed");
+        // class means: class 0 -> 3, class 1 -> 3.5; jain(3, 3.5)
+        let expect = {
+            let s = 3.0f64 + 3.5;
+            s * s / (2.0 * (3.0f64 * 3.0 + 3.5 * 3.5))
+        };
+        assert!((r.fairness - expect).abs() < 1e-12);
+        assert_eq!(r.throughput_jps, 0.4, "4 jobs over 10 s drain");
+        assert_eq!(r.avg_load_pct, 40.0, "(5+3)/(2*10)");
+        assert_eq!(r.transfer_bytes, 1234);
+    }
+
+    #[test]
+    fn empty_outcome_summarizes_to_zeros() {
+        let mut out = outcome(vec![]);
+        out.submitted = 0;
+        out.admitted = 0;
+        out.rejected = 0;
+        out.drain = 0.0;
+        let r = summarize("p", "poisson:8", "pl/eft-p", 0, 1, 3.0, &out);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.p99_sojourn, 0.0);
+        assert_eq!(r.throughput_jps, 0.0);
+        assert_eq!(r.deadline_miss_pct, 0.0);
+        assert_eq!(r.fairness, 1.0, "no classes, nothing unfair");
+        assert_eq!(r.avg_load_pct, 0.0);
+    }
+
+    #[test]
+    fn csv_and_json_agree_on_shape() {
+        let out = outcome(vec![rec(0, 0, 1.0, 0.5, f64::INFINITY, false)]);
+        let r = summarize("p", "bursty:3:25:0.15", "pl/sjf-p", 0, 42, 3.0, &out);
+        let csv = to_csv(&[r.clone()]);
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        let row = lines.next().unwrap();
+        assert_eq!(header, SERVE_CSV_HEADER);
+        assert_eq!(
+            header.split(',').count(),
+            row.split(',').count(),
+            "every header column has a value"
+        );
+        assert!(row.starts_with("p,bursty:3:25:0.15,pl/sjf-p,0,42,"));
+        let parsed = crate::util::json::parse(&to_json(&[r])).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("policy").and_then(|v| v.as_str()), Some("pl/sjf-p"));
+        assert_eq!(arr[0].get("completed").and_then(|v| v.as_f64()), Some(1.0));
+        // infinite deadline on the job, but the row itself stays finite
+        assert_eq!(arr[0].get("deadline_miss_pct").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn infinite_deadlines_do_not_count_toward_misses() {
+        let out = outcome(vec![
+            rec(0, 0, 1.0, 0.5, f64::INFINITY, false),
+            rec(1, 0, 2.0, 0.5, 1.5, true),
+        ]);
+        let r = summarize("p", "poisson:8", "pl/edf-p", 0, 1, 3.0, &out);
+        assert_eq!(r.deadline_miss_pct, 100.0, "only the deadline-carrying job is in the base");
+    }
+}

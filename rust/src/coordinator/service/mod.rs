@@ -1,0 +1,44 @@
+//! The service layer: streaming multi-DAG simulation (`hesp serve`).
+//!
+//! Everything below here turns the single-DAG simulator into a cluster
+//! model: jobs *arrive over time*, pass admission control, and are
+//! co-scheduled on the shared machine until the system drains. A job's
+//! lifecycle is
+//!
+//! ```text
+//! arrival ──► admission (reject / defer / admit)
+//!                 │
+//!                 ▼
+//!          resident: ready tasks join the global decision round,
+//!          competing with every other resident job's tasks
+//!                 │
+//!                 ▼
+//!          drained: last task done → sojourn, deadline, slowdown
+//!                   recorded; a deferred job takes the freed slot
+//! ```
+//!
+//! * [`arrivals`] — deterministic arrival processes (Poisson, bursty
+//!   MMPP, JSONL trace replay) producing [`arrivals::JobSpec`] streams;
+//! * [`queue`] — bounded-residency admission control with loud rejection
+//!   accounting;
+//! * [`sim`] — the multi-job event loop over the shared
+//!   [`crate::coordinator::engine`] core, plus the grid runner
+//!   ([`sim::run_serve`]);
+//! * [`metrics`] — service-level objectives (sojourn percentiles,
+//!   throughput, deadline misses, Jain fairness) and the byte-stable
+//!   CSV/JSON bundle.
+//!
+//! Job-aware scheduling plugs in through [`crate::coordinator::policy`]:
+//! the loop attaches a [`crate::coordinator::policy::JobInfo`] to every
+//! policy call, which `pl/edf-p` / `pl/sjf-p` read and every single-DAG
+//! policy safely ignores.
+
+pub mod arrivals;
+pub mod metrics;
+pub mod queue;
+pub mod sim;
+
+pub use arrivals::{parse_trace, stream_seed, ArrivalSpec, Deadline, JobSpec};
+pub use metrics::{summarize, to_csv, to_json, write_serve_bundle, ServeResult, SERVE_CSV_HEADER};
+pub use queue::{Admission, JobQueue};
+pub use sim::{run_serve, scenario_seed, simulate_stream, JobRecord, ServeConfig, ServeGrid, StreamOutcome};

@@ -1,0 +1,217 @@
+//! Admission control for the service layer.
+//!
+//! The stream simulator holds at most `cap` jobs *resident* (admitted and
+//! not yet drained). When a job arrives into a full system the
+//! [`Admission`] policy decides its fate: `Reject` turns it away — loudly,
+//! into [`JobQueue::rejected`], never silently — while `Defer` parks it in
+//! an unbounded FIFO backlog that drains one job per completion. Every
+//! submitted job is accounted for exactly once:
+//!
+//! ```text
+//! submitted == admitted + rejected + pending
+//! ```
+//!
+//! and that invariant is `debug_assert`ed on every transition.
+
+use std::collections::VecDeque;
+
+use super::arrivals::JobSpec;
+
+/// What to do with an arrival when the system already holds `cap`
+/// resident jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Turn the job away; it is counted and reported, never scheduled.
+    Reject,
+    /// Park the job in FIFO backlog; it is admitted when a slot frees.
+    Defer,
+}
+
+impl Admission {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Admission::Reject => "reject",
+            Admission::Defer => "defer",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Admission> {
+        match s.to_ascii_lowercase().as_str() {
+            "reject" => Some(Admission::Reject),
+            "defer" => Some(Admission::Defer),
+            _ => None,
+        }
+    }
+}
+
+/// Bounded-residency admission queue. Owns the full accounting of a
+/// stream: submissions, rejections, FIFO backlog, and resident count.
+#[derive(Debug)]
+pub struct JobQueue {
+    cap: usize,
+    admission: Admission,
+    pending: VecDeque<JobSpec>,
+    rejected: Vec<JobSpec>,
+    submitted: usize,
+    admitted: usize,
+    resident: usize,
+}
+
+impl JobQueue {
+    /// `cap` is the residency bound (min 1 — a cap of 0 could never admit
+    /// anything and would deadlock a `Defer` queue).
+    pub fn new(cap: usize, admission: Admission) -> JobQueue {
+        JobQueue {
+            cap: cap.max(1),
+            admission,
+            pending: VecDeque::new(),
+            rejected: Vec::new(),
+            submitted: 0,
+            admitted: 0,
+            resident: 0,
+        }
+    }
+
+    /// Submit an arrival. Returns `Some(job)` when the job is admitted
+    /// immediately; `None` when it was rejected or deferred (check
+    /// [`rejected`](Self::rejected) / [`pending`](Self::pending)).
+    pub fn offer(&mut self, job: JobSpec) -> Option<JobSpec> {
+        self.submitted += 1;
+        let out = if self.resident < self.cap {
+            self.resident += 1;
+            self.admitted += 1;
+            Some(job)
+        } else {
+            match self.admission {
+                Admission::Reject => {
+                    self.rejected.push(job);
+                    None
+                }
+                Admission::Defer => {
+                    self.pending.push_back(job);
+                    None
+                }
+            }
+        };
+        self.check();
+        out
+    }
+
+    /// A resident job drained: free its slot and, if backlog is waiting,
+    /// admit the head of the FIFO into the freed slot.
+    pub fn on_job_done(&mut self) -> Option<JobSpec> {
+        debug_assert!(self.resident > 0, "completion without a resident job");
+        self.resident -= 1;
+        let next = self.pending.pop_front();
+        if next.is_some() {
+            self.resident += 1;
+            self.admitted += 1;
+        }
+        self.check();
+        next
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn submitted(&self) -> usize {
+        self.submitted
+    }
+
+    pub fn admitted(&self) -> usize {
+        self.admitted
+    }
+
+    pub fn resident(&self) -> usize {
+        self.resident
+    }
+
+    /// Jobs currently deferred (FIFO order).
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Every job turned away, in submission order.
+    pub fn rejected(&self) -> &[JobSpec] {
+        &self.rejected
+    }
+
+    fn check(&self) {
+        debug_assert!(self.resident <= self.cap);
+        debug_assert_eq!(
+            self.submitted,
+            self.admitted + self.rejected.len() + self.pending.len(),
+            "admission accounting must conserve jobs"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::arrivals::{Deadline, JobSpec};
+    use super::*;
+    use crate::coordinator::sweep::Workload;
+
+    fn job(id: usize) -> JobSpec {
+        JobSpec {
+            id,
+            t_arrival: id as f64 * 0.1,
+            workload: Workload::Cholesky { n: 512 },
+            tile: 128,
+            deadline: Deadline::None,
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn reject_mode_turns_overflow_away_loudly() {
+        let mut q = JobQueue::new(2, Admission::Reject);
+        assert!(q.offer(job(0)).is_some());
+        assert!(q.offer(job(1)).is_some());
+        assert!(q.offer(job(2)).is_none(), "third job exceeds cap 2");
+        assert_eq!(q.submitted(), 3);
+        assert_eq!(q.admitted(), 2);
+        assert_eq!(q.resident(), 2);
+        assert_eq!(q.pending(), 0);
+        assert_eq!(q.rejected().len(), 1, "rejection is recorded, not silent");
+        assert_eq!(q.rejected()[0].id, 2);
+        // a completion frees a slot but never resurrects a rejected job
+        assert!(q.on_job_done().is_none());
+        assert_eq!(q.resident(), 1);
+        assert!(q.offer(job(3)).is_some(), "freed slot admits new arrivals");
+    }
+
+    #[test]
+    fn defer_mode_parks_overflow_and_drains_fifo() {
+        let mut q = JobQueue::new(1, Admission::Defer);
+        assert!(q.offer(job(0)).is_some());
+        assert!(q.offer(job(1)).is_none());
+        assert!(q.offer(job(2)).is_none());
+        assert_eq!((q.resident(), q.pending(), q.rejected().len()), (1, 2, 0));
+        let next = q.on_job_done().expect("backlog head admitted on completion");
+        assert_eq!(next.id, 1, "FIFO order");
+        assert_eq!((q.resident(), q.pending()), (1, 1));
+        assert_eq!(q.on_job_done().unwrap().id, 2);
+        assert!(q.on_job_done().is_none(), "backlog empty");
+        assert_eq!(q.resident(), 0);
+        assert_eq!(q.admitted(), 3);
+        assert_eq!(q.submitted(), 3);
+    }
+
+    #[test]
+    fn zero_cap_is_clamped_to_one() {
+        let mut q = JobQueue::new(0, Admission::Defer);
+        assert_eq!(q.cap(), 1);
+        assert!(q.offer(job(0)).is_some(), "cap 0 would deadlock; clamp admits");
+    }
+
+    #[test]
+    fn admission_labels_round_trip() {
+        for a in [Admission::Reject, Admission::Defer] {
+            assert_eq!(Admission::parse(a.label()), Some(a));
+        }
+        assert_eq!(Admission::parse("DEFER"), Some(Admission::Defer));
+        assert!(Admission::parse("drop").is_none());
+    }
+}

@@ -1,0 +1,574 @@
+//! The streaming multi-DAG simulator: many jobs, one machine.
+//!
+//! [`simulate_stream`] layers job bookkeeping over the single shared
+//! [`EventCore`]: every resident job is a [`TaskDag`] whose ready tasks
+//! feed one global decision round, so concurrent jobs genuinely compete
+//! for the same processor and link [`Timeline`]s — queueing delay is
+//! *emergent* (backlog on the timelines), not modeled. The clock
+//! interleaves two sources: the event queue (task/transfer completions)
+//! and the arrival stream. At any instant, completions are processed
+//! before arrivals are admitted, then a decision round dispatches every
+//! ready task; when the next arrival precedes the next event the clock
+//! simply jumps to it (the event queue tolerates forward-set `now`).
+//!
+//! Determinism is by construction, thread count included: the stream is a
+//! pure function of `(arrival label, seed)`, job DAG builds of
+//! `(workload, tile, job id, seed)`, the scheduler RNG of the scenario
+//! seed, and ties in the ready queue break on global admission order
+//! (each job owns a disjoint `ord_base..ord_base+n` range, assigned in
+//! admission order).
+//!
+//! [`Timeline`]: crate::coordinator::platform::Timeline
+
+use crate::coordinator::coherence::CachePolicy;
+use crate::coordinator::engine::{pick_best, Assignment, EventCore, EventKind, SimConfig};
+use crate::coordinator::lower_bound::makespan_lower_bound;
+use crate::coordinator::ordering::critical_times;
+use crate::coordinator::perfmodel::PerfDb;
+use crate::coordinator::platform::Machine;
+use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use crate::coordinator::policy::{JobInfo, PolicyRegistry, SchedPolicy};
+use crate::coordinator::sweep::SweepPlatform;
+use crate::coordinator::task::Task;
+use crate::coordinator::taskdag::{FlatDag, TaskDag};
+use crate::util::fxhash::content_seed;
+use crate::util::par::par_map;
+
+use super::arrivals::{ArrivalSpec, Deadline, JobSpec};
+use super::metrics::{summarize, ServeResult};
+use super::queue::{Admission, JobQueue};
+
+/// Knobs of one stream simulation (one grid cell).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Max resident jobs; arrivals beyond it hit the admission policy.
+    pub queue_cap: usize,
+    pub admission: Admission,
+    pub cache: CachePolicy,
+    pub elem_bytes: u64,
+    /// Declared (grid) seed: drives job DAG builds. Deliberately
+    /// policy-independent so every policy schedules identical DAGs.
+    pub job_seed: u64,
+    /// Scenario seed: drives the scheduler's tie-break RNG.
+    pub rng_seed: u64,
+}
+
+/// Per-job outcome of a completed job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub id: usize,
+    pub workload: String,
+    pub tile: u32,
+    pub priority: u8,
+    pub t_arrival: f64,
+    /// When the job entered the system (later than `t_arrival` when it
+    /// sat in deferred backlog).
+    pub admitted: f64,
+    /// When its last task finished (trailing write-backs excluded — a
+    /// job's results exist once its tasks do).
+    pub finished: f64,
+    /// `finished - t_arrival`: backlog wait included, by design.
+    pub sojourn: f64,
+    /// The job's makespan lower bound on this machine (critical path vs
+    /// aggregate-capacity area), resolved at admission.
+    pub lower_bound: f64,
+    /// Absolute deadline instant; `INFINITY` when none was declared.
+    pub deadline: f64,
+    pub missed: bool,
+    pub n_tasks: usize,
+}
+
+/// Everything one stream simulation produced.
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    /// Completed jobs in stream-id order.
+    pub jobs: Vec<JobRecord>,
+    pub submitted: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    /// When the system went empty (last task or transfer end).
+    pub drain: f64,
+    pub proc_busy: Vec<f64>,
+    pub transfer_bytes: u64,
+}
+
+/// One admitted, not-yet-drained job.
+struct Resident {
+    spec: JobSpec,
+    dag: TaskDag,
+    flat: FlatDag,
+    /// Critical times (when the policy wants them), else zeros.
+    prio: Vec<f64>,
+    indeg: Vec<usize>,
+    release: Vec<f64>,
+    /// Static ordering keys, filled at release for `!dynamic_order()`.
+    keys: Vec<f64>,
+    remaining: usize,
+    admitted: f64,
+    info: JobInfo,
+    /// Global program-order base: ready-queue ties break on
+    /// `ord_base + pos`, i.e. admission order, then task order.
+    ord_base: usize,
+}
+
+/// Simulate `stream` (sorted by arrival) under `policy` on `machine`.
+/// Runs to full drain: past the last arrival, the clock follows the event
+/// queue until every admitted job completes.
+pub fn simulate_stream(
+    machine: &Machine,
+    db: &PerfDb,
+    policy: &mut dyn SchedPolicy,
+    stream: &[JobSpec],
+    cfg: &ServeConfig,
+) -> StreamOutcome {
+    debug_assert!(stream.windows(2).all(|w| w[0].t_arrival <= w[1].t_arrival));
+    let sim_cfg = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_cache(cfg.cache)
+        .with_elem_bytes(cfg.elem_bytes)
+        .with_seed(cfg.rng_seed);
+    let mut core = EventCore::new(machine, db, sim_cfg);
+    let mut queue = JobQueue::new(cfg.queue_cap, cfg.admission);
+    let mut jobs: Vec<Resident> = Vec::new();
+    // (slot, pos) of every released, not-yet-dispatched task
+    let mut ready: Vec<(usize, usize)> = Vec::new();
+    // commit key -> (slot, pos); keys are dense dispatch indices
+    let mut key_map: Vec<(usize, usize)> = Vec::new();
+    let mut records: Vec<JobRecord> = Vec::new();
+    let mut batch: Vec<(usize, EventKind)> = Vec::new();
+    let mut next_ord = 0usize;
+    let mut next_arrival = 0usize;
+    let static_keys = !policy.dynamic_order();
+
+    loop {
+        // 1. admit every arrival due at or before the clock
+        while next_arrival < stream.len() && stream[next_arrival].t_arrival <= core.now {
+            let spec = stream[next_arrival];
+            next_arrival += 1;
+            if let Some(spec) = queue.offer(spec) {
+                admit(&mut core, policy, &mut jobs, &mut ready, &mut next_ord, spec, cfg.job_seed);
+            }
+        }
+
+        // 2. decision round: dispatch ALL ready tasks at this instant,
+        // best-first — exactly the single-DAG engine's loop, with the
+        // owning job's identity attached to each policy call
+        while !ready.is_empty() {
+            let picked = pick_best(
+                ready.len(),
+                |i| {
+                    let (slot, pos) = ready[i];
+                    let j = &jobs[slot];
+                    if static_keys {
+                        j.keys[pos]
+                    } else {
+                        let mut ctx = core.ctx_job(&[], Some(j.info));
+                        policy.order(&mut ctx, j.dag.task(j.flat.tasks[pos]), j.release[pos], j.prio[pos])
+                    }
+                },
+                |i| {
+                    let (slot, pos) = ready[i];
+                    jobs[slot].ord_base + pos
+                },
+            )
+            .expect("ready set is non-empty");
+            let (slot, pos) = ready.swap_remove(picked);
+            let rel = jobs[slot].release[pos];
+            let succ_store: Vec<&Task> = if policy.wants_successors() {
+                let j = &jobs[slot];
+                j.flat.succs[pos].iter().map(|&s| j.dag.task(j.flat.tasks[s])).collect()
+            } else {
+                Vec::new()
+            };
+            let proc = {
+                let j = &jobs[slot];
+                let mut ctx = core.ctx_job(&succ_store, Some(j.info));
+                policy.select(&mut ctx, j.dag.task(j.flat.tasks[pos]), rel)
+            };
+            let key = key_map.len();
+            key_map.push((slot, pos));
+            let j = &jobs[slot];
+            let task_id = j.flat.tasks[pos];
+            let (start, end) = core.commit(j.dag.task(task_id), key, proc, rel);
+            core.sched.assignments.push(Assignment { task: task_id, pos: key, proc, release: rel, start, end });
+        }
+
+        // 3. advance the clock: next arrival vs next event
+        let t_arr = (next_arrival < stream.len()).then(|| stream[next_arrival].t_arrival);
+        match (t_arr, core.next_event_time()) {
+            // pure arrival: jump the clock (nothing to pop in between)
+            (Some(a), Some(e)) if a < e => core.now = a,
+            (Some(a), None) => core.now = a,
+            (None, None) => break,
+            // event first (ties included: completions at t are processed
+            // before arrivals at t, then one decision round sees both)
+            _ => {
+                core.pop_event_batch(&mut batch);
+                let mut done_slots: Vec<usize> = Vec::new();
+                for k in 0..batch.len() {
+                    let (key, kind) = batch[k];
+                    let EventKind::TaskEnd { proc, .. } = kind else { continue };
+                    debug_assert!(key < key_map.len());
+                    let (slot, pos) = key_map[key];
+                    {
+                        let j = &jobs[slot];
+                        core.apply_writes(j.dag.task(j.flat.tasks[pos]), proc, core.now);
+                    }
+                    jobs[slot].remaining -= 1;
+                    if jobs[slot].remaining == 0 {
+                        done_slots.push(slot);
+                    }
+                    for si in 0..jobs[slot].flat.succs[pos].len() {
+                        let s = jobs[slot].flat.succs[pos][si];
+                        jobs[slot].indeg[s] -= 1;
+                        let rel = jobs[slot].release[s].max(core.now);
+                        jobs[slot].release[s] = rel;
+                        if jobs[slot].indeg[s] == 0 {
+                            if static_keys {
+                                let k2 = {
+                                    let j = &jobs[slot];
+                                    let mut ctx = core.ctx_job(&[], Some(j.info));
+                                    policy.order(&mut ctx, j.dag.task(j.flat.tasks[s]), rel, j.prio[s])
+                                };
+                                jobs[slot].keys[s] = k2;
+                            }
+                            ready.push((slot, s));
+                        }
+                    }
+                }
+                for slot in done_slots {
+                    let j = &jobs[slot];
+                    records.push(JobRecord {
+                        id: j.spec.id,
+                        workload: j.spec.workload.label(),
+                        tile: j.spec.tile,
+                        priority: j.spec.priority,
+                        t_arrival: j.spec.t_arrival,
+                        admitted: j.admitted,
+                        finished: core.now,
+                        sojourn: core.now - j.spec.t_arrival,
+                        lower_bound: j.info.lower_bound,
+                        deadline: j.info.deadline,
+                        missed: core.now > j.info.deadline,
+                        n_tasks: j.flat.len(),
+                    });
+                    // a drained job frees a residency slot: the deferred
+                    // backlog head (if any) is admitted right now and its
+                    // roots dispatch in the next decision round
+                    if let Some(spec) = queue.on_job_done() {
+                        admit(&mut core, policy, &mut jobs, &mut ready, &mut next_ord, spec, cfg.job_seed);
+                    }
+                }
+            }
+        }
+    }
+
+    debug_assert_eq!(queue.pending(), 0, "drained system cannot hold deferred jobs");
+    debug_assert_eq!(records.len(), queue.admitted(), "every admitted job must complete");
+    records.sort_by_key(|r| r.id);
+    let (submitted, admitted, rejected) = (queue.submitted(), queue.admitted(), queue.rejected().len());
+    let sched = core.finish();
+    StreamOutcome {
+        jobs: records,
+        submitted,
+        admitted,
+        rejected,
+        drain: sched.makespan,
+        proc_busy: sched.proc_busy,
+        transfer_bytes: sched.transfer_bytes,
+    }
+}
+
+/// Build, bound, and register one job at the current clock.
+fn admit(
+    core: &mut EventCore<'_>,
+    policy: &mut dyn SchedPolicy,
+    jobs: &mut Vec<Resident>,
+    ready: &mut Vec<(usize, usize)>,
+    next_ord: &mut usize,
+    spec: JobSpec,
+    job_seed: u64,
+) {
+    let wl_label = spec.workload.label();
+    let wseed = content_seed(&["serve-job", &wl_label], &[spec.tile as u64, spec.id as u64, job_seed]);
+    let mut dag = spec
+        .workload
+        .build(spec.tile, wseed)
+        .expect("streams only carry feasible (workload, tile) combos");
+    // every workload builder emits matrix 0 and region overlap requires
+    // the same matrix — relabeling per job is what keeps concurrent jobs'
+    // identically-indexed blocks from falsely aliasing
+    dag.set_matrix(spec.id as u32 + 1);
+    let flat = dag.flat_dag();
+    debug_assert!(!flat.is_empty(), "workload builders never emit empty DAGs");
+    let lb = makespan_lower_bound(&dag, &flat, core.machine, core.db);
+    let deadline = match spec.deadline {
+        Deadline::None => f64::INFINITY,
+        Deadline::At(t) => t,
+        // relative deadlines scale with job size on THIS machine — the
+        // whole point of resolving them at admission
+        Deadline::Slack(s) => spec.t_arrival + s * lb,
+    };
+    let info = JobInfo { id: spec.id, arrival: spec.t_arrival, deadline, lower_bound: lb };
+    let prio = if policy.wants_critical_times() {
+        critical_times(&dag, &flat, core.machine, core.db)
+    } else {
+        vec![0.0; flat.len()]
+    };
+    let n = flat.len();
+    let at = core.now;
+    let mut res = Resident {
+        indeg: flat.preds.iter().map(|p| p.len()).collect(),
+        release: vec![at; n],
+        keys: vec![0.0; n],
+        remaining: n,
+        admitted: at,
+        info,
+        ord_base: *next_ord,
+        spec,
+        prio,
+        dag,
+        flat,
+    };
+    *next_ord += n;
+    let slot = jobs.len();
+    let static_keys = !policy.dynamic_order();
+    for pos in 0..n {
+        if res.indeg[pos] == 0 {
+            if static_keys {
+                let key = {
+                    let mut ctx = core.ctx_job(&[], Some(res.info));
+                    policy.order(&mut ctx, res.dag.task(res.flat.tasks[pos]), at, res.prio[pos])
+                };
+                res.keys[pos] = key;
+            }
+            ready.push((slot, pos));
+        }
+    }
+    jobs.push(res);
+}
+
+/// A serve grid: platforms x arrival processes x policies, one shared
+/// stream per arrival process.
+#[derive(Debug, Clone)]
+pub struct ServeGrid {
+    pub platforms: Vec<SweepPlatform>,
+    pub arrivals: Vec<ArrivalSpec>,
+    /// Policy registry names.
+    pub policies: Vec<String>,
+    /// Arrival horizon in seconds (each cell then drains fully).
+    pub duration: f64,
+    pub queue_cap: usize,
+    pub admission: Admission,
+    pub cache: CachePolicy,
+    pub seed: u64,
+}
+
+/// Deterministic per-scenario seed for the scheduler RNG — content-derived
+/// like [`crate::coordinator::sweep::cell_seed`], so results never depend
+/// on grid position or thread count.
+pub fn scenario_seed(platform: &str, arrivals: &str, policy: &str, seed: u64) -> u64 {
+    content_seed(&["serve", platform, arrivals, policy], &[seed])
+}
+
+/// Run every scenario of the grid across `threads` workers. Results come
+/// back in grid order (platform-major, then arrivals, then policy) no
+/// matter the thread count; each arrival stream is generated once and
+/// shared by every (platform, policy) pair so comparisons are paired.
+pub fn run_serve(grid: &ServeGrid, threads: usize) -> anyhow::Result<Vec<ServeResult>> {
+    let reg = PolicyRegistry::standard();
+    for name in &grid.policies {
+        if reg.get(name).is_none() {
+            anyhow::bail!("unknown policy '{name}' (see `hesp policies`)");
+        }
+    }
+    let mut streams: Vec<Vec<JobSpec>> = Vec::new();
+    for a in &grid.arrivals {
+        streams.push(a.generate(grid.duration, grid.seed)?);
+    }
+    let mut cells: Vec<(usize, usize, usize)> = Vec::new();
+    for p in 0..grid.platforms.len() {
+        for a in 0..grid.arrivals.len() {
+            for pol in 0..grid.policies.len() {
+                cells.push((p, a, pol));
+            }
+        }
+    }
+    let workers = threads.max(1).clamp(1, cells.len().max(1));
+    Ok(par_map(workers, &cells, |_, &(p, a, pol)| {
+        let platform = &grid.platforms[p];
+        let arr_label = grid.arrivals[a].label();
+        let pol_name = &grid.policies[pol];
+        let mut policy = reg.get(pol_name).expect("validated above");
+        let sseed = scenario_seed(&platform.name, &arr_label, pol_name, grid.seed);
+        let cfg = ServeConfig {
+            queue_cap: grid.queue_cap,
+            admission: grid.admission,
+            cache: grid.cache,
+            elem_bytes: platform.elem_bytes,
+            job_seed: grid.seed,
+            rng_seed: sseed,
+        };
+        let outcome = simulate_stream(&platform.machine, &platform.db, policy.as_mut(), &streams[a], &cfg);
+        summarize(&platform.name, &arr_label, pol_name, grid.seed, sseed, grid.duration, &outcome)
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
+    use crate::coordinator::platform::MachineBuilder;
+    use crate::coordinator::policy::policy_by_name;
+    use crate::coordinator::sweep::Workload;
+
+    fn platform(ncpu: usize, gflops: f64) -> (Machine, PerfDb) {
+        let mut b = MachineBuilder::new("t");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let t = b.proc_type("cpu", 1.0, 0.1);
+        b.processors(ncpu, "c", t, h);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops });
+        (m, db)
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            queue_cap: 64,
+            admission: Admission::Defer,
+            cache: CachePolicy::WriteBack,
+            elem_bytes: 8,
+            job_seed: 0,
+            rng_seed: 0,
+        }
+    }
+
+    fn job(id: usize, t: f64) -> JobSpec {
+        JobSpec {
+            id,
+            t_arrival: t,
+            workload: Workload::Cholesky { n: 512 },
+            tile: 256,
+            deadline: Deadline::None,
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn single_job_completes_with_sane_sojourn() {
+        let (m, db) = platform(2, 1.0);
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let stream = [job(0, 0.25)];
+        let out = simulate_stream(&m, &db, pol.as_mut(), &stream, &cfg());
+        assert_eq!((out.submitted, out.admitted, out.rejected), (1, 1, 0));
+        assert_eq!(out.jobs.len(), 1);
+        let r = &out.jobs[0];
+        assert_eq!(r.admitted, 0.25, "admitted on arrival into an empty system");
+        assert!(r.finished > 0.25);
+        assert!((r.sojourn - (r.finished - 0.25)).abs() < 1e-12);
+        assert!(r.lower_bound > 0.0);
+        assert!(r.sojourn >= r.lower_bound, "sojourn {} below lower bound {}", r.sojourn, r.lower_bound);
+        assert!(!r.missed, "no deadline, no miss");
+        assert!(out.drain >= r.finished);
+        // bit-for-bit determinism
+        let mut pol2 = policy_by_name("pl/eft-p").unwrap();
+        let out2 = simulate_stream(&m, &db, pol2.as_mut(), &stream, &cfg());
+        assert_eq!(out.jobs, out2.jobs);
+        assert_eq!(out.drain, out2.drain);
+    }
+
+    #[test]
+    fn concurrent_jobs_do_not_false_share() {
+        // two identical jobs arriving together on a machine wide enough
+        // for both: matrix relabeling means no cross-job dependencies, so
+        // they overlap instead of serializing on write-after-write hazards
+        let (m, db) = platform(8, 1.0);
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let solo = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0)], &cfg());
+        let t_solo = solo.jobs[0].finished;
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let both = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 0.0)], &cfg());
+        assert_eq!(both.jobs.len(), 2);
+        let worst = both.jobs.iter().map(|r| r.finished).fold(0.0f64, f64::max);
+        assert!(
+            worst < 1.9 * t_solo,
+            "two independent jobs on 8 cores must overlap: worst {worst} vs solo {t_solo}"
+        );
+    }
+
+    #[test]
+    fn defer_cap_one_serializes_jobs() {
+        let (m, db) = platform(2, 1.0);
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let mut c = cfg();
+        c.queue_cap = 1;
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 0.0)], &c);
+        assert_eq!(out.jobs.len(), 2);
+        assert_eq!(out.rejected, 0);
+        let (a, b) = (&out.jobs[0], &out.jobs[1]);
+        assert_eq!(b.admitted, a.finished, "deferred job admitted exactly when the slot frees");
+        assert!(b.sojourn > a.sojourn, "backlog wait counts into sojourn");
+    }
+
+    #[test]
+    fn reject_overflow_is_counted_never_dropped() {
+        let (m, db) = platform(2, 1.0);
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let mut c = cfg();
+        c.queue_cap = 1;
+        c.admission = Admission::Reject;
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 1e-6), job(2, 2e-6)], &c);
+        assert_eq!(out.submitted, 3);
+        assert_eq!(out.jobs.len(), 1, "only the first fits");
+        assert_eq!(out.rejected, 2);
+        assert_eq!(out.submitted, out.jobs.len() + out.rejected, "accounting conserves jobs");
+    }
+
+    #[test]
+    fn absolute_deadlines_flag_misses() {
+        let (m, db) = platform(2, 1.0);
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let mut impossible = job(0, 0.0);
+        impossible.deadline = Deadline::At(1e-9);
+        let mut generous = job(1, 0.0);
+        generous.deadline = Deadline::At(1e9);
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[impossible, generous], &cfg());
+        assert!(out.jobs[0].missed);
+        assert!(!out.jobs[1].missed);
+        assert_eq!(out.jobs[0].deadline, 1e-9);
+    }
+
+    #[test]
+    fn quiet_period_jumps_the_clock() {
+        // an arrival into a long-idle system must not simulate the gap
+        // event by event — the clock jumps straight to it
+        let (m, db) = platform(2, 1.0);
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 50.0)], &cfg());
+        assert_eq!(out.jobs[1].admitted, 50.0);
+        assert!(out.jobs[0].finished < 50.0, "first job drains long before the second arrives");
+        let (s0, s1) = (out.jobs[0].sojourn, out.jobs[1].sojourn);
+        assert!((s0 - s1).abs() < 1e-9, "identical jobs on an idle machine: equal sojourn, got {s0} vs {s1}");
+    }
+
+    #[test]
+    fn empty_stream_is_benign() {
+        let (m, db) = platform(2, 1.0);
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[], &cfg());
+        assert!(out.jobs.is_empty());
+        assert_eq!(out.drain, 0.0);
+        assert_eq!((out.submitted, out.rejected), (0, 0));
+    }
+
+    #[test]
+    fn scenario_seed_separates_every_axis() {
+        let base = scenario_seed("odroid", "poisson:8", "pl/edf-p", 0);
+        assert_eq!(base, scenario_seed("odroid", "poisson:8", "pl/edf-p", 0));
+        assert_ne!(base, scenario_seed("bujaruelo", "poisson:8", "pl/edf-p", 0));
+        assert_ne!(base, scenario_seed("odroid", "bursty:3:25:0.15", "pl/edf-p", 0));
+        assert_ne!(base, scenario_seed("odroid", "poisson:8", "pl/sjf-p", 0));
+        assert_ne!(base, scenario_seed("odroid", "poisson:8", "pl/edf-p", 1));
+    }
+}

@@ -29,6 +29,7 @@ use std::path::{Path, PathBuf};
 use super::coherence::CachePolicy;
 use super::energy::{energy, DEFAULT_J_PER_BYTE};
 use super::engine::{simulate_policy, SimConfig};
+use super::lower_bound::makespan_lower_bound;
 use super::metrics::{peak_in_flight_transfers, report};
 use super::partitioners::{cholesky, lu, qr, PartitionerSet};
 use super::perfmodel::PerfDb;
@@ -322,6 +323,12 @@ pub struct CellResult {
     /// Solver moves that were sampled but not applicable (see
     /// `IterLog::applied`); 0 for `sim` cells.
     pub failed_moves: usize,
+    /// Makespan over the critical-path/area lower bound of the *reported*
+    /// DAG ([`super::lower_bound`]) — an optimality yardstick: 1.0 means
+    /// provably optimal, and the gap is an upper bound on what any
+    /// scheduler could still recover at this tiling. 0 when the bound or
+    /// makespan is degenerate (empty frontier, infeasible cell).
+    pub makespan_over_lb: f64,
 }
 
 impl CellResult {
@@ -398,8 +405,11 @@ fn run_cell(
     }
     let base_r = report(&dag, &base);
 
-    let (sched, r, failed) = match cell.mode {
-        CellMode::Simulate => (base, base_r.clone(), 0),
+    let (sched, r, failed, lb) = match cell.mode {
+        CellMode::Simulate => {
+            let lb = makespan_lower_bound(&dag, &dag.flat_dag(), &p.machine, &p.db);
+            (base, base_r.clone(), 0, lb)
+        }
         CellMode::Solve { iters, min_edge } => {
             let mut cfg = SolverConfig::all_soft(sim, iters, min_edge);
             cfg.seed = cseed;
@@ -412,8 +422,11 @@ fn run_cell(
             };
             let res = solve_portfolio(&dag, &p.machine, &p.db, parts, reg, &cell.policy, &pcfg);
             let failed = res.history.iter().filter(|h| h.action.is_some() && !h.applied).count();
+            // bound the DAG the solver actually reports — repartitioning
+            // changes both the makespan and what is achievable
+            let lb = makespan_lower_bound(&res.best_dag, &res.best_dag.flat_dag(), &p.machine, &p.db);
             let r = report(&res.best_dag, &res.best_schedule);
-            (res.best_schedule, r, failed)
+            (res.best_schedule, r, failed, lb)
         }
     };
     let e = energy(&sched, &p.machine, DEFAULT_J_PER_BYTE);
@@ -436,13 +449,14 @@ fn run_cell(
         hom_makespan: base_r.makespan,
         hom_gflops: base_r.gflops,
         failed_moves: failed,
+        makespan_over_lb: if lb > 0.0 && r.makespan.is_finite() { r.makespan / lb } else { 0.0 },
     }
 }
 
 /// CSV header of [`to_csv`] rows.
 pub const CSV_HEADER: &str = "platform,workload,policy,tile,mode,seed,cell_seed,n_tasks,dag_depth,\
 makespan_s,gflops,avg_load_pct,transfer_bytes,energy_j,peak_in_flight_transfers,\
-hom_makespan_s,hom_gflops,improve_pct,failed_moves";
+hom_makespan_s,hom_gflops,improve_pct,failed_moves,makespan_over_lb";
 
 /// Aggregate results as CSV, one row per cell in grid order. Fixed-width
 /// float formatting keeps the output byte-stable across runs and thread
@@ -453,7 +467,7 @@ pub fn to_csv(results: &[CellResult]) -> String {
     out.push('\n');
     for r in results {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{:.6},{:.3},{:.2},{},{:.3},{},{:.6},{:.3},{:.2},{}\n",
+            "{},{},{},{},{},{},{},{},{},{:.6},{:.3},{:.2},{},{:.3},{},{:.6},{:.3},{:.2},{},{:.4}\n",
             r.platform,
             r.workload,
             r.policy,
@@ -473,6 +487,7 @@ pub fn to_csv(results: &[CellResult]) -> String {
             r.hom_gflops,
             r.improve_pct(),
             r.failed_moves,
+            r.makespan_over_lb,
         ));
     }
     out
@@ -502,6 +517,7 @@ pub fn to_json(results: &[CellResult]) -> String {
             o.insert("hom_gflops".into(), Json::Num(r.hom_gflops));
             o.insert("improve_pct".into(), Json::Num(r.improve_pct()));
             o.insert("failed_moves".into(), Json::Num(r.failed_moves as f64));
+            o.insert("makespan_over_lb".into(), Json::Num(r.makespan_over_lb));
             Json::Obj(o)
         })
         .collect();

@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use crate::util::fxhash::FxHashMap;
 
-use super::region::Region;
+use super::region::{MatrixId, Region};
 use super::task::{Task, TaskId, TaskKind, TaskSpec};
 
 /// Hierarchical task DAG (arena + tree structure + derived edges).
@@ -208,6 +208,25 @@ impl TaskDag {
     /// Total leaf flops (the workload's useful work).
     pub fn total_flops(&self) -> f64 {
         self.frontier().iter().map(|&t| self.tasks[t].flops).sum()
+    }
+
+    /// Relabel every region of every live task onto matrix `m`.
+    ///
+    /// The workload builders all emit matrix 0; the service layer gives
+    /// each admitted job a distinct matrix id so that concurrent jobs'
+    /// blocks never alias in the shared data DAG / coherence state —
+    /// [`Region`] overlap requires matching matrices, so relabeled jobs
+    /// are isolated by construction.
+    pub fn set_matrix(&mut self, m: MatrixId) {
+        for i in 0..self.tasks.len() {
+            if self.removed[i] {
+                continue;
+            }
+            let t = Arc::make_mut(&mut self.tasks[i]);
+            for r in t.reads.iter_mut().chain(t.writes.iter_mut()) {
+                r.matrix = m;
+            }
+        }
     }
 
     /// Build the schedulable view with derived dependence edges.
@@ -529,6 +548,26 @@ mod tests {
         assert!(Arc::ptr_eq(&dag.tasks[1], &snap.tasks[1]));
         // and the snapshot still schedules independently
         assert_eq!(snap.flat_dag().len(), 3);
+    }
+
+    #[test]
+    fn set_matrix_relabels_all_live_regions_and_isolates_clones() {
+        let mut dag = TaskDag::new(root_chol(8));
+        let a = reg(0, 4, 0, 4);
+        dag.partition(0, vec![spec(TaskKind::Potrf, vec![a], vec![a]); 2], 4);
+        let snap = dag.clone();
+        dag.set_matrix(7);
+        for &t in &dag.frontier() {
+            assert!(dag.task(t).reads.iter().all(|r| r.matrix == 7));
+            assert!(dag.task(t).writes.iter().all(|r| r.matrix == 7));
+        }
+        // copy-on-write: the clone keeps matrix 0 — two jobs built from
+        // the same template must not alias after relabeling one of them
+        for &t in &snap.frontier() {
+            assert!(snap.task(t).writes.iter().all(|r| r.matrix == 0));
+        }
+        // relabeling preserves the dependence structure (same overlaps)
+        assert_eq!(dag.flat_dag().edge_count(), snap.flat_dag().edge_count());
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //!
 //! * `simulate`  — schedule one uniform tiling on a platform, print the report
 //! * `sweep`     — policy x tile-size sweep (Fig. 5 right)
+//! * `serve`     — streaming multi-DAG service mode: jobs arrive over time
 //! * `solve`     — run the iterative scheduler-partitioner (Table 1 rows)
+//! * `online`    — constructive per-task-arrival partitioner (paper §4)
 //! * `table1`    — the full 8-configuration Table 1 for a platform
 //! * `validate`  — real PJRT execution vs simulation (Fig. 5 left analog)
 //! * `calibrate` — measure local kernel perf models, print TOML
@@ -37,6 +39,7 @@ use hesp::coordinator::solver::{
     best_homogeneous_with, result_json, solve_portfolio, solve_with, CandidateSelect, PortfolioConfig, Sampling,
     SolverConfig,
 };
+use hesp::coordinator::service::{self, Admission, ArrivalSpec, ServeGrid};
 use hesp::coordinator::sweep::{self, CellMode, SweepGrid, SweepPlatform, Workload};
 use hesp::coordinator::trace::write_bundle;
 use hesp::util::cli::Args;
@@ -47,6 +50,7 @@ fn main() {
     let r = match cmd {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "solve" => cmd_solve(&args),
         "online" => cmd_online(&args),
         "table1" => cmd_table1(&args),
@@ -59,7 +63,10 @@ fn main() {
             print!("{}", HELP);
             Ok(())
         }
-        other => Err(anyhow!("unknown subcommand '{other}' (try `hesp help`)")),
+        other => Err(anyhow!(
+            "unknown subcommand '{other}' — expected one of: simulate, sweep, serve, solve, \
+             online, table1, validate, calibrate, trace, dag, policies, help"
+        )),
     };
     if let Err(e) = r {
         eprintln!("error: {e:#}");
@@ -81,7 +88,18 @@ USAGE: hesp <subcommand> [--flags]
             [--cache wb|wt|wa] [--out bench_out/sweep.csv]
             (parallel scenario grid; cells get content-derived seeds, so any
             --threads count emits a byte-identical aggregate CSV/JSON bundle.
-            bare --quick = the self-contained 320-cell CI smoke grid)
+            bare --quick = the self-contained 384-cell CI smoke grid)
+  serve     --platform F | --platforms F1,F2 | --quick
+            [--arrivals poisson:R,bursty:LO:HI:DWELL,trace:FILE.jsonl]
+            [--rate R] [--duration S] [--policies all|name,...] [--cap N]
+            [--admission defer|reject] [--threads T] [--cache wb|wt|wa]
+            [--seed S] [--out bench_out/serve.csv] [--bench-json FILE.json]
+            (streaming multi-DAG service mode: jobs arrive over time, pass
+            admission control, and are co-scheduled on the shared machine
+            until drain. Streams and scheduler seeds are content-derived,
+            so any --threads count emits a byte-identical CSV/JSON bundle
+            of sojourn percentiles, throughput, deadline-miss rate and
+            Jain fairness. bare --quick = the 16-scenario CI smoke grid)
   solve     --platform F | --quick   --n N [--tiles ...] [--iters K]
             [--candidates all|cp|shallow] [--sampling hard|soft] [--min-edge E]
             [--objective makespan|energy|edp] [--policy NAME]
@@ -101,11 +119,13 @@ USAGE: hesp <subcommand> [--flags]
   policies                                                (list the policy registry)
 
 Scheduling policies are named registry entries (`hesp policies`):
-fcfs/r-p ... pl/eft-p (Table 1), pl/affinity, pl/lookahead. For the
-single-policy commands (simulate/solve/online/trace) the precedence is
---policy > legacy --order/--select pair > the platform's `policy =` key >
-pl/eft-p. sweep and table1 run every registered policy by default; sweep
-restricts to one when --policy (or --order/--select) is given.
+fcfs/r-p ... pl/eft-p (Table 1), pl/affinity, pl/lookahead, and the
+job-aware serve pair pl/edf-p / pl/sjf-p. For the single-policy commands
+(simulate/solve/online/trace) the precedence is --policy > legacy
+--order/--select pair > the platform's `policy =` key > pl/eft-p. sweep
+and table1 run every registered policy by default; sweep restricts to one
+when --policy (or --order/--select) is given. serve defaults to the
+service four (fcfs/eft-p, pl/eft-p, pl/edf-p, pl/sjf-p).
 ";
 
 fn sim_config(args: &Args, p: &Platform) -> Result<SimConfig> {
@@ -210,8 +230,8 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
     let cache = CachePolicy::from_name(&args.str_lower_or("cache", "wb")).ok_or_else(|| anyhow!("bad --cache"))?;
 
     if args.has("quick") && !args.has("platform") && !args.has("platforms") {
-        // the CI smoke grid: 2 platforms x 4 workloads x 10 policies x
-        // 2 tiles x 2 seeds = 320 cells, sized to finish in seconds
+        // the CI smoke grid: 2 platforms x 4 workloads x 12 policies x
+        // 2 tiles x 2 seeds = 384 cells, sized to finish in seconds
         return Ok(SweepGrid {
             platforms: vec![
                 SweepPlatform::from_file("configs/bujaruelo.toml")?,
@@ -388,6 +408,147 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let json = out.with_extension("json");
     std::fs::write(&json, sweep::to_json(&results))?;
     println!("aggregate bundle -> {} + {}", out.display(), json.display());
+    Ok(())
+}
+
+/// The policies a serve run compares by default: the strongest
+/// job-oblivious baselines (fcfs/eft-p orders by task release, pl/eft-p by
+/// per-job critical time) against the two job-aware orderings.
+const SERVE_DEFAULT_POLICIES: [&str; 4] = ["fcfs/eft-p", "pl/eft-p", "pl/edf-p", "pl/sjf-p"];
+
+/// Build the scenario grid for `hesp serve`: `--quick` (without a
+/// platform) is the self-contained CI smoke grid; otherwise the grid
+/// comes from flags.
+fn build_serve_grid(args: &Args) -> Result<ServeGrid> {
+    let reg = PolicyRegistry::standard();
+    let cache = CachePolicy::from_name(&args.str_lower_or("cache", "wb")).ok_or_else(|| anyhow!("bad --cache"))?;
+    let admission = Admission::parse(&args.str_lower_or("admission", "defer"))
+        .ok_or_else(|| anyhow!("bad --admission (defer | reject)"))?;
+    let queue_cap = args.usize_or("cap", 64);
+    let seed = args.u64_or("seed", 0);
+    let duration = args.f64_or("duration", 3.0);
+    anyhow::ensure!(duration > 0.0, "--duration must be positive");
+
+    // not get_lower: a trace:<path> spec must keep the path's case
+    let arrivals: Vec<ArrivalSpec> = match args.get("arrivals") {
+        Some(list) => {
+            let mut out = Vec::new();
+            for a in list.split(',') {
+                let a = a.trim();
+                out.push(
+                    ArrivalSpec::parse(a)
+                        .ok_or_else(|| anyhow!("bad arrival spec '{a}' (poisson:R | bursty:LO:HI:DWELL | trace:FILE)"))?,
+                );
+            }
+            out
+        }
+        None if args.has("quick") => vec![
+            ArrivalSpec::Poisson { rate: 8.0 },
+            ArrivalSpec::Bursty { lo: 3.0, hi: 25.0, dwell: 0.15 },
+        ],
+        None => vec![ArrivalSpec::Poisson { rate: args.f64_or("rate", 8.0) }],
+    };
+
+    let policies: Vec<String> = if let Some(list) = args.get_lower("policies") {
+        if list == "all" {
+            reg.names().iter().map(|s| s.to_string()).collect()
+        } else {
+            let mut out = Vec::new();
+            for name in list.split(',') {
+                let name = name.trim();
+                let pol = reg.get(name).ok_or_else(|| anyhow!("unknown policy '{name}' (see `hesp policies`)"))?;
+                out.push(pol.name().to_string());
+            }
+            out
+        }
+    } else if let Some(name) = args.get_lower("policy") {
+        let pol = reg.get(&name).ok_or_else(|| anyhow!("unknown --policy '{name}' (see `hesp policies`)"))?;
+        vec![pol.name().to_string()]
+    } else {
+        SERVE_DEFAULT_POLICIES.iter().map(|s| s.to_string()).collect()
+    };
+
+    let platforms = if args.has("quick") && !args.has("platform") && !args.has("platforms") {
+        // the CI smoke grid: both reference platforms x 2 arrival
+        // processes x 4 policies = 16 scenarios, run to drain
+        vec![
+            SweepPlatform::from_file("configs/bujaruelo.toml")?,
+            SweepPlatform::from_file("configs/odroid.toml")?,
+        ]
+    } else if let Some(list) = args.get("platforms") {
+        let mut out = Vec::new();
+        for p in list.split(',') {
+            out.push(SweepPlatform::from_file(p.trim())?);
+        }
+        out
+    } else if let Some(p) = args.get("platform") {
+        vec![SweepPlatform::from_file(p)?]
+    } else {
+        bail!("--platform F | --platforms F1,F2 required (or bare --quick)");
+    };
+
+    Ok(ServeGrid { platforms, arrivals, policies, duration, queue_cap, admission, cache, seed })
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let threads = args.usize_or("threads", sweep::default_threads());
+    let grid = build_serve_grid(args)?;
+
+    let t0 = std::time::Instant::now();
+    let results = service::run_serve(&grid, threads)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let total_jobs: usize = results.iter().map(|r| r.completed).sum();
+    println!(
+        "serve: {} scenarios x {} threads in {:.2}s ({} jobs simulated, {:.0} jobs/s)",
+        results.len(),
+        threads,
+        dt,
+        total_jobs,
+        total_jobs as f64 / dt.max(1e-9)
+    );
+
+    let mut table = Table::new(&[
+        "platform", "arrivals", "policy", "done", "rej", "thru j/s", "p50 s", "p99 s", "miss %", "fair", "load %",
+    ]);
+    for r in &results {
+        table.row(&[
+            r.platform.clone(),
+            r.arrivals.clone(),
+            r.policy.clone(),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            format!("{:.2}", r.throughput_jps),
+            format!("{:.4}", r.p50_sojourn),
+            format!("{:.4}", r.p99_sojourn),
+            format!("{:.1}", r.deadline_miss_pct),
+            format!("{:.3}", r.fairness),
+            format!("{:.1}", r.avg_load_pct),
+        ]);
+    }
+    table.print();
+
+    let out = std::path::PathBuf::from(args.str_or("out", "bench_out/serve.csv"));
+    let (csv, json) = service::write_serve_bundle(&out, &results)?;
+    println!("serve bundle -> {} + {}", csv.display(), json.display());
+
+    // wall-clock record for the bench baseline — deliberately a separate
+    // file, never part of the byte-compared bundle
+    if let Some(bj) = args.get("bench-json") {
+        use hesp::util::json::Json;
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("name".into(), Json::Str("serve".into()));
+        o.insert("scenarios".into(), Json::Num(results.len() as f64));
+        o.insert("jobs".into(), Json::Num(total_jobs as f64));
+        o.insert("threads".into(), Json::Num(threads as f64));
+        o.insert("wall_s".into(), Json::Num(dt));
+        o.insert("jobs_per_s".into(), Json::Num(total_jobs as f64 / dt.max(1e-9)));
+        let path = std::path::PathBuf::from(bj);
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, Json::Obj(o).to_string())?;
+        println!("bench record -> {}", path.display());
+    }
     Ok(())
 }
 
@@ -583,7 +744,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let p = load_platform(args)?;
     let n = args.usize_or("n", 32768) as u32;
     let b = args.usize_or("tile", 2048) as u32;
-    let out = std::path::PathBuf::from(args.str_or("out", "traces"));
+    let out = std::path::PathBuf::from(args.str_or("out", "bench_out/traces"));
     let sim = sim_config(args, &p)?;
     let mut pol = build_policy(args, &p)?;
 

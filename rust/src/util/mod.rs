@@ -1,7 +1,8 @@
 //! Small self-contained substrates that replace ecosystem crates
 //! (the build is fully offline — see Cargo.toml): a seeded PRNG, a JSON
 //! parser for the artifact manifest, a TOML-subset parser for platform
-//! configs, a tiny CLI flag parser, and the deterministic scoped-thread
+//! configs, a tiny CLI flag parser, shared descriptive statistics
+//! (percentiles, Jain fairness), and the deterministic scoped-thread
 //! parallel map the sweep harness and portfolio solver share.
 
 pub mod cli;
@@ -9,4 +10,5 @@ pub mod fxhash;
 pub mod json;
 pub mod par;
 pub mod rng;
+pub mod stats;
 pub mod toml;

@@ -1,0 +1,115 @@
+//! Shared descriptive statistics: linear-interpolation percentiles,
+//! Jain's fairness index, mean and sample standard deviation. One
+//! implementation serves both the bench harness ([`crate::bench::Stats`])
+//! and the service-layer sojourn metrics
+//! ([`crate::coordinator::service::metrics`]) — divergent copies of
+//! percentile arithmetic would silently report different p99s.
+
+/// Arithmetic mean. Panics on an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "mean of an empty sample");
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (Bessel-corrected, `/ (n-1)`): sample counts
+/// are small in both call sites, and the population formula (`/ n`)
+/// systematically understates their noise. A single sample reports 0.
+pub fn sample_stddev(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "stddev of an empty sample");
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let ss = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>();
+    (ss / (n - 1) as f64).sqrt()
+}
+
+/// Quantile `q` in `[0, 1]` of an ascending-sorted sample, with linear
+/// interpolation at fractional rank `q * (n - 1)` (the NumPy default).
+/// `q = 0.5` reproduces the textbook median, including the midpoint
+/// average for even `n`. Panics on an empty slice or `q` outside `[0, 1]`;
+/// the sortedness precondition is debug-asserted.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    assert!((0.0..=1.0).contains(&q), "quantile must be in [0, 1], got {q}");
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "percentile input must be sorted ascending");
+    let rank = q * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Jain's fairness index `(Σx)² / (n · Σx²)` over non-negative shares:
+/// 1.0 when every share is equal, `1/n` when one share takes everything.
+/// Degenerate inputs (empty, or all zero) report perfect fairness — no
+/// one is being starved relative to anyone else.
+pub fn jain(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    debug_assert!(xs.iter().all(|&x| x >= 0.0), "Jain's index is defined over non-negative shares");
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 <= 0.0 {
+        return 1.0;
+    }
+    s * s / (xs.len() as f64 * s2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev_closed_form() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        // sum of squares around the mean = 10 over 5 samples -> sqrt(10/4)
+        assert!((sample_stddev(&xs) - 2.5f64.sqrt()).abs() < 1e-12);
+        // two samples: sd = |a - b| / sqrt(2)
+        assert!((sample_stddev(&[1.0, 2.0]) - 0.5f64.sqrt()).abs() < 1e-12);
+        assert_eq!(sample_stddev(&[3.0]), 0.0, "a single sample carries no spread");
+    }
+
+    #[test]
+    fn percentile_closed_form() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        // rank 0.25 * 4 = 1.0 -> exactly the second sample
+        assert_eq!(percentile(&xs, 0.25), 2.0);
+        // rank 0.9 * 4 = 3.6 -> 4 + 0.6 * (5 - 4)
+        assert!((percentile(&xs, 0.9) - 4.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_median_matches_even_n_midpoint() {
+        // the bench harness' historical even-n median: 0.5 * (x[n/2-1] + x[n/2])
+        assert_eq!(percentile(&[1.0, 2.0], 0.5), 1.5);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 10.0], 0.5), 2.5);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_rejects_out_of_range_quantile() {
+        percentile(&[1.0], 1.5);
+    }
+
+    #[test]
+    fn jain_closed_form() {
+        assert_eq!(jain(&[5.0, 5.0, 5.0, 5.0]), 1.0, "equal shares are perfectly fair");
+        // one share takes everything: 1/n
+        assert!((jain(&[1.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        // (1+2+3)^2 / (3 * (1+4+9)) = 36/42
+        assert!((jain(&[1.0, 2.0, 3.0]) - 36.0 / 42.0).abs() < 1e-12);
+        assert_eq!(jain(&[]), 1.0);
+        assert_eq!(jain(&[0.0, 0.0]), 1.0, "no one starves when no one consumes");
+    }
+}

@@ -63,7 +63,7 @@ fn chol(n: u32, b: u32) -> TaskDag {
 fn registry_round_trips_every_name() {
     let reg = PolicyRegistry::standard();
     let names = reg.names();
-    assert_eq!(names.len(), 10, "8 Table-1 rows + affinity + lookahead: {names:?}");
+    assert_eq!(names.len(), 12, "8 Table-1 rows + affinity + lookahead + edf + sjf: {names:?}");
     for &name in &names {
         let p = reg.get(name).unwrap_or_else(|| panic!("'{name}' does not construct"));
         assert_eq!(p.name(), name, "name() must round-trip through the registry");
@@ -74,7 +74,7 @@ fn registry_round_trips_every_name() {
         let p = reg.get(&canonical).unwrap_or_else(|| panic!("Table-1 '{canonical}' missing"));
         assert_eq!(p.name(), canonical);
     }
-    for extra in ["pl/affinity", "pl/lookahead"] {
+    for extra in ["pl/affinity", "pl/lookahead", "pl/edf-p", "pl/sjf-p"] {
         assert!(names.contains(&extra), "{extra} not registered");
     }
 }
@@ -180,7 +180,7 @@ impl SchedPolicy for PinToZero {
 fn user_policies_register_and_drive_the_engine() {
     let mut reg = PolicyRegistry::standard();
     reg.register("test/pin-zero", || Box::new(PinToZero) as Box<dyn SchedPolicy>);
-    assert_eq!(reg.len(), 11);
+    assert_eq!(reg.len(), 13);
     let mut pol = reg.get("test/pin-zero").unwrap();
     assert_eq!(pol.name(), "test/pin-zero");
 

@@ -1,0 +1,154 @@
+//! Service-layer determinism contract: a parallel serve run is
+//! byte-identical to the single-threaded run on the same grid, arrival
+//! streams are pure functions of (label, seed) and shared across
+//! policies, and admission control conserves jobs — a full queue rejects
+//! loudly, never drops silently.
+
+use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::perfmodel::{PerfCurve, PerfDb};
+use hesp::coordinator::platform::MachineBuilder;
+use hesp::coordinator::service::{self, Admission, ArrivalSpec, ServeGrid};
+use hesp::coordinator::sweep::SweepPlatform;
+
+/// A small in-memory platform (no config files in unit tests).
+fn platform(name: &str, ncpu: usize, peak: f64) -> SweepPlatform {
+    let mut b = MachineBuilder::new(name);
+    let h = b.space("host", u64::MAX);
+    b.main(h);
+    let t = b.proc_type("cpu", 1.0, 0.1);
+    b.processors(ncpu, "c", t, h);
+    let mut db = PerfDb::new();
+    db.set_fallback(0, PerfCurve::Saturating { peak, half: 64.0, exponent: 2.0 });
+    SweepPlatform::new(name, b.build(), db, 8)
+}
+
+fn grid() -> ServeGrid {
+    ServeGrid {
+        platforms: vec![platform("alpha", 4, 20.0), platform("beta", 2, 35.0)],
+        arrivals: vec![
+            ArrivalSpec::Poisson { rate: 6.0 },
+            ArrivalSpec::Bursty { lo: 2.0, hi: 20.0, dwell: 0.2 },
+        ],
+        policies: vec!["pl/eft-p".into(), "pl/edf-p".into(), "pl/sjf-p".into()],
+        duration: 1.0,
+        queue_cap: 64,
+        admission: Admission::Defer,
+        cache: CachePolicy::WriteBack,
+        seed: 0,
+    }
+}
+
+#[test]
+fn serve_bundle_is_byte_identical_across_thread_counts() {
+    let g = grid();
+    let serial = service::run_serve(&g, 1).unwrap();
+    let parallel = service::run_serve(&g, 4).unwrap();
+    assert_eq!(serial.len(), 12, "2 platforms x 2 arrivals x 3 policies");
+    assert!(serial.iter().any(|r| r.completed > 0), "streams must carry jobs");
+    assert_eq!(
+        service::to_csv(&serial),
+        service::to_csv(&parallel),
+        "serve CSV must not depend on the thread count"
+    );
+    assert_eq!(service::to_json(&serial), service::to_json(&parallel));
+}
+
+#[test]
+fn arrival_streams_are_deterministic_and_shared_across_policies() {
+    // pure function of (label, seed)
+    for spec in [ArrivalSpec::Poisson { rate: 6.0 }, ArrivalSpec::Bursty { lo: 2.0, hi: 20.0, dwell: 0.2 }] {
+        assert_eq!(spec.generate(1.0, 0).unwrap(), spec.generate(1.0, 0).unwrap(), "{}", spec.label());
+        assert_ne!(spec.generate(1.0, 0).unwrap(), spec.generate(1.0, 1).unwrap(), "{}", spec.label());
+    }
+    // within one grid, every policy on one platform faces the identical
+    // stream: submitted counts agree row-for-row per (platform, arrivals)
+    let results = service::run_serve(&grid(), 2).unwrap();
+    for r in &results {
+        let twin = results
+            .iter()
+            .find(|o| o.platform == r.platform && o.arrivals == r.arrivals && o.policy != r.policy)
+            .expect("multi-policy grid");
+        assert_eq!(r.submitted, twin.submitted, "{}/{}: policies saw different streams", r.platform, r.arrivals);
+        assert_eq!(r.seed, twin.seed);
+        assert_ne!(r.scenario_seed, twin.scenario_seed, "scheduler seeds still key on the policy");
+    }
+}
+
+#[test]
+fn scenario_rows_are_stable_under_grid_reordering() {
+    let forward = service::run_serve(&grid(), 2).unwrap();
+    let mut rev = grid();
+    rev.platforms.reverse();
+    rev.arrivals.reverse();
+    rev.policies.reverse();
+    let backward = service::run_serve(&rev, 2).unwrap();
+    assert_eq!(forward.len(), backward.len());
+    for f in &forward {
+        let b = backward
+            .iter()
+            .find(|b| b.platform == f.platform && b.arrivals == f.arrivals && b.policy == f.policy)
+            .unwrap_or_else(|| panic!("{}/{}/{} missing from reordered run", f.platform, f.arrivals, f.policy));
+        assert_eq!(f, b, "scenario outcome must derive from coordinates, not grid position");
+    }
+}
+
+#[test]
+fn full_queue_rejects_loudly_and_conserves_jobs() {
+    let mut g = grid();
+    g.platforms.truncate(1);
+    g.arrivals = vec![ArrivalSpec::Poisson { rate: 40.0 }];
+    g.policies = vec!["pl/eft-p".into()];
+    g.queue_cap = 1;
+    g.admission = Admission::Reject;
+    let results = service::run_serve(&g, 1).unwrap();
+    assert_eq!(results.len(), 1);
+    let r = &results[0];
+    assert!(r.submitted > 2, "40 jobs/s over 1 s must submit plenty");
+    assert!(r.rejected > 0, "cap 1 under that load must reject");
+    assert_eq!(
+        r.submitted,
+        r.completed + r.rejected,
+        "every submitted job is either completed or loudly rejected — none vanish"
+    );
+}
+
+#[test]
+fn deferred_backlog_drains_completely() {
+    let mut g = grid();
+    g.platforms.truncate(1);
+    g.arrivals = vec![ArrivalSpec::Poisson { rate: 40.0 }];
+    g.policies = vec!["pl/sjf-p".into()];
+    g.queue_cap = 1;
+    g.admission = Admission::Defer;
+    let results = service::run_serve(&g, 1).unwrap();
+    let r = &results[0];
+    assert_eq!(r.rejected, 0, "defer never rejects");
+    assert_eq!(r.completed, r.submitted, "the run drains the whole backlog");
+    assert!(r.drain > g.duration, "cap 1 under overload must drain past the horizon");
+    assert!(r.p99_sojourn >= r.p50_sojourn);
+    assert!(r.fairness > 0.0 && r.fairness <= 1.0 + 1e-12);
+}
+
+#[test]
+fn trace_replay_round_trips_through_the_grid() {
+    let dir = std::env::temp_dir().join(format!("hesp_serve_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    std::fs::write(
+        &path,
+        "{\"t_arrival\": 0.0, \"workload\": \"cholesky:512\", \"tile\": 128, \"deadline\": 1e9, \"priority\": 2}\n\
+         {\"t_arrival\": 0.01, \"workload\": \"stencil:4x2\", \"tile\": 64}\n",
+    )
+    .unwrap();
+    let mut g = grid();
+    g.platforms.truncate(1);
+    g.arrivals = vec![ArrivalSpec::Trace { path: path.to_string_lossy().into_owned() }];
+    g.policies = vec!["pl/edf-p".into()];
+    let results = service::run_serve(&g, 1).unwrap();
+    let r = &results[0];
+    assert_eq!(r.submitted, 2);
+    assert_eq!(r.completed, 2);
+    assert_eq!(r.deadline_miss_pct, 0.0, "1e9 s is generous");
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_dir(&dir).ok();
+}
