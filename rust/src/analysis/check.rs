@@ -1,0 +1,310 @@
+//! `hesp check` — the static input sanitizer.
+//!
+//! Validates simulation inputs *before* any simulation runs: platform
+//! TOMLs (disconnected memory spaces, zero/negative-rate perf curves,
+//! unreachable processor types), sweep-grid TOMLs (infeasible
+//! tile/workload combos, empty expansions), and JSONL traces
+//! (non-monotonic arrivals, duplicate job ids, deadlines before
+//! arrival). Every problem carries a precise `file:key` diagnostic; the
+//! pass itself never panics and collects *all* problems instead of
+//! stopping at the first — the validation hooks it calls
+//! ([`crate::coordinator::platform::Machine::diagnostics`],
+//! [`crate::coordinator::perfmodel::PerfDb::diagnostics`]) exist for
+//! exactly this.
+
+use crate::config::Platform;
+use crate::coordinator::service::arrivals::{parse_trace_line, Deadline};
+use crate::coordinator::sweep::grid_from_toml;
+
+/// One sanitizer diagnostic, addressable as `file:key`.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    pub file: String,
+    /// The offending config entity: `memory.gpu0_mem`, `perf.gpu.gemm`,
+    /// `workloads.cholesky:8192`, `line 17`, ...
+    pub key: String,
+    /// `true` = error (nonzero exit), `false` = warning.
+    pub error: bool,
+    pub msg: String,
+}
+
+impl Diag {
+    fn err(file: &str, key: impl Into<String>, msg: impl Into<String>) -> Diag {
+        Diag { file: file.to_string(), key: key.into(), error: true, msg: msg.into() }
+    }
+
+    fn warn(file: &str, key: impl Into<String>, msg: impl Into<String>) -> Diag {
+        Diag { file: file.to_string(), key: key.into(), error: false, msg: msg.into() }
+    }
+
+    pub fn render(&self) -> String {
+        let sev = if self.error { "error" } else { "warning" };
+        format!("{}:{}: {sev}: {}", self.file, self.key, self.msg)
+    }
+}
+
+/// Validate a platform TOML.
+pub fn check_platform_text(file: &str, text: &str) -> Vec<Diag> {
+    let platform = match Platform::from_str_unchecked(text) {
+        Ok(p) => p,
+        Err(e) => return vec![Diag::err(file, "parse", format!("{e:#}"))],
+    };
+    let mut out = Vec::new();
+    let m = &platform.machine;
+    for (key, msg) in m.diagnostics() {
+        out.push(Diag::err(file, key, msg));
+    }
+    for (key, msg) in platform.db.diagnostics(m) {
+        out.push(Diag::err(file, key, msg));
+    }
+    if platform.elem_bytes == 0 {
+        out.push(Diag::err(file, "elem_bytes", "elem_bytes must be positive"));
+    }
+    for pt in &m.proc_types {
+        if !m.procs.iter().any(|p| p.ptype == pt.id) {
+            out.push(Diag::warn(
+                file,
+                format!("proctype.{}", pt.name),
+                "no [[processor]] instantiates this type — its perf model is dead weight",
+            ));
+        }
+    }
+    for s in &m.spaces {
+        if s.capacity == 0 {
+            out.push(Diag::err(
+                file,
+                format!("memory.{}", s.name),
+                "zero-byte capacity: no block ever fits this space",
+            ));
+        }
+    }
+    out
+}
+
+/// Validate a sweep-grid TOML. Platform paths inside the grid resolve
+/// relative to the current directory, exactly as `hesp sweep` resolves
+/// them.
+pub fn check_grid_text(file: &str, text: &str) -> Vec<Diag> {
+    let grid = match grid_from_toml(text) {
+        Ok(g) => g,
+        Err(e) => return vec![Diag::err(file, "parse", format!("{e:#}"))],
+    };
+    let mut out = Vec::new();
+    for w in &grid.workloads {
+        if !grid.tiles.iter().any(|&b| w.feasible(b)) {
+            out.push(Diag::err(
+                file,
+                format!("workloads.{}", w.label()),
+                format!("no feasible tile for this workload among tiles = {:?}", grid.tiles),
+            ));
+        }
+    }
+    if grid.expand().is_empty() {
+        out.push(Diag::err(file, "grid", "grid expands to zero cells"));
+    }
+    out
+}
+
+/// Validate a JSONL trace. Unlike
+/// [`crate::coordinator::service::arrivals::parse_trace`] (which stops at
+/// the first malformed line), this collects a diagnostic per line and
+/// keeps going.
+pub fn check_trace_text(file: &str, text: &str) -> Vec<Diag> {
+    let mut out = Vec::new();
+    let mut declared: Vec<(usize, usize)> = Vec::new();
+    let mut prev_arrival: Option<(f64, usize)> = None;
+    let mut jobs = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let (job, id) = match parse_trace_line(lineno, line) {
+            Ok(None) => continue,
+            Ok(Some(parsed)) => parsed,
+            Err(e) => {
+                out.push(Diag::err(file, format!("line {lineno}"), format!("{e:#}")));
+                continue;
+            }
+        };
+        jobs += 1;
+        if let Some(id) = id {
+            if let Some(&(_, first)) = declared.iter().find(|&&(d, _)| d == id) {
+                out.push(Diag::err(
+                    file,
+                    format!("line {lineno}"),
+                    format!("duplicate job id {id} (first declared on line {first})"),
+                ));
+            } else {
+                declared.push((id, lineno));
+            }
+        }
+        if let Some((prev, prev_line)) = prev_arrival {
+            if job.t_arrival < prev {
+                out.push(Diag::warn(
+                    file,
+                    format!("line {lineno}"),
+                    format!(
+                        "t_arrival {} is earlier than line {prev_line}'s {prev}: replay re-sorts, but the trace is not in arrival order",
+                        job.t_arrival
+                    ),
+                ));
+            }
+        }
+        prev_arrival = Some((job.t_arrival, lineno));
+        // `parse_trace_line` validated At-deadlines against arrival; the
+        // Deadline::Slack form never appears in traces, so nothing more
+        // to check here — but keep the exhaustive match so a new variant
+        // forces a decision.
+        match job.deadline {
+            Deadline::None | Deadline::At(_) | Deadline::Slack(_) => {}
+        }
+    }
+    if jobs == 0 {
+        out.push(Diag::err(file, "trace", "trace contains no jobs"));
+    }
+    out
+}
+
+/// Sniff a file's kind and validate it: `.jsonl` files are traces, TOML
+/// documents with a top-level `platforms` key are sweep grids, everything
+/// else is a platform.
+pub fn check_file(path: &str) -> Vec<Diag> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return vec![Diag::err(path, "read", e.to_string())],
+    };
+    check_text(path, &text)
+}
+
+/// [`check_file`] on already-loaded text (test entry point).
+pub fn check_text(path: &str, text: &str) -> Vec<Diag> {
+    if path.ends_with(".jsonl") {
+        check_trace_text(path, text)
+    } else if is_grid(text) {
+        check_grid_text(path, text)
+    } else {
+        check_platform_text(path, text)
+    }
+}
+
+/// A TOML document is a sweep grid iff it has a top-level `platforms` key.
+fn is_grid(text: &str) -> bool {
+    matches!(crate::util::toml::parse(text), Ok(doc) if doc.get("platforms").is_some())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD_PLATFORM: &str = r#"
+name = "toy"
+main_space = "host"
+
+[[memory]]
+name = "host"
+
+[[memory]]
+name = "dev"
+capacity_gb = 4.0
+
+[[link]]
+from = "host"
+to = "dev"
+latency_us = 10.0
+bandwidth_gbs = 12.0
+
+[[proctype]]
+name = "cpu"
+
+[perf.cpu.default]
+gflops = 50.0
+
+[[processor]]
+prefix = "c"
+count = 2
+type = "cpu"
+space = "host"
+"#;
+
+    #[test]
+    fn good_platform_is_clean() {
+        let diags = check_platform_text("p.toml", GOOD_PLATFORM);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn disconnected_space_is_reported_by_key() {
+        let text = GOOD_PLATFORM.replace(
+            "[[link]]\nfrom = \"host\"\nto = \"dev\"\nlatency_us = 10.0\nbandwidth_gbs = 12.0\n",
+            "",
+        );
+        let diags = check_platform_text("p.toml", &text);
+        assert!(
+            diags.iter().any(|d| d.error && d.key == "memory.dev" && d.msg.contains("disconnected")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn zero_rate_curve_is_reported() {
+        let text = GOOD_PLATFORM.replace("gflops = 50.0", "gflops = 0.0");
+        let diags = check_platform_text("p.toml", &text);
+        assert!(
+            diags.iter().any(|d| d.error && d.key == "perf.cpu.default" && d.msg.contains("non-positive rate")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn unreachable_proctype_is_a_warning() {
+        let extra = concat!(
+            "\n[[proctype]]\nname = \"gpu\"\n\n[perf.gpu.default]\ngflops = 900.0\n"
+        );
+        let text = format!("{GOOD_PLATFORM}{extra}");
+        let diags = check_platform_text("p.toml", &text);
+        assert!(
+            diags.iter().any(|d| !d.error && d.key == "proctype.gpu"),
+            "{diags:?}"
+        );
+        assert!(diags.iter().all(|d| !d.error), "warnings only: {diags:?}");
+    }
+
+    #[test]
+    fn trace_checks_collect_everything() {
+        let text = concat!(
+            "{\"t_arrival\": 1.0, \"workload\": \"cholesky:1024\", \"tile\": 256, \"id\": 1}\n",
+            "{\"t_arrival\": 0.5, \"workload\": \"cholesky:1024\", \"tile\": 256, \"id\": 1}\n",
+            "{\"t_arrival\": 2.0, \"workload\": \"nope\", \"tile\": 256}\n",
+        );
+        let diags = check_trace_text("t.jsonl", text);
+        assert!(diags.iter().any(|d| d.error && d.key == "line 2" && d.msg.contains("duplicate job id 1")));
+        assert!(diags.iter().any(|d| !d.error && d.key == "line 2" && d.msg.contains("earlier")));
+        assert!(diags.iter().any(|d| d.error && d.key == "line 3"), "{diags:?}");
+    }
+
+    #[test]
+    fn empty_trace_is_an_error() {
+        let diags = check_trace_text("t.jsonl", "\n\n");
+        assert!(diags.iter().any(|d| d.error && d.msg.contains("no jobs")));
+    }
+
+    #[test]
+    fn grid_sniffing_and_infeasible_tiles() {
+        // A grid whose only workload can never meet its tiles: cholesky
+        // needs n % b == 0 with at least a 2x2 tiling.
+        let dir = std::env::temp_dir().join("hesp_check_grid_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let plat = dir.join("p.toml");
+        std::fs::write(&plat, GOOD_PLATFORM).unwrap();
+        let grid = format!(
+            "platforms = [\"{}\"]\nworkloads = [\"cholesky:1000\"]\npolicies = [\"pl/eft-p\"]\ntiles = [256]\n",
+            plat.display()
+        );
+        assert!(is_grid(&grid));
+        assert!(!is_grid(GOOD_PLATFORM));
+        let diags = check_grid_text("g.toml", &grid);
+        assert!(
+            diags.iter().any(|d| d.error && d.key == "workloads.cholesky:1000"),
+            "{diags:?}"
+        );
+        assert!(diags.iter().any(|d| d.error && d.key == "grid"), "zero cells: {diags:?}");
+    }
+}

@@ -1,0 +1,340 @@
+//! Line-level Rust source scanner for the `detlint` pass.
+//!
+//! Not a real Rust lexer — a deliberately small character state machine
+//! that is *just* accurate enough for line-level rules: it blanks string,
+//! raw-string, char and comment contents (so rule tokens never match
+//! inside literals), splits out per-line comment text (so suppression
+//! pragmas can be read back), and marks `#[cfg(test)]` regions by brace
+//! counting (so test-only code is exempt from determinism rules). The
+//! rules in [`super::rules`] then work on the blanked `code` of each line
+//! with token-boundary matching.
+
+/// One scanned source line.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code text with comment bodies and string/char contents replaced by
+    /// spaces (delimiters are kept, so `.expect("` stays matchable).
+    pub code: String,
+    /// Comment text on this line (bodies of `//` and `/* */` comments).
+    pub comment: String,
+    /// Whether the line sits inside a `#[cfg(test)]` item.
+    pub in_test: bool,
+}
+
+/// A suppression pragma: `// detlint: allow(<rule>) — <reason>`.
+/// It silences findings of `rule` on its own line and the next one.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// A scanned source file: path label + lines + extracted pragmas.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    /// Stable, '/'-separated path label (e.g. `src/coordinator/sweep.rs`).
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub pragmas: Vec<Pragma>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comments with the current depth.
+    BlockComment(u32),
+    Str,
+    /// Raw string with the number of `#` marks in its delimiter.
+    RawStr(u32),
+}
+
+/// Scan `text` into per-line code/comment channels.
+pub fn scan(path: &str, text: &str) -> SourceFile {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    let flush = |code: &mut String, comment: &mut String, lines: &mut Vec<Line>| {
+        lines.push(Line {
+            number: lines.len() + 1,
+            code: std::mem::take(code),
+            comment: std::mem::take(comment),
+            in_test: false,
+        });
+    };
+
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        if c == '\n' {
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            flush(&mut code, &mut comment, &mut lines);
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    code.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    // raw / byte-string starts: r", r#", br", b"
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let raw = j > i + 1 || c == 'r';
+                    let mut hashes = 0u32;
+                    while raw && chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if raw && chars.get(j) == Some(&'"') {
+                        for _ in i..j {
+                            code.push(' ');
+                        }
+                        code.push('"');
+                        state = State::RawStr(hashes);
+                        i = j + 1;
+                    } else if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                        code.push(' ');
+                        code.push('"');
+                        state = State::Str;
+                        i += 2;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime
+                    let is_char_lit = match next {
+                        Some('\\') => true,
+                        Some(_) => chars.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    if is_char_lit {
+                        code.push('\'');
+                        i += 1;
+                        if chars.get(i) == Some(&'\\') {
+                            // escaped char: skip to the closing quote
+                            i += 1; // the backslash
+                            if i < chars.len() {
+                                i += 1; // the escaped char
+                            }
+                            while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
+                                i += 1;
+                            }
+                        } else if i < chars.len() {
+                            i += 1; // the single char
+                        }
+                        code.push(' ');
+                        if chars.get(i) == Some(&'\'') {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 { State::Code } else { State::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push(' ');
+                    }
+                    state = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        flush(&mut code, &mut comment, &mut lines);
+    }
+
+    mark_test_regions(&mut lines);
+    let pragmas = extract_pragmas(&lines);
+    SourceFile { path: path.to_string(), lines, pragmas }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Mark every line inside a `#[cfg(test)]` item by brace counting: the
+/// attribute arms a pending flag, the next `{` opens the region, and the
+/// matching `}` closes it.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth = 0i64;
+    let mut pending = false;
+    let mut region_depth: Option<i64> = None;
+    for line in lines.iter_mut() {
+        if line.code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let mut touched = region_depth.is_some() || pending;
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        region_depth = Some(depth);
+                        pending = false;
+                        touched = true;
+                    }
+                }
+                '}' => {
+                    if region_depth == Some(depth) {
+                        region_depth = None;
+                        touched = true;
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+        line.in_test = touched || region_depth.is_some();
+    }
+}
+
+/// Extract `detlint: allow(<rule>) — <reason>` pragmas from comment text.
+/// A pragma must be a dedicated comment: the comment body has to *start*
+/// with `detlint:` (so prose that merely mentions the syntax is ignored).
+/// A pragma with a malformed body gets `rule` set to the empty string;
+/// [`super::rules`] reports those as `lint/bare-allow`.
+fn extract_pragmas(lines: &[Line]) -> Vec<Pragma> {
+    let mut out = Vec::new();
+    for line in lines {
+        let body = line.comment.trim_start_matches(['/', '!', '*', ' ', '\t']);
+        let Some(rest) = body.strip_prefix("detlint:") else { continue };
+        let rest = rest.trim_start();
+        let parsed = rest.strip_prefix("allow(").and_then(|r| {
+            let close = r.find(')')?;
+            let rule = r[..close].trim().to_string();
+            let reason = r[close + 1..]
+                .trim_start()
+                .trim_start_matches(['\u{2014}', '\u{2013}', '-', ':'])
+                .trim()
+                .to_string();
+            if rule.is_empty() {
+                None
+            } else {
+                Some((rule, reason))
+            }
+        });
+        match parsed {
+            Some((rule, reason)) => out.push(Pragma { line: line.number, rule, reason }),
+            None => out.push(Pragma { line: line.number, rule: String::new(), reason: String::new() }),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let f = scan("t.rs", "let x = \"HashMap inside\"; // Instant::now in comment\n");
+        assert!(!f.lines[0].code.contains("HashMap"));
+        assert!(!f.lines[0].code.contains("Instant"));
+        assert!(f.lines[0].comment.contains("Instant::now"));
+        assert!(f.lines[0].code.contains("let x = \""));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals() {
+        let f = scan("t.rs", "let r = r#\"panic!(\"x\")\"#;\nlet c = '\\n';\nlet l: &'static str = \"\";\n");
+        assert!(!f.lines[0].code.contains("panic!"));
+        assert!(f.lines[1].code.contains("let c = "));
+        assert!(f.lines[2].code.contains("&'static str"), "{:?}", f.lines[2].code);
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let f = scan("t.rs", "a /* x /* y */ still */ b\n/* open\nunwrap()\n*/ c\n");
+        assert!(f.lines[0].code.contains('a') && f.lines[0].code.contains('b'));
+        assert!(!f.lines[2].code.contains("unwrap"));
+        assert!(f.lines[3].code.contains('c'));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let f = scan("t.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test && f.lines[2].in_test && f.lines[3].in_test && f.lines[4].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn pragmas_parse_with_and_without_reason() {
+        let src = "x(); // detlint: allow(det/wall-clock) — bench timing only\ny(); // detlint: allow(det/unseeded-rng)\n";
+        let f = scan("t.rs", src);
+        assert_eq!(f.pragmas.len(), 2);
+        assert_eq!(f.pragmas[0].rule, "det/wall-clock");
+        assert_eq!(f.pragmas[0].reason, "bench timing only");
+        assert_eq!(f.pragmas[1].rule, "det/unseeded-rng");
+        assert!(f.pragmas[1].reason.is_empty());
+    }
+}

@@ -1,0 +1,141 @@
+//! The detlint determinism & schedule-safety static analysis.
+//!
+//! Every headline result this repo produces rests on one invariant:
+//! simulations are bit-reproducible for any `--threads` count. The
+//! dynamic enforcement (the schedule-invariant oracle, 1-vs-4 `cmp`
+//! smokes) only catches a violation if a CI grid happens to exercise it;
+//! this module is the compile-time-style gate. Two passes:
+//!
+//! * **`hesp lint`** ([`lint_tree`]) — scans `src/` and `examples/` with
+//!   the rule registry in [`rules`] (hash-map iteration order, wall-clock
+//!   reads, unseeded RNG, float reductions over hash iterators, panics in
+//!   input-parsing paths). Suppressions are explicit and reasoned:
+//!   `// detlint: allow(<rule>) — <reason>`.
+//! * **`hesp check`** ([`check`]) — statically validates simulation
+//!   inputs (platform TOMLs, sweep grids, JSONL traces) before anything
+//!   runs.
+//!
+//! Both produce deterministic, byte-stable output: stable '/'-separated
+//! path labels, sorted findings, no timestamps.
+
+pub mod check;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::{Finding, LintReport};
+
+use std::path::{Path, PathBuf};
+
+/// Lint a set of in-memory `(label, text)` pairs — the pure entry point
+/// the CLI and the test harness share.
+pub fn lint_files(files: &[(String, String)]) -> LintReport {
+    let mut report = LintReport { files_scanned: files.len(), ..Default::default() };
+    for (label, text) in files {
+        let scanned = lexer::scan(label, text);
+        let mut findings = rules::run_rules(&scanned);
+        rules::apply_suppressions(&scanned, &mut findings);
+        report.findings.extend(findings);
+    }
+    report.sort();
+    report
+}
+
+/// Lint the source tree under `root` (the directory containing `src/`,
+/// i.e. `rust/`). Files under `root/src` get `src/...` labels; the
+/// sibling `examples/` directory (one level up, shared with the Python
+/// layer docs), when present, gets `examples/...` labels.
+pub fn lint_tree(root: &Path) -> anyhow::Result<LintReport> {
+    let src = root.join("src");
+    if !src.is_dir() {
+        anyhow::bail!("no src/ under '{}' (pass --root <dir-containing-src>)", root.display());
+    }
+    let mut files = Vec::new();
+    collect_rs_files(&src, "src", &mut files)?;
+    let examples = root.join("..").join("examples");
+    if examples.is_dir() {
+        collect_rs_files(&examples, "examples", &mut files)?;
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(lint_files(&files))
+}
+
+/// Locate the lint/check root from the current directory: `.` when it
+/// holds `src/`, else `rust/` (so the CLI works from either the crate
+/// directory or the repository root).
+pub fn default_root() -> anyhow::Result<PathBuf> {
+    for cand in [".", "rust"] {
+        let p = PathBuf::from(cand);
+        if p.join("src").is_dir() {
+            return Ok(p);
+        }
+    }
+    anyhow::bail!("cannot find src/ from the current directory; pass --root <dir-containing-src>")
+}
+
+/// The shipped input files `hesp check` validates by default: every TOML
+/// under `root/configs`, plus every TOML and JSONL under the sibling
+/// `examples/` directory. Sorted for deterministic output.
+pub fn default_check_files(root: &Path) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut push_dir = |dir: PathBuf, exts: &[&str]| {
+        let Ok(entries) = std::fs::read_dir(&dir) else { return };
+        for e in entries.flatten() {
+            let p = e.path();
+            let ext = p.extension().and_then(|x| x.to_str()).unwrap_or("");
+            if p.is_file() && exts.contains(&ext) {
+                out.push(p.to_string_lossy().replace('\\', "/"));
+            }
+        }
+    };
+    push_dir(root.join("configs"), &["toml"]);
+    push_dir(root.join("..").join("examples"), &["toml", "jsonl"]);
+    out.sort();
+    out
+}
+
+/// Recursively collect `.rs` files under `dir`, labeling them
+/// `label_prefix/<relative path>` with '/' separators. The walk is
+/// sorted, so labels (and therefore reports) are byte-stable across
+/// platforms and runs.
+fn collect_rs_files(
+    dir: &Path,
+    label_prefix: &str,
+    out: &mut Vec<(String, String)>,
+) -> anyhow::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+        if p.is_dir() {
+            collect_rs_files(&p, &format!("{label_prefix}/{name}"), out)?;
+        } else if name.ends_with(".rs") {
+            let text = std::fs::read_to_string(&p)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", p.display()))?;
+            out.push((format!("{label_prefix}/{name}"), text));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_files_aggregates_and_sorts() {
+        let files = vec![
+            ("src/b.rs".to_string(), "fn f() { let t = std::time::Instant::now(); let _ = t; }\n".to_string()),
+            ("src/a.rs".to_string(), "fn g() { let r = Rng::new(1); let _ = r; }\n".to_string()),
+        ];
+        let report = lint_files(&files);
+        assert_eq!(report.files_scanned, 2);
+        assert_eq!(report.findings.len(), 2);
+        assert_eq!(report.findings[0].file, "src/a.rs");
+        assert_eq!(report.findings[0].rule, "det/unseeded-rng");
+        assert_eq!(report.findings[1].rule, "det/wall-clock");
+    }
+}

@@ -1,0 +1,160 @@
+//! Deterministic rendering of lint findings.
+//!
+//! Both the human report and the `--json` report are byte-stable across
+//! runs: findings are sorted by (file, line, rule), paths are normalized
+//! to '/'-separated labels, JSON objects use the crate's BTreeMap-backed
+//! [`crate::util::json::Json`] (sorted keys), and no timestamps or
+//! absolute paths appear anywhere in the output.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Normalized '/'-separated path label, e.g. `src/coordinator/sweep.rs`.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule id, e.g. `det/hashmap-iter`.
+    pub rule: String,
+    pub message: String,
+    /// True when silenced by a well-formed `detlint: allow` pragma.
+    pub suppressed: bool,
+}
+
+impl Finding {
+    pub fn new(file: &str, line: usize, rule: &str, message: String) -> Self {
+        Finding { file: file.to_string(), line, rule: rule.to_string(), message, suppressed: false }
+    }
+}
+
+/// The outcome of a lint run over a set of files.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// All findings, suppressed ones included, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn sort(&mut self) {
+        self.findings
+            .sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    }
+
+    pub fn unsuppressed(&self) -> usize {
+        self.findings.iter().filter(|f| !f.suppressed).count()
+    }
+
+    pub fn suppressed(&self) -> usize {
+        self.findings.iter().filter(|f| f.suppressed).count()
+    }
+
+    /// Human-readable report: one `file:line: rule: message` line per
+    /// finding (suppressed ones annotated), then per-rule counts, then a
+    /// one-line summary. Byte-stable for a given tree.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            if f.suppressed {
+                out.push_str(&format!(
+                    "{}:{}: {}: suppressed: {}\n",
+                    f.file, f.line, f.rule, f.message
+                ));
+            } else {
+                out.push_str(&format!("{}:{}: {}: {}\n", f.file, f.line, f.rule, f.message));
+            }
+        }
+        let mut by_rule: BTreeMap<&str, (usize, usize)> = BTreeMap::new();
+        for f in &self.findings {
+            let e = by_rule.entry(f.rule.as_str()).or_insert((0, 0));
+            if f.suppressed {
+                e.1 += 1;
+            } else {
+                e.0 += 1;
+            }
+        }
+        if !by_rule.is_empty() {
+            out.push('\n');
+            for (rule, (open, supp)) in &by_rule {
+                out.push_str(&format!("  {rule}: {open} finding(s), {supp} suppressed\n"));
+            }
+        }
+        out.push_str(&format!(
+            "\ndetlint: {} file(s) scanned, {} finding(s), {} suppressed\n",
+            self.files_scanned,
+            self.unsuppressed(),
+            self.suppressed()
+        ));
+        out
+    }
+
+    /// Canonical JSON report (sorted keys, sorted findings, no
+    /// timestamps) — byte-identical across repeated runs on the same tree.
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = BTreeMap::new();
+                o.insert("file".to_string(), Json::Str(f.file.clone()));
+                o.insert("line".to_string(), Json::Num(f.line as f64));
+                o.insert("rule".to_string(), Json::Str(f.rule.clone()));
+                o.insert("message".to_string(), Json::Str(f.message.clone()));
+                o.insert("suppressed".to_string(), Json::Bool(f.suppressed));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("files_scanned".to_string(), Json::Num(self.files_scanned as f64));
+        root.insert("findings".to_string(), Json::Arr(findings));
+        root.insert("unsuppressed".to_string(), Json::Num(self.unsuppressed() as f64));
+        root.insert("suppressed".to_string(), Json::Num(self.suppressed() as f64));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LintReport {
+        let mut r = LintReport { files_scanned: 2, ..Default::default() };
+        r.findings.push(Finding::new("src/b.rs", 3, "det/wall-clock", "x".into()));
+        let mut s = Finding::new("src/a.rs", 9, "det/unseeded-rng", "y".into());
+        s.suppressed = true;
+        r.findings.push(s);
+        r.sort();
+        r
+    }
+
+    #[test]
+    fn findings_sort_by_file_line_rule() {
+        let r = sample();
+        assert_eq!(r.findings[0].file, "src/a.rs");
+        assert_eq!(r.unsuppressed(), 1);
+        assert_eq!(r.suppressed(), 1);
+    }
+
+    #[test]
+    fn render_is_stable_and_mentions_counts() {
+        let r = sample();
+        let a = r.render();
+        let b = r.render();
+        assert_eq!(a, b);
+        assert!(a.contains("src/b.rs:3: det/wall-clock: x"));
+        assert!(a.contains("suppressed: y"));
+        assert!(a.contains("2 file(s) scanned, 1 finding(s), 1 suppressed"));
+    }
+
+    #[test]
+    fn json_is_byte_identical_across_renders() {
+        let r = sample();
+        assert_eq!(r.to_json().to_string(), r.to_json().to_string());
+        let text = r.to_json().to_string();
+        assert!(text.contains("\"files_scanned\":2"));
+        assert!(text.contains("\"rule\":\"det/unseeded-rng\""));
+    }
+}

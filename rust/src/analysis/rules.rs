@@ -1,0 +1,489 @@
+//! The detlint rule registry.
+//!
+//! Each rule is a line-level check over the blanked code channel produced
+//! by [`super::lexer`]. Rules are deliberately conservative heuristics:
+//! they aim to catch the determinism hazards that matter for this repo's
+//! bit-reproducibility invariant (hash-map iteration order, wall-clock
+//! reads, unseeded RNG construction, float reductions over hash
+//! iterators, and panics in input-parsing paths) with token-boundary
+//! matching so e.g. `FxHashMap` never matches a bare `HashMap` token.
+//!
+//! Suppression: `// detlint: allow(<rule>) — <reason>` on the finding's
+//! line or the line directly above silences it. A pragma without a
+//! written reason is itself a finding (`lint/bare-allow`) and cannot be
+//! suppressed.
+
+use super::lexer::SourceFile;
+use super::report::Finding;
+use std::collections::BTreeSet;
+
+/// Hash-container type names whose iteration order is either randomized
+/// (std) or insertion-dependent (Fx) — both hazards for reproducibility.
+const HASH_TYPES: [&str; 4] = ["HashMap", "HashSet", "FxHashMap", "FxHashSet"];
+
+/// Method suffixes that iterate a hash container.
+const ITER_SUFFIXES: [&str; 9] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+];
+
+/// Float-reduction suffixes that, combined with hash iteration, yield
+/// order-dependent floating-point results.
+const REDUCE_TOKENS: [&str; 4] = [".sum()", ".sum::<", ".fold(", ".product("];
+
+/// Files allowed to read the wall clock (timing shims and the executor's
+/// real-time mode; simulated time lives elsewhere).
+const WALL_CLOCK_EXEMPT: [&str; 3] = ["src/bench.rs", "src/main.rs", "src/runtime/executor.rs"];
+
+/// Library input-parsing paths where a panic is a bug, not a contract:
+/// malformed user input must surface as `Result`, never abort the
+/// process (`hesp serve` keeps running across bad trace lines).
+const PANIC_SCOPE: [&str; 6] = [
+    "src/config.rs",
+    "src/util/toml.rs",
+    "src/util/json.rs",
+    "src/util/cli.rs",
+    "src/coordinator/sweep.rs",
+    "src/coordinator/service/arrivals.rs",
+];
+
+/// All rule ids, for documentation and pragma validation.
+pub const RULES: [&str; 6] = [
+    "det/hashmap-iter",
+    "det/wall-clock",
+    "det/unseeded-rng",
+    "det/float-reduce",
+    "safety/panic-in-lib",
+    "lint/bare-allow",
+];
+
+/// True if `c` can be part of an identifier.
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Find `token` in `code` at an identifier boundary: the characters
+/// adjacent to the token's identifier-shaped ends must not be identifier
+/// characters. Returns all match offsets.
+fn find_token(code: &str, token: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let bytes = code.as_bytes();
+    let first_is_ident = token.chars().next().is_some_and(is_ident);
+    let last_is_ident = token.chars().last().is_some_and(is_ident);
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(token) {
+        let at = from + rel;
+        let ok_before = !first_is_ident
+            || at == 0
+            || !is_ident(bytes[at - 1] as char);
+        let end = at + token.len();
+        let ok_after = !last_is_ident
+            || end >= bytes.len()
+            || !is_ident(bytes[end] as char);
+        if ok_before && ok_after {
+            out.push(at);
+        }
+        from = at + 1;
+    }
+    out
+}
+
+fn has_token(code: &str, token: &str) -> bool {
+    !find_token(code, token).is_empty()
+}
+
+/// Collect names bound to hash-container types in this file: type
+/// ascriptions (`name: FxHashMap<..>` / `name: Vec<FxHashMap<..>>`
+/// struct fields, lets, params) and constructor bindings
+/// (`name = FxHashMap::default()`).
+fn collect_hash_names(file: &SourceFile) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for line in &file.lines {
+        for ty in HASH_TYPES {
+            for at in find_token(&line.code, ty) {
+                if let Some(name) = binding_name_before(&line.code, at) {
+                    names.insert(name);
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Walk backwards from a hash-type token over its qualified-path prefix
+/// (`std::collections::`), then recognise either a type ascription
+/// (`name: <path>`) or an assignment (`name = <path>::new()`), returning
+/// the bound name. Returns `None` for `use` lines and bare mentions.
+fn binding_name_before(code: &str, tok_start: usize) -> Option<String> {
+    let chars: Vec<char> = code.chars().collect();
+    // find_token offsets are byte offsets; the blanked code is ASCII-safe
+    // for the regions we inspect, but convert defensively.
+    let mut i = code[..tok_start].chars().count();
+    // Skip the qualified-path prefix: `ident::ident::` sequences.
+    loop {
+        if i >= 2 && chars[i - 1] == ':' && chars[i - 2] == ':' {
+            i -= 2;
+            while i > 0 && is_ident(chars[i - 1]) {
+                i -= 1;
+            }
+        } else {
+            break;
+        }
+    }
+    // Skip reference sigils and `mut` so `m: &FxHashMap<..>` and
+    // `m: &mut FxHashMap<..>` both bind `m`.
+    loop {
+        while i > 0 && matches!(chars[i - 1], ' ' | '&') {
+            i -= 1;
+        }
+        if i >= 3
+            && chars[i - 3..i] == ['m', 'u', 't']
+            && (i == 3 || !is_ident(chars[i - 4]))
+        {
+            i -= 3;
+        } else {
+            break;
+        }
+    }
+    if i == 0 {
+        return None;
+    }
+    let sep = chars[i - 1];
+    if sep == ':' {
+        // Must be a single-colon ascription, not a path `::`.
+        if i >= 2 && chars[i - 2] == ':' {
+            return None;
+        }
+        i -= 1;
+    } else if sep == '=' {
+        // Assignment `name = FxHashMap::default()`; reject `==`, `=>`,
+        // `+=` and friends.
+        if i >= 2 && !matches!(chars[i - 2], ' ' | '\t') {
+            return None;
+        }
+        i -= 1;
+    } else {
+        return None;
+    }
+    while i > 0 && chars[i - 1] == ' ' {
+        i -= 1;
+    }
+    let end = i;
+    while i > 0 && is_ident(chars[i - 1]) {
+        i -= 1;
+    }
+    if i == end {
+        return None;
+    }
+    let name: String = chars[i..end].iter().collect();
+    if name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    // `mut` / `let` / keywords are not binding names.
+    if matches!(name.as_str(), "mut" | "let" | "pub" | "ref" | "in" | "if") {
+        return None;
+    }
+    Some(name)
+}
+
+/// True if `code` iterates `name` as a hash container: either
+/// `name<iter-suffix>` or `for .. in [&|mut |self.]name` followed by a
+/// non-identifier, non-`.` character (so `for x in name.lookup()` does
+/// not count the receiver).
+fn iterates(code: &str, name: &str) -> bool {
+    for at in find_token(code, name) {
+        let after = &code[at + name.len()..];
+        if ITER_SUFFIXES.iter().any(|s| after.starts_with(s)) {
+            return true;
+        }
+    }
+    if let Some(pos) = code.find(" in ") {
+        if has_token(&code[..pos + 3], "for") {
+            let mut rest = code[pos + 4..].trim_start();
+            loop {
+                if let Some(r) = rest.strip_prefix('&') {
+                    rest = r.trim_start();
+                } else if let Some(r) = rest.strip_prefix("mut ") {
+                    rest = r.trim_start();
+                } else if let Some(r) = rest.strip_prefix("self.") {
+                    rest = r;
+                } else {
+                    break;
+                }
+            }
+            if let Some(r) = rest.strip_prefix(name) {
+                let next = r.chars().next();
+                if next.is_none_or(|c| !is_ident(c) && c != '.') {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Run every rule over one scanned file, producing raw findings (before
+/// suppression) sorted by line.
+pub fn run_rules(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let in_coordinator = file.path.starts_with("src/coordinator/");
+    let wall_clock_exempt = WALL_CLOCK_EXEMPT.iter().any(|f| file.path == *f);
+    let panic_scope = PANIC_SCOPE.iter().any(|f| file.path == *f);
+    let hash_names = collect_hash_names(file);
+
+    for line in &file.lines {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.as_str();
+
+        // det/hashmap-iter: iteration over hash containers in coordinator/.
+        if in_coordinator {
+            for name in &hash_names {
+                if iterates(code, name) {
+                    out.push(Finding::new(
+                        &file.path,
+                        line.number,
+                        "det/hashmap-iter",
+                        format!(
+                            "iteration over hash container `{name}` — order is not deterministic; sort first or use BTreeMap/Vec"
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+
+        // det/float-reduce: float reduction chained onto hash iteration.
+        let hash_iterated = hash_names.iter().any(|n| {
+            find_token(code, n).iter().any(|&at| {
+                let after = &code[at + n.len()..];
+                ITER_SUFFIXES.iter().any(|s| after.starts_with(s))
+            })
+        });
+        if hash_iterated && REDUCE_TOKENS.iter().any(|t| code.contains(t)) {
+            out.push(Finding::new(
+                &file.path,
+                line.number,
+                "det/float-reduce",
+                "float reduction over a hash-container iterator — summation order varies; collect and sort first".to_string(),
+            ));
+        }
+
+        // det/wall-clock: real-time reads outside timing shims.
+        if !wall_clock_exempt {
+            if code.contains("Instant::now") && has_token(code, "Instant") {
+                out.push(Finding::new(
+                    &file.path,
+                    line.number,
+                    "det/wall-clock",
+                    "Instant::now() read — simulated components must use virtual time".to_string(),
+                ));
+            } else if has_token(code, "SystemTime") {
+                out.push(Finding::new(
+                    &file.path,
+                    line.number,
+                    "det/wall-clock",
+                    "SystemTime read — simulated components must use virtual time".to_string(),
+                ));
+            }
+        }
+
+        // det/unseeded-rng: RNG construction not derived from a content
+        // seed. Heuristic: the constructing line must mention a seed.
+        let lower = code.to_ascii_lowercase();
+        if (code.contains("Rng::new(") && has_token(code, "Rng") && !lower.contains("seed"))
+            || has_token(code, "thread_rng")
+            || has_token(code, "from_entropy")
+        {
+            out.push(Finding::new(
+                &file.path,
+                line.number,
+                "det/unseeded-rng",
+                "RNG constructed without a content-derived seed (content_seed/cell_seed/lane_seed)".to_string(),
+            ));
+        }
+
+        // safety/panic-in-lib: panics in input-parsing library paths.
+        if panic_scope {
+            for (tok, what) in [
+                (".unwrap()", "unwrap()"),
+                (".expect(\"", "expect()"),
+                ("panic!(", "panic!"),
+            ] {
+                if has_token(code, tok) {
+                    out.push(Finding::new(
+                        &file.path,
+                        line.number,
+                        "safety/panic-in-lib",
+                        format!("{what} in an input-parsing path — return an error with context instead"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // lint/bare-allow: malformed pragmas or pragmas without a reason.
+    for p in &file.pragmas {
+        if p.rule.is_empty() {
+            out.push(Finding::new(
+                &file.path,
+                p.line,
+                "lint/bare-allow",
+                "malformed detlint pragma — expected `detlint: allow(<rule>) — <reason>`".to_string(),
+            ));
+        } else if !RULES.contains(&p.rule.as_str()) {
+            out.push(Finding::new(
+                &file.path,
+                p.line,
+                "lint/bare-allow",
+                format!("detlint pragma names unknown rule `{}`", p.rule),
+            ));
+        } else if p.reason.is_empty() {
+            out.push(Finding::new(
+                &file.path,
+                p.line,
+                "lint/bare-allow",
+                format!("detlint allow({}) without a written reason", p.rule),
+            ));
+        }
+    }
+
+    out.sort_by(|a, b| (a.line, a.rule.as_str()).cmp(&(b.line, b.rule.as_str())));
+    out
+}
+
+/// Apply suppression pragmas: a finding is suppressed when a well-formed
+/// pragma for its rule sits on the same line or the line directly above.
+/// `lint/bare-allow` findings are never suppressible.
+pub fn apply_suppressions(file: &SourceFile, findings: &mut [Finding]) {
+    for f in findings.iter_mut() {
+        if f.rule == "lint/bare-allow" {
+            continue;
+        }
+        let hit = file.pragmas.iter().any(|p| {
+            p.rule == f.rule
+                && !p.reason.is_empty()
+                && (p.line == f.line || p.line + 1 == f.line)
+        });
+        if hit {
+            f.suppressed = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::scan;
+    use super::*;
+
+    fn lint(path: &str, src: &str) -> Vec<Finding> {
+        let file = scan(path, src);
+        let mut fs = run_rules(&file);
+        apply_suppressions(&file, &mut fs);
+        fs
+    }
+
+    #[test]
+    fn fx_prefix_does_not_match_hashmap_token() {
+        assert!(find_token("let m: FxHashMap<u32, u32> = x;", "HashMap").is_empty());
+        assert_eq!(find_token("use std::collections::HashMap;", "HashMap").len(), 1);
+    }
+
+    #[test]
+    fn binding_names_are_collected_through_qualified_paths() {
+        let f = scan(
+            "src/coordinator/x.rs",
+            "let pos: std::collections::HashMap<u32, u32> = HashMap::new();\n",
+        );
+        let names = collect_hash_names(&f);
+        assert!(names.contains("pos"), "{names:?}");
+        assert!(!names.contains("collections"));
+    }
+
+    #[test]
+    fn use_lines_collect_nothing() {
+        let f = scan("src/coordinator/x.rs", "use std::collections::HashMap;\n");
+        assert!(collect_hash_names(&f).is_empty());
+    }
+
+    #[test]
+    fn iteration_is_flagged_lookup_is_not() {
+        let src = "struct S { m: FxHashMap<u32, u32> }\nfn f(s: &S) { for v in s.m.values() { let _ = v; } }\nfn g(s: &S) -> Option<&u32> { s.m.get(&1) }\n";
+        let fs = lint("src/coordinator/x.rs", src);
+        assert_eq!(fs.iter().filter(|f| f.rule == "det/hashmap-iter").count(), 1);
+    }
+
+    #[test]
+    fn for_in_over_field_is_flagged_but_method_receiver_is_not() {
+        let src = "struct S { m: FxHashMap<u32, u32> }\nimpl S { fn f(&self) { for x in self.m.get(&1) { let _ = x; } } }\n";
+        let fs = lint("src/coordinator/x.rs", src);
+        assert!(fs.iter().all(|f| f.rule != "det/hashmap-iter"), "{fs:?}");
+        let src2 = "fn f(m: &FxHashMap<u32, u32>) { for x in m { let _ = x; } }\n";
+        let fs2 = lint("src/coordinator/x.rs", src2);
+        assert_eq!(fs2.iter().filter(|f| f.rule == "det/hashmap-iter").count(), 1);
+    }
+
+    #[test]
+    fn suppression_applies_to_own_and_next_line() {
+        let src = "fn f(m: &FxHashMap<u32, u32>) {\n    // detlint: allow(det/hashmap-iter) — keys are sorted below\n    let mut ks: Vec<_> = m.keys().collect();\n    ks.sort();\n}\n";
+        let fs = lint("src/coordinator/x.rs", src);
+        let f = fs.iter().find(|f| f.rule == "det/hashmap-iter").unwrap();
+        assert!(f.suppressed);
+    }
+
+    #[test]
+    fn bare_allow_is_a_finding_and_does_not_suppress() {
+        let src = "fn f(m: &FxHashMap<u32, u32>) {\n    // detlint: allow(det/hashmap-iter)\n    for k in m.keys() { let _ = k; }\n}\n";
+        let fs = lint("src/coordinator/x.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "lint/bare-allow"));
+        let f = fs.iter().find(|f| f.rule == "det/hashmap-iter").unwrap();
+        assert!(!f.suppressed);
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(m: &FxHashMap<u32, u32>) { for k in m.keys() { let _ = k; } }\n}\n";
+        assert!(lint("src/coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_scope_rules() {
+        let src = "fn parse(s: &str) -> u32 { s.parse().unwrap() }\n";
+        assert_eq!(lint("src/util/cli.rs", src).len(), 1);
+        assert!(lint("src/coordinator/solver.rs", src).is_empty());
+        // json.rs's own byte-level expect() helper must not match.
+        let src2 = "fn f(p: &mut P) { p.expect(b'\"'); }\n";
+        assert!(lint("src/util/json.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_exemptions() {
+        let src = "let t = std::time::Instant::now();\n";
+        assert_eq!(lint("src/coordinator/solver.rs", src).len(), 1);
+        assert!(lint("src/bench.rs", src).is_empty());
+        assert!(lint("src/main.rs", src).is_empty());
+        assert!(lint("src/runtime/executor.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unseeded_rng_heuristic() {
+        assert_eq!(lint("src/x.rs", "let r = Rng::new(12345);\n").len(), 1);
+        assert!(lint("src/x.rs", "let r = Rng::new(cell_seed(&cell));\n").is_empty());
+        assert!(lint("src/x.rs", "let r = Rng::new(self.seed);\n").is_empty());
+    }
+
+    #[test]
+    fn float_reduce_over_hash_iter() {
+        let src = "struct S { m: FxHashMap<u32, f64> }\nimpl S { fn f(&self) -> f64 { self.m.values().sum() } }\n";
+        let fs = lint("src/util/x.rs", src);
+        assert_eq!(fs.iter().filter(|f| f.rule == "det/float-reduce").count(), 1);
+    }
+}

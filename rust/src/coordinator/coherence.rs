@@ -18,7 +18,7 @@
 //! lands. Finite space capacities are modeled with LRU eviction
 //! (write-back of dirty victims).
 
-use std::collections::HashMap;
+use crate::util::fxhash::FxHashMap;
 
 use super::datadag::{BlockId, DataDag};
 use super::region::Region;
@@ -75,7 +75,7 @@ pub struct Coherence {
     dirty: Vec<u64>,
     /// LRU clock per (space) and last-touch per (block, space).
     clock: u64,
-    last_touch: Vec<HashMap<SpaceId, u64>>,
+    last_touch: Vec<FxHashMap<SpaceId, u64>>,
     /// Bytes currently accounted against each space.
     used: Vec<u64>,
     capacity: Vec<u64>,
@@ -130,7 +130,7 @@ impl Coherence {
             }
             self.valid.push(mask);
             self.dirty.push(0);
-            self.last_touch.push(HashMap::new());
+            self.last_touch.push(FxHashMap::default());
         }
         id
     }

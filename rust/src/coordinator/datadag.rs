@@ -58,8 +58,8 @@ impl GrainIndex {
 
     /// Visit the payloads of all indexed regions intersecting `region`.
     pub fn visit_intersecting<F: FnMut(usize)>(&self, region: &Region, mut f: F) {
-        if let Some(grains) = self.grains.get(&region.matrix) {
-            for &(h, w) in grains {
+        if let Some(grain_sizes) = self.grains.get(&region.matrix) {
+            for &(h, w) in grain_sizes {
                 let grid = &self.grids[&(region.matrix, h, w)];
                 // cheap path: if the query covers more cells than the grid
                 // holds, iterate the grid instead of the cell range

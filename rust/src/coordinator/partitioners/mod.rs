@@ -27,7 +27,7 @@ pub mod qr;
 pub mod syrk;
 pub mod trsm;
 
-use std::collections::HashMap;
+use crate::util::fxhash::FxHashMap;
 
 use super::task::{Task, TaskKind, TaskSpec};
 use super::taskdag::TaskDag;
@@ -45,12 +45,12 @@ pub trait Partitioner: Send + Sync {
 
 /// Registry mapping task kinds to partitioners.
 pub struct PartitionerSet {
-    map: HashMap<TaskKind, std::sync::Arc<dyn Partitioner>>,
+    map: FxHashMap<TaskKind, std::sync::Arc<dyn Partitioner>>,
 }
 
 impl PartitionerSet {
     pub fn empty() -> PartitionerSet {
-        PartitionerSet { map: HashMap::new() }
+        PartitionerSet { map: FxHashMap::default() }
     }
 
     /// The dense-linear-algebra set: Cholesky (POTRF/TRSM/SYRK/GEMM),

@@ -14,10 +14,9 @@
 //!   `(edge, gflops)` samples; the *measured* models the real-execution
 //!   validation platform uses (runtime::executor extracts them).
 
-use std::collections::HashMap;
-
-use super::platform::ProcTypeId;
+use super::platform::{Machine, ProcTypeId};
 use super::task::TaskKind;
+use crate::util::fxhash::FxHashMap;
 
 /// GFLOPS as a function of tile edge.
 #[derive(Debug, Clone, PartialEq)]
@@ -71,10 +70,10 @@ impl PerfCurve {
 /// per-type fallback and fixed per-task launch overhead.
 #[derive(Debug, Clone, Default)]
 pub struct PerfDb {
-    curves: HashMap<(ProcTypeId, TaskKind), PerfCurve>,
-    fallback: HashMap<ProcTypeId, PerfCurve>,
+    curves: FxHashMap<(ProcTypeId, TaskKind), PerfCurve>,
+    fallback: FxHashMap<ProcTypeId, PerfCurve>,
     /// Fixed per-task overhead in seconds (kernel launch, runtime cost).
-    overhead: HashMap<ProcTypeId, f64>,
+    overhead: FxHashMap<ProcTypeId, f64>,
 }
 
 impl PerfDb {
@@ -99,10 +98,67 @@ impl PerfDb {
     }
 
     pub fn curve(&self, ptype: ProcTypeId, kind: TaskKind) -> &PerfCurve {
-        self.curves
-            .get(&(ptype, kind))
-            .or_else(|| self.fallback.get(&ptype))
+        self.try_curve(ptype, kind)
             .unwrap_or_else(|| panic!("no perf model for proc type {ptype} task {}", kind.name()))
+    }
+
+    /// Non-panicking curve lookup: specific entry, then per-type fallback.
+    pub fn try_curve(&self, ptype: ProcTypeId, kind: TaskKind) -> Option<&PerfCurve> {
+        self.curves.get(&(ptype, kind)).or_else(|| self.fallback.get(&ptype))
+    }
+
+    /// Static sanity diagnostics for this database against a machine, as
+    /// `(key, message)` pairs keyed by config entity (`perf.<type>.<kind>`
+    /// / `perf.<type>.default`). Probes each curve over a spread of tile
+    /// edges and rejects zero/negative/non-finite rates — the class of
+    /// silent poison that skews any policy comparison downstream. Never
+    /// panics; `hesp check` calls this before any simulation.
+    pub fn diagnostics(&self, machine: &Machine) -> Vec<(String, String)> {
+        const PROBE_EDGES: [f64; 5] = [32.0, 64.0, 256.0, 1024.0, 4096.0];
+        let mut out = Vec::new();
+        for pt in &machine.proc_types {
+            // detlint: allow(det/hashmap-iter) — kinds are collected and sorted by name before use
+            let of_type = self.curves.keys().filter(|(t, _)| *t == pt.id);
+            let mut kinds: Vec<TaskKind> = of_type.map(|&(_, k)| k).collect();
+            kinds.sort_by_key(|k| k.name());
+            if kinds.is_empty() && !self.fallback.contains_key(&pt.id) {
+                out.push((
+                    format!("perf.{}", pt.name),
+                    "no perf model and no default curve for this processor type".to_string(),
+                ));
+                continue;
+            }
+            let mut probe = |key: String, curve: &PerfCurve| {
+                if matches!(curve, PerfCurve::Table { points } if points.is_empty()) {
+                    out.push((key, "perf table has no sample points".to_string()));
+                    return;
+                }
+                for e in PROBE_EDGES {
+                    let g = curve.gflops(e);
+                    if !g.is_finite() || g <= 0.0 {
+                        out.push((key, format!("curve yields non-positive rate {g} at tile edge {e}")));
+                        return;
+                    }
+                }
+            };
+            for k in kinds {
+                if let Some(c) = self.curves.get(&(pt.id, k)) {
+                    probe(format!("perf.{}.{}", pt.name, k.name()), c);
+                }
+            }
+            if let Some(c) = self.fallback.get(&pt.id) {
+                probe(format!("perf.{}.default", pt.name), c);
+            }
+            if let Some(&ov) = self.overhead.get(&pt.id) {
+                if !ov.is_finite() || ov < 0.0 {
+                    out.push((
+                        format!("perf.{}.overhead", pt.name),
+                        format!("per-task overhead {ov} must be finite and non-negative"),
+                    ));
+                }
+            }
+        }
+        out
     }
 
     /// Predicted delay of a task (kind, tile edge, flops) on `ptype`.

@@ -156,55 +156,77 @@ pub struct Machine {
 }
 
 impl Machine {
-    /// Validate internal consistency; returns a human-readable error.
-    pub fn validate(&self) -> Result<(), String> {
+    /// Collect *all* internal-consistency problems as `(key, message)`
+    /// pairs, where `key` points at the offending config entity
+    /// (`memory.<name>`, `link.<id>`, `processor.<name>`, `main_space`).
+    /// This is the static-analysis hook behind `hesp check`; it never
+    /// runs a simulation and never panics.
+    pub fn diagnostics(&self) -> Vec<(String, String)> {
+        let mut out = Vec::new();
         if self.spaces.is_empty() {
-            return Err("machine has no memory spaces".into());
+            out.push(("machine".to_string(), "machine has no memory spaces".to_string()));
         }
         if self.procs.is_empty() {
-            return Err("machine has no processors".into());
+            out.push(("machine".to_string(), "machine has no processors".to_string()));
         }
-        if self.main_space >= self.spaces.len() {
-            return Err(format!("main_space {} out of range", self.main_space));
+        if !self.spaces.is_empty() && self.main_space >= self.spaces.len() {
+            out.push(("main_space".to_string(), format!("main_space {} out of range", self.main_space)));
         }
         for (i, s) in self.spaces.iter().enumerate() {
             if s.id != i {
-                return Err(format!("space {i} has id {}", s.id));
+                out.push((format!("memory.{}", s.name), format!("space {i} has id {}", s.id)));
             }
         }
         for (i, p) in self.procs.iter().enumerate() {
             if p.id != i {
-                return Err(format!("proc {i} has id {}", p.id));
+                out.push((format!("processor.{}", p.name), format!("proc {i} has id {}", p.id)));
             }
             if p.space >= self.spaces.len() {
-                return Err(format!("proc {} in unknown space {}", p.name, p.space));
+                out.push((format!("processor.{}", p.name), format!("proc {} in unknown space {}", p.name, p.space)));
             }
             if p.ptype >= self.proc_types.len() {
-                return Err(format!("proc {} of unknown type {}", p.name, p.ptype));
+                out.push((format!("processor.{}", p.name), format!("proc {} of unknown type {}", p.name, p.ptype)));
             }
         }
         for l in &self.links {
             if l.from >= self.spaces.len() || l.to >= self.spaces.len() {
-                return Err(format!("link {} connects unknown spaces", l.id));
+                out.push((format!("link.{}", l.id), format!("link {} connects unknown spaces", l.id)));
+                continue;
             }
             if l.from == l.to {
-                return Err(format!("link {} is a self-loop on space {}", l.id, l.from));
+                out.push((format!("link.{}", l.id), format!("link {} is a self-loop on space {}", l.id, l.from)));
             }
             if l.bandwidth <= 0.0 {
-                return Err(format!("link {} has non-positive bandwidth", l.id));
+                out.push((format!("link.{}", l.id), format!("link {} has non-positive bandwidth", l.id)));
             }
         }
         // every non-main space must reach main (directly) for staging
-        for s in &self.spaces {
-            if s.id != self.main_space {
-                let up = self.links.iter().any(|l| l.from == s.id && l.to == self.main_space);
-                let down = self.links.iter().any(|l| l.from == self.main_space && l.to == s.id);
-                if !up || !down {
-                    return Err(format!("space {} lacks links to/from main", s.name));
+        if self.main_space < self.spaces.len() {
+            for s in &self.spaces {
+                if s.id != self.main_space {
+                    let up = self.links.iter().any(|l| l.from == s.id && l.to == self.main_space);
+                    let down = self.links.iter().any(|l| l.from == self.main_space && l.to == s.id);
+                    if !up || !down {
+                        out.push((
+                            format!("memory.{}", s.name),
+                            format!("space {} lacks links to/from main: machine is disconnected", s.name),
+                        ));
+                    }
                 }
             }
         }
-        Ok(())
+        out
+    }
+
+    /// Validate internal consistency; returns a human-readable error with
+    /// one line per problem found by [`Machine::diagnostics`].
+    pub fn validate(&self) -> Result<(), String> {
+        let diags = self.diagnostics();
+        if diags.is_empty() {
+            Ok(())
+        } else {
+            Err(diags.iter().map(|(k, m)| format!("{k}: {m}")).collect::<Vec<_>>().join("\n"))
+        }
     }
 
     /// Direct link between two spaces, if any.

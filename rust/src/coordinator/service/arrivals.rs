@@ -125,66 +125,63 @@ impl ArrivalSpec {
     /// ([`stream_seed`]); trace replay reads the file, validates every
     /// job, and ignores `duration`/`seed` (a trace IS the stream).
     pub fn generate(&self, duration: f64, seed: u64) -> anyhow::Result<Vec<JobSpec>> {
-        match self {
-            ArrivalSpec::Trace { path } => {
-                let text = std::fs::read_to_string(path)
-                    .map_err(|e| anyhow::anyhow!("reading trace '{path}': {e}"))?;
-                parse_trace(&text)
-            }
-            _ => {
-                let mut rng = Rng::new(stream_seed(&self.label(), seed));
-                let mut out = Vec::new();
-                let mut push = |t: f64, rng: &mut Rng, out: &mut Vec<JobSpec>| {
-                    let (workload, tile, _) = JOB_MIX[rng.weighted(&mix_weights())];
-                    let class = rng.weighted(&class_weights());
-                    out.push(JobSpec {
-                        id: out.len(),
-                        t_arrival: t,
-                        workload,
-                        tile,
-                        deadline: Deadline::Slack(CLASSES[class].1),
-                        priority: class as u8,
-                    });
-                };
-                match *self {
-                    ArrivalSpec::Poisson { rate } => {
-                        let mut t = exp_draw(&mut rng, rate);
-                        while t < duration {
-                            push(t, &mut rng, &mut out);
-                            t += exp_draw(&mut rng, rate);
-                        }
-                    }
-                    ArrivalSpec::Bursty { lo, hi, dwell } => {
-                        let mut t = 0.0;
-                        let mut burst = false;
-                        let mut switch = exp_draw(&mut rng, 1.0 / dwell);
-                        loop {
-                            let rate = if burst { hi } else { lo };
-                            let next = t + exp_draw(&mut rng, rate);
-                            if next < switch {
-                                t = next;
-                                if t >= duration {
-                                    break;
-                                }
-                                push(t, &mut rng, &mut out);
-                            } else {
-                                // no arrival before the state flips: jump to
-                                // the boundary and redraw at the new rate
-                                // (valid by exponential memorylessness)
-                                t = switch;
-                                burst = !burst;
-                                switch = t + exp_draw(&mut rng, 1.0 / dwell);
-                                if t >= duration {
-                                    break;
-                                }
-                            }
-                        }
-                    }
-                    ArrivalSpec::Trace { .. } => unreachable!("handled above"),
-                }
-                Ok(out)
-            }
+        if let ArrivalSpec::Trace { path } = self {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading trace '{path}': {e}"))?;
+            return parse_trace(&text);
         }
+        let mut rng = Rng::new(stream_seed(&self.label(), seed));
+        let mut out = Vec::new();
+        let mut push = |t: f64, rng: &mut Rng, out: &mut Vec<JobSpec>| {
+            let (workload, tile, _) = JOB_MIX[rng.weighted(&mix_weights())];
+            let class = rng.weighted(&class_weights());
+            out.push(JobSpec {
+                id: out.len(),
+                t_arrival: t,
+                workload,
+                tile,
+                deadline: Deadline::Slack(CLASSES[class].1),
+                priority: class as u8,
+            });
+        };
+        match *self {
+            ArrivalSpec::Poisson { rate } => {
+                let mut t = exp_draw(&mut rng, rate);
+                while t < duration {
+                    push(t, &mut rng, &mut out);
+                    t += exp_draw(&mut rng, rate);
+                }
+            }
+            ArrivalSpec::Bursty { lo, hi, dwell } => {
+                let mut t = 0.0;
+                let mut burst = false;
+                let mut switch = exp_draw(&mut rng, 1.0 / dwell);
+                loop {
+                    let rate = if burst { hi } else { lo };
+                    let next = t + exp_draw(&mut rng, rate);
+                    if next < switch {
+                        t = next;
+                        if t >= duration {
+                            break;
+                        }
+                        push(t, &mut rng, &mut out);
+                    } else {
+                        // no arrival before the state flips: jump to
+                        // the boundary and redraw at the new rate
+                        // (valid by exponential memorylessness)
+                        t = switch;
+                        burst = !burst;
+                        switch = t + exp_draw(&mut rng, 1.0 / dwell);
+                        if t >= duration {
+                            break;
+                        }
+                    }
+                }
+            }
+            // handled by the early return above; no arrivals to draw
+            ArrivalSpec::Trace { .. } => {}
+        }
+        Ok(out)
     }
 }
 
@@ -217,56 +214,94 @@ pub fn stream_seed(arrivals_label: &str, seed: u64) -> u64 {
 /// {"t_arrival": 0.05, "workload": "cholesky:1024", "tile": 256, "deadline": 0.8, "priority": 1}
 /// ```
 ///
-/// `deadline` is an absolute instant; absent or `null` means none.
+/// `deadline` is an absolute instant; absent or `null` means none, and a
+/// deadline before the job's own arrival is rejected. An optional `id`
+/// field is validated for uniqueness across the trace but *not*
+/// preserved: stream ids are arrival positions (declared ids exist so a
+/// concatenated or hand-merged trace surfaces its duplicates loudly).
 /// `priority` defaults to 0. Blank lines are skipped. Jobs are stably
 /// sorted by arrival time and re-numbered in that order, so a hand-edited
 /// out-of-order trace still replays as a valid stream.
 pub fn parse_trace(text: &str) -> anyhow::Result<Vec<JobSpec>> {
     use anyhow::anyhow;
     let mut out = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
+    let mut declared_ids: Vec<(usize, usize)> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let Some((job, declared)) = parse_trace_line(lineno, line)? else {
             continue;
-        }
-        let v = json::parse(line).map_err(|e| anyhow!("trace line {}: {e}", lineno + 1))?;
-        let t_arrival = v
-            .get("t_arrival")
-            .and_then(|x| x.as_f64())
-            .ok_or_else(|| anyhow!("trace line {}: missing t_arrival", lineno + 1))?;
-        if !t_arrival.is_finite() || t_arrival < 0.0 {
-            return Err(anyhow!("trace line {}: bad t_arrival {t_arrival}", lineno + 1));
-        }
-        let wl = v
-            .get("workload")
-            .and_then(|x| x.as_str())
-            .ok_or_else(|| anyhow!("trace line {}: missing workload", lineno + 1))?;
-        let workload = Workload::parse(wl)
-            .ok_or_else(|| anyhow!("trace line {}: bad workload spec '{wl}'", lineno + 1))?;
-        let tile = v
-            .get("tile")
-            .and_then(|x| x.as_f64())
-            .ok_or_else(|| anyhow!("trace line {}: missing tile", lineno + 1))? as u32;
-        if !workload.feasible(tile) {
-            return Err(anyhow!("trace line {}: tile {tile} infeasible for '{wl}'", lineno + 1));
-        }
-        let deadline = match v.get("deadline") {
-            None | Some(json::Json::Null) => Deadline::None,
-            Some(d) => {
-                let t = d
-                    .as_f64()
-                    .ok_or_else(|| anyhow!("trace line {}: deadline must be a number or null", lineno + 1))?;
-                Deadline::At(t)
-            }
         };
-        let priority = v.get("priority").and_then(|x| x.as_f64()).unwrap_or(0.0) as u8;
-        out.push(JobSpec { id: 0, t_arrival, workload, tile, deadline, priority });
+        if let Some(id) = declared {
+            if let Some(&(_, first)) = declared_ids.iter().find(|&&(d, _)| d == id) {
+                return Err(anyhow!(
+                    "trace line {lineno}: duplicate job id {id} (first declared on line {first})"
+                ));
+            }
+            declared_ids.push((id, lineno));
+        }
+        out.push(job);
     }
     out.sort_by(|a, b| a.t_arrival.total_cmp(&b.t_arrival));
     for (i, j) in out.iter_mut().enumerate() {
         j.id = i;
     }
     Ok(out)
+}
+
+/// Parse and validate one trace line (`lineno` is 1-based, for
+/// diagnostics). Returns `Ok(None)` for blank lines; otherwise the job
+/// (with `id` still unassigned — [`parse_trace`] numbers the sorted
+/// stream) plus any declared `id` for the caller's uniqueness check.
+pub fn parse_trace_line(lineno: usize, line: &str) -> anyhow::Result<Option<(JobSpec, Option<usize>)>> {
+    use anyhow::anyhow;
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let v = json::parse(line).map_err(|e| anyhow!("trace line {lineno}: {e}"))?;
+    let t_arrival = v
+        .get("t_arrival")
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| anyhow!("trace line {lineno}: missing t_arrival"))?;
+    if !t_arrival.is_finite() || t_arrival < 0.0 {
+        return Err(anyhow!("trace line {lineno}: bad t_arrival {t_arrival}"));
+    }
+    let wl = v
+        .get("workload")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow!("trace line {lineno}: missing workload"))?;
+    let workload = Workload::parse(wl)
+        .ok_or_else(|| anyhow!("trace line {lineno}: bad workload spec '{wl}'"))?;
+    let tile = v
+        .get("tile")
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| anyhow!("trace line {lineno}: missing tile"))? as u32;
+    if !workload.feasible(tile) {
+        return Err(anyhow!("trace line {lineno}: tile {tile} infeasible for '{wl}'"));
+    }
+    let deadline = match v.get("deadline") {
+        None | Some(json::Json::Null) => Deadline::None,
+        Some(d) => {
+            let t = d
+                .as_f64()
+                .ok_or_else(|| anyhow!("trace line {lineno}: deadline must be a number or null"))?;
+            if t < t_arrival {
+                return Err(anyhow!(
+                    "trace line {lineno}: deadline {t} precedes arrival {t_arrival}"
+                ));
+            }
+            Deadline::At(t)
+        }
+    };
+    let declared = match v.get("id") {
+        None | Some(json::Json::Null) => None,
+        Some(d) => Some(
+            d.as_usize()
+                .ok_or_else(|| anyhow!("trace line {lineno}: id must be a non-negative integer"))?,
+        ),
+    };
+    let priority = v.get("priority").and_then(|x| x.as_f64()).unwrap_or(0.0) as u8;
+    Ok(Some((JobSpec { id: 0, t_arrival, workload, tile, deadline, priority }, declared)))
 }
 
 #[cfg(test)]
@@ -371,6 +406,18 @@ mod tests {
             "infeasible tile rejected"
         );
         assert!(parse_trace("not json").is_err());
+    }
+
+    #[test]
+    fn trace_rejects_duplicate_ids_and_early_deadlines() {
+        let dup = "{\"t_arrival\": 0, \"workload\": \"cholesky:1024\", \"tile\": 256, \"id\": 3}\n{\"t_arrival\": 1, \"workload\": \"cholesky:1024\", \"tile\": 256, \"id\": 3}\n";
+        let err = parse_trace(dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate job id 3"), "{err}");
+        let early = "{\"t_arrival\": 2.0, \"workload\": \"cholesky:1024\", \"tile\": 256, \"deadline\": 1.0}\n";
+        let err = parse_trace(early).unwrap_err().to_string();
+        assert!(err.contains("precedes arrival"), "{err}");
+        let ok = "{\"t_arrival\": 0, \"workload\": \"cholesky:1024\", \"tile\": 256, \"id\": 7}\n";
+        assert_eq!(parse_trace(ok).unwrap()[0].id, 0, "stream ids are positions, not declared ids");
     }
 
     #[test]

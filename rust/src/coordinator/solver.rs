@@ -750,7 +750,7 @@ pub fn collect_candidates(
     // ---- cluster candidates: merge back or re-partition ----
     if cfg.allow_merge {
         // leaf spans per cluster: walk frontier, attribute to ancestors
-        let pos_of: std::collections::HashMap<TaskId, usize> =
+        let pos_of: crate::util::fxhash::FxHashMap<TaskId, usize> =
             flat.tasks.iter().enumerate().map(|(i, &t)| (t, i)).collect();
         for cluster in dag.clusters() {
             let c = dag.task(cluster);

@@ -390,10 +390,12 @@ fn run_cell(
         .with_seed(cseed);
     let mut pol = reg
         .get(&cell.policy)
+        // detlint: allow(safety/panic-in-lib) — policy names are registry-validated by grid_from_toml before any cell runs
         .unwrap_or_else(|| panic!("unknown policy '{}' in sweep grid", cell.policy));
     let dag = cell
         .workload
         .build(cell.tile, workload_seed(&wl, cell.tile, cell.seed))
+        // detlint: allow(safety/panic-in-lib) — expand() filters by Workload::feasible, so build cannot fail here
         .expect("expand() emits only feasible cells");
 
     let base = simulate_policy(&dag, &p.machine, &p.db, sim, pol.as_mut());

@@ -12,7 +12,6 @@
 //! cluster depends on a sub-task of another through regions of different
 //! granularity (paper §2.1).
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::util::fxhash::FxHashMap;
@@ -60,15 +59,17 @@ impl FlatDag {
     /// DAG width: maximum number of tasks in one longest-path level — the
     /// paper's "maximum number of tasks that can be run in parallel".
     pub fn width(&self) -> usize {
+        // levels are dense in 0..len, so a Vec indexed by level replaces
+        // the old hash map (and its iteration-order hazard) outright
         let mut level = vec![0usize; self.len()];
-        let mut widths: HashMap<usize, usize> = HashMap::new();
+        let mut widths = vec![0usize; self.len()];
         for i in 0..self.len() {
             // program order is a topological order
             let l = self.preds[i].iter().map(|&p| level[p] + 1).max().unwrap_or(0);
             level[i] = l;
-            *widths.entry(l).or_insert(0) += 1;
+            widths[l] += 1;
         }
-        widths.values().copied().max().unwrap_or(0)
+        widths.into_iter().max().unwrap_or(0)
     }
 
     /// Length (in tasks) of the longest dependence chain.

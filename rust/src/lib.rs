@@ -15,6 +15,9 @@
 //! * [`coordinator`] — the simulation framework itself (task DAG, data DAG
 //!   + coherence, the pluggable scheduling-policy layer, iterative
 //!   scheduler-partitioner, metrics, traces, energy).
+//! * [`analysis`] — the detlint static-analysis pass (`hesp lint`) and the
+//!   input sanitizer (`hesp check`) guarding the bit-reproducibility
+//!   invariant at CI time.
 //! * [`runtime`] — the XLA/PJRT runtime that loads AOT-compiled JAX/Pallas
 //!   tile kernels (`artifacts/*.hlo.txt`) and executes scheduled DAGs for
 //!   real, providing the validation substrate of §3.1.
@@ -34,6 +37,9 @@
 //! `"pl/affinity"` and `"pl/lookahead"` extend them with data-placement
 //! awareness and one-step successor lookahead.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -13,6 +13,8 @@
 //! * `trace`     — write Paraver/CSV trace bundles (Figs. 2b & 6)
 //! * `dag`       — export the task DAG as Graphviz DOT (Fig. 2a)
 //! * `policies`  — list the scheduling-policy registry
+//! * `lint`      — detlint determinism/safety static analysis over the tree
+//! * `check`     — statically validate platform/grid/trace input files
 //!
 //! Examples:
 //!
@@ -59,13 +61,15 @@ fn main() {
         "trace" => cmd_trace(&args),
         "dag" => cmd_dag(&args),
         "policies" => cmd_policies(),
+        "lint" => cmd_lint(&args),
+        "check" => cmd_check(&args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
         }
         other => Err(anyhow!(
             "unknown subcommand '{other}' — expected one of: simulate, sweep, serve, solve, \
-             online, table1, validate, calibrate, trace, dag, policies, help"
+             online, table1, validate, calibrate, trace, dag, policies, lint, check, help"
         )),
     };
     if let Err(e) = r {
@@ -117,6 +121,17 @@ USAGE: hesp <subcommand> [--flags]
   trace     --platform F --n N --tile B [--out DIR] [--solve-iters K]  (Figs. 2b & 6)
   dag       --n N --tile B [--out FILE.dot]               (Fig. 2a)
   policies                                                (list the policy registry)
+  lint      [--root DIR] [--json FILE]
+            (detlint static analysis: determinism & schedule-safety rules
+            over src/ and examples/. Byte-stable report; nonzero exit on
+            any unsuppressed finding. Suppress a line with a reasoned
+            pragma: `// detlint: allow(<rule>) — <reason>`)
+  check     [FILES...] [--root DIR]
+            (static input sanitizer: validates platform TOMLs, sweep-grid
+            TOMLs and JSONL traces before any simulation — disconnected
+            spaces, zero-rate curves, infeasible workload/tile combos,
+            non-monotonic traces, duplicate job ids. With no FILES,
+            checks every shipped configs/*.toml and examples/ input)
 
 Scheduling policies are named registry entries (`hesp policies`):
 fcfs/r-p ... pl/eft-p (Table 1), pl/affinity, pl/lookahead, and the
@@ -783,6 +798,61 @@ fn cmd_dag(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         std::fs::write(out, dag.to_dot())?;
         println!("DOT written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => hesp::analysis::default_root()?,
+    };
+    let report = hesp::analysis::lint_tree(&root)?;
+    match args.get("json") {
+        // bare `--json` prints the machine-readable report instead of the
+        // human one; `--json FILE` writes it alongside the human report.
+        Some("true") => println!("{}", report.to_json()),
+        Some(path) => {
+            std::fs::write(path, format!("{}\n", report.to_json()))?;
+            print!("{}", report.render());
+            println!("JSON written to {path}");
+        }
+        None => print!("{}", report.render()),
+    }
+    if report.unsuppressed() > 0 {
+        bail!("{} unsuppressed finding(s)", report.unsuppressed());
+    }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    let files: Vec<String> = if args.positional.len() > 1 {
+        args.positional[1..].to_vec()
+    } else {
+        let root = match args.get("root") {
+            Some(r) => std::path::PathBuf::from(r),
+            None => hesp::analysis::default_root()?,
+        };
+        let files = hesp::analysis::default_check_files(&root);
+        if files.is_empty() {
+            bail!("no input files found under {} (pass FILES explicitly)", root.display());
+        }
+        files
+    };
+    let (mut errors, mut warnings) = (0usize, 0usize);
+    for file in &files {
+        for d in hesp::analysis::check::check_file(file) {
+            println!("{}", d.render());
+            if d.error {
+                errors += 1;
+            } else {
+                warnings += 1;
+            }
+        }
+    }
+    println!("hesp check: {} file(s), {errors} error(s), {warnings} warning(s)", files.len());
+    if errors > 0 {
+        bail!("{errors} input error(s)");
     }
     Ok(())
 }

@@ -26,7 +26,7 @@ impl Args {
                     out.flags.insert(k.to_string(), v.to_string());
                     out.seen.push(k.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
+                    let v = it.next().unwrap_or_default();
                     out.flags.insert(name.to_string(), v);
                     out.seen.push(name.to_string());
                 } else {

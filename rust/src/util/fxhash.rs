@@ -80,6 +80,7 @@ pub fn content_seed(labels: &[&str], nums: &[u64]) -> u64 {
     for &n in nums {
         h.write_u64(n);
     }
+    // detlint: allow(det/unseeded-rng) — this IS the seed recipe: the content hash is the seed, finalized by one SplitMix64 step
     crate::util::rng::Rng::new(h.finish()).next_u64()
 }
 

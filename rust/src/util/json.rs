@@ -213,7 +213,7 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // Copy a UTF-8 scalar as-is.
                     let s = std::str::from_utf8(&self.b[self.i..]).map_err(|_| "bad utf8")?;
-                    let c = s.chars().next().unwrap();
+                    let c = s.chars().next().ok_or("unterminated string")?;
                     out.push(c);
                     self.i += c.len_utf8();
                 }

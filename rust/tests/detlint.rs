@@ -1,0 +1,212 @@
+//! Integration tests for the detlint static-analysis pass (`hesp lint`)
+//! and the static input sanitizer (`hesp check`).
+//!
+//! The two load-bearing assertions live here: the shipped tree is
+//! lint-clean (every suppression carries a written reason), and every
+//! shipped input file passes `hesp check` — the same invariants the
+//! blocking CI `lint` job enforces by running the binary.
+
+use std::path::Path;
+
+use hesp::analysis::check::{check_file, check_text};
+use hesp::analysis::{default_check_files, lint_files, lint_tree};
+
+fn lint_one(path: &str, src: &str) -> hesp::analysis::LintReport {
+    lint_files(&[(path.to_string(), src.to_string())])
+}
+
+#[test]
+fn fixture_triggers_hashmap_iter_exactly_once() {
+    let r = lint_one(
+        "src/coordinator/fixture.rs",
+        "fn f(m: &FxHashMap<u32, u32>) {\n    for k in m {\n        let _ = k;\n    }\n}\n",
+    );
+    assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+    assert_eq!(r.findings[0].rule, "det/hashmap-iter");
+    assert_eq!(r.findings[0].line, 2);
+    assert_eq!(r.unsuppressed(), 1);
+}
+
+#[test]
+fn fixture_triggers_wall_clock_exactly_once() {
+    let r = lint_one(
+        "src/coordinator/fixture.rs",
+        "fn f() -> std::time::Instant {\n    std::time::Instant::now()\n}\n",
+    );
+    assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+    assert_eq!(r.findings[0].rule, "det/wall-clock");
+}
+
+#[test]
+fn fixture_triggers_unseeded_rng_exactly_once() {
+    let r = lint_one("src/util/fixture.rs", "fn f() -> Rng {\n    Rng::new(42)\n}\n");
+    assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+    assert_eq!(r.findings[0].rule, "det/unseeded-rng");
+    // ...and a content-derived seed passes.
+    let clean = lint_one(
+        "src/util/fixture.rs",
+        "fn f(s: &str) -> Rng {\n    Rng::new(content_seed(&[s], &[]))\n}\n",
+    );
+    assert_eq!(clean.findings.len(), 0, "{:?}", clean.findings);
+}
+
+#[test]
+fn fixture_triggers_float_reduce_exactly_once() {
+    // Outside coordinator/ so det/hashmap-iter stays quiet and the
+    // float-reduce finding is the only one.
+    let r = lint_one(
+        "src/util/fixture.rs",
+        "struct S { m: FxHashMap<u32, f64> }\nimpl S {\n    fn total(&self) -> f64 { self.m.values().sum() }\n}\n",
+    );
+    assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+    assert_eq!(r.findings[0].rule, "det/float-reduce");
+}
+
+#[test]
+fn fixture_triggers_panic_in_lib_exactly_once() {
+    let r = lint_one(
+        "src/util/cli.rs",
+        "fn parse(s: &str) -> u32 {\n    s.parse().unwrap()\n}\n",
+    );
+    assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+    assert_eq!(r.findings[0].rule, "safety/panic-in-lib");
+    // The same code outside the input-parsing scope is fine.
+    let out_of_scope = lint_one(
+        "src/coordinator/solver.rs",
+        "fn parse(s: &str) -> u32 {\n    s.parse().unwrap()\n}\n",
+    );
+    assert_eq!(out_of_scope.findings.len(), 0, "{:?}", out_of_scope.findings);
+}
+
+#[test]
+fn suppression_round_trip() {
+    let src = "fn f(m: &FxHashMap<u32, u32>) {\n    // detlint: allow(det/hashmap-iter) — keys are sorted before use\n    let mut ks: Vec<&u32> = m.keys().collect();\n    ks.sort();\n}\n";
+    let r = lint_one("src/coordinator/fixture.rs", src);
+    assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+    assert!(r.findings[0].suppressed);
+    assert_eq!(r.unsuppressed(), 0);
+    assert_eq!(r.suppressed(), 1);
+
+    // A pragma without a reason does NOT suppress — and is itself flagged.
+    let bare = src.replace(" — keys are sorted before use", "");
+    let r2 = lint_one("src/coordinator/fixture.rs", &bare);
+    assert!(r2.findings.iter().any(|f| f.rule == "lint/bare-allow"));
+    assert!(r2.findings.iter().any(|f| f.rule == "det/hashmap-iter" && !f.suppressed));
+
+    // A pragma naming an unknown rule is flagged too.
+    let r3 = lint_one(
+        "src/fixture.rs",
+        "// detlint: allow(det/no-such-rule) — reason\nfn f() {}\n",
+    );
+    assert_eq!(r3.findings.len(), 1);
+    assert_eq!(r3.findings[0].rule, "lint/bare-allow");
+    assert!(r3.findings[0].message.contains("unknown rule"));
+}
+
+/// The crate root (`rust/`), valid both under `cargo test` and in CI.
+fn crate_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let report = lint_tree(crate_root()).expect("lint_tree over the shipped tree");
+    assert!(report.files_scanned > 40, "suspiciously few files: {}", report.files_scanned);
+    let open: Vec<_> = report.findings.iter().filter(|f| !f.suppressed).collect();
+    assert!(
+        open.is_empty(),
+        "shipped tree must be lint-clean; unsuppressed findings:\n{}",
+        open.iter()
+            .map(|f| format!("  {}:{}: {}: {}", f.file, f.line, f.rule, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // Every suppression in the tree carries a written reason — a bare
+    // pragma would surface as an unsuppressible lint/bare-allow above.
+    assert!(report.suppressed() > 0, "the tree documents its known-safe suppressions");
+}
+
+#[test]
+fn lint_json_is_byte_identical_across_runs() {
+    let a = lint_tree(crate_root()).unwrap().to_json().to_string();
+    let b = lint_tree(crate_root()).unwrap().to_json().to_string();
+    assert_eq!(a, b);
+    assert!(a.contains("\"unsuppressed\":0"), "clean-tree JSON: {a}");
+    // The human report is byte-stable too.
+    let ra = lint_tree(crate_root()).unwrap().render();
+    let rb = lint_tree(crate_root()).unwrap().render();
+    assert_eq!(ra, rb);
+}
+
+#[test]
+fn every_shipped_input_passes_check() {
+    let files = default_check_files(crate_root());
+    assert!(
+        files.iter().any(|f| f.ends_with("bujaruelo.toml")),
+        "shipped configs discovered: {files:?}"
+    );
+    assert!(files.iter().any(|f| f.ends_with("serve_trace.jsonl")), "{files:?}");
+    assert!(files.iter().any(|f| f.ends_with("sweep_grid.toml")), "{files:?}");
+    for f in &files {
+        let errors: Vec<_> = check_file(f).into_iter().filter(|d| d.error).collect();
+        assert!(
+            errors.is_empty(),
+            "{f} must pass hesp check: {:?}",
+            errors.iter().map(|d| d.render()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn corrupt_platform_is_rejected_with_file_key_diagnostics() {
+    let text = std::fs::read_to_string(crate_root().join("configs/bujaruelo.toml")).unwrap();
+    // Cut every link out of the platform: the device spaces disconnect.
+    let cut: String = {
+        let mut out = String::new();
+        let mut skip = false;
+        for line in text.lines() {
+            if line.trim() == "[[link]]" {
+                skip = true;
+            } else if line.starts_with('[') && line.trim() != "[[link]]" {
+                skip = false;
+            }
+            if !skip {
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        out
+    };
+    let diags = check_text("bujaruelo.toml", &cut);
+    assert!(
+        diags.iter().any(|d| d.error && d.key.starts_with("memory.") && d.msg.contains("disconnected")),
+        "{:?}",
+        diags.iter().map(|d| d.render()).collect::<Vec<_>>()
+    );
+    // Diagnostics render as file:key: severity: message.
+    let line = diags[0].render();
+    assert!(line.starts_with("bujaruelo.toml:"), "{line}");
+}
+
+#[test]
+fn corrupt_trace_is_rejected_with_line_diagnostics() {
+    let text = concat!(
+        "{\"t_arrival\": 0.0, \"workload\": \"cholesky:1024\", \"tile\": 256, \"id\": 9}\n",
+        "{\"t_arrival\": 1.0, \"workload\": \"cholesky:1024\", \"tile\": 256, \"id\": 9}\n",
+        "{\"t_arrival\": 2.0, \"workload\": \"cholesky:1024\", \"tile\": 256, \"deadline\": 1.0}\n",
+        "{\"t_arrival\": -1.0, \"workload\": \"cholesky:1024\", \"tile\": 256}\n",
+    );
+    let diags = check_text("t.jsonl", text);
+    assert!(diags.iter().any(|d| d.error && d.key == "line 2" && d.msg.contains("duplicate job id 9")));
+    assert!(diags.iter().any(|d| d.error && d.key == "line 3" && d.msg.contains("precedes arrival")));
+    assert!(diags.iter().any(|d| d.error && d.key == "line 4"), "{diags:?}");
+}
+
+#[test]
+fn corrupt_grid_is_rejected() {
+    // cholesky:1000 can never tile at 256 (n % b != 0), so the grid is empty.
+    let grid = "platforms = [\"configs/bujaruelo.toml\"]\nworkloads = [\"cholesky:1000\"]\npolicies = [\"pl/eft-p\"]\ntiles = [256]\n";
+    let diags = check_text("g.toml", grid);
+    assert!(diags.iter().any(|d| d.error && d.key == "workloads.cholesky:1000"), "{diags:?}");
+    assert!(diags.iter().any(|d| d.error && d.key == "grid"), "{diags:?}");
+}
