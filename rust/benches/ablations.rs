@@ -17,6 +17,7 @@ use hesp::coordinator::engine::{simulate, SimConfig};
 use hesp::coordinator::metrics::report;
 use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
 use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::delta::DeltaMode;
 use hesp::coordinator::policy::PolicyRegistry;
 use hesp::coordinator::solver::{
     best_homogeneous, solve, solve_portfolio, CandidateSelect, PortfolioConfig, Sampling, SolverConfig,
@@ -133,7 +134,14 @@ fn main() {
     for lanes in [1usize, 2, 4] {
         for batch in [1usize, 4] {
             let cfg = SolverConfig::all_soft(sim, iters, 128);
-            let pcfg = PortfolioConfig { base: cfg, batch, lanes, threads, lane_specs: Vec::new() };
+            let pcfg = PortfolioConfig {
+                base: cfg,
+                batch,
+                lanes,
+                threads,
+                lane_specs: Vec::new(),
+                delta: DeltaMode::Auto,
+            };
             let t0 = std::time::Instant::now();
             let res = solve_portfolio(&hdag, &p.machine, &p.db, &parts, &reg, "pl/eft-p", &pcfg);
             let dt = t0.elapsed().as_secs_f64();

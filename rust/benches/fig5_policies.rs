@@ -10,6 +10,7 @@
 
 use hesp::bench::Table;
 use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::delta::DeltaMode;
 use hesp::coordinator::policy::PolicyRegistry;
 use hesp::coordinator::sweep::{self, CellMode, SweepGrid, SweepPlatform, Workload};
 use hesp::util::cli::Args;
@@ -35,6 +36,7 @@ fn main() {
         cache: CachePolicy::WriteBack,
         solve_lanes: 1,
         solve_batch: 1,
+        delta: DeltaMode::Off,
     };
     let results = sweep::run_sweep(&grid, threads);
 

@@ -1,0 +1,106 @@
+//! Solve-throughput bench: candidate-evaluation rate of the portfolio
+//! solver with incremental re-simulation (`--delta on`) vs full
+//! re-simulation, on a 1000+-task Cholesky frontier. The two runs must
+//! produce byte-identical canonical solver JSON — the bench doubles as an
+//! equivalence gate — and the wall-clock ratio plus the replay counters
+//! land in `bench_out/BENCH_solve.json` for the perf trajectory.
+//!
+//! Flags: --n N --tile B --iters K --batch K --threads T
+//!        --quick (CI-sized problem) --out FILE.json
+
+use hesp::config::Platform;
+use hesp::coordinator::delta::DeltaMode;
+use hesp::coordinator::engine::SimConfig;
+use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::policy::PolicyRegistry;
+use hesp::coordinator::solver::{result_json, solve_portfolio, PortfolioConfig, SolveResult, SolverConfig};
+use hesp::util::cli::Args;
+use hesp::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    // n/b = 18 tiles -> 1140 frontier tasks, the issue's 1000+-task scale;
+    // --quick shrinks to 8 tiles (120 tasks) for CI wall-clock
+    let n = args.usize_or("n", if quick { 4096 } else { 18_432 }) as u32;
+    let b = args.usize_or("tile", if quick { 512 } else { 1024 }) as u32;
+    let iters = args.usize_or("iters", if quick { 10 } else { 40 });
+    let batch = args.usize_or("batch", 8);
+    let threads = args.usize_or("threads", 1);
+    let p = Platform::from_file("configs/bujaruelo.toml").expect("config");
+    let mut dag = cholesky::root(n);
+    cholesky::partition_uniform(&mut dag, b);
+    let n_tasks = dag.frontier().len();
+    println!(
+        "solve-throughput: cholesky n={n} b={b} ({n_tasks} frontier tasks), \
+         {iters} iters x {batch}-candidate batches, {threads} threads"
+    );
+
+    let parts = PartitionerSet::standard();
+    let reg = PolicyRegistry::standard();
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(p.elem_bytes);
+    let base = SolverConfig::all_soft(sim, iters, b / 4);
+
+    let run = |delta: DeltaMode| -> (SolveResult, f64) {
+        let mut pcfg = PortfolioConfig::new(base);
+        pcfg.batch = batch;
+        pcfg.threads = threads;
+        pcfg.delta = delta;
+        let t0 = std::time::Instant::now();
+        let res = solve_portfolio(&dag, &p.machine, &p.db, &parts, &reg, "pl/eft-p", &pcfg);
+        (res, t0.elapsed().as_secs_f64())
+    };
+
+    let (r_off, t_off) = run(DeltaMode::Off);
+    let (r_on, t_on) = run(DeltaMode::On);
+    // the gate half of the bench: both modes walked the same trajectory
+    assert_eq!(
+        result_json(&r_off),
+        result_json(&r_on),
+        "delta changed the canonical solve bytes"
+    );
+
+    let evals: usize = r_off.history.iter().map(|h| h.evaluated).sum();
+    let rate_off = evals as f64 / t_off.max(1e-9);
+    let rate_on = evals as f64 / t_on.max(1e-9);
+    let speedup = t_off / t_on.max(1e-9);
+    let st = r_on.replay_stats();
+    println!(
+        "full:  {evals} candidate evals in {t_off:.3}s  ({rate_off:.1} evals/s)\n\
+         delta: {evals} candidate evals in {t_on:.3}s  ({rate_on:.1} evals/s)\n\
+         speedup {speedup:.2}x  replay_frac {:.3}  ({}/{} events, {} cache hits, {} full fallbacks)",
+        st.replay_fraction(),
+        st.events_replayed,
+        st.events_total,
+        st.cache_hits,
+        st.full_fallbacks
+    );
+
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("name".to_string(), Json::Str("solve_throughput".into()));
+    o.insert("n".to_string(), Json::Num(n as f64));
+    o.insert("tile".to_string(), Json::Num(b as f64));
+    o.insert("n_tasks".to_string(), Json::Num(n_tasks as f64));
+    o.insert("iters".to_string(), Json::Num(iters as f64));
+    o.insert("batch".to_string(), Json::Num(batch as f64));
+    o.insert("threads".to_string(), Json::Num(threads as f64));
+    o.insert("candidate_evals".to_string(), Json::Num(evals as f64));
+    o.insert("wall_full_s".to_string(), Json::Num(t_off));
+    o.insert("wall_delta_s".to_string(), Json::Num(t_on));
+    o.insert("evals_per_s_full".to_string(), Json::Num(rate_off));
+    o.insert("evals_per_s_delta".to_string(), Json::Num(rate_on));
+    o.insert("speedup".to_string(), Json::Num(speedup));
+    o.insert("replay_frac".to_string(), Json::Num(st.replay_fraction()));
+    o.insert("events_replayed".to_string(), Json::Num(st.events_replayed as f64));
+    o.insert("events_total".to_string(), Json::Num(st.events_total as f64));
+    o.insert("cache_hits".to_string(), Json::Num(st.cache_hits as f64));
+    o.insert("full_fallbacks".to_string(), Json::Num(st.full_fallbacks as f64));
+    let out = std::path::PathBuf::from(args.str_or("out", "bench_out/BENCH_solve.json"));
+    if let Some(dir) = out.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir).expect("create bench_out");
+    }
+    std::fs::write(&out, Json::Obj(o).to_string()).expect("write bench json");
+    println!("bench record -> {}", out.display());
+}

@@ -20,6 +20,7 @@
 
 use hesp::bench::Table;
 use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::delta::DeltaMode;
 use hesp::coordinator::policy::PolicyRegistry;
 use hesp::coordinator::sweep::{self, CellMode, SweepCell, SweepGrid, SweepPlatform, Workload};
 use hesp::util::cli::Args;
@@ -51,6 +52,7 @@ fn run_platform(
         cache: CachePolicy::WriteBack,
         solve_lanes: portfolio.0,
         solve_batch: portfolio.1,
+        delta: DeltaMode::Auto,
     };
     let hom = sweep::run_sweep(&grid, threads);
 

@@ -3,9 +3,10 @@
 //! Each rule is a line-level check over the blanked code channel produced
 //! by [`super::lexer`]. Rules are deliberately conservative heuristics:
 //! they aim to catch the determinism hazards that matter for this repo's
-//! bit-reproducibility invariant (hash-map iteration order, wall-clock
-//! reads, unseeded RNG construction, float reductions over hash
-//! iterators, and panics in input-parsing paths) with token-boundary
+//! bit-reproducibility invariant (hash-map iteration order, process-keyed
+//! std hashers near checkpoint/signature code, wall-clock reads, unseeded
+//! RNG construction, float reductions over hash iterators, and panics in
+//! input-parsing paths) with token-boundary
 //! matching so e.g. `FxHashMap` never matches a bare `HashMap` token.
 //!
 //! Suppression: `// detlint: allow(<rule>) — <reason>` on the finding's
@@ -54,9 +55,18 @@ const PANIC_SCOPE: [&str; 6] = [
     "src/coordinator/service/arrivals.rs",
 ];
 
+/// Randomized-hasher type names. Checkpoint and frontier-signature
+/// hashing in coordinator/ must go through the repo's FxHash shim:
+/// std's SipHash is keyed per-process, so a `DefaultHasher` signature
+/// would differ between the run that wrote a checkpoint and the run
+/// that probes for it — a silent cache-miss storm at best, a
+/// cross-process golden-trace mismatch at worst.
+const RANDOM_HASHERS: [&str; 3] = ["DefaultHasher", "RandomState", "SipHasher13"];
+
 /// All rule ids, for documentation and pragma validation.
-pub const RULES: [&str; 6] = [
+pub const RULES: [&str; 7] = [
     "det/hashmap-iter",
+    "det/checkpoint-hash",
     "det/wall-clock",
     "det/unseeded-rng",
     "det/float-reduce",
@@ -254,6 +264,23 @@ pub fn run_rules(file: &SourceFile) -> Vec<Finding> {
                         "det/hashmap-iter",
                         format!(
                             "iteration over hash container `{name}` — order is not deterministic; sort first or use BTreeMap/Vec"
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+
+        // det/checkpoint-hash: process-keyed std hashers in coordinator/.
+        if in_coordinator {
+            for ty in RANDOM_HASHERS {
+                if has_token(code, ty) {
+                    out.push(Finding::new(
+                        &file.path,
+                        line.number,
+                        "det/checkpoint-hash",
+                        format!(
+                            "`{ty}` is keyed per-process — checkpoint/signature hashes must use util::fxhash so identical states hash identically across runs"
                         ),
                     ));
                     break;
@@ -478,6 +505,20 @@ mod tests {
         assert_eq!(lint("src/x.rs", "let r = Rng::new(12345);\n").len(), 1);
         assert!(lint("src/x.rs", "let r = Rng::new(cell_seed(&cell));\n").is_empty());
         assert!(lint("src/x.rs", "let r = Rng::new(self.seed);\n").is_empty());
+    }
+
+    #[test]
+    fn checkpoint_hash_flags_std_hashers_in_coordinator_only() {
+        let src = "use std::collections::hash_map::DefaultHasher;\nfn sig() -> u64 { let h = DefaultHasher::new(); h.finish() }\n";
+        let fs = lint("src/coordinator/delta.rs", src);
+        assert_eq!(fs.iter().filter(|f| f.rule == "det/checkpoint-hash").count(), 2, "{fs:?}");
+        assert!(lint("src/util/x.rs", src).iter().all(|f| f.rule != "det/checkpoint-hash"));
+        // the Fx shim itself never matches
+        let clean = "use crate::util::fxhash::FxHasher;\nfn sig() -> u64 { let h = FxHasher::default(); h.finish() }\n";
+        assert!(lint("src/coordinator/delta.rs", clean).is_empty());
+        // RandomState (the HashMap default build-hasher) matches too
+        let fs2 = lint("src/coordinator/x.rs", "fn f(s: RandomState) { let _ = s; }\n");
+        assert_eq!(fs2.iter().filter(|f| f.rule == "det/checkpoint-hash").count(), 1);
     }
 
     #[test]

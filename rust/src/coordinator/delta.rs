@@ -1,0 +1,812 @@
+//! Incremental re-simulation for the portfolio solver.
+//!
+//! The solver evaluates thousands of candidate frontiers per run, and
+//! neighbouring candidates share almost their entire dispatch history
+//! with the schedule they were derived from. This module proves how much
+//! of a base run a candidate shares — decision by decision, bitwise —
+//! and packages the proven prefix into a [`ReplayPlan`] the event core
+//! can restore-and-replay instead of simulating from scratch.
+//!
+//! The pipeline per candidate:
+//!
+//! 1. [`changed_span`] diffs the base and candidate frontier id
+//!    sequences; [`affected_cone`] closes the changed span over the
+//!    candidate's successor edges. The cone is a *conservative extra*
+//!    stop — the scan below re-derives every fact it needs and is
+//!    correct without it — but it cuts scans short near the mutation
+//!    and feeds the solver's replay statistics.
+//! 2. [`plan_candidate`] runs an abstract scan of the candidate frontier
+//!    against the base run's decision log: it maintains the candidate's
+//!    own indegree/release/ready bookkeeping, drives it with the base
+//!    run's task-end stream, and checks at every base decision that the
+//!    candidate would have made the *same* choice — same argmax over the
+//!    ready set (candidate keys, candidate tie-break positions), same
+//!    bitwise release time, and (for lookahead-style policies) the same
+//!    successor set. The first failed check fixes the divergence time
+//!    `stop` and the verified prefix length `d_star`. The scan also
+//!    proves the candidate's ready set drains exactly as the base's
+//!    rounds do: work still ready at a round where the base dispatched
+//!    nothing — including work released by a batch cut at a checkpoint
+//!    boundary, which skips the ordinary drain check — ends the prefix
+//!    with `stop` at that work's *release* round, so no checkpoint
+//!    snapshotted after the candidate truly diverged is ever eligible.
+//! 3. The latest base [`Checkpoint`] with `n_decisions <= d_star &&
+//!    now <= stop` is provably a pure function of the shared prefix, so
+//!    the plan restores it, force-replays decisions `[n_decisions,
+//!    d_star)` without invoking selection, and hands control back to the
+//!    live engine exactly at the divergence point.
+//!
+//! Only policies whose ordering key is a pure function of
+//! `(release, critical_time)` and whose selection is stateless are
+//! eligible ([`policy_eligible`]); everything else — and every scan that
+//! cannot prove a non-empty prefix — falls back to a full simulation.
+//! Replayed results are bitwise identical to full re-simulation by
+//! construction; `tests/delta_eval.rs` pins this property across the
+//! whole policy registry.
+//!
+//! [`CostCache`] is the third layer: candidates whose *entire* frontier
+//! signature was already evaluated under this lane's fixed
+//! (machine, policy, seed) skip simulation altogether.
+
+use std::sync::Arc;
+
+use super::engine::{pick_best, ReplayPlan, Schedule, SimTrace};
+use super::policy::SchedPolicy;
+use super::task::{TaskId, TaskKind};
+use super::taskdag::{FlatDag, TaskDag};
+use crate::util::fxhash::FxHashMap;
+
+/// Delta-evaluation switch, threaded from the CLI through
+/// [`super::solver::PortfolioConfig`]. `On` and `Auto` behave
+/// identically today (the scan falls back per candidate on its own);
+/// the distinction is reserved for future cost models that may disable
+/// delta evaluation wholesale on small frontiers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeltaMode {
+    /// Delta evaluation wherever the policy is eligible.
+    On,
+    /// Always full re-simulation (the pre-delta behaviour).
+    #[default]
+    Off,
+    /// Like `On`; the engine decides per candidate (default).
+    Auto,
+}
+
+impl DeltaMode {
+    pub fn from_name(s: &str) -> Option<DeltaMode> {
+        match s {
+            "on" => Some(DeltaMode::On),
+            "off" => Some(DeltaMode::Off),
+            "auto" => Some(DeltaMode::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeltaMode::On => "on",
+            DeltaMode::Off => "off",
+            DeltaMode::Auto => "auto",
+        }
+    }
+
+    /// Whether the solver should attempt delta evaluation at all.
+    pub fn enabled(self) -> bool {
+        !matches!(self, DeltaMode::Off)
+    }
+}
+
+/// A policy qualifies for delta evaluation when its ordering key is the
+/// declared pure function of `(release, critical_time)` and its
+/// selection touches no mutable policy state. The scan recomputes keys
+/// via [`SchedPolicy::static_key`], so a policy whose `order` disagrees
+/// with its `static_key` must simply not declare one.
+pub(crate) fn policy_eligible(policy: &dyn SchedPolicy) -> bool {
+    policy.static_key(0.0, 0.0).is_some() && !policy.dynamic_order() && policy.select_stateless()
+}
+
+/// The base run a lane verifies candidates against: its trace (decision
+/// log + checkpoints), its frontier id sequence, its task-end stream in
+/// event order, and — for successor-aware policies — each task's
+/// successor id sequence at dispatch time.
+pub(crate) struct DeltaBase {
+    pub trace: SimTrace,
+    /// Base frontier task ids, in frontier (program) order.
+    ids: Vec<TaskId>,
+    /// `(end_time, decision_index)` per dispatched task, sorted by
+    /// `(end, index)` — exactly the order the event core pops `TaskEnd`s
+    /// (seq order within a batch is dispatch order).
+    ends: Vec<(f64, usize)>,
+    /// Successor id sequences keyed by task id; empty unless the policy
+    /// reads [`super::policy::SchedContext::successors`] in `select`.
+    succ_ids: FxHashMap<TaskId, Vec<TaskId>>,
+}
+
+impl DeltaBase {
+    pub(crate) fn new(trace: SimTrace, sched: &Schedule, flat: &FlatDag, want_succs: bool) -> DeltaBase {
+        let end_of: FxHashMap<TaskId, f64> =
+            sched.assignments.iter().map(|a| (a.task, a.end)).collect();
+        let mut ends: Vec<(f64, usize)> =
+            trace.decisions.iter().enumerate().map(|(i, d)| (end_of[&d.task], i)).collect();
+        ends.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let succ_ids = if want_succs {
+            (0..flat.len())
+                .map(|p| (flat.tasks[p], flat.succs[p].iter().map(|&s| flat.tasks[s]).collect()))
+                .collect()
+        } else {
+            FxHashMap::default()
+        };
+        DeltaBase { trace, ids: flat.tasks.clone(), ends, succ_ids }
+    }
+}
+
+/// Diff two frontier id sequences: `None` when identical, otherwise the
+/// candidate-side span `lo..hi` covering every inserted/replaced
+/// position (common prefix + common suffix stripped). A pure deletion
+/// yields an empty span — harmless, since the scan itself catches every
+/// behavioural consequence; the span only scopes the conservative cone.
+pub(crate) fn changed_span(a: &[TaskId], b: &[TaskId]) -> Option<(usize, usize)> {
+    let mut lo = 0;
+    while lo < a.len() && lo < b.len() && a[lo] == b[lo] {
+        lo += 1;
+    }
+    if lo == a.len() && lo == b.len() {
+        return None;
+    }
+    let (mut ha, mut hb) = (a.len(), b.len());
+    while ha > lo && hb > lo && a[ha - 1] == b[hb - 1] {
+        ha -= 1;
+        hb -= 1;
+    }
+    Some((lo, hb))
+}
+
+/// Close `span` over the candidate's successor edges: every position
+/// whose schedule can transitively depend on a changed task.
+pub(crate) fn affected_cone(flat: &FlatDag, lo: usize, hi: usize) -> Vec<bool> {
+    let mut affected = vec![false; flat.len()];
+    let mut stack: Vec<usize> = (lo..hi).collect();
+    for &p in &stack {
+        affected[p] = true;
+    }
+    while let Some(p) = stack.pop() {
+        for &s in &flat.succs[p] {
+            if !affected[s] {
+                affected[s] = true;
+                stack.push(s);
+            }
+        }
+    }
+    affected
+}
+
+fn static_key_of(policy: &dyn SchedPolicy, release: f64, prio: f64) -> f64 {
+    policy.static_key(release, prio).expect("delta scan requires a static-key policy")
+}
+
+/// The abstract dispatch state of the candidate frontier during a scan:
+/// the same indegree/release/key/ready bookkeeping `run_core` keeps,
+/// minus timelines and coherence (those are base-determined for the
+/// verified prefix and come back via checkpoint restore).
+struct ScanState<'a> {
+    flat: &'a FlatDag,
+    indeg: Vec<usize>,
+    release: Vec<f64>,
+    keys: Vec<f64>,
+    ready: Vec<usize>,
+}
+
+impl<'a> ScanState<'a> {
+    fn new(flat: &'a FlatDag, policy: &dyn SchedPolicy, prio: &[f64]) -> ScanState<'a> {
+        let n = flat.len();
+        let indeg: Vec<usize> = flat.preds.iter().map(|p| p.len()).collect();
+        let mut st =
+            ScanState { flat, indeg, release: vec![0.0; n], keys: vec![0.0; n], ready: Vec::new() };
+        for i in 0..n {
+            if st.indeg[i] == 0 {
+                st.keys[i] = static_key_of(policy, 0.0, prio[i]);
+                st.ready.push(i);
+            }
+        }
+        st
+    }
+
+    /// Mirror of the engine's end-batch bookkeeping: decrement successor
+    /// indegrees, fold the release time, key-and-ready on zero.
+    fn release_succs(&mut self, policy: &dyn SchedPolicy, prio: &[f64], pos: usize, at: f64) {
+        let flat = self.flat;
+        for &s in &flat.succs[pos] {
+            self.indeg[s] -= 1;
+            self.release[s] = self.release[s].max(at);
+            if self.indeg[s] == 0 {
+                self.keys[s] = static_key_of(policy, self.release[s], prio[s]);
+                self.ready.push(s);
+            }
+        }
+    }
+}
+
+/// Replay the base end-event stream into the candidate's abstract state
+/// up to (but not past) `(limit_t, limit_j)`: an end at time `e` from
+/// base decision `j` applies iff `e < limit_t || (e == limit_t && j <
+/// limit_j)`. Returns `Err(t)` at the first provable divergence: a
+/// fully-processed batch strictly before the limit that leaves the
+/// candidate with ready work (the candidate would dispatch at `t`; the
+/// base round there dispatched nothing more), or an ended task missing
+/// from the candidate frontier (unreachable for verified decisions, kept
+/// as a conservative guard). The divergence time is the *earliest
+/// undispatched release* among the ready set, not this batch's time:
+/// ready work can leak past an earlier checkpoint-boundary cut (a batch
+/// consumed at `e == limit_t` skips the drain check below), and the
+/// candidate truly dispatched at that earlier silent round.
+#[allow(clippy::too_many_arguments)]
+fn process_ends(
+    st: &mut ScanState<'_>,
+    base: &DeltaBase,
+    policy: &dyn SchedPolicy,
+    prio: &[f64],
+    pos_of: &FxHashMap<TaskId, usize>,
+    ep: &mut usize,
+    limit_t: f64,
+    limit_j: usize,
+) -> Result<(), f64> {
+    let ends = &base.ends;
+    while *ep < ends.len() {
+        let (batch_t, j0) = ends[*ep];
+        if !(batch_t < limit_t || (batch_t == limit_t && j0 < limit_j)) {
+            break;
+        }
+        while *ep < ends.len() {
+            let (e, j) = ends[*ep];
+            if e != batch_t || !(e < limit_t || (e == limit_t && j < limit_j)) {
+                break;
+            }
+            let id = base.trace.decisions[j].task;
+            let Some(&pos) = pos_of.get(&id) else {
+                return Err(batch_t.min(min_ready_release(st)));
+            };
+            st.release_succs(policy, prio, pos, batch_t);
+            *ep += 1;
+        }
+        // a batch strictly before the limit is always fully consumed
+        // (the partial-batch cut can only happen at e == limit_t), so
+        // this is a completed decision-round boundary
+        if batch_t < limit_t && !st.ready.is_empty() {
+            return Err(min_ready_release(st));
+        }
+    }
+    Ok(())
+}
+
+/// Earliest release among the candidate's ready set — the first round at
+/// which undispatched ready work would actually run (`INFINITY` when
+/// nothing is ready).
+fn min_ready_release(st: &ScanState<'_>) -> f64 {
+    let mut t = f64::INFINITY;
+    for &q in &st.ready {
+        if st.release[q] < t {
+            t = st.release[q];
+        }
+    }
+    t
+}
+
+/// The candidate's abstract bookkeeping cloned at a base checkpoint
+/// boundary — the arrays a [`ReplayPlan`] needs to resume from that
+/// checkpoint under the *candidate* frontier's indexing.
+struct AbstractSnap {
+    indeg: Vec<usize>,
+    release: Vec<f64>,
+    ready: Vec<usize>,
+}
+
+struct ScanOut {
+    /// Base decisions proven to replay identically on the candidate.
+    d_star: usize,
+    /// Earliest simulated time at which the candidate may diverge;
+    /// `INFINITY` when the whole base run verified.
+    stop: f64,
+    /// One snapshot per base checkpoint reached before divergence,
+    /// parallel to the `trace.checkpoints` prefix.
+    snaps: Vec<AbstractSnap>,
+}
+
+/// Verify the base decision log against the candidate frontier. See the
+/// module docs for the per-decision checks; every early return fixes
+/// `(d_star, stop)` at the first check that could not be proven.
+fn scan(
+    base: &DeltaBase,
+    policy: &dyn SchedPolicy,
+    flat: &FlatDag,
+    prio: &[f64],
+    affected: &[bool],
+    pos_of: &FxHashMap<TaskId, usize>,
+) -> ScanOut {
+    let mut st = ScanState::new(flat, policy, prio);
+    let decisions = &base.trace.decisions;
+    let cks = &base.trace.checkpoints;
+    let mut snaps: Vec<AbstractSnap> = Vec::new();
+    let mut ck_i = 0usize;
+    let mut ep = 0usize;
+    let mut t_prev = 0.0f64;
+
+    for (d_idx, d) in decisions.iter().enumerate() {
+        // (1) round-end drain: the base round at t_prev dispatched its
+        // last decision with candidate work still ready — the candidate
+        // dispatches at t_prev, the base moved on
+        if d_idx > 0 && d.time > t_prev && !st.ready.is_empty() {
+            return ScanOut { d_star: d_idx, stop: t_prev, snaps };
+        }
+        // (2) checkpoint boundaries crossed by this decision: advance the
+        // end stream to the checkpoint's loop top and snapshot the
+        // candidate arrays there (restore needs them in candidate space)
+        while ck_i < cks.len() && cks[ck_i].n_decisions <= d_idx {
+            let ck = &cks[ck_i];
+            if let Err(e) = process_ends(&mut st, base, policy, prio, pos_of, &mut ep, ck.now, ck.n_decisions) {
+                return ScanOut { d_star: d_idx, stop: e, snaps };
+            }
+            snaps.push(AbstractSnap {
+                indeg: st.indeg.clone(),
+                release: st.release.clone(),
+                ready: st.ready.clone(),
+            });
+            ck_i += 1;
+        }
+        // (3) ends up to this decision's round
+        if let Err(e) = process_ends(&mut st, base, policy, prio, pos_of, &mut ep, d.time, d_idx) {
+            return ScanOut { d_star: d_idx, stop: e, snaps };
+        }
+        // (3b) checkpoint-boundary leftovers: a batch cut at a
+        // checkpoint's loop top (stage 2 consumes it at `e == ck.now`,
+        // past process_ends' full-batch drain check) may have released
+        // candidate work at a round where the base dispatched nothing —
+        // the candidate dispatches there, so the shared prefix ends at
+        // that round's loop top
+        let lag = min_ready_release(&st);
+        if lag < d.time {
+            return ScanOut { d_star: d_idx, stop: lag, snaps };
+        }
+        // (4) the dispatched task must exist in the candidate and sit
+        // outside the affected cone
+        let Some(&pos) = pos_of.get(&d.task) else {
+            return ScanOut { d_star: d_idx, stop: d.time, snaps };
+        };
+        if affected[pos] {
+            return ScanOut { d_star: d_idx, stop: d.time, snaps };
+        }
+        // (5) the candidate's own argmax (candidate keys, candidate
+        // tie-break positions) must pick the same task
+        let got = pick_best(st.ready.len(), |i| st.keys[st.ready[i]], |i| st.ready[i]);
+        let picked = match got {
+            Some(i) if st.ready[i] == pos => i,
+            _ => return ScanOut { d_star: d_idx, stop: d.time, snaps },
+        };
+        // (6) bitwise-identical release (selection sees it)
+        if st.release[pos].to_bits() != d.time.to_bits() {
+            return ScanOut { d_star: d_idx, stop: d.time, snaps };
+        }
+        // (7) successor-aware selection also sees the successor tasks
+        if let Some(base_succs) = base.succ_ids.get(&d.task) {
+            let same = flat.succs[pos].len() == base_succs.len()
+                && flat.succs[pos].iter().zip(base_succs).all(|(&s, &id)| flat.tasks[s] == id);
+            if !same {
+                return ScanOut { d_star: d_idx, stop: d.time, snaps };
+            }
+        }
+        // (8) dispatch
+        st.ready.swap_remove(picked);
+        t_prev = d.time;
+    }
+
+    // whole log verified; anything still ready (or released by the tail
+    // of the end stream) dispatches after the base's last round
+    let l = decisions.len();
+    if !st.ready.is_empty() {
+        return ScanOut { d_star: l, stop: min_ready_release(&st), snaps };
+    }
+    // trailing checkpoints (captured at or after the last decision) are
+    // reachable too when everything verified
+    while ck_i < cks.len() && cks[ck_i].n_decisions <= l {
+        let ck = &cks[ck_i];
+        if let Err(e) = process_ends(&mut st, base, policy, prio, pos_of, &mut ep, ck.now, ck.n_decisions) {
+            return ScanOut { d_star: l, stop: e, snaps };
+        }
+        snaps.push(AbstractSnap {
+            indeg: st.indeg.clone(),
+            release: st.release.clone(),
+            ready: st.ready.clone(),
+        });
+        ck_i += 1;
+    }
+    if let Err(e) = process_ends(&mut st, base, policy, prio, pos_of, &mut ep, f64::INFINITY, usize::MAX) {
+        return ScanOut { d_star: l, stop: e, snaps };
+    }
+    // work released by the final batches (or a trailing checkpoint's
+    // partial batch) that the base never dispatched: the candidate runs
+    // past the base's last decision starting at its release round
+    if !st.ready.is_empty() {
+        return ScanOut { d_star: l, stop: min_ready_release(&st), snaps };
+    }
+    ScanOut { d_star: l, stop: f64::INFINITY, snaps }
+}
+
+/// A ready-to-run incremental evaluation: the engine plan plus the seed
+/// trace (verified decision prefix + inherited checkpoints) and the
+/// replay statistics the solver aggregates.
+pub(crate) struct DeltaPlan<'p> {
+    pub plan: ReplayPlan<'p>,
+    pub seed: SimTrace,
+    /// Decisions proven shared with the base (skipped selection work).
+    pub d_star: usize,
+    /// Candidate frontier size (total decisions a full run would make).
+    pub total: usize,
+    /// Decisions recovered by checkpoint restore (no replay loop at all).
+    pub restored: usize,
+}
+
+/// Scan `flat` against `base` and, if a non-empty prefix verifies, build
+/// the [`ReplayPlan`] that restores the latest eligible checkpoint and
+/// force-replays the rest of the prefix. `prio` is the candidate's
+/// ordering priority vector (critical times for the PL family, zeros
+/// otherwise); it moves into the plan so the engine skips its own
+/// backflow pass. Returns `None` when nothing verified — the caller
+/// falls back to a full simulation.
+pub(crate) fn plan_candidate<'p>(
+    base: &'p DeltaBase,
+    policy: &dyn SchedPolicy,
+    flat: &FlatDag,
+    prio: Vec<f64>,
+) -> Option<DeltaPlan<'p>> {
+    debug_assert!(policy_eligible(policy), "delta planning for an ineligible policy");
+    let n = flat.len();
+    let pos_of: FxHashMap<TaskId, usize> =
+        flat.tasks.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+    let affected = match changed_span(&base.ids, &flat.tasks) {
+        None => vec![false; n],
+        Some((lo, hi)) => affected_cone(flat, lo, hi),
+    };
+    let out = scan(base, policy, flat, &prio, &affected, &pos_of);
+    if out.d_star == 0 {
+        return None;
+    }
+
+    // latest checkpoint whose restore state is a pure function of the
+    // verified prefix: captured before d_star decisions, at or before
+    // the divergence time
+    let eligible =
+        |ck: &super::engine::Checkpoint| ck.n_decisions <= out.d_star && ck.now <= out.stop;
+    let mut chosen: Option<usize> = None;
+    for (i, _) in out.snaps.iter().enumerate() {
+        if eligible(&base.trace.checkpoints[i]) {
+            chosen = Some(i);
+        }
+    }
+    let inherited: Vec<Arc<super::engine::Checkpoint>> = base
+        .trace
+        .checkpoints
+        .iter()
+        .take(out.snaps.len())
+        .filter(|ck| eligible(ck))
+        .cloned()
+        .collect();
+
+    let (ckpt, from, indeg, release, ready) = match chosen {
+        Some(i) => {
+            let snap = &out.snaps[i];
+            let ck = base.trace.checkpoints[i].as_ref();
+            (Some(ck), ck.n_decisions, snap.indeg.clone(), snap.release.clone(), snap.ready.clone())
+        }
+        None => {
+            let indeg: Vec<usize> = flat.preds.iter().map(|p| p.len()).collect();
+            let ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+            (None, 0, indeg, vec![0.0; n], ready)
+        }
+    };
+
+    let seed = SimTrace {
+        decisions: base.trace.decisions[..from].to_vec(),
+        checkpoints: inherited,
+    };
+    let plan = ReplayPlan {
+        ckpt,
+        prio,
+        indeg,
+        release,
+        ready,
+        forced: &base.trace.decisions[from..out.d_star],
+    };
+    Some(DeltaPlan { plan, seed, d_star: out.d_star, total: n, restored: from })
+}
+
+/// Per-lane completion-state cache: candidates whose whole frontier
+/// signature was already simulated under this lane's fixed
+/// (machine, policy, seed) reuse the recorded cost without running the
+/// engine. Get/insert only — no iteration, so determinism is safe (the
+/// `det/map-iteration` lint family) — and unbounded: a lane touches at
+/// most `iterations × batch` distinct frontiers, each key a few hundred
+/// words.
+#[derive(Default)]
+pub(crate) struct CostCache {
+    map: FxHashMap<Vec<u64>, f64>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CostCache {
+    pub(crate) fn new() -> CostCache {
+        CostCache::default()
+    }
+
+    pub(crate) fn get(&mut self, key: &[u64]) -> Option<f64> {
+        match self.map.get(key) {
+            Some(&c) => {
+                self.hits += 1;
+                Some(c)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub(crate) fn insert(&mut self, key: Vec<u64>, cost: f64) {
+        self.map.insert(key, cost);
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+fn kind_code(k: TaskKind) -> u64 {
+    match k {
+        TaskKind::Potrf => 1,
+        TaskKind::Trsm => 2,
+        TaskKind::Syrk => 3,
+        TaskKind::Gemm => 4,
+        TaskKind::Getrf => 5,
+        TaskKind::TrsmL => 6,
+        TaskKind::TrsmU => 7,
+        TaskKind::Geqrt => 8,
+        TaskKind::Tsqrt => 9,
+        TaskKind::Larfb => 10,
+        TaskKind::Ssrfb => 11,
+        TaskKind::Custom(x) => 0x100 + x as u64,
+    }
+}
+
+/// Canonical signature of a frontier: per task, its id, kind, flops and
+/// full read/write region lists in frontier order. Two frontiers with
+/// equal signatures describe the same computation on the same data
+/// blocks, so under a fixed (machine, policy, seed) they simulate to the
+/// same schedule. Ids are included — stricter than strictly necessary,
+/// but id assignment is itself deterministic (arena order), so re-visits
+/// of a frontier on the same base still hit.
+pub(crate) fn frontier_signature(dag: &TaskDag, flat: &FlatDag) -> Vec<u64> {
+    let mut sig = Vec::with_capacity(flat.len() * 6);
+    for &id in &flat.tasks {
+        let t = dag.task(id);
+        sig.push(id as u64);
+        sig.push(kind_code(t.kind));
+        sig.push(t.flops.to_bits());
+        sig.push(t.reads.len() as u64);
+        for r in t.reads.iter().chain(t.writes.iter()) {
+            sig.push(r.matrix as u64);
+            sig.push(((r.r0 as u64) << 32) | r.r1 as u64);
+            sig.push(((r.c0 as u64) << 32) | r.c1 as u64);
+        }
+    }
+    sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{
+        simulate_flat, simulate_flat_replay, simulate_flat_traced, SimConfig,
+    };
+    use crate::coordinator::perfmodel::{PerfCurve, PerfDb};
+    use crate::coordinator::platform::{Machine, MachineBuilder};
+    use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+    use crate::coordinator::policy::policy_for;
+    use crate::coordinator::region::Region;
+    use crate::coordinator::task::TaskSpec;
+
+    fn machine() -> (Machine, PerfDb) {
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let slow = b.proc_type("slow", 1.0, 0.1);
+        let fast = b.proc_type("fast", 1.0, 0.1);
+        b.processors(1, "s", slow, h);
+        b.processors(2, "f", fast, h);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 1.0 });
+        db.set_fallback(1, PerfCurve::Const { gflops: 4.0 });
+        (m, db)
+    }
+
+    fn reg(r0: u32, r1: u32) -> Region {
+        Region::new(0, r0, r1, 0, 100)
+    }
+
+    /// A chain of `k` dependent gemms over one region — every decision
+    /// round dispatches exactly one task, so `every = 2` checkpoints
+    /// land mid-run.
+    fn chain(k: usize) -> TaskDag {
+        let r = reg(0, 100);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![r], vec![r]));
+        dag.partition(0, vec![TaskSpec::new(TaskKind::Gemm, vec![r], vec![r]); k], 100);
+        dag
+    }
+
+    fn pl_eft() -> SimConfig {
+        SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+    }
+
+    fn prio_for(dag: &TaskDag, flat: &FlatDag, m: &Machine, db: &PerfDb) -> Vec<f64> {
+        crate::coordinator::ordering::critical_times(dag, flat, m, db)
+    }
+
+    fn assert_same(a: &Schedule, b: &Schedule, what: &str) {
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{what}: makespan");
+        assert_eq!(format!("{:?}", a.assignments), format!("{:?}", b.assignments), "{what}: assignments");
+        assert_eq!(format!("{:?}", a.events), format!("{:?}", b.events), "{what}: events");
+        assert_eq!(format!("{:?}", a.transfers), format!("{:?}", b.transfers), "{what}: transfers");
+    }
+
+    #[test]
+    fn changed_span_cases() {
+        assert_eq!(changed_span(&[1, 2, 3], &[1, 2, 3]), None);
+        // replacement in the middle
+        assert_eq!(changed_span(&[1, 2, 3], &[1, 9, 3]), Some((1, 2)));
+        // one id expanded into two (partition)
+        assert_eq!(changed_span(&[1, 2, 3], &[1, 8, 9, 3]), Some((1, 3)));
+        // suffix change
+        assert_eq!(changed_span(&[1, 2, 3], &[1, 2, 7, 8]), Some((2, 4)));
+        // prefix change
+        assert_eq!(changed_span(&[1, 2, 3], &[9, 2, 3]), Some((0, 1)));
+        // pure deletion: empty candidate span at the cut point
+        assert_eq!(changed_span(&[1, 2, 3], &[1, 3]), Some((1, 1)));
+    }
+
+    #[test]
+    fn cone_closes_over_successors() {
+        let dag = chain(4);
+        let flat = dag.flat_dag();
+        let affected = affected_cone(&flat, 1, 2);
+        assert_eq!(affected, vec![false, true, true, true], "everything downstream of link 1");
+    }
+
+    #[test]
+    fn delta_mode_parses_and_roundtrips() {
+        for m in [DeltaMode::On, DeltaMode::Off, DeltaMode::Auto] {
+            assert_eq!(DeltaMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(DeltaMode::from_name("bogus"), None);
+        assert!(DeltaMode::On.enabled());
+        assert!(DeltaMode::Auto.enabled());
+        assert!(!DeltaMode::Off.enabled());
+    }
+
+    #[test]
+    fn identity_candidate_verifies_fully_and_replays_bitwise() {
+        let (m, db) = machine();
+        let dag = chain(6);
+        let flat = dag.flat_dag();
+        let mut p = policy_for(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish));
+        assert!(policy_eligible(p.as_ref()));
+        let (sched, trace) = simulate_flat_traced(&dag, &flat, &m, &db, pl_eft(), p.as_mut(), 2);
+        assert!(!trace.checkpoints.is_empty(), "every=2 over a 6-chain must checkpoint");
+        let base = DeltaBase::new(trace, &sched, &flat, p.wants_successors());
+
+        let prio = prio_for(&dag, &flat, &m, &db);
+        let dp = plan_candidate(&base, p.as_ref(), &flat, prio).expect("identical frontier must verify");
+        assert_eq!(dp.d_star, flat.len(), "every decision verifies");
+        assert!(dp.restored > 0, "a checkpoint must be eligible");
+        assert_eq!(dp.plan.forced.len(), dp.d_star - dp.restored);
+
+        let mut p2 = policy_for(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish));
+        let (replayed, tr2) =
+            simulate_flat_replay(&dag, &flat, &m, &db, pl_eft(), p2.as_mut(), dp.plan, dp.seed, 0);
+        assert_same(&sched, &replayed, "identity replay");
+        assert_eq!(tr2.decisions.len(), flat.len());
+    }
+
+    #[test]
+    fn partitioned_suffix_replays_bitwise_from_a_checkpoint() {
+        let (m, db) = machine();
+        let dag = chain(6);
+        let flat = dag.flat_dag();
+        let mut p = policy_for(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish));
+        let (sched, trace) = simulate_flat_traced(&dag, &flat, &m, &db, pl_eft(), p.as_mut(), 2);
+        let base = DeltaBase::new(trace, &sched, &flat, p.wants_successors());
+
+        // split the last chain link into two independent half-tiles
+        let mut dag2 = dag.clone();
+        let last = *flat.tasks.last().unwrap();
+        dag2.partition(
+            last,
+            vec![
+                TaskSpec::new(TaskKind::Gemm, vec![reg(0, 50)], vec![reg(0, 50)]),
+                TaskSpec::new(TaskKind::Gemm, vec![reg(50, 100)], vec![reg(50, 100)]),
+            ],
+            50,
+        );
+        let flat2 = dag2.flat_dag();
+        assert_eq!(flat2.len(), flat.len() + 1);
+        let span = changed_span(&base.ids, &flat2.tasks).expect("frontier changed");
+        assert_eq!(span, (flat.len() - 1, flat2.len()), "suffix span");
+
+        let prio2 = prio_for(&dag2, &flat2, &m, &db);
+        let dp = plan_candidate(&base, p.as_ref(), &flat2, prio2).expect("shared prefix must verify");
+        assert!(dp.d_star >= flat.len() - 1, "all untouched links verify");
+        assert!(dp.restored > 0, "mid-run checkpoint must be eligible");
+
+        let mut pa = policy_for(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish));
+        let (replayed, _) =
+            simulate_flat_replay(&dag2, &flat2, &m, &db, pl_eft(), pa.as_mut(), dp.plan, dp.seed, 0);
+        let full = simulate_flat(&dag2, &flat2, &m, &db, pl_eft());
+        assert_same(&full, &replayed, "partitioned-suffix replay");
+    }
+
+    #[test]
+    fn prefix_change_falls_back_to_full_simulation() {
+        let (m, db) = machine();
+        let dag = chain(4);
+        let flat = dag.flat_dag();
+        let mut p = policy_for(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish));
+        let (sched, trace) = simulate_flat_traced(&dag, &flat, &m, &db, pl_eft(), p.as_mut(), 2);
+        let base = DeltaBase::new(trace, &sched, &flat, p.wants_successors());
+
+        // split the FIRST link: the very first decision is in the cone
+        let mut dag2 = dag.clone();
+        let first = flat.tasks[0];
+        dag2.partition(
+            first,
+            vec![
+                TaskSpec::new(TaskKind::Gemm, vec![reg(0, 50)], vec![reg(0, 50)]),
+                TaskSpec::new(TaskKind::Gemm, vec![reg(50, 100)], vec![reg(50, 100)]),
+            ],
+            50,
+        );
+        let flat2 = dag2.flat_dag();
+        let prio2 = prio_for(&dag2, &flat2, &m, &db);
+        assert!(
+            plan_candidate(&base, p.as_ref(), &flat2, prio2).is_none(),
+            "nothing verifiable: caller must run a full simulation"
+        );
+    }
+
+    #[test]
+    fn cost_cache_discriminates_frontiers() {
+        let dag = chain(3);
+        let flat = dag.flat_dag();
+        let sig = frontier_signature(&dag, &flat);
+        assert_eq!(sig, frontier_signature(&dag, &flat), "signature is deterministic");
+
+        let mut dag2 = dag.clone();
+        let last = *flat.tasks.last().unwrap();
+        dag2.partition(
+            last,
+            vec![
+                TaskSpec::new(TaskKind::Gemm, vec![reg(0, 50)], vec![reg(0, 50)]),
+                TaskSpec::new(TaskKind::Gemm, vec![reg(50, 100)], vec![reg(50, 100)]),
+            ],
+            50,
+        );
+        let flat2 = dag2.flat_dag();
+        let sig2 = frontier_signature(&dag2, &flat2);
+        assert_ne!(sig, sig2);
+
+        let mut cache = CostCache::new();
+        assert_eq!(cache.get(&sig), None);
+        cache.insert(sig.clone(), 7.5);
+        assert_eq!(cache.get(&sig), Some(7.5));
+        assert_eq!(cache.get(&sig2), None);
+        assert_eq!((cache.hits, cache.misses), (1, 2));
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -23,6 +23,12 @@
 //!   batched evaluation on cheap copy-on-write scratch DAGs plus M
 //!   independent restart lanes with content-derived seeds, byte-identical
 //!   output for any thread count.
+//! * [`delta`]: incremental re-simulation for the portfolio solver —
+//!   verified-prefix scans against the base run's decision log, affected-
+//!   cone analysis over the candidate frontier, checkpoint selection for
+//!   the event core's restore/replay path, and the frontier-keyed cost
+//!   cache. Byte-identical to full re-simulation by construction; falls
+//!   back to a full run whenever equivalence cannot be proven.
 //! * [`validate`]: the schedule-invariant oracle — an independent checker
 //!   (processor/link exclusivity, dependences, arrival gates, makespan)
 //!   the solver runs on every accepted schedule in debug builds.
@@ -44,6 +50,7 @@
 pub mod coherence;
 pub mod constructive;
 pub mod datadag;
+pub mod delta;
 pub mod energy;
 pub mod engine;
 pub mod lower_bound;

@@ -99,6 +99,20 @@ impl Timeline {
     pub fn booked(&self) -> f64 {
         self.busy.iter().map(|&(s, e)| e - s).sum()
     }
+
+    /// Forget every booking but keep the interval storage — the scratch-
+    /// arena reuse path clears timelines between simulations instead of
+    /// reallocating them.
+    pub fn reset(&mut self) {
+        self.busy.clear();
+    }
+
+    /// Whether nothing is booked (the scratch arena asserts this after
+    /// [`Timeline::reset`] so a stale interval can never leak into the
+    /// next simulation).
+    pub fn is_clear(&self) -> bool {
+        self.busy.is_empty()
+    }
 }
 
 /// A finite-size memory space (host DRAM, one GPU's device memory, ...).

@@ -46,6 +46,16 @@ impl SchedPolicy for AffinityPolicy {
         false
     }
 
+    fn static_key(&self, _release: f64, critical_time: f64) -> Option<f64> {
+        Some(critical_time)
+    }
+
+    // selection reads only the context (placement estimates) — no state,
+    // no RNG — so delta replay may skip it on a verified prefix
+    fn select_stateless(&self) -> bool {
+        true
+    }
+
     fn order(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, _release: f64, critical_time: f64) -> f64 {
         critical_time
     }

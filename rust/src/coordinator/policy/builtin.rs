@@ -44,13 +44,24 @@ impl SchedPolicy for BuiltinPolicy {
         false
     }
 
-    fn order(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, release: f64, critical_time: f64) -> f64 {
-        match self.cfg.ordering {
+    // both keys are re-derivable without an event core, so delta replay
+    // can verify a recorded decision prefix against them
+    fn static_key(&self, release: f64, critical_time: f64) -> Option<f64> {
+        Some(match self.cfg.ordering {
             // earliest release pops first (max-heap → negate)
             Ordering::Fcfs => -release,
             // decreasing critical time (backflow upward rank)
             Ordering::PriorityList => critical_time,
-        }
+        })
+    }
+
+    // selection is a pure function of the context except for R-P's draw
+    fn select_stateless(&self) -> bool {
+        self.cfg.select != ProcSelect::Random
+    }
+
+    fn order(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, release: f64, critical_time: f64) -> f64 {
+        self.static_key(release, critical_time).expect("builtin keys are static")
     }
 
     fn select(&mut self, ctx: &mut SchedContext<'_>, task: &Task, release: f64) -> ProcId {

@@ -50,6 +50,16 @@ impl SchedPolicy for DeadlinePolicy {
         false
     }
 
+    // in every job-less context (all solver/sweep paths) the key below
+    // degrades to FCFS on release — which is exactly this static form
+    fn static_key(&self, release: f64, _critical_time: f64) -> Option<f64> {
+        Some(-release)
+    }
+
+    fn select_stateless(&self) -> bool {
+        true
+    }
+
     fn order(&mut self, ctx: &mut SchedContext<'_>, _task: &Task, release: f64, _critical_time: f64) -> f64 {
         match ctx.job {
             // max-heap → negate: the earliest deadline pops first
@@ -90,6 +100,15 @@ impl SchedPolicy for ShortestJobPolicy {
 
     fn dynamic_order(&self) -> bool {
         false
+    }
+
+    // job-less contexts degrade to FCFS on release (see DeadlinePolicy)
+    fn static_key(&self, release: f64, _critical_time: f64) -> Option<f64> {
+        Some(-release)
+    }
+
+    fn select_stateless(&self) -> bool {
+        true
     }
 
     fn order(&mut self, ctx: &mut SchedContext<'_>, _task: &Task, release: f64, _critical_time: f64) -> f64 {

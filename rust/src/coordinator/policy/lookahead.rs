@@ -47,6 +47,16 @@ impl SchedPolicy for LookaheadEftPolicy {
         false
     }
 
+    fn static_key(&self, _release: f64, critical_time: f64) -> Option<f64> {
+        Some(critical_time)
+    }
+
+    // pure function of (ctx, task, successors); the delta verifier
+    // additionally checks successor-set equality before skipping it
+    fn select_stateless(&self) -> bool {
+        true
+    }
+
     fn order(&mut self, _ctx: &mut SchedContext<'_>, _task: &Task, _release: f64, critical_time: f64) -> f64 {
         critical_time
     }

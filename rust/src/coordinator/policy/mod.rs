@@ -312,6 +312,31 @@ pub trait SchedPolicy {
         true
     }
 
+    /// The ordering key as a pure function of `(release, critical_time)`
+    /// — bitwise what [`SchedPolicy::order`] returns for this policy when
+    /// no job is attached to the context. Returning `Some` opts the
+    /// policy into incremental (delta) candidate evaluation in the
+    /// portfolio solver ([`super::delta`]): the delta verifier re-derives
+    /// ready-queue keys without an event core, so the value must equal
+    /// `order`'s result bit for bit — implementations should make `order`
+    /// delegate to this. `None` (the default) excludes the policy from
+    /// delta replay and the solver falls back to full re-simulation.
+    fn static_key(&self, release: f64, critical_time: f64) -> Option<f64> {
+        let _ = (release, critical_time);
+        None
+    }
+
+    /// Whether [`SchedPolicy::select`] is a pure function of the context
+    /// and its arguments: no internal mutable state, no RNG draws.
+    /// Stateless selection lets the delta evaluator replay a recorded
+    /// decision prefix without re-invoking `select` (identical context
+    /// state implies the identical processor). Stochastic or stateful
+    /// policies (e.g. the `r-p` builtins) must keep the default `false`
+    /// and take the full-simulation path.
+    fn select_stateless(&self) -> bool {
+        false
+    }
+
     /// Priority key of a ready task. The engine dispatches the *largest*
     /// key first, ties broken toward program order. FCFS is `-release`;
     /// priority-list is the critical time.

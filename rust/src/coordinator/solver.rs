@@ -51,8 +51,12 @@
 //! batch. In debug builds every accepted schedule passes the
 //! [`super::validate`] oracle.
 
+use super::delta::{self, CostCache, DeltaBase, DeltaMode, DeltaPlan};
 use super::energy::Objective;
-use super::engine::{simulate_flat_policy, simulate_policy, Schedule, SimConfig};
+use super::engine::{
+    recycle_schedule, simulate_flat_policy, simulate_flat_replay, simulate_flat_traced,
+    simulate_policy, Schedule, SimConfig, SimTrace,
+};
 use super::ordering::{critical_path, critical_times};
 use super::partitioners::{snap_sub_edge, PartitionerSet};
 use super::perfmodel::PerfDb;
@@ -192,6 +196,20 @@ pub struct IterLog {
     /// Evaluated candidates that were rejected (partitioner refusal or
     /// non-finite evaluated cost).
     pub rejected: usize,
+    /// Simulation decisions recovered from the base run by verified
+    /// replay this iteration, summed over the batch (0 with delta
+    /// evaluation off). Diagnostics only — never part of the canonical
+    /// [`result_json`] bytes, which stay identical across delta modes.
+    pub events_replayed: usize,
+    /// Total simulation decisions the batch's simulated candidates
+    /// carried (the denominator of the replay fraction).
+    pub events_total: usize,
+    /// Candidates answered from the lane's frontier-signature cost cache
+    /// without running the engine at all.
+    pub cache_hits: usize,
+    /// Candidates that fell back to a full simulation while delta
+    /// evaluation was requested (ineligible policy, unverifiable prefix).
+    pub full_fallbacks: usize,
 }
 
 /// Solver output: best state found + full iteration history.
@@ -209,6 +227,46 @@ pub struct SolveResult {
     pub lane_costs: Vec<f64>,
     /// Iteration history of the winning lane.
     pub history: Vec<IterLog>,
+}
+
+/// Aggregated incremental-evaluation counters of a solve (the winning
+/// lane's history summed). Deterministic for any thread count, like the
+/// history itself — but deliberately kept out of [`result_json`], whose
+/// bytes must not depend on the delta mode.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    pub events_replayed: u64,
+    pub events_total: u64,
+    pub cache_hits: u64,
+    pub full_fallbacks: u64,
+}
+
+impl ReplayStats {
+    /// Fraction of candidate-simulation decision work skipped via
+    /// verified replay (0.0 when nothing was delta-evaluated).
+    pub fn replay_fraction(&self) -> f64 {
+        if self.events_total == 0 {
+            0.0
+        } else {
+            self.events_replayed as f64 / self.events_total as f64
+        }
+    }
+}
+
+impl SolveResult {
+    /// Sum the per-iteration delta-evaluation counters of the winning
+    /// lane (`hesp solve` prints these; the sweep CSV carries the
+    /// fraction).
+    pub fn replay_stats(&self) -> ReplayStats {
+        let mut s = ReplayStats::default();
+        for h in &self.history {
+            s.events_replayed += h.events_replayed as u64;
+            s.events_total += h.events_total as u64;
+            s.cache_hits += h.cache_hits as u64;
+            s.full_fallbacks += h.full_fallbacks as u64;
+        }
+        s
+    }
 }
 
 /// Per-lane override of the portfolio's search knobs: a lane may run a
@@ -240,13 +298,24 @@ pub struct PortfolioConfig {
     /// Optional per-lane overrides, indexed by lane (cycled when shorter
     /// than `lanes`; empty = every lane runs the base settings).
     pub lane_specs: Vec<LaneSpec>,
+    /// Incremental re-simulation of batch candidates ([`DeltaMode`]).
+    /// Byte-identical results either way; `On`/`Auto` trade a verified-
+    /// prefix scan per candidate for skipping most of its event loop.
+    pub delta: DeltaMode,
 }
 
 impl PortfolioConfig {
     /// Single lane, single candidate, single thread — exactly the classic
     /// solver.
     pub fn new(base: SolverConfig) -> PortfolioConfig {
-        PortfolioConfig { base, batch: 1, lanes: 1, threads: 1, lane_specs: Vec::new() }
+        PortfolioConfig {
+            base,
+            batch: 1,
+            lanes: 1,
+            threads: 1,
+            lane_specs: Vec::new(),
+            delta: DeltaMode::Off,
+        }
     }
 
     /// Resolve lane `lane`'s solver config + registry policy name.
@@ -310,6 +379,30 @@ struct Eval {
     sched: Schedule,
     dag: TaskDag,
     flat: FlatDag,
+    /// Decision log + checkpoints of the candidate's simulation, present
+    /// on the delta path — acceptance promotes it to the lane's next
+    /// [`DeltaBase`].
+    trace: Option<SimTrace>,
+}
+
+/// What one batch slot resolved to before acceptance.
+enum CandState {
+    /// Apply step refused the move, or the simulated cost is non-finite.
+    Rejected,
+    /// The frontier signature hit the lane's cost cache: the cost is
+    /// known, the schedule was never rebuilt (re-simulated only if this
+    /// slot wins the batch).
+    Cached(f64),
+    /// Fully evaluated.
+    Ready(Eval),
+}
+
+/// Checkpoint spacing for traced simulations: frequent enough that a
+/// verified prefix usually has a nearby restore point, coarse enough
+/// that capture cost stays a small fraction of the run. Deterministic in
+/// the frontier size only.
+fn ckpt_every(n: usize) -> usize {
+    (n / 8).clamp(16, 256)
 }
 
 /// Evaluate one candidate action on a scratch clone of `dag` (cheap:
@@ -334,7 +427,141 @@ fn evaluate(
     if !cost.is_finite() {
         return None;
     }
-    Some(Eval { cost, sched, dag: scratch, flat })
+    Some(Eval { cost, sched, dag: scratch, flat, trace: None })
+}
+
+/// A candidate between the serial apply/signature stage and the parallel
+/// simulation stage of a delta batch.
+struct Prep {
+    /// Index into the iteration's `picked` batch.
+    slot: usize,
+    dag: TaskDag,
+    flat: FlatDag,
+    sig: Vec<u64>,
+}
+
+/// The delta-evaluation analogue of the plain `par_map(evaluate)` batch:
+/// serial stage clones/applies each candidate, derives its frontier and
+/// signature and probes the lane cost cache; the parallel stage runs a
+/// verified-prefix plan against `base` and either replays from the
+/// nearest checkpoint or falls back to a full traced simulation. Costs
+/// are bitwise those of full evaluation (the planner only emits proven
+/// plans), so acceptance — and the whole trajectory — is independent of
+/// the delta mode.
+#[allow(clippy::too_many_arguments)]
+fn delta_batch(
+    dag: &TaskDag,
+    picked: &[(Action, f64)],
+    machine: &Machine,
+    db: &PerfDb,
+    parts: &PartitionerSet,
+    cfg: &SolverConfig,
+    factory: &(dyn Fn() -> Box<dyn SchedPolicy> + Sync),
+    eval_threads: usize,
+    base: Option<&DeltaBase>,
+    wants_ct: bool,
+    cache: &mut CostCache,
+    entry: &mut IterLog,
+) -> Vec<CandState> {
+    let mut states: Vec<CandState> = Vec::with_capacity(picked.len());
+    let mut preps: Vec<Prep> = Vec::new();
+    for (slot, &(action, _)) in picked.iter().enumerate() {
+        let mut scratch = dag.clone();
+        if !apply_action(&mut scratch, parts, action) {
+            states.push(CandState::Rejected);
+            continue;
+        }
+        let flat = scratch.flat_dag();
+        let sig = delta::frontier_signature(&scratch, &flat);
+        match cache.get(&sig) {
+            Some(c) => {
+                entry.cache_hits += 1;
+                states.push(CandState::Cached(c));
+            }
+            None => {
+                // placeholder; patched from the simulation results below
+                states.push(CandState::Rejected);
+                preps.push(Prep { slot, dag: scratch, flat, sig });
+            }
+        }
+    }
+
+    let sims: Vec<(Schedule, SimTrace, usize, bool)> = par_map(eval_threads, &preps, |_, p| {
+        let mut pol = factory();
+        let n = p.flat.len();
+        let prio = if wants_ct { critical_times(&p.dag, &p.flat, machine, db) } else { vec![0.0; n] };
+        match base.and_then(|b| delta::plan_candidate(b, pol.as_ref(), &p.flat, prio)) {
+            Some(dp) => {
+                let DeltaPlan { plan, seed, d_star, .. } = dp;
+                let (sched, tr) = simulate_flat_replay(
+                    &p.dag, &p.flat, machine, db, cfg.sim, pol.as_mut(), plan, seed, ckpt_every(n),
+                );
+                (sched, tr, d_star, false)
+            }
+            None => {
+                let (sched, tr) =
+                    simulate_flat_traced(&p.dag, &p.flat, machine, db, cfg.sim, pol.as_mut(), ckpt_every(n));
+                (sched, tr, 0, true)
+            }
+        }
+    });
+
+    for (p, (sched, tr, d_star, full)) in preps.into_iter().zip(sims) {
+        let cost = cfg.objective.cost(&sched, machine);
+        // non-finite costs are cached too: a re-visit of an infeasible
+        // frontier must reject without simulating, like the miss did
+        cache.insert(p.sig, cost);
+        entry.events_replayed += d_star;
+        entry.events_total += p.flat.len();
+        if full {
+            entry.full_fallbacks += 1;
+        }
+        states[p.slot] = if cost.is_finite() {
+            CandState::Ready(Eval { cost, sched, dag: p.dag, flat: p.flat, trace: Some(tr) })
+        } else {
+            recycle_schedule(sched);
+            CandState::Rejected
+        };
+    }
+    states
+}
+
+/// Evaluate a single candidate through the delta machinery — the
+/// materialization path for a cache-hit batch winner, whose schedule the
+/// original evaluation never built.
+#[allow(clippy::too_many_arguments)]
+fn eval_one_delta(
+    dag: &TaskDag,
+    action: Action,
+    machine: &Machine,
+    db: &PerfDb,
+    parts: &PartitionerSet,
+    cfg: &SolverConfig,
+    factory: &(dyn Fn() -> Box<dyn SchedPolicy> + Sync),
+    base: Option<&DeltaBase>,
+    wants_ct: bool,
+) -> Option<Eval> {
+    let mut scratch = dag.clone();
+    if !apply_action(&mut scratch, parts, action) {
+        return None;
+    }
+    let flat = scratch.flat_dag();
+    let mut pol = factory();
+    let n = flat.len();
+    let prio = if wants_ct { critical_times(&scratch, &flat, machine, db) } else { vec![0.0; n] };
+    let (sched, tr) = match base.and_then(|b| delta::plan_candidate(b, pol.as_ref(), &flat, prio)) {
+        Some(dp) => {
+            let DeltaPlan { plan, seed, .. } = dp;
+            simulate_flat_replay(&scratch, &flat, machine, db, cfg.sim, pol.as_mut(), plan, seed, ckpt_every(n))
+        }
+        None => simulate_flat_traced(&scratch, &flat, machine, db, cfg.sim, pol.as_mut(), ckpt_every(n)),
+    };
+    let cost = cfg.objective.cost(&sched, machine);
+    if !cost.is_finite() {
+        recycle_schedule(sched);
+        return None;
+    }
+    Some(Eval { cost, sched, dag: scratch, flat, trace: Some(tr) })
 }
 
 /// Sample the iteration's candidate batch: indices into `cands`, in
@@ -399,13 +626,42 @@ fn run_lane(
     batch: usize,
     eval_threads: usize,
     prov: &mut PolicyProvider<'_>,
+    delta: DeltaMode,
 ) -> SolveResult {
     let mut rng = Rng::new(cfg.seed);
     let mut history: Vec<IterLog> = Vec::new();
 
+    // The delta path needs fresh policy instances per candidate (a trace
+    // is only reusable against a policy whose decisions are a pure
+    // function of the decision-time view), so it requires a factory
+    // provider AND an eligible policy. Anything else degrades to full
+    // evaluation — bitwise the same trajectory, just slower.
+    let (use_delta, wants_ct, wants_succs) = if delta.enabled() {
+        match &*prov {
+            PolicyProvider::Factory(f) => {
+                let p = f();
+                (delta::policy_eligible(p.as_ref()), p.wants_critical_times(), p.wants_successors())
+            }
+            PolicyProvider::Shared(_) => (false, false, false),
+        }
+    } else {
+        (false, false, false)
+    };
+    let mut cache = CostCache::new();
+    let mut base: Option<DeltaBase> = None;
+
     let mut dag = dag0.clone();
     let mut flat = dag.flat_dag();
-    let mut sched = lane_simulate(prov, &dag, &flat, machine, db, cfg.sim);
+    let mut sched = if use_delta {
+        let PolicyProvider::Factory(f) = &*prov else { unreachable!("delta requires a factory") };
+        let mut p = f();
+        let (s, tr) =
+            simulate_flat_traced(&dag, &flat, machine, db, cfg.sim, p.as_mut(), ckpt_every(flat.len()));
+        base = Some(DeltaBase::new(tr, &s, &flat, wants_succs));
+        s
+    } else {
+        lane_simulate(prov, &dag, &flat, machine, db, cfg.sim)
+    };
     let mut cost = cfg.objective.cost(&sched, machine);
     // an infeasible start (zero-rate curve -> inf durations) is a valid
     // inf-cost incumbent, not an invariant violation
@@ -426,6 +682,10 @@ fn run_lane(
             applied: false,
             evaluated: 0,
             rejected: 0,
+            events_replayed: 0,
+            events_total: 0,
+            cache_hits: 0,
+            full_fallbacks: 0,
         };
         if cands.is_empty() {
             history.push(entry);
@@ -436,37 +696,84 @@ fn run_lane(
             sample_batch(&cands, batch, cfg.sampling, &mut rng).into_iter().map(|i| cands[i]).collect();
         entry.evaluated = picked.len();
 
-        let mut evals: Vec<Option<Eval>> = match prov {
-            PolicyProvider::Factory(f) => {
-                let f = *f; // reborrow the shared factory out of &mut
-                par_map(eval_threads, &picked, |_, &(action, _)| {
-                    let mut p = f();
-                    evaluate(&dag, action, machine, db, parts, cfg, p.as_mut())
-                })
+        let mut states: Vec<CandState> = if use_delta {
+            let PolicyProvider::Factory(f) = &*prov else { unreachable!("delta requires a factory") };
+            delta_batch(
+                &dag, &picked, machine, db, parts, cfg, *f, eval_threads,
+                base.as_ref(), wants_ct, &mut cache, &mut entry,
+            )
+        } else {
+            let evals: Vec<Option<Eval>> = match prov {
+                PolicyProvider::Factory(f) => {
+                    let f = *f; // reborrow the shared factory out of &mut
+                    par_map(eval_threads, &picked, |_, &(action, _)| {
+                        let mut p = f();
+                        evaluate(&dag, action, machine, db, parts, cfg, p.as_mut())
+                    })
+                }
+                PolicyProvider::Shared(p) => picked
+                    .iter()
+                    .map(|&(action, _)| evaluate(&dag, action, machine, db, parts, cfg, &mut **p))
+                    .collect(),
+            };
+            // delta requested but ineligible: every simulated candidate
+            // is by definition a full run, so the counters say so
+            if delta.enabled() {
+                entry.full_fallbacks = evals.iter().filter(|e| e.is_some()).count();
             }
-            PolicyProvider::Shared(p) => picked
-                .iter()
-                .map(|&(action, _)| evaluate(&dag, action, machine, db, parts, cfg, &mut **p))
-                .collect(),
+            evals
+                .into_iter()
+                .map(|e| match e {
+                    Some(e) => CandState::Ready(e),
+                    None => CandState::Rejected,
+                })
+                .collect()
         };
-        entry.rejected = evals.iter().filter(|e| e.is_none()).count();
+        entry.rejected = states
+            .iter()
+            .filter(|s| match s {
+                CandState::Rejected => true,
+                CandState::Cached(c) => !c.is_finite(),
+                CandState::Ready(_) => false,
+            })
+            .count();
 
         // accept the lowest evaluated cost; ties toward sample order
         let mut accepted: Option<(usize, f64)> = None;
-        for (j, e) in evals.iter().enumerate() {
-            if let Some(e) = e {
-                let better = match accepted {
-                    None => true,
-                    Some((_, c)) => e.cost < c,
-                };
-                if better {
-                    accepted = Some((j, e.cost));
-                }
+        for (j, s) in states.iter().enumerate() {
+            let c = match s {
+                CandState::Rejected => continue,
+                CandState::Cached(c) if !c.is_finite() => continue,
+                CandState::Cached(c) => *c,
+                CandState::Ready(e) => e.cost,
+            };
+            let better = match accepted {
+                None => true,
+                Some((_, acc)) => c < acc,
+            };
+            if better {
+                accepted = Some((j, c));
             }
         }
         match accepted {
             Some((j, _)) => {
-                let e = evals[j].take().expect("accepted evaluation exists");
+                let mut e = match std::mem::replace(&mut states[j], CandState::Rejected) {
+                    CandState::Ready(e) => e,
+                    CandState::Cached(c) => {
+                        // a cache hit skipped simulation, but adoption
+                        // needs the schedule: materialize exactly one
+                        let PolicyProvider::Factory(f) = &*prov else {
+                            unreachable!("cache hits only exist on the delta path")
+                        };
+                        let e = eval_one_delta(
+                            &dag, picked[j].0, machine, db, parts, cfg, *f, base.as_ref(), wants_ct,
+                        )
+                        .expect("cached-finite candidate re-evaluates finite");
+                        debug_assert_eq!(e.cost.to_bits(), c.to_bits(), "cost cache is bit-stable");
+                        e
+                    }
+                    CandState::Rejected => unreachable!("accepted candidate was rejected"),
+                };
                 // the oracle runs on every ACCEPTED schedule (discarded
                 // batch members were simulated by the same engine path;
                 // re-validating them would only multiply debug wall-clock)
@@ -479,6 +786,10 @@ fn run_lane(
                 if e.cost < best.0 {
                     best = (e.cost, e.sched.clone(), e.dag.clone(), iter + 1);
                 }
+                if use_delta {
+                    let tr = e.trace.take().expect("delta evaluations carry traces");
+                    base = Some(DeltaBase::new(tr, &e.sched, &e.flat, wants_succs));
+                }
                 dag = e.dag;
                 flat = e.flat;
                 sched = e.sched;
@@ -490,6 +801,12 @@ fn run_lane(
                 let (action, score) = picked[0];
                 entry.action = Some(action);
                 entry.score = score;
+            }
+        }
+        // discarded evaluations still hold pooled schedules — return them
+        for s in states {
+            if let CandState::Ready(e) = s {
+                recycle_schedule(e.sched);
             }
         }
         history.push(entry);
@@ -525,7 +842,7 @@ pub fn solve_with(
     policy: &mut dyn SchedPolicy,
 ) -> SolveResult {
     let mut prov = PolicyProvider::Shared(policy);
-    run_lane(&dag, machine, db, parts, &cfg, 1, 1, &mut prov)
+    run_lane(&dag, machine, db, parts, &cfg, 1, 1, &mut prov, DeltaMode::Off)
 }
 
 /// Run the full parallel portfolio: `cfg.lanes` independent trajectories
@@ -556,7 +873,7 @@ pub fn solve_portfolio(
     let mut results: Vec<SolveResult> = par_map(threads.min(lanes), &lane_cfgs, |_, (lcfg, name)| {
         let factory = || reg.get(name).expect("validated above");
         let mut prov = PolicyProvider::Factory(&factory);
-        run_lane(dag, machine, db, parts, lcfg, batch, eval_threads, &mut prov)
+        run_lane(dag, machine, db, parts, lcfg, batch, eval_threads, &mut prov, cfg.delta)
     });
     let lane_costs: Vec<f64> = results.iter().map(|r| r.best_cost).collect();
     let mut win = 0usize;
@@ -1306,5 +1623,60 @@ mod tests {
         for t in res.best_dag.frontier() {
             assert!(res.best_dag.task(t).char_edge() >= 256.0 - 1e-9);
         }
+    }
+
+    #[test]
+    fn delta_mode_on_matches_off_bitwise() {
+        // the tentpole invariant: incremental re-simulation may only be
+        // an execution strategy — the canonical result bytes (history,
+        // costs, winner lane) must be exactly those of full evaluation
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let reg = crate::coordinator::policy::PolicyRegistry::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 10, 64);
+        cfg.seed = 17;
+        let mut off = PortfolioConfig::new(cfg);
+        off.lanes = 2;
+        off.batch = 3;
+        off.threads = 2;
+        let mut on = off.clone();
+        on.delta = DeltaMode::On;
+        let dag = cholesky::root(1024);
+        let r_off = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &off);
+        let r_on = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &on);
+        assert_eq!(result_json(&r_off), result_json(&r_on), "delta must be invisible in the bytes");
+
+        let s_on = r_on.replay_stats();
+        let s_off = r_off.replay_stats();
+        assert_eq!(s_off, ReplayStats::default(), "off mode never touches the counters");
+        assert!(s_on.events_total > 0, "{s_on:?}");
+        assert!(s_on.events_replayed <= s_on.events_total, "{s_on:?}");
+        assert!(s_on.replay_fraction() >= 0.0 && s_on.replay_fraction() <= 1.0);
+    }
+
+    #[test]
+    fn delta_with_ineligible_policy_degrades_to_counted_full_runs() {
+        // fcfs/r-p's Random processor select is stateful (it consumes the
+        // engine RNG), so no forced-prefix plan can be proven; delta mode
+        // must fall back to full evaluation — same bytes, counted as such
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let reg = crate::coordinator::policy::PolicyRegistry::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 6, 64);
+        cfg.seed = 4;
+        let mut off = PortfolioConfig::new(cfg);
+        off.batch = 2;
+        let mut on = off.clone();
+        on.delta = DeltaMode::On;
+        let dag = cholesky::root(512);
+        let r_off = solve_portfolio(&dag, &m, &db, &parts, &reg, "fcfs/r-p", &off);
+        let r_on = solve_portfolio(&dag, &m, &db, &parts, &reg, "fcfs/r-p", &on);
+        assert_eq!(result_json(&r_off), result_json(&r_on));
+        let st = r_on.replay_stats();
+        assert_eq!(st.events_total, 0, "the scan never engages: {st:?}");
+        assert_eq!(st.events_replayed, 0, "{st:?}");
+        let simulated: u64 =
+            r_on.history.iter().map(|h| (h.evaluated - h.rejected) as u64).sum();
+        assert!(st.full_fallbacks >= simulated, "every simulated candidate is a full run: {st:?}");
     }
 }

@@ -27,6 +27,7 @@
 use std::path::{Path, PathBuf};
 
 use super::coherence::CachePolicy;
+use super::delta::DeltaMode;
 use super::energy::{energy, DEFAULT_J_PER_BYTE};
 use super::engine::{simulate_policy, SimConfig};
 use super::lower_bound::makespan_lower_bound;
@@ -229,6 +230,11 @@ pub struct SweepGrid {
     pub solve_lanes: usize,
     /// Candidates evaluated per solver iteration in `solve`-mode cells.
     pub solve_batch: usize,
+    /// Incremental re-simulation mode for `solve`-mode cells (another
+    /// grid-level execution knob: the reported trajectory is byte-
+    /// identical whatever the mode — only wall-clock and the
+    /// `replay_frac` column react to it).
+    pub delta: DeltaMode,
 }
 
 /// One executable point of the grid.
@@ -329,6 +335,12 @@ pub struct CellResult {
     /// scheduler could still recover at this tiling. 0 when the bound or
     /// makespan is degenerate (empty frontier, infeasible cell).
     pub makespan_over_lb: f64,
+    /// Fraction of simulated events the solver *skipped* re-executing
+    /// thanks to incremental re-simulation (verified prefix / total
+    /// events across every candidate evaluation); 0 for `sim` cells and
+    /// for `delta = "off"` grids. An execution diagnostic — it never
+    /// feeds back into any reported metric.
+    pub replay_frac: f64,
 }
 
 impl CellResult {
@@ -407,10 +419,10 @@ fn run_cell(
     }
     let base_r = report(&dag, &base);
 
-    let (sched, r, failed, lb) = match cell.mode {
+    let (sched, r, failed, lb, replay_frac) = match cell.mode {
         CellMode::Simulate => {
             let lb = makespan_lower_bound(&dag, &dag.flat_dag(), &p.machine, &p.db);
-            (base, base_r.clone(), 0, lb)
+            (base, base_r.clone(), 0, lb, 0.0)
         }
         CellMode::Solve { iters, min_edge } => {
             let mut cfg = SolverConfig::all_soft(sim, iters, min_edge);
@@ -421,14 +433,16 @@ fn run_cell(
                 lanes: grid.solve_lanes.max(1),
                 threads: cell_threads,
                 lane_specs: Vec::new(),
+                delta: grid.delta,
             };
             let res = solve_portfolio(&dag, &p.machine, &p.db, parts, reg, &cell.policy, &pcfg);
             let failed = res.history.iter().filter(|h| h.action.is_some() && !h.applied).count();
+            let replay_frac = res.replay_stats().replay_fraction();
             // bound the DAG the solver actually reports — repartitioning
             // changes both the makespan and what is achievable
             let lb = makespan_lower_bound(&res.best_dag, &res.best_dag.flat_dag(), &p.machine, &p.db);
             let r = report(&res.best_dag, &res.best_schedule);
-            (res.best_schedule, r, failed, lb)
+            (res.best_schedule, r, failed, lb, replay_frac)
         }
     };
     let e = energy(&sched, &p.machine, DEFAULT_J_PER_BYTE);
@@ -452,13 +466,14 @@ fn run_cell(
         hom_gflops: base_r.gflops,
         failed_moves: failed,
         makespan_over_lb: if lb > 0.0 && r.makespan.is_finite() { r.makespan / lb } else { 0.0 },
+        replay_frac,
     }
 }
 
 /// CSV header of [`to_csv`] rows.
 pub const CSV_HEADER: &str = "platform,workload,policy,tile,mode,seed,cell_seed,n_tasks,dag_depth,\
 makespan_s,gflops,avg_load_pct,transfer_bytes,energy_j,peak_in_flight_transfers,\
-hom_makespan_s,hom_gflops,improve_pct,failed_moves,makespan_over_lb";
+hom_makespan_s,hom_gflops,improve_pct,failed_moves,makespan_over_lb,replay_frac";
 
 /// Aggregate results as CSV, one row per cell in grid order. Fixed-width
 /// float formatting keeps the output byte-stable across runs and thread
@@ -469,7 +484,7 @@ pub fn to_csv(results: &[CellResult]) -> String {
     out.push('\n');
     for r in results {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{:.6},{:.3},{:.2},{},{:.3},{},{:.6},{:.3},{:.2},{},{:.4}\n",
+            "{},{},{},{},{},{},{},{},{},{:.6},{:.3},{:.2},{},{:.3},{},{:.6},{:.3},{:.2},{},{:.4},{:.4}\n",
             r.platform,
             r.workload,
             r.policy,
@@ -490,6 +505,7 @@ pub fn to_csv(results: &[CellResult]) -> String {
             r.improve_pct(),
             r.failed_moves,
             r.makespan_over_lb,
+            r.replay_frac,
         ));
     }
     out
@@ -520,6 +536,7 @@ pub fn to_json(results: &[CellResult]) -> String {
             o.insert("improve_pct".into(), Json::Num(r.improve_pct()));
             o.insert("failed_moves".into(), Json::Num(r.failed_moves as f64));
             o.insert("makespan_over_lb".into(), Json::Num(r.makespan_over_lb));
+            o.insert("replay_frac".into(), Json::Num(r.replay_frac));
             Json::Obj(o)
         })
         .collect();
@@ -548,6 +565,7 @@ pub fn write_sweep_bundle(dir: &Path, results: &[CellResult]) -> std::io::Result
 /// cache       = "wb"               # optional: wb | wt | wa
 /// solve_lanes = 4                  # optional: portfolio lanes per solve cell
 /// solve_batch = 2                  # optional: candidates evaluated per iter
+/// delta       = "auto"             # optional: on | off | auto (incremental re-simulation)
 /// ```
 pub fn grid_from_toml(text: &str) -> anyhow::Result<SweepGrid> {
     use anyhow::anyhow;
@@ -653,7 +671,23 @@ pub fn grid_from_toml(text: &str) -> anyhow::Result<SweepGrid> {
     let solve_lanes = pos_int("solve_lanes")?;
     let solve_batch = pos_int("solve_batch")?;
 
-    Ok(SweepGrid { platforms, workloads, policies, tiles, modes, seeds, cache, solve_lanes, solve_batch })
+    let delta = match doc.get("delta").and_then(|v| v.as_str()) {
+        Some(s) => DeltaMode::from_name(s).ok_or_else(|| anyhow!("bad delta mode '{s}' (on | off | auto)"))?,
+        None => DeltaMode::Off,
+    };
+
+    Ok(SweepGrid {
+        platforms,
+        workloads,
+        policies,
+        tiles,
+        modes,
+        seeds,
+        cache,
+        solve_lanes,
+        solve_batch,
+        delta,
+    })
 }
 
 #[cfg(test)]
@@ -735,6 +769,7 @@ mod tests {
             cache: CachePolicy::WriteBack,
             solve_lanes: 1,
             solve_batch: 1,
+            delta: DeltaMode::Off,
         };
         let cells = grid.expand();
         // cholesky keeps only tile 64; stencil keeps both tiles

@@ -22,6 +22,10 @@
 //!    assignment, at the assignment's own times.
 //! 7. **Busy accounting** — per-processor busy seconds equal the summed
 //!    assignment durations.
+//! 8. **No stale records** — every task event references a task of *this*
+//!    frontier on a processor of *this* machine, and `proc_busy` carries
+//!    no extra entries. A recycled scratch `Schedule` whose reset was
+//!    skipped would leak records from a previous run here.
 //!
 //! The portfolio solver runs this oracle on every accepted candidate
 //! schedule in debug builds, and the sweep harness on every cell baseline;
@@ -228,6 +232,34 @@ pub fn validate_schedule(
         }
     }
 
+    // ---- 8. no stale records ----
+    // the solver recycles discarded Schedule buffers through a scratch
+    // pool; a skipped reset would surface as events referencing another
+    // run's tasks, or as proc_busy entries past this machine's width
+    for e in &sched.events {
+        let (task, proc, what) = match e.kind {
+            EventKind::TaskStart { task, proc } => (task, proc, "TaskStart"),
+            EventKind::TaskEnd { task, proc } => (task, proc, "TaskEnd"),
+            _ => continue,
+        };
+        if !pos_of.contains_key(&task) {
+            errs.push(format!(
+                "stale record: {what} event at {} references task {task} outside this frontier",
+                e.time
+            ));
+        }
+        if proc >= machine.n_procs() {
+            errs.push(format!("stale record: {what} event for task {task} on unknown processor {proc}"));
+        }
+    }
+    if sched.proc_busy.len() > machine.n_procs() {
+        errs.push(format!(
+            "stale record: proc_busy has {} entries for a {}-processor machine",
+            sched.proc_busy.len(),
+            machine.n_procs()
+        ));
+    }
+
     if errs.is_empty() {
         Ok(())
     } else {
@@ -356,6 +388,30 @@ mod tests {
         sched.transfers[i].end = sched.assignments[pos].start + 1e-3;
         let err = validate_schedule(&dag, &flat, &m, &sched).unwrap_err();
         assert!(err.contains("input transfer"), "{err}");
+    }
+
+    #[test]
+    fn stale_recycled_records_are_rejected() {
+        let (m, db) = setup();
+        let mut dag = cholesky::root(256);
+        cholesky::partition_uniform(&mut dag, 64);
+        let flat = dag.flat_dag();
+        let mut sched = simulate(&dag, &m, &db, sim());
+        // a leaked event from a previous run's DAG: unknown task id,
+        // stamped inside the makespan so no other invariant can fire
+        let when = sched.makespan * 0.5;
+        let stale = TaskId::MAX;
+        assert!(!flat.tasks.contains(&stale));
+        let at = sched.events.partition_point(|e| e.time <= when);
+        sched.events.insert(
+            at,
+            crate::coordinator::engine::SimEvent {
+                time: when,
+                kind: EventKind::TaskEnd { task: stale, proc: 0 },
+            },
+        );
+        let err = validate_schedule(&dag, &flat, &m, &sched).unwrap_err();
+        assert!(err.contains("stale record"), "{err}");
     }
 
     #[test]

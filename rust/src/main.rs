@@ -31,6 +31,7 @@ use anyhow::{anyhow, bail, Result};
 use hesp::bench::Table;
 use hesp::config::Platform;
 use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::delta::DeltaMode;
 use hesp::coordinator::energy::Objective;
 use hesp::coordinator::engine::{simulate_policy, SimConfig};
 use hesp::coordinator::metrics::report;
@@ -88,8 +89,8 @@ USAGE: hesp <subcommand> [--flags]
             [--workloads cholesky:N,lu:N,qr:N,layered:LxW,stencil:CxS,random:N]
             [--policies all|name,...] [--tiles 256,512,...] [--threads T]
             [--modes sim,solve:ITERS:MINEDGE | --solve --iters K --min-edge E]
-            [--solve-lanes M] [--solve-batch K] [--seeds 0,1,...]
-            [--cache wb|wt|wa] [--out bench_out/sweep.csv]
+            [--solve-lanes M] [--solve-batch K] [--delta on|off|auto]
+            [--seeds 0,1,...] [--cache wb|wt|wa] [--out bench_out/sweep.csv]
             (parallel scenario grid; cells get content-derived seeds, so any
             --threads count emits a byte-identical aggregate CSV/JSON bundle.
             bare --quick = the self-contained 384-cell CI smoke grid)
@@ -107,12 +108,17 @@ USAGE: hesp <subcommand> [--flags]
   solve     --platform F | --quick   --n N [--tiles ...] [--iters K]
             [--candidates all|cp|shallow] [--sampling hard|soft] [--min-edge E]
             [--objective makespan|energy|edp] [--policy NAME]
-            [--threads T] [--portfolio M] [--batch K] [--out FILE.json]
+            [--threads T] [--portfolio M] [--batch K] [--delta on|off|auto]
+            [--out FILE.json] [--bench-json FILE.json]
             (Table 1 rows; the parallel portfolio solver runs M restart
             lanes x K-candidate batches over T workers — byte-identical
-            output for any T. --out writes the canonical solver JSON the
-            CI determinism smoke cmps; bare --quick = self-contained
-            bujaruelo smoke cell)
+            output for any T. --delta enables incremental re-simulation:
+            candidates replay from the nearest checkpoint of the incumbent
+            run when provably equivalent, full simulation otherwise — the
+            canonical JSON is identical in every mode; replay counters go
+            to stdout and --bench-json only. --out writes the canonical
+            solver JSON the CI determinism smoke cmps; bare --quick =
+            self-contained bujaruelo smoke cell)
   online    --platform F --n N --tile B [--min-edge E] [--policy NAME]
             (constructive per-task-arrival partitioner, paper §4)
   table1    --platform F --n N [--tiles ...] [--iters K]  (full Table 1 + new policies)
@@ -230,6 +236,14 @@ fn default_tiles(n: u32) -> Vec<usize> {
         .collect()
 }
 
+/// Parse `--delta on|off|auto` (default `auto`: incremental re-simulation
+/// wherever the lane policy is provably replay-safe, full evaluation
+/// elsewhere — the result bytes are identical in every mode).
+fn delta_flag(args: &Args) -> Result<DeltaMode> {
+    let s = args.str_lower_or("delta", "auto");
+    DeltaMode::from_name(&s).ok_or_else(|| anyhow!("bad --delta '{s}' (on | off | auto)"))
+}
+
 /// Build the declarative scenario grid for `hesp sweep`: an explicit
 /// `--grid FILE.toml` wins; `--quick` (without a platform) is the
 /// self-contained CI smoke grid; otherwise the grid comes from flags.
@@ -237,7 +251,12 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
     use anyhow::Context;
     if let Some(path) = args.get("grid") {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading grid file {path}"))?;
-        return sweep::grid_from_toml(&text);
+        let mut grid = sweep::grid_from_toml(&text)?;
+        // the CLI knob overrides the grid file only when explicitly given
+        if args.has("delta") {
+            grid.delta = delta_flag(args)?;
+        }
+        return Ok(grid);
     }
 
     let reg = PolicyRegistry::standard();
@@ -265,6 +284,7 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
             cache,
             solve_lanes: 1,
             solve_batch: 1,
+            delta: delta_flag(args)?,
         });
     }
 
@@ -350,8 +370,20 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
 
     let solve_lanes = args.usize_or("solve-lanes", 1).max(1);
     let solve_batch = args.usize_or("solve-batch", 1).max(1);
+    let delta = delta_flag(args)?;
 
-    Ok(SweepGrid { platforms, workloads, policies, tiles, modes, seeds, cache, solve_lanes, solve_batch })
+    Ok(SweepGrid {
+        platforms,
+        workloads,
+        policies,
+        tiles,
+        modes,
+        seeds,
+        cache,
+        solve_lanes,
+        solve_batch,
+        delta,
+    })
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
@@ -597,6 +629,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let threads = args.usize_or("threads", sweep::default_threads());
     let lanes = args.usize_or("portfolio", if quick { 4 } else { 1 });
     let batch = args.usize_or("batch", if quick { 2 } else { 1 });
+    let delta = delta_flag(args)?;
     let mut pol = build_policy(args, &p)?;
     let policy_name = pol.name().to_string();
 
@@ -605,7 +638,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("no legal tile size in {tiles:?} for n={n}"))?;
     print_report(&format!("best homogeneous (b={hb}, {policy_name})"), &hdag, &hsched);
 
-    let pcfg = PortfolioConfig { base: scfg, batch, lanes, threads, lane_specs: Vec::new() };
+    let pcfg = PortfolioConfig { base: scfg, batch, lanes, threads, lane_specs: Vec::new(), delta };
     let reg = PolicyRegistry::standard();
     anyhow::ensure!(
         reg.get(&policy_name).is_some(),
@@ -624,6 +657,48 @@ fn cmd_solve(args: &Args) -> Result<()> {
         "improvement: {imp:.2}%  ({lanes} lanes x {batch}-candidate batches x {} iters on {threads} threads, {dt:.2}s)",
         scfg.iters
     );
+    // replay counters live OUTSIDE the canonical solver JSON: stdout and
+    // the --bench-json record are their only outlets, so the byte-compared
+    // artifact stays identical across --delta modes
+    let st = res.replay_stats();
+    if delta.enabled() {
+        println!(
+            "delta[{}]: {:.1}% of events skipped via verified replay ({}/{} events, {} cache hits, {} full fallbacks)",
+            delta.name(),
+            100.0 * st.replay_fraction(),
+            st.events_replayed,
+            st.events_total,
+            st.cache_hits,
+            st.full_fallbacks
+        );
+    }
+
+    if let Some(bj) = args.get("bench-json") {
+        use hesp::util::json::Json;
+        let evals: usize = res.history.iter().map(|h| h.evaluated).sum();
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("name".into(), Json::Str("solve".into()));
+        o.insert("n".into(), Json::Num(n as f64));
+        o.insert("iters".into(), Json::Num(scfg.iters as f64));
+        o.insert("lanes".into(), Json::Num(lanes as f64));
+        o.insert("batch".into(), Json::Num(batch as f64));
+        o.insert("threads".into(), Json::Num(threads as f64));
+        o.insert("delta".into(), Json::Str(delta.name().into()));
+        o.insert("wall_s".into(), Json::Num(dt));
+        o.insert("candidate_evals".into(), Json::Num(evals as f64));
+        o.insert("evals_per_s".into(), Json::Num(evals as f64 / dt.max(1e-9)));
+        o.insert("events_replayed".into(), Json::Num(st.events_replayed as f64));
+        o.insert("events_total".into(), Json::Num(st.events_total as f64));
+        o.insert("cache_hits".into(), Json::Num(st.cache_hits as f64));
+        o.insert("full_fallbacks".into(), Json::Num(st.full_fallbacks as f64));
+        o.insert("replay_frac".into(), Json::Num(st.replay_fraction()));
+        let path = std::path::PathBuf::from(bj);
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, Json::Obj(o).to_string())?;
+        println!("bench record -> {}", path.display());
+    }
 
     if let Some(out) = args.get("out") {
         let path = std::path::PathBuf::from(out);

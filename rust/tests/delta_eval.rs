@@ -1,0 +1,178 @@
+//! Delta-vs-full equivalence property suite (ISSUE 8 tentpole pin).
+//!
+//! Incremental re-simulation (`--delta`) is an *execution strategy*: the
+//! portfolio solver may restore a checkpoint of the incumbent run and
+//! replay only the unverifiable remainder of a candidate, but the
+//! resulting trajectory — every candidate cost, every accepted action,
+//! every lane winner — must be byte-identical to full re-simulation.
+//! This suite drives that claim over randomized workloads, every registry
+//! policy (including the replay-ineligible stateful-select ones, which
+//! must degrade to counted full runs), both reference machine shapes, and
+//! several thread counts, comparing the canonical `result_json` bytes.
+//! It also pins that the replay counters are themselves deterministic and
+//! that the scratch-schedule pool leaks no state between solves.
+
+use hesp::coordinator::delta::DeltaMode;
+use hesp::coordinator::engine::SimConfig;
+use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
+use hesp::coordinator::perfmodel::{PerfCurve, PerfDb};
+use hesp::coordinator::platform::{Machine, MachineBuilder};
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::policy::PolicyRegistry;
+use hesp::coordinator::solver::{result_json, solve_portfolio, PortfolioConfig, SolverConfig};
+use hesp::coordinator::taskdag::TaskDag;
+use hesp::coordinator::workloads;
+
+/// 4 equal CPUs in one space: the contention-free baseline.
+fn flat_machine() -> (Machine, PerfDb) {
+    let mut b = MachineBuilder::new("flat");
+    let h = b.space("host", u64::MAX);
+    b.main(h);
+    let t = b.proc_type("cpu", 1.0, 0.1);
+    b.processors(4, "c", t, h);
+    let mut db = PerfDb::new();
+    db.set_fallback(0, PerfCurve::Saturating { peak: 20.0, half: 64.0, exponent: 2.0 });
+    (b.build(), db)
+}
+
+/// CPU + 2 GPUs in separate spaces behind narrow links: transfers, link
+/// contention and arrival gates shift candidate timings, so verified-
+/// prefix scans see real divergences, not just structural ones.
+fn het_machine() -> (Machine, PerfDb) {
+    let mut b = MachineBuilder::new("het");
+    let h = b.space("host", u64::MAX);
+    let g0 = b.space("g0", u64::MAX);
+    let g1 = b.space("g1", u64::MAX);
+    b.main(h);
+    b.connect(h, g0, 1e-6, 5e7);
+    b.connect(h, g1, 1e-6, 5e7);
+    let cpu = b.proc_type("cpu", 1.0, 0.1);
+    let gpu = b.proc_type("gpu", 2.0, 0.2);
+    b.processors(2, "c", cpu, h);
+    b.processors(1, "a", gpu, g0);
+    b.processors(1, "b", gpu, g1);
+    let mut db = PerfDb::new();
+    db.set_fallback(0, PerfCurve::Const { gflops: 2.0 });
+    db.set_fallback(1, PerfCurve::Saturating { peak: 30.0, half: 48.0, exponent: 2.0 });
+    (b.build(), db)
+}
+
+/// Workloads whose solver moves produce adversarial affected cones: the
+/// pre-tiled Cholesky's moves hit interior clusters (mid-trace cones),
+/// the untiled root's first move changes *everything* (empty verified
+/// prefix — the forced full-fallback path), and the random layered DAGs
+/// randomize which part of the decision log survives each move.
+fn workload_set() -> Vec<(String, TaskDag)> {
+    let mut out = Vec::new();
+    let mut chol = cholesky::root(256);
+    cholesky::partition_uniform(&mut chol, 64);
+    out.push(("cholesky:256/64".to_string(), chol));
+    out.push(("cholesky:512-root".to_string(), cholesky::root(512)));
+    out.push(("stencil:6x4".to_string(), workloads::stencil(6, 4, 32)));
+    for seed in 0..3u64 {
+        out.push((format!("random:48#{seed}"), workloads::random_layered(48, 32, seed)));
+    }
+    out
+}
+
+fn pcfg(seed: u64, delta: DeltaMode) -> PortfolioConfig {
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_seed(seed);
+    let mut base = SolverConfig::all_soft(sim, 6, 16);
+    base.seed = seed;
+    let mut p = PortfolioConfig::new(base);
+    p.lanes = 2;
+    p.batch = 2;
+    p.threads = 2;
+    p.delta = delta;
+    p
+}
+
+#[test]
+fn delta_on_is_byte_identical_to_full_for_every_policy_workload_machine() {
+    let reg = PolicyRegistry::standard();
+    let parts = PartitionerSet::standard();
+    let mut pairs = 0usize;
+    let mut engaged = 0usize;
+    for (m, db) in &[flat_machine(), het_machine()] {
+        for (label, dag) in workload_set() {
+            for name in reg.names() {
+                let seed = 0xde17a ^ pairs as u64;
+                let off = solve_portfolio(dag, m, db, &parts, &reg, name, &pcfg(seed, DeltaMode::Off));
+                let on = solve_portfolio(dag, m, db, &parts, &reg, name, &pcfg(seed, DeltaMode::On));
+                assert_eq!(
+                    result_json(&off),
+                    result_json(&on),
+                    "{}/{label}/{name}: delta changed the canonical solve bytes",
+                    m.name
+                );
+                assert_eq!(off.replay_stats(), Default::default(), "{name}: off mode counted something");
+                let st = on.replay_stats();
+                assert!(
+                    st.events_replayed <= st.events_total,
+                    "{}/{label}/{name}: {st:?}",
+                    m.name
+                );
+                if st.events_total > 0 {
+                    engaged += 1;
+                }
+                pairs += 1;
+            }
+        }
+    }
+    assert!(pairs >= 2 * 6 * 10, "coverage shrank: {pairs} delta/full pairs compared");
+    // the cone machinery must actually run for the replay-eligible
+    // majority of the registry — not just silently fall back everywhere
+    assert!(
+        engaged * 2 > pairs,
+        "verified-prefix scans engaged on only {engaged}/{pairs} solves"
+    );
+}
+
+#[test]
+fn replay_counters_are_thread_count_invariant() {
+    // the counters live outside result_json, but they still aggregate
+    // deterministically: same trajectory, same scans, same sums — no
+    // matter how the lanes and batch evaluations spread over workers
+    let reg = PolicyRegistry::standard();
+    let parts = PartitionerSet::standard();
+    let (m, db) = het_machine();
+    let dag = {
+        let mut d = cholesky::root(256);
+        cholesky::partition_uniform(&mut d, 64);
+        d
+    };
+    let mut one = pcfg(11, DeltaMode::On);
+    one.threads = 1;
+    let mut four = pcfg(11, DeltaMode::On);
+    four.threads = 4;
+    let r1 = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &one);
+    let r4 = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &four);
+    assert_eq!(result_json(&r1), result_json(&r4));
+    assert_eq!(r1.replay_stats(), r4.replay_stats());
+    assert!(r1.replay_stats().events_total > 0, "{:?}", r1.replay_stats());
+}
+
+#[test]
+fn scratch_pool_reuse_leaks_nothing_between_solves() {
+    // interleave solves over different DAGs/machines so recycled scratch
+    // schedules and checkpoints from one solve are reused by the next; a
+    // stale record surviving the reset would shift some candidate's cost
+    // and break the byte-equality of the repeat run
+    let reg = PolicyRegistry::standard();
+    let parts = PartitionerSet::standard();
+    let (fm, fdb) = flat_machine();
+    let (hm, hdb) = het_machine();
+    let dag_a = cholesky::root(512);
+    let dag_b = workloads::random_layered(48, 32, 1);
+
+    let first = solve_portfolio(&dag_a, &fm, &fdb, &parts, &reg, "pl/eft-p", &pcfg(3, DeltaMode::On));
+    // pollute the pools with unrelated work (different machine, shape,
+    // policy — including a replay-ineligible stateful-select one)
+    let _ = solve_portfolio(&dag_b, &hm, &hdb, &parts, &reg, "fcfs/r-p", &pcfg(4, DeltaMode::On));
+    let _ = solve_portfolio(&dag_b, &fm, &fdb, &parts, &reg, "pl/lookahead", &pcfg(5, DeltaMode::Auto));
+    let again = solve_portfolio(&dag_a, &fm, &fdb, &parts, &reg, "pl/eft-p", &pcfg(3, DeltaMode::On));
+
+    assert_eq!(result_json(&first), result_json(&again), "scratch reuse changed a repeat solve");
+    assert_eq!(first.replay_stats(), again.replay_stats());
+}

@@ -28,6 +28,25 @@ fn fixture_triggers_hashmap_iter_exactly_once() {
 }
 
 #[test]
+fn fixture_triggers_checkpoint_hash_exactly_once() {
+    // A per-process-keyed std hasher next to checkpoint/signature code
+    // would make identical frontier states hash differently across runs.
+    let r = lint_one(
+        "src/coordinator/fixture.rs",
+        "fn sig(xs: &[u64]) -> u64 {\n    let mut h = std::collections::hash_map::DefaultHasher::new();\n    for x in xs {\n        h.write_u64(*x);\n    }\n    h.finish()\n}\n",
+    );
+    assert_eq!(r.findings.len(), 1, "{:?}", r.findings);
+    assert_eq!(r.findings[0].rule, "det/checkpoint-hash");
+    assert_eq!(r.findings[0].line, 2);
+    // The same code outside coordinator/ is out of scope for this rule.
+    let out_of_scope = lint_one(
+        "src/util/fixture.rs",
+        "fn sig() -> std::collections::hash_map::DefaultHasher {\n    std::collections::hash_map::DefaultHasher::new()\n}\n",
+    );
+    assert_eq!(out_of_scope.findings.len(), 0, "{:?}", out_of_scope.findings);
+}
+
+#[test]
 fn fixture_triggers_wall_clock_exactly_once() {
     let r = lint_one(
         "src/coordinator/fixture.rs",

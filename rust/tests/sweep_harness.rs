@@ -4,6 +4,7 @@
 //! portfolio solver inside solve-mode cells is thread-count-invariant.
 
 use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::delta::DeltaMode;
 use hesp::coordinator::engine::SimConfig;
 use hesp::coordinator::partitioners::PartitionerSet;
 use hesp::coordinator::perfmodel::{PerfCurve, PerfDb};
@@ -40,6 +41,9 @@ fn grid() -> SweepGrid {
         cache: CachePolicy::WriteBack,
         solve_lanes: 1,
         solve_batch: 1,
+        // Auto on purpose: every solve-mode determinism assertion in this
+        // file then also pins "incremental re-simulation changes no bytes"
+        delta: DeltaMode::Auto,
     }
 }
 
