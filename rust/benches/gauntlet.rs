@@ -1,0 +1,151 @@
+//! Classic-scheduler gauntlet: HeSP's solve mode (joint
+//! scheduling-partitioning) against tuned classic list schedulers —
+//! HEFT (comm-aware upward ranks), PEFT (optimistic cost table) and DLS
+//! (dynamic levels) — plus the paper's own PL/EFT-P row, on both
+//! reference platforms (BUJARUELO CPU-GPU, ODROID big.LITTLE). The
+//! figure of merit is `makespan / lower_bound` per policy: the classic
+//! rows get their best homogeneous tile (phase 1 tunes each policy over
+//! the tile axis), then every policy also runs one solve-mode cell from
+//! that tile, so the table separates what a better *schedule* buys from
+//! what a better *partition* buys (the paper's Table 1 / Fig 5 axis).
+//!
+//! The bench doubles as a determinism gate: both phases are re-run
+//! single-threaded and must reproduce the parallel run's CSV bytes.
+//!
+//! Flags: --iters N (default 200), --threads T, --lanes M, --batch K,
+//! --quick (smaller problems for CI), --out FILE.json
+
+use std::collections::BTreeMap;
+
+use hesp::bench::Table;
+use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::delta::DeltaMode;
+use hesp::coordinator::sweep::{self, CellMode, SweepCell, SweepGrid, SweepPlatform, Workload};
+use hesp::util::cli::Args;
+use hesp::util::json::Json;
+
+/// The gauntlet lineup: the paper's best list heuristic, then the three
+/// classic baselines.
+const POLICIES: [&str; 4] = ["pl/eft-p", "cls/heft", "cls/peft", "cls/dls"];
+
+#[allow(clippy::too_many_arguments)]
+fn run_platform(
+    config: &str,
+    n: u32,
+    tiles: &[u32],
+    min_edge: u32,
+    iters: usize,
+    threads: usize,
+    portfolio: (usize, usize),
+    record: &mut BTreeMap<String, Json>,
+) {
+    let platform = SweepPlatform::from_file(config).expect("config");
+    let machine_name = platform.name.clone();
+    println!("\n== GAUNTLET — {machine_name} ({n}x{n} Cholesky) ==");
+
+    // phase 1: tune each policy's tile on the homogeneous grid
+    let grid = SweepGrid {
+        platforms: vec![platform],
+        workloads: vec![Workload::Cholesky { n }],
+        policies: POLICIES.iter().map(|s| s.to_string()).collect(),
+        tiles: tiles.to_vec(),
+        modes: vec![CellMode::Simulate],
+        seeds: vec![0],
+        cache: CachePolicy::WriteBack,
+        solve_lanes: portfolio.0,
+        solve_batch: portfolio.1,
+        delta: DeltaMode::Auto,
+    };
+    let hom = sweep::run_sweep(&grid, threads);
+    assert_eq!(
+        sweep::to_csv(&hom),
+        sweep::to_csv(&sweep::run_sweep(&grid, 1)),
+        "{machine_name}: hom grid must not depend on the thread count"
+    );
+
+    // phase 2: per policy, one solve cell from its best homogeneous tile
+    let best_hom: Vec<&sweep::CellResult> = POLICIES
+        .iter()
+        .map(|pol| {
+            hom.iter()
+                .filter(|r| r.policy == *pol)
+                .min_by(|a, b| a.makespan.total_cmp(&b.makespan))
+                .expect("legal tiles")
+        })
+        .collect();
+    let cells: Vec<SweepCell> = best_hom
+        .iter()
+        .map(|best| SweepCell {
+            platform: 0,
+            workload: Workload::Cholesky { n },
+            policy: best.policy.clone(),
+            tile: best.tile,
+            mode: CellMode::Solve { iters, min_edge },
+            seed: 0,
+        })
+        .collect();
+    let het = sweep::run_cells(&grid, &cells, threads);
+    assert_eq!(
+        sweep::to_csv(&het),
+        sweep::to_csv(&sweep::run_cells(&grid, &cells, 1)),
+        "{machine_name}: solve cells must not depend on the thread count"
+    );
+
+    let mut table = Table::new(&[
+        "Policy", "Tile", "Hom mk/LB", "Hom GFLOPS", "Solve mk/LB", "Solve GFLOPS", "Improve %",
+    ]);
+    for (best, r) in best_hom.iter().zip(&het) {
+        let improve = if best.gflops > 0.0 { 100.0 * (r.gflops - best.gflops) / best.gflops } else { 0.0 };
+        table.row(&[
+            r.policy.clone(),
+            best.tile.to_string(),
+            format!("{:.3}", best.makespan_over_lb),
+            format!("{:.2}", best.gflops),
+            format!("{:.3}", r.makespan_over_lb),
+            format!("{:.2}", r.gflops),
+            format!("{improve:.2}"),
+        ]);
+        // the solver keeps the best state seen, and it starts from the
+        // homogeneous tiling — solve mode must never lose to its baseline
+        assert!(r.gflops >= r.hom_gflops * 0.999, "{}: solve must not lose", r.policy);
+        let mut row = BTreeMap::new();
+        row.insert("tile".to_string(), Json::Num(best.tile as f64));
+        row.insert("hom_makespan_over_lb".to_string(), Json::Num(best.makespan_over_lb));
+        row.insert("hom_gflops".to_string(), Json::Num(best.gflops));
+        row.insert("solve_makespan_over_lb".to_string(), Json::Num(r.makespan_over_lb));
+        row.insert("solve_gflops".to_string(), Json::Num(r.gflops));
+        record.insert(format!("{machine_name}/{}", r.policy), Json::Obj(row));
+    }
+    table.print();
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let iters = {
+        let i = args.usize_or("iters", 200);
+        if quick {
+            i.min(60)
+        } else {
+            i
+        }
+    };
+    let threads = args.usize_or("threads", sweep::default_threads());
+    let portfolio = (args.usize_or("lanes", 1).max(1), args.usize_or("batch", 1).max(1));
+    let mut record = BTreeMap::new();
+    record.insert("name".to_string(), Json::Str("gauntlet".into()));
+    record.insert("iters".to_string(), Json::Num(iters as f64));
+    if quick {
+        run_platform("configs/bujaruelo.toml", 16_384, &[512, 1024, 2048, 4096], 128, iters, threads, portfolio, &mut record);
+        run_platform("configs/odroid.toml", 4_096, &[128, 256, 512, 1024], 64, iters, threads, portfolio, &mut record);
+    } else {
+        run_platform("configs/bujaruelo.toml", 32_768, &[512, 1024, 2048, 4096], 128, iters, threads, portfolio, &mut record);
+        run_platform("configs/odroid.toml", 8_192, &[128, 256, 512, 1024], 64, iters, threads, portfolio, &mut record);
+    }
+    let out = std::path::PathBuf::from(args.str_or("out", "bench_out/BENCH_gauntlet.json"));
+    if let Some(dir) = out.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir).expect("create bench_out");
+    }
+    std::fs::write(&out, Json::Obj(record).to_string()).expect("write bench json");
+    println!("\nbench record -> {}", out.display());
+}

@@ -127,10 +127,13 @@ pub fn schedule_online_with(
     let flat = dag.flat_dag();
 
     // --- dynamic DAG state, indexed by task id (not frontier position) ---
-    let prio0 = if policy.wants_critical_times() {
-        critical_times(&dag, &flat, machine, db)
-    } else {
-        vec![0.0; flat.len()]
+    let prio0 = match policy.rank_tasks(&dag, &flat, machine, db, cfg.sim.elem_bytes) {
+        Some(r) => {
+            debug_assert_eq!(r.len(), flat.len(), "rank_tasks length != frontier size");
+            r
+        }
+        None if policy.wants_critical_times() => critical_times(&dag, &flat, machine, db),
+        None => vec![0.0; flat.len()],
     };
     // per-task: remaining predecessor count, successors (task ids),
     // release time, priority, parent cluster (for completion counting)

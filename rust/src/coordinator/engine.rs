@@ -952,13 +952,17 @@ fn run_core(
             core
         }
         None => {
-            // backflow critical times, computed only for policies that
-            // order by them (the PL family); FCFS-like policies skip the
-            // O(V+E) pass
-            prio = if policy.wants_critical_times() {
-                critical_times(dag, flat, machine, db)
-            } else {
-                vec![0.0; n]
+            // priority vector: a whole-DAG rank pass if the policy ships
+            // one (the comm-aware classics), else backflow critical
+            // times, computed only for policies that order by them (the
+            // PL family); FCFS-like policies skip the O(V+E) pass
+            prio = match policy.rank_tasks(dag, flat, machine, db, cfg.elem_bytes) {
+                Some(r) => {
+                    debug_assert_eq!(r.len(), n, "rank_tasks length != frontier size");
+                    r
+                }
+                None if policy.wants_critical_times() => critical_times(dag, flat, machine, db),
+                None => vec![0.0; n],
             };
             let mut c = EventCore::new_with(machine, db, cfg, &mut scratch);
             c.sched.assignments.resize(n, placeholder);

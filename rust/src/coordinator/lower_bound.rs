@@ -130,11 +130,23 @@ mod tests {
     }
 
     #[test]
-    fn empty_frontier_bounds_at_zero() {
+    fn single_task_frontier_bounds_positive() {
         let r = Region::new(0, 0, 8, 0, 8);
         let dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![r], vec![r]));
         let flat = dag.flat_dag();
         // a lone root is a 1-task frontier; the bound must still be positive
         assert!(makespan_lower_bound(&dag, &flat, &machine_two_types(), &db()) > 0.0);
+    }
+
+    #[test]
+    fn empty_frontier_bounds_at_zero() {
+        // the genuinely-empty case: no frontier tasks at all (the old test
+        // of this name built a lone root, which is a 1-task frontier and
+        // never reached the is_empty branch)
+        let r = Region::new(0, 0, 8, 0, 8);
+        let dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![r], vec![r]));
+        let flat = FlatDag { tasks: Vec::new(), preds: Vec::new(), succs: Vec::new() };
+        assert!(flat.is_empty());
+        assert_eq!(makespan_lower_bound(&dag, &flat, &machine_two_types(), &db()), 0.0);
     }
 }

@@ -1,13 +1,21 @@
-//! Critical-time computation for the Priority-List ordering.
+//! Rank passes over the frontier DAG: the Priority-List critical times and
+//! the communication-aware ranks of the classic list schedulers.
 //!
 //! Paper §2.1: "a priority list is built by sorting tasks by their critical
 //! times in decreasing order. Critical times are computed by averaging task
 //! processing time for all processors, and propagating them throughout the
 //! task DAG by a backflow algorithm" — i.e. the upward rank of HEFT,
 //! without transfer terms (HeSP folds transfer awareness into EFT-P).
+//!
+//! The classic baselines (`cls/heft`, `cls/peft`) put the transfer terms
+//! back: [`upward_ranks`] is HEFT's `rank_u` with mean edge-communication
+//! costs derived from region-overlap bytes and the machine's average link
+//! parameters ([`mean_comm_cost`]), and [`oct_table`] is PEFT's Optimistic
+//! Cost Table under the same cost model.
 
 use super::perfmodel::PerfDb;
 use super::platform::Machine;
+use super::task::Task;
 use super::taskdag::{FlatDag, TaskDag};
 
 /// Average execution time of each frontier task across all processors.
@@ -50,6 +58,145 @@ pub fn critical_path(flat: &FlatDag, ct: &[f64]) -> Vec<usize> {
         cur = next;
     }
     path
+}
+
+/// Mean per-edge communication-cost factors of `machine`, averaged over
+/// all ordered pairs of distinct processors (HEFT's `c̄`): returns
+/// `(lat, s_per_byte)` such that moving `b` bytes between two uniformly
+/// chosen distinct processors costs `lat + b as f64 * s_per_byte` on
+/// average. Same-space pairs contribute zero (no transfer) and multi-hop
+/// routes sum latency and inverse bandwidth per hop, mirroring
+/// [`Machine::transfer_time`]. A single-space machine (ODROID) yields
+/// `(0.0, 0.0)`, so every comm-aware rank degrades to the comm-free
+/// critical time there.
+pub fn mean_comm_cost(machine: &Machine) -> (f64, f64) {
+    let n = machine.procs.len();
+    if n < 2 {
+        return (0.0, 0.0);
+    }
+    let mut per_space = vec![0usize; machine.spaces.len()];
+    for p in &machine.procs {
+        per_space[p.space] += 1;
+    }
+    let (mut lat, mut spb) = (0.0f64, 0.0f64);
+    for a in 0..machine.spaces.len() {
+        for b in 0..machine.spaces.len() {
+            if a == b || per_space[a] == 0 || per_space[b] == 0 {
+                continue;
+            }
+            let pairs = (per_space[a] * per_space[b]) as f64;
+            for lid in machine.route(a, b) {
+                let l = &machine.links[lid];
+                lat += pairs * l.latency;
+                spb += pairs / l.bandwidth;
+            }
+        }
+    }
+    let total = (n * (n - 1)) as f64;
+    (lat / total, spb / total)
+}
+
+/// Bytes `succ` consumes from `pred`'s outputs: the overlap area of every
+/// (write, read) region pair times the element size. A read overlapping
+/// several of `pred`'s writes counts each overlap once per pair; HeSP's
+/// partitioners emit disjoint write sets, so nothing double-counts in
+/// practice. Zero means a pure control dependence (no data moves).
+pub fn edge_bytes(pred: &Task, succ: &Task, elem_bytes: u64) -> u64 {
+    let mut area = 0u64;
+    for w in &pred.writes {
+        for r in &succ.reads {
+            if let Some(x) = w.intersection(r) {
+                area += x.area();
+            }
+        }
+    }
+    area * elem_bytes
+}
+
+/// Mean communication cost of the `pred → succ` edge under the averaged
+/// link model: `lat + bytes * s_per_byte`, or 0 for edges that move no
+/// bytes (and on machines with no links at all).
+fn edge_cost(pred: &Task, succ: &Task, elem_bytes: u64, lat: f64, spb: f64) -> f64 {
+    if lat == 0.0 && spb == 0.0 {
+        return 0.0;
+    }
+    let b = edge_bytes(pred, succ, elem_bytes);
+    if b == 0 {
+        0.0
+    } else {
+        lat + b as f64 * spb
+    }
+}
+
+/// HEFT upward ranks (Topcuoglu et al. 2002, eq. 4):
+/// `rank_u[i] = w̄_i + max over successors s of (c̄_is + rank_u[s])` —
+/// [`critical_times`] plus the mean edge-communication cost on every DAG
+/// edge. Program order is topological, so one reverse sweep suffices.
+pub fn upward_ranks(dag: &TaskDag, flat: &FlatDag, machine: &Machine, db: &PerfDb, elem_bytes: u64) -> Vec<f64> {
+    let avg = avg_times(dag, flat, machine, db);
+    let (lat, spb) = mean_comm_cost(machine);
+    let mut rank = vec![0.0f64; flat.len()];
+    for i in (0..flat.len()).rev() {
+        let t = dag.task(flat.tasks[i]);
+        let mut down = 0.0f64;
+        for &s in &flat.succs[i] {
+            let c = edge_cost(t, dag.task(flat.tasks[s]), elem_bytes, lat, spb);
+            down = down.max(c + rank[s]);
+        }
+        rank[i] = avg[i] + down;
+    }
+    rank
+}
+
+/// PEFT's Optimistic Cost Table (Arabnejad & Barbosa 2014), computed per
+/// processor *type*: under the averaged communication model, same-type
+/// processors are symmetric, so the per-processor table collapses to
+/// `machine.proc_types.len()` columns. Exit tasks have all-zero rows;
+/// otherwise
+/// `OCT[i][k] = max over successors s of min over types w of
+///  (OCT[s][w] + w(s, w) + c̄_is·[w ≠ k])`
+/// — the optimistic cost of finishing everything downstream of `i` if `i`
+/// runs on a type-`k` processor. (Collapsing to types makes two same-type
+/// device spaces look transfer-free to each other; an approximation the
+/// averaged `c̄` already commits to.)
+pub fn oct_table(dag: &TaskDag, flat: &FlatDag, machine: &Machine, db: &PerfDb, elem_bytes: u64) -> Vec<Vec<f64>> {
+    let nt = machine.proc_types.len();
+    let (lat, spb) = mean_comm_cost(machine);
+    let n = flat.len();
+    let mut oct = vec![vec![0.0f64; nt]; n];
+    for i in (0..n).rev() {
+        if flat.succs[i].is_empty() {
+            continue; // exit task: optimistically nothing left downstream
+        }
+        let ti = dag.task(flat.tasks[i]);
+        for k in 0..nt {
+            let mut worst = 0.0f64;
+            for &s in &flat.succs[i] {
+                let ts = dag.task(flat.tasks[s]);
+                let c = edge_cost(ti, ts, elem_bytes, lat, spb);
+                let mut best = f64::INFINITY;
+                for (w, row) in oct[s].iter().enumerate() {
+                    let wt = db.time(w, ts.kind, ts.char_edge(), ts.flops);
+                    best = best.min(row + wt + if w == k { 0.0 } else { c });
+                }
+                worst = worst.max(best);
+            }
+            oct[i][k] = worst;
+        }
+    }
+    oct
+}
+
+/// PEFT's `rank_oct`: the mean of a task's OCT row over *processors*
+/// (each type weighted by its processor count), which is what the
+/// per-processor mean of the original formulation collapses to.
+pub fn oct_ranks(machine: &Machine, oct: &[Vec<f64>]) -> Vec<f64> {
+    let mut count = vec![0usize; machine.proc_types.len()];
+    for p in &machine.procs {
+        count[p.ptype] += 1;
+    }
+    let n = machine.procs.len().max(1) as f64;
+    oct.iter().map(|row| row.iter().zip(&count).map(|(v, &c)| v * c as f64).sum::<f64>() / n).collect()
 }
 
 #[cfg(test)]
@@ -127,5 +274,171 @@ mod tests {
         assert_eq!(path.last(), Some(&3));
         assert!(path.contains(&1), "heavy branch on critical path: {path:?}");
         assert!(!path.contains(&2));
+    }
+
+    /// Two spaces over one symmetric 1 µs / 1 GB/s link, one slow (1
+    /// GFLOPS) processor on the host side and one fast (3 GFLOPS) on the
+    /// device side — every distinct processor pair crosses the link.
+    fn het_machine_two_spaces() -> Machine {
+        let mut b = MachineBuilder::new("het");
+        let h = b.space("host", u64::MAX);
+        let g = b.space("dev", u64::MAX);
+        b.main(h);
+        b.connect(h, g, 1e-6, 1e9);
+        let slow = b.proc_type("slow", 1.0, 0.1);
+        let fast = b.proc_type("fast", 1.0, 0.1);
+        b.processors(1, "s", slow, h);
+        b.processors(1, "f", fast, g);
+        b.build()
+    }
+
+    /// The canonical 10-task HEFT example topology (Topcuoglu et al. 2002,
+    /// Fig. 2), rebuilt from region overlaps: task i writes its own band
+    /// `r[i]` and an edge i → j exists iff j reads `r[i]`. Band edges vary
+    /// per task, so execution times and edge bytes differ across the DAG.
+    ///
+    /// Edges: 0→{1..5}, 1→{7,8}, 2→6, 3→{7,8}, 4→8, 5→7, {6,7,8}→9.
+    fn topcuoglu_dag() -> TaskDag {
+        let e: [u32; 10] = [40, 35, 30, 25, 20, 15, 30, 25, 20, 35];
+        let r: Vec<Region> =
+            e.iter().enumerate().map(|(i, &ei)| Region::new(0, 100 * i as u32, 100 * i as u32 + ei, 0, ei)).collect();
+        let big = Region::new(0, 0, 1000, 0, 1000);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Gemm, vec![big], vec![big]));
+        let spec = |reads: Vec<Region>, w: usize| TaskSpec::new(TaskKind::Gemm, reads, vec![r[w]]);
+        dag.partition(
+            0,
+            vec![
+                spec(vec![], 0),
+                spec(vec![r[0]], 1),
+                spec(vec![r[0]], 2),
+                spec(vec![r[0]], 3),
+                spec(vec![r[0]], 4),
+                spec(vec![r[0]], 5),
+                spec(vec![r[2]], 6),
+                spec(vec![r[1], r[3], r[5]], 7),
+                spec(vec![r[1], r[3], r[4]], 8),
+                spec(vec![r[6], r[7], r[8]], 9),
+            ],
+            100,
+        );
+        dag
+    }
+
+    #[test]
+    fn mean_comm_cost_averages_over_processor_pairs() {
+        // single-space machine: no links, no communication term at all
+        assert_eq!(mean_comm_cost(&machine_two_types()), (0.0, 0.0));
+        // 1+1 procs across one link: both ordered pairs cross it
+        let (lat, spb) = mean_comm_cost(&het_machine_two_spaces());
+        assert!((lat - 1e-6).abs() < 1e-18);
+        assert!((spb - 1e-9).abs() < 1e-21);
+        // 2 host + 1 device procs: 4 of the 6 ordered pairs cross
+        let mut b = MachineBuilder::new("w");
+        let h = b.space("host", u64::MAX);
+        let g = b.space("dev", u64::MAX);
+        b.main(h);
+        b.connect(h, g, 3e-6, 2e9);
+        let t = b.proc_type("t", 1.0, 0.1);
+        b.processors(2, "h", t, h);
+        b.processors(1, "d", t, g);
+        let (lat, spb) = mean_comm_cost(&b.build());
+        assert!((lat - 4.0 * 3e-6 / 6.0).abs() < 1e-18);
+        assert!((spb - 4.0 / 2e9 / 6.0).abs() < 1e-21);
+    }
+
+    #[test]
+    fn edge_bytes_is_write_read_overlap_area() {
+        let dag = topcuoglu_dag();
+        let flat = dag.flat_dag();
+        // edge 0 → 1 carries r[0] (40x40 elements) at 4 B/elem
+        let (t0, t1) = (dag.task(flat.tasks[0]), dag.task(flat.tasks[1]));
+        assert_eq!(edge_bytes(t0, t1, 4), 40 * 40 * 4);
+        // no edge 1 → 2: disjoint bands share no bytes
+        assert_eq!(edge_bytes(dag.task(flat.tasks[1]), dag.task(flat.tasks[2]), 4), 0);
+    }
+
+    #[test]
+    fn upward_ranks_without_links_equal_critical_times() {
+        let dag = chain_dag();
+        let flat = dag.flat_dag();
+        let m = machine_two_types();
+        let ct = critical_times(&dag, &flat, &m, &db());
+        let ru = upward_ranks(&dag, &flat, &m, &db(), 8);
+        for (a, b) in ru.iter().zip(&ct) {
+            assert_eq!(a, b, "single-space machine: comm terms must vanish");
+        }
+    }
+
+    #[test]
+    fn upward_ranks_match_hand_computed_topcuoglu_dag() {
+        // Hand computation: w̄_i = 2e_i³·(1/1 + 1/3)/2 ns, edge cost
+        // c̄_ij = 1 µs + 4e_i²·(1 ns/B... 1/1e9 s/B), rank_u backflow.
+        let dag = topcuoglu_dag();
+        let flat = dag.flat_dag();
+        let m = het_machine_two_spaces();
+        let ranks = upward_ranks(&dag, &flat, &m, &db(), 4);
+        let expect = [
+            2.373000000000e-4,
+            1.445666666667e-4,
+            1.383666666667e-4,
+            1.058333333333e-4,
+            8.370000000000e-5,
+            8.790000000000e-5,
+            9.776666666667e-5,
+            8.150000000000e-5,
+            7.043333333333e-5,
+            5.716666666667e-5,
+        ];
+        for (i, (got, want)) in ranks.iter().zip(&expect).enumerate() {
+            assert!((got - want).abs() < 1e-12, "rank_u[{i}] = {got}, want {want}");
+        }
+        // the classic HEFT ordering for this instance
+        let mut order: Vec<usize> = (0..10).collect();
+        order.sort_by(|&a, &b| ranks[b].total_cmp(&ranks[a]));
+        assert_eq!(order, [0, 1, 2, 3, 6, 5, 4, 7, 8, 9]);
+    }
+
+    #[test]
+    fn oct_matches_hand_computed_topcuoglu_dag() {
+        let dag = topcuoglu_dag();
+        let flat = dag.flat_dag();
+        let m = het_machine_two_spaces();
+        let oct = oct_table(&dag, &flat, &m, &db(), 4);
+        let expect0 = [
+            7.498333333333e-5,
+            4.490000000000e-5,
+            5.118333333333e-5,
+            4.250000000000e-5,
+            3.651666666667e-5,
+            4.090000000000e-5,
+            3.318333333333e-5,
+            3.208333333333e-5,
+            3.118333333333e-5,
+            0.0,
+        ];
+        let expect1 = [
+            6.758333333333e-5,
+            3.900000000000e-5,
+            4.658333333333e-5,
+            3.900000000000e-5,
+            3.391666666667e-5,
+            3.900000000000e-5,
+            2.858333333333e-5,
+            2.858333333333e-5,
+            2.858333333333e-5,
+            0.0,
+        ];
+        for i in 0..10 {
+            assert!((oct[i][0] - expect0[i]).abs() < 1e-12, "OCT[{i}][slow] = {}, want {}", oct[i][0], expect0[i]);
+            assert!((oct[i][1] - expect1[i]).abs() < 1e-12, "OCT[{i}][fast] = {}, want {}", oct[i][1], expect1[i]);
+        }
+        // rank_oct = processor-count-weighted mean of the row (1+1 procs)
+        let ranks = oct_ranks(&m, &oct);
+        for i in 0..10 {
+            let want = (expect0[i] + expect1[i]) / 2.0;
+            assert!((ranks[i] - want).abs() < 1e-12, "rank_oct[{i}] = {}, want {want}", ranks[i]);
+        }
+        // exit task is optimistically free everywhere
+        assert_eq!(oct[9], vec![0.0, 0.0]);
     }
 }

@@ -26,7 +26,11 @@
 //! and [`LookaheadEftPolicy`] (EFT with one-step successor lookahead) —
 //! and two job-aware service-mode policies ([`DeadlinePolicy`],
 //! [`ShortestJobPolicy`]) that read the owning job's identity from
-//! [`SchedContext::job`] when the service layer attaches one.
+//! [`SchedContext::job`] when the service layer attaches one. The
+//! `cls/` namespace holds the classic list schedulers of the
+//! heterogeneous-scheduling literature ([`HeftPolicy`], [`PeftPolicy`],
+//! [`DlsPolicy`]) — the baselines the gauntlet bench measures the solver
+//! against.
 //!
 //! The engine, the iterative solver and the constructive scheduler all
 //! dispatch through `&mut dyn SchedPolicy`; no execution path matches on
@@ -34,12 +38,14 @@
 
 mod affinity;
 mod builtin;
+mod classic;
 mod jobaware;
 mod lookahead;
 mod registry;
 
 pub use affinity::AffinityPolicy;
 pub use builtin::BuiltinPolicy;
+pub use classic::{DlsPolicy, HeftPolicy, PeftPolicy};
 pub use jobaware::{DeadlinePolicy, ShortestJobPolicy};
 pub use lookahead::LookaheadEftPolicy;
 pub use registry::{policy_by_name, PolicyRegistry};
@@ -50,6 +56,7 @@ use super::perfmodel::PerfDb;
 use super::platform::{Machine, ProcId, Timeline};
 use super::policies::SchedConfig;
 use super::task::Task;
+use super::taskdag::{FlatDag, TaskDag};
 use crate::util::fxhash::FxHashMap;
 use crate::util::rng::Rng;
 
@@ -232,14 +239,16 @@ impl SchedContext<'_> {
             .sum()
     }
 
-    /// Per-processor `(proc, finish, pending input bytes)` estimates —
-    /// finish is `earliest_fit(data ready, exec) + exec` on the
-    /// processor's timeline, so an idle window before already-booked
-    /// work counts — from ONE shared [`plan_reads`] walk per memory
-    /// space, memoized per space and per processor type (28 procs →
-    /// 4 spaces x 3 types on BUJARUELO). The shared scan behind every
-    /// placement-scoring policy.
-    pub fn placement_estimates(&mut self, task: &Task, release: f64) -> Vec<(ProcId, f64, u64)> {
+    /// Per-processor insertion-based placement details `(proc, start,
+    /// finish, pending input bytes)` — `start` is
+    /// `earliest_fit(data ready, exec)` on the processor's booked
+    /// timeline, so the task can slot into an idle gap *before*
+    /// already-booked work (HEFT's "insertion policy"; the commit path
+    /// books through the same arithmetic, so estimates cannot drift) —
+    /// from ONE shared [`plan_reads`] walk per memory space, memoized per
+    /// space and per processor type (28 procs → 4 spaces x 3 types on
+    /// BUJARUELO). The shared scan behind every placement-scoring policy.
+    pub fn placement_details(&mut self, task: &Task, release: f64) -> Vec<(ProcId, f64, f64, u64)> {
         let mut per_space: Vec<Option<(f64, u64)>> = vec![None; self.machine.spaces.len()];
         let mut type_time: Vec<f64> = vec![f64::NAN; self.machine.proc_types.len()];
         let mut out = Vec::with_capacity(self.n_procs());
@@ -260,9 +269,15 @@ impl SchedContext<'_> {
                 type_time[ty] = self.exec_time(task, p);
             }
             let start = self.procs[p].earliest_fit(ready, type_time[ty]);
-            out.push((p, start + type_time[ty], bytes));
+            out.push((p, start, start + type_time[ty], bytes));
         }
         out
+    }
+
+    /// [`SchedContext::placement_details`] without the start column:
+    /// `(proc, finish, pending input bytes)` per processor.
+    pub fn placement_estimates(&mut self, task: &Task, release: f64) -> Vec<(ProcId, f64, u64)> {
+        self.placement_details(task, release).into_iter().map(|(p, _, fin, b)| (p, fin, b)).collect()
     }
 
     /// The EFT-P core: the processor finishing `task` first (transfer- and
@@ -300,6 +315,35 @@ pub trait SchedPolicy {
     /// dispatch is a measured hot path, and most policies never look ahead.
     fn wants_successors(&self) -> bool {
         false
+    }
+
+    /// One-shot rank pass over the whole frontier, run before the first
+    /// decision of a single-DAG simulation. Returning `Some(ranks)`
+    /// (one value per frontier position) replaces the priority vector the
+    /// engine would otherwise compute — [`super::ordering::critical_times`]
+    /// when [`SchedPolicy::wants_critical_times`], zeros otherwise — and
+    /// each task's value arrives in [`SchedPolicy::order`] as its
+    /// `critical_time` argument. The comm-aware classics hook in here:
+    /// `cls/heft` returns upward ranks, `cls/peft` builds its optimistic
+    /// cost table and returns the mean-OCT ranks.
+    ///
+    /// Contract: a policy returning `Some` must keep the default
+    /// [`SchedPolicy::static_key`] of `None` — the delta evaluator
+    /// re-derives keys from comm-free critical times and would diverge
+    /// from a custom rank vector. The streaming service layer never calls
+    /// this hook (task ids collide across concurrently-resident jobs, so
+    /// id-keyed rank state would be wrong there); policies degrade to
+    /// their `wants_critical_times` ordering in serve mode.
+    fn rank_tasks(
+        &mut self,
+        dag: &TaskDag,
+        flat: &FlatDag,
+        machine: &Machine,
+        db: &PerfDb,
+        elem_bytes: u64,
+    ) -> Option<Vec<f64>> {
+        let _ = (dag, flat, machine, db, elem_bytes);
+        None
     }
 
     /// Whether ordering keys depend on mutable simulator state and must

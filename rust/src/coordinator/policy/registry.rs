@@ -6,7 +6,10 @@
 
 use crate::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
 
-use super::{AffinityPolicy, BuiltinPolicy, DeadlinePolicy, LookaheadEftPolicy, ShortestJobPolicy, SchedPolicy};
+use super::{
+    AffinityPolicy, BuiltinPolicy, DeadlinePolicy, DlsPolicy, HeftPolicy, LookaheadEftPolicy, PeftPolicy,
+    SchedPolicy, ShortestJobPolicy,
+};
 
 type Builder = Box<dyn Fn() -> Box<dyn SchedPolicy> + Send + Sync>;
 
@@ -28,8 +31,9 @@ impl PolicyRegistry {
     }
 
     /// The built-in set: the eight Table-1 rows (`fcfs/r-p` ... `pl/eft-p`)
-    /// plus `pl/affinity`, `pl/lookahead`, and the job-aware service-mode
-    /// pair `pl/edf-p` / `pl/sjf-p`.
+    /// plus `pl/affinity`, `pl/lookahead`, the job-aware service-mode
+    /// pair `pl/edf-p` / `pl/sjf-p`, and the classic literature baselines
+    /// `cls/heft`, `cls/peft`, `cls/dls`.
     pub fn standard() -> PolicyRegistry {
         let mut reg = PolicyRegistry::empty();
         for row in SchedConfig::table1_rows() {
@@ -41,6 +45,9 @@ impl PolicyRegistry {
         reg.register("pl/lookahead", || Box::new(LookaheadEftPolicy::new()) as Box<dyn SchedPolicy>);
         reg.register("pl/edf-p", || Box::new(DeadlinePolicy::new()) as Box<dyn SchedPolicy>);
         reg.register("pl/sjf-p", || Box::new(ShortestJobPolicy::new()) as Box<dyn SchedPolicy>);
+        reg.register("cls/heft", || Box::new(HeftPolicy::new()) as Box<dyn SchedPolicy>);
+        reg.register("cls/peft", || Box::new(PeftPolicy::new()) as Box<dyn SchedPolicy>);
+        reg.register("cls/dls", || Box::new(DlsPolicy::new()) as Box<dyn SchedPolicy>);
         reg
     }
 
@@ -57,18 +64,43 @@ impl PolicyRegistry {
     /// Construct a fresh policy by name (case-insensitive). Besides exact
     /// registered names, accepts the legacy aliases the CLI always took:
     /// `"<ordering>/<select>"` with the enum spellings (`"pl/eft"`,
-    /// `"fcfs/random"`, ...) and bare suffixes resolved as `"pl/<name>"`
-    /// (`"affinity"`, `"eft-p"`, ...).
+    /// `"fcfs/random"`, ...) and bare suffixes (`"affinity"`, `"heft"`,
+    /// ...) — but only when the suffix matches exactly one registered
+    /// name. An ambiguous bare suffix (`"r-p"` matches both `fcfs/r-p`
+    /// and `pl/r-p`) resolves to nothing; [`PolicyRegistry::resolve`]
+    /// reports the candidate list.
     pub fn get(&self, name: &str) -> Option<Box<dyn SchedPolicy>> {
+        self.resolve(name).ok()
+    }
+
+    /// [`PolicyRegistry::get`] with diagnosable failure: `Err` carries
+    /// either the candidate list of an ambiguous bare suffix or an
+    /// unknown-name message, ready for CLI error output.
+    pub fn resolve(&self, name: &str) -> Result<Box<dyn SchedPolicy>, String> {
         let key = name.to_ascii_lowercase();
         if let Some((_, b)) = self.entries.iter().find(|(n, _)| *n == key) {
-            return Some(b());
+            return Ok(b());
         }
-        // bare name → priority-list variant ("affinity" == "pl/affinity")
+        // bare suffix: "affinity" == "pl/affinity", "heft" == "cls/heft".
+        // Only an unambiguous suffix resolves — "r-p" names both fcfs/r-p
+        // and pl/r-p, and silently preferring one of them misreports every
+        // comparison that meant the other
         if !key.contains('/') {
-            let pl = format!("pl/{key}");
-            if let Some((_, b)) = self.entries.iter().find(|(n, _)| *n == pl) {
-                return Some(b());
+            let cands: Vec<&(String, Builder)> = self
+                .entries
+                .iter()
+                .filter(|(n, _)| n.rsplit_once('/').is_some_and(|(_, suffix)| suffix == key))
+                .collect();
+            match cands.as_slice() {
+                [(_, b)] => return Ok(b()),
+                [] => {}
+                _ => {
+                    let names: Vec<&str> = cands.iter().map(|(n, _)| n.as_str()).collect();
+                    return Err(format!(
+                        "ambiguous policy name '{name}': could be any of {}",
+                        names.join(", ")
+                    ));
+                }
             }
         }
         // legacy enum spellings ("pl/eft", "fcfs/random", ...) resolve to
@@ -80,12 +112,12 @@ impl PolicyRegistry {
                 let canonical = SchedConfig::new(o, s).name().to_ascii_lowercase();
                 if canonical != key {
                     if let Some((_, b)) = self.entries.iter().find(|(n, _)| *n == canonical) {
-                        return Some(b());
+                        return Ok(b());
                     }
                 }
             }
         }
-        None
+        Err(format!("unknown policy '{name}' (`hesp policies` lists the registry)"))
     }
 
     /// Registered canonical names, in registration order.
@@ -113,9 +145,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn standard_has_table1_plus_four() {
+    fn standard_has_table1_plus_seven() {
         let reg = PolicyRegistry::standard();
-        assert_eq!(reg.len(), 12);
+        assert_eq!(reg.len(), 15);
         let names = reg.names();
         for expect in [
             "fcfs/r-p",
@@ -126,6 +158,9 @@ mod tests {
             "pl/lookahead",
             "pl/edf-p",
             "pl/sjf-p",
+            "cls/heft",
+            "cls/peft",
+            "cls/dls",
         ] {
             assert!(names.contains(&expect), "{expect} missing from {names:?}");
         }
@@ -141,8 +176,27 @@ mod tests {
         assert_eq!(reg.get("lookahead").unwrap().name(), "pl/lookahead");
         assert_eq!(reg.get("edf-p").unwrap().name(), "pl/edf-p");
         assert_eq!(reg.get("sjf-p").unwrap().name(), "pl/sjf-p");
+        assert_eq!(reg.get("HEFT").unwrap().name(), "cls/heft");
+        assert_eq!(reg.get("peft").unwrap().name(), "cls/peft");
+        assert_eq!(reg.get("dls").unwrap().name(), "cls/dls");
         assert!(reg.get("pl/zzz").is_none());
         assert!(reg.get("zzz").is_none());
+    }
+
+    #[test]
+    fn ambiguous_bare_suffix_is_an_error_listing_candidates() {
+        let reg = PolicyRegistry::standard();
+        // "r-p" names both fcfs/r-p and pl/r-p — the old lookup silently
+        // handed back the pl/ variant
+        assert!(reg.get("r-p").is_none());
+        let err = reg.resolve("r-p").unwrap_err();
+        assert!(err.contains("fcfs/r-p") && err.contains("pl/r-p"), "candidates missing: {err}");
+        assert!(reg.get("eft-p").is_none(), "eft-p is fcfs/eft-p or pl/eft-p");
+        // an unambiguous suffix still resolves...
+        assert_eq!(reg.resolve("heft").unwrap().name(), "cls/heft");
+        // ...and unknown names say so
+        let unknown = reg.resolve("zzz").unwrap_err();
+        assert!(unknown.contains("unknown policy"), "{unknown}");
     }
 
     #[test]

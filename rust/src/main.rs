@@ -37,7 +37,7 @@ use hesp::coordinator::engine::{simulate_policy, SimConfig};
 use hesp::coordinator::metrics::report;
 use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
 use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
-use hesp::coordinator::policy::{policy_by_name, policy_for, PolicyRegistry, SchedPolicy};
+use hesp::coordinator::policy::{policy_for, PolicyRegistry, SchedPolicy};
 use hesp::coordinator::solver::{
     best_homogeneous_with, result_json, solve_portfolio, solve_with, CandidateSelect, PortfolioConfig, Sampling,
     SolverConfig,
@@ -93,7 +93,7 @@ USAGE: hesp <subcommand> [--flags]
             [--seeds 0,1,...] [--cache wb|wt|wa] [--out bench_out/sweep.csv]
             (parallel scenario grid; cells get content-derived seeds, so any
             --threads count emits a byte-identical aggregate CSV/JSON bundle.
-            bare --quick = the self-contained 384-cell CI smoke grid)
+            bare --quick = the self-contained 480-cell CI smoke grid)
   serve     --platform F | --platforms F1,F2 | --quick
             [--arrivals poisson:R,bursty:LO:HI:DWELL,trace:FILE.jsonl]
             [--rate R] [--duration S] [--policies all|name,...] [--cap N]
@@ -174,8 +174,8 @@ fn sim_config(args: &Args, p: &Platform) -> Result<SimConfig> {
 /// platform config's `policy =` key, which beats the PL/EFT-P default.
 fn build_policy(args: &Args, p: &Platform) -> Result<Box<dyn SchedPolicy>> {
     if let Some(name) = args.get_lower("policy") {
-        return policy_by_name(&name)
-            .ok_or_else(|| anyhow!("unknown --policy '{name}' (see `hesp policies`)"));
+        // resolve() reports ambiguous bare suffixes with the candidate list
+        return PolicyRegistry::standard().resolve(&name).map_err(|e| anyhow!(e));
     }
     if !args.has("order") && !args.has("select") {
         if let Some(pol) = p.policy() {
@@ -264,8 +264,8 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
     let cache = CachePolicy::from_name(&args.str_lower_or("cache", "wb")).ok_or_else(|| anyhow!("bad --cache"))?;
 
     if args.has("quick") && !args.has("platform") && !args.has("platforms") {
-        // the CI smoke grid: 2 platforms x 4 workloads x 12 policies x
-        // 2 tiles x 2 seeds = 384 cells, sized to finish in seconds
+        // the CI smoke grid: 2 platforms x 4 workloads x 15 policies x
+        // 2 tiles x 2 seeds = 480 cells, sized to finish in seconds
         return Ok(SweepGrid {
             platforms: vec![
                 SweepPlatform::from_file("configs/bujaruelo.toml")?,
@@ -319,14 +319,14 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
             let mut out = Vec::new();
             for name in list.split(',') {
                 let name = name.trim();
-                let pol = reg.get(name).ok_or_else(|| anyhow!("unknown policy '{name}' (see `hesp policies`)"))?;
+                let pol = reg.resolve(name).map_err(|e| anyhow!(e))?;
                 out.push(pol.name().to_string());
             }
             out
         }
     } else if args.has("policy") {
         let name = args.get_lower("policy").unwrap();
-        let pol = reg.get(&name).ok_or_else(|| anyhow!("unknown --policy '{name}' (see `hesp policies`)"))?;
+        let pol = reg.resolve(&name).map_err(|e| anyhow!(e))?;
         vec![pol.name().to_string()]
     } else if args.has("order") || args.has("select") {
         // legacy shim pair restricts to the matching built-in
@@ -503,13 +503,13 @@ fn build_serve_grid(args: &Args) -> Result<ServeGrid> {
             let mut out = Vec::new();
             for name in list.split(',') {
                 let name = name.trim();
-                let pol = reg.get(name).ok_or_else(|| anyhow!("unknown policy '{name}' (see `hesp policies`)"))?;
+                let pol = reg.resolve(name).map_err(|e| anyhow!(e))?;
                 out.push(pol.name().to_string());
             }
             out
         }
     } else if let Some(name) = args.get_lower("policy") {
-        let pol = reg.get(&name).ok_or_else(|| anyhow!("unknown --policy '{name}' (see `hesp policies`)"))?;
+        let pol = reg.resolve(&name).map_err(|e| anyhow!(e))?;
         vec![pol.name().to_string()]
     } else {
         SERVE_DEFAULT_POLICIES.iter().map(|s| s.to_string()).collect()

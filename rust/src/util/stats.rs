@@ -28,11 +28,15 @@ pub fn sample_stddev(xs: &[f64]) -> f64 {
 /// Quantile `q` in `[0, 1]` of an ascending-sorted sample, with linear
 /// interpolation at fractional rank `q * (n - 1)` (the NumPy default).
 /// `q = 0.5` reproduces the textbook median, including the midpoint
-/// average for even `n`. Panics on an empty slice or `q` outside `[0, 1]`;
-/// the sortedness precondition is debug-asserted.
+/// average for even `n`. An empty sample has no quantiles and reports
+/// `NaN` — a serve scenario where every job is rejected must summarize,
+/// not panic. Panics on `q` outside `[0, 1]`; the sortedness
+/// precondition is debug-asserted.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty(), "percentile of an empty sample");
     assert!((0.0..=1.0).contains(&q), "quantile must be in [0, 1], got {q}");
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
     debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "percentile input must be sorted ascending");
     let rank = q * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
@@ -100,6 +104,13 @@ mod tests {
     #[should_panic]
     fn percentile_rejects_out_of_range_quantile() {
         percentile(&[1.0], 1.5);
+    }
+
+    #[test]
+    fn percentile_of_empty_sample_is_nan() {
+        // zero completions must flow through reporting as NaN, not panic
+        assert!(percentile(&[], 0.5).is_nan());
+        assert!(percentile(&[], 0.99).is_nan());
     }
 
     #[test]

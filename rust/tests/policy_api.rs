@@ -63,7 +63,7 @@ fn chol(n: u32, b: u32) -> TaskDag {
 fn registry_round_trips_every_name() {
     let reg = PolicyRegistry::standard();
     let names = reg.names();
-    assert_eq!(names.len(), 12, "8 Table-1 rows + affinity + lookahead + edf + sjf: {names:?}");
+    assert_eq!(names.len(), 15, "8 Table-1 rows + affinity + lookahead + edf + sjf + heft + peft + dls: {names:?}");
     for &name in &names {
         let p = reg.get(name).unwrap_or_else(|| panic!("'{name}' does not construct"));
         assert_eq!(p.name(), name, "name() must round-trip through the registry");
@@ -74,7 +74,7 @@ fn registry_round_trips_every_name() {
         let p = reg.get(&canonical).unwrap_or_else(|| panic!("Table-1 '{canonical}' missing"));
         assert_eq!(p.name(), canonical);
     }
-    for extra in ["pl/affinity", "pl/lookahead", "pl/edf-p", "pl/sjf-p"] {
+    for extra in ["pl/affinity", "pl/lookahead", "pl/edf-p", "pl/sjf-p", "cls/heft", "cls/peft", "cls/dls"] {
         assert!(names.contains(&extra), "{extra} not registered");
     }
 }
@@ -180,7 +180,7 @@ impl SchedPolicy for PinToZero {
 fn user_policies_register_and_drive_the_engine() {
     let mut reg = PolicyRegistry::standard();
     reg.register("test/pin-zero", || Box::new(PinToZero) as Box<dyn SchedPolicy>);
-    assert_eq!(reg.len(), 13);
+    assert_eq!(reg.len(), 16);
     let mut pol = reg.get("test/pin-zero").unwrap();
     assert_eq!(pol.name(), "test/pin-zero");
 
@@ -203,7 +203,7 @@ fn solver_dispatches_through_trait_policies() {
         let mut eft = policy_by_name("pl/eft-p").unwrap();
         simulate_policy(&dag, &m, &db, SimConfig::new(SchedConfig::table1_rows()[7]), eft.as_mut())
     };
-    for name in ["pl/affinity", "pl/lookahead"] {
+    for name in ["pl/affinity", "pl/lookahead", "cls/heft"] {
         let mut pol = policy_by_name(name).unwrap();
         let cfg = SolverConfig::all_soft(SimConfig::new(SchedConfig::table1_rows()[7]), 25, 64);
         let res = solve_with(dag.clone(), &m, &db, &PartitionerSet::standard(), cfg, pol.as_mut());
@@ -219,7 +219,7 @@ fn solver_dispatches_through_trait_policies() {
 fn constructive_dispatches_through_trait_policies() {
     let (m, db) = cpu_machine();
     let dag = chol(512, 128);
-    for name in ["pl/lookahead", "pl/affinity", "fcfs/eit-p"] {
+    for name in ["pl/lookahead", "pl/affinity", "fcfs/eit-p", "cls/heft", "cls/peft", "cls/dls"] {
         let mut pol = policy_by_name(name).unwrap();
         let cfg = OnlineConfig::new(SimConfig::new(SchedConfig::table1_rows()[7]), 64);
         let res = schedule_online_with(&dag, &m, &db, &PartitionerSet::standard(), cfg, pol.as_mut());

@@ -54,6 +54,27 @@ fn serve_bundle_is_byte_identical_across_thread_counts() {
 }
 
 #[test]
+fn zero_completions_scenario_summarizes_without_panicking() {
+    // queue capacity 0 + reject admission: every job in every stream is
+    // turned away, so metrics summarize zero completions — the path that
+    // used to die in `stats::percentile` on an empty sojourn sample
+    let mut g = grid();
+    g.queue_cap = 0;
+    g.admission = Admission::Reject;
+    let rows = service::run_serve(&g, 2).unwrap();
+    assert_eq!(rows.len(), 12);
+    assert!(rows.iter().map(|r| r.submitted).sum::<usize>() > 0, "streams must still carry jobs");
+    for r in &rows {
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.rejected, r.submitted, "every submitted job is rejected at cap 0");
+        assert_eq!(r.p99_sojourn, 0.0);
+        assert_eq!(r.throughput_jps, 0.0);
+    }
+    // the bundle serializers must accept the degenerate rows byte-stably
+    assert_eq!(service::to_csv(&rows), service::to_csv(&service::run_serve(&g, 1).unwrap()));
+}
+
+#[test]
 fn arrival_streams_are_deterministic_and_shared_across_policies() {
     // pure function of (label, seed)
     for spec in [ArrivalSpec::Poisson { rate: 6.0 }, ArrivalSpec::Bursty { lo: 2.0, hi: 20.0, dwell: 0.2 }] {

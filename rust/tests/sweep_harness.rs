@@ -67,6 +67,24 @@ fn parallel_run_is_byte_identical_to_serial() {
 }
 
 #[test]
+fn classic_policies_keep_thread_count_identity() {
+    // the cls/ trio computes comm-aware ranks up front (HEFT/PEFT) or
+    // re-keys the ready queue at every decision (DLS) — none of which may
+    // depend on the worker count, in sim or solve cells
+    let mut g = grid();
+    g.policies = vec!["cls/heft".into(), "cls/peft".into(), "cls/dls".into()];
+    let serial = sweep::run_sweep(&g, 1);
+    let parallel = sweep::run_sweep(&g, 4);
+    assert_eq!(serial.len(), g.expand().len());
+    assert_eq!(
+        sweep::to_csv(&serial),
+        sweep::to_csv(&parallel),
+        "classic-policy CSV must not depend on the thread count"
+    );
+    assert_eq!(sweep::to_json(&serial), sweep::to_json(&parallel));
+}
+
+#[test]
 fn cell_seeds_are_stable_under_grid_reordering() {
     let g = grid();
     let forward = sweep::run_sweep(&g, 2);
