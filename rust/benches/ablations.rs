@@ -141,6 +141,7 @@ fn main() {
                 threads,
                 lane_specs: Vec::new(),
                 delta: DeltaMode::Auto,
+                faults: None,
             };
             let t0 = std::time::Instant::now();
             let res = solve_portfolio(&hdag, &p.machine, &p.db, &parts, &reg, "pl/eft-p", &pcfg);

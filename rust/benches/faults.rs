@@ -1,0 +1,310 @@
+//! Fault-injection bench (BENCH_faults.json): what deterministic faults
+//! cost, and what failure-aware solving buys back, on both reference
+//! platforms (BUJARUELO CPU-GPU, ODROID big.LITTLE).
+//!
+//! Three measurements:
+//!
+//! 1. **degradation curve** — expected makespan (ensemble mean) vs the
+//!    transient fault rate for `pl/eft-p` on a fixed tiling, with the
+//!    mean task recovery latency (fault -> next retry start)
+//!    reconstructed from the event log;
+//! 2. **headline** — a fault-*oblivious* portfolio solve priced after
+//!    the fact against the shipped `configs/faults_quick.toml` ensemble,
+//!    vs a fault-*aware* solve (`PortfolioConfig::faults`) warm-started
+//!    from the oblivious winner. The aware run's incumbent starts at the
+//!    oblivious winner's expected cost and only ever improves, so
+//!    `aware <= oblivious` is a construction invariant this bench
+//!    asserts, not a hope;
+//! 3. **determinism gate** — a fault-axis sweep re-run single-threaded
+//!    must reproduce the 4-thread run's CSV bytes.
+//!
+//! Flags: --iters N (default 120), --threads T, --members M (default 5),
+//! --quick (smaller problems for CI), --out FILE.json
+
+use std::collections::BTreeMap;
+
+use hesp::bench::Table;
+use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::delta::DeltaMode;
+use hesp::coordinator::engine::{simulate_flat_faults, EventKind, Schedule, SimConfig};
+use hesp::coordinator::faults::{FaultEnsemble, FaultPlan, FaultSpec};
+use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::policy::PolicyRegistry;
+use hesp::coordinator::solver::{solve_portfolio, PortfolioConfig, SolverConfig};
+use hesp::coordinator::sweep::{self, CellMode, SweepGrid, SweepPlatform, Workload};
+use hesp::coordinator::taskdag::TaskDag;
+use hesp::util::cli::Args;
+use hesp::util::json::Json;
+
+const SPEC_FILE: &str = "configs/faults_quick.toml";
+
+/// Mean fault->retry-start latency over every recovered attempt in the
+/// log (a task's fault is "recovered" at its next start), plus the
+/// number of faults injected.
+fn recovery_stats(s: &Schedule) -> (f64, usize) {
+    let mut pending: Vec<(usize, f64)> = Vec::new(); // (task, fault time)
+    let mut total = 0.0;
+    let mut recovered = 0usize;
+    let mut faults = 0usize;
+    for e in &s.events {
+        match e.kind {
+            EventKind::TaskFault { task, .. } => {
+                faults += 1;
+                pending.push((task, e.time));
+            }
+            EventKind::TaskStart { task, .. } => {
+                if let Some(i) = pending.iter().position(|&(t, _)| t == task) {
+                    let (_, at) = pending.swap_remove(i);
+                    total += e.time - at;
+                    recovered += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    (if recovered > 0 { total / recovered as f64 } else { 0.0 }, faults)
+}
+
+/// Expected makespan of `dag` over the ensemble (mean over members, as
+/// the solver prices it: any exhausted member poisons the whole mean),
+/// plus aggregate recovery stats of the finite members.
+fn ensemble_price(
+    dag: &TaskDag,
+    p: &SweepPlatform,
+    sim: SimConfig,
+    reg: &PolicyRegistry,
+    spec: &FaultSpec,
+    members: u64,
+) -> (f64, f64, usize, usize) {
+    let flat = dag.flat_dag();
+    // an empty spec draws identical members, but a k-member mean would
+    // re-associate the float sum ((m+m+..)/k != m bitwise) — collapse to
+    // one member, exactly as the solver normalizes empty ensembles away
+    let members = if spec.is_empty() { 1 } else { members };
+    let mut sum = 0.0;
+    let mut poisoned = false;
+    let mut lat_sum = 0.0;
+    let mut lat_n = 0usize;
+    let mut faults = 0usize;
+    let mut exhausted = 0usize;
+    for member in 0..members {
+        let plan = FaultPlan::new(spec, member);
+        let mut pol = reg.get("pl/eft-p").expect("registry policy");
+        let s = simulate_flat_faults(dag, &flat, &p.machine, &p.db, sim, pol.as_mut(), &plan);
+        if s.makespan.is_finite() {
+            sum += s.makespan;
+            let (lat, f) = recovery_stats(&s);
+            if f > 0 {
+                lat_sum += lat;
+                lat_n += 1;
+            }
+            faults += f;
+        } else {
+            poisoned = true;
+            exhausted += 1;
+        }
+    }
+    let expected = if poisoned { f64::INFINITY } else { sum / members as f64 };
+    (expected, if lat_n > 0 { lat_sum / lat_n as f64 } else { 0.0 }, faults, exhausted)
+}
+
+fn run_platform(
+    config: &str,
+    n: u32,
+    tile: u32,
+    min_edge: u32,
+    iters: usize,
+    threads: usize,
+    members: u64,
+    record: &mut BTreeMap<String, Json>,
+) {
+    let p = SweepPlatform::from_file(config).expect("config");
+    let reg = PolicyRegistry::standard();
+    let machine_name = p.name.clone();
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(p.elem_bytes);
+    println!("\n== FAULTS — {machine_name} ({n}x{n} Cholesky, tile {tile}, {members}-member ensembles) ==");
+
+    let mut dag = cholesky::root(n);
+    cholesky::partition_uniform(&mut dag, tile);
+
+    // phase 1: degradation vs transient fault rate
+    let mut t = Table::new(&[
+        "rate",
+        "E[makespan] s",
+        "vs nominal",
+        "faults",
+        "mean recovery s",
+        "exhausted",
+    ]);
+    let (nominal, _, _, _) = ensemble_price(&dag, &p, sim, &reg, &FaultSpec::named("off"), 1);
+    let mut curve = Vec::new();
+    for rate in [0.0, 0.02, 0.05, 0.1, 0.2] {
+        let mut spec = FaultSpec::named("curve");
+        spec.seed = 23;
+        spec.transient_rate = rate;
+        spec.max_attempts = 8;
+        let (expected, recovery, faults, exhausted) =
+            ensemble_price(&dag, &p, sim, &reg, &spec, members);
+        let vs = if expected.is_finite() { expected / nominal } else { f64::INFINITY };
+        t.row(&[
+            format!("{rate:.2}"),
+            format!("{expected:.4}"),
+            format!("{vs:.3}x"),
+            faults.to_string(),
+            format!("{recovery:.6}"),
+            exhausted.to_string(),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("rate".to_string(), Json::Num(rate));
+        row.insert("expected_makespan".to_string(), Json::Num(expected));
+        row.insert("vs_nominal".to_string(), Json::Num(vs));
+        row.insert("faults_injected".to_string(), Json::Num(faults as f64));
+        row.insert("mean_recovery_s".to_string(), Json::Num(recovery));
+        row.insert("exhausted_members".to_string(), Json::Num(exhausted as f64));
+        curve.push(Json::Obj(row));
+        // rate 0 must price exactly nominal: the ensemble mean of one
+        // deterministic fault-free run per member
+        if rate == 0.0 {
+            assert_eq!(
+                expected.to_bits(),
+                nominal.to_bits(),
+                "{machine_name}: empty plan must be the identity"
+            );
+        }
+    }
+    t.print();
+    record.insert(format!("{machine_name}/degradation"), Json::Arr(curve));
+
+    // phase 2: the headline — oblivious vs fault-aware solve under the
+    // shipped quick spec
+    let spec = FaultSpec::from_file(SPEC_FILE).expect("shipped fault spec");
+    let base = SolverConfig::all_soft(sim, iters, min_edge);
+    let mut pcfg = PortfolioConfig::new(base);
+    pcfg.threads = threads;
+    pcfg.lanes = 2;
+
+    let t0 = std::time::Instant::now();
+    let oblivious = solve_portfolio(
+        &dag,
+        &p.machine,
+        &p.db,
+        &PartitionerSet::standard(),
+        &reg,
+        "pl/eft-p",
+        &pcfg,
+    );
+    let (obl_expected, _, _, _) =
+        ensemble_price(&oblivious.best_dag, &p, sim, &reg, &spec, members);
+
+    let mut aware_cfg = pcfg.clone();
+    aware_cfg.faults = Some(FaultEnsemble::new(spec.clone(), members));
+    // warm start from the oblivious winner: the aware incumbent begins at
+    // obl_expected and is monotone, so aware <= oblivious by construction
+    let aware = solve_portfolio(
+        &oblivious.best_dag,
+        &p.machine,
+        &p.db,
+        &PartitionerSet::standard(),
+        &reg,
+        "pl/eft-p",
+        &aware_cfg,
+    );
+    let dt = t0.elapsed().as_secs_f64();
+
+    let recovered = if obl_expected.is_finite() && obl_expected > 0.0 {
+        100.0 * (obl_expected - aware.best_cost) / obl_expected
+    } else {
+        0.0
+    };
+    println!(
+        "headline: oblivious solve E[makespan] {obl_expected:.4}s -> fault-aware {:.4}s ({recovered:.2}% recovered, {dt:.1}s)",
+        aware.best_cost
+    );
+    assert!(
+        aware.best_cost <= obl_expected * (1.0 + 1e-9) || obl_expected.is_infinite(),
+        "{machine_name}: the aware incumbent starts at the oblivious winner and only improves"
+    );
+    let mut head = BTreeMap::new();
+    head.insert(
+        "oblivious_nominal_makespan".to_string(),
+        Json::Num(oblivious.best_schedule.makespan),
+    );
+    head.insert("oblivious_expected_makespan".to_string(), Json::Num(obl_expected));
+    head.insert("aware_expected_makespan".to_string(), Json::Num(aware.best_cost));
+    head.insert("aware_nominal_makespan".to_string(), Json::Num(aware.best_schedule.makespan));
+    head.insert("recovered_pct".to_string(), Json::Num(recovered));
+    head.insert("members".to_string(), Json::Num(members as f64));
+    record.insert(format!("{machine_name}/headline"), Json::Obj(head));
+}
+
+/// The determinism gate: a fault-axis sweep over both reference
+/// platforms must emit identical bytes at 1 and 4 worker threads.
+fn determinism_gate(n: u32, tiles: &[u32], members: u64) {
+    let spec = FaultSpec::from_file(SPEC_FILE).expect("shipped fault spec");
+    let grid = SweepGrid {
+        platforms: vec![
+            SweepPlatform::from_file("configs/bujaruelo.toml").expect("config"),
+            SweepPlatform::from_file("configs/odroid.toml").expect("config"),
+        ],
+        workloads: vec![Workload::Cholesky { n }],
+        policies: vec!["pl/eft-p".into(), "cls/heft".into()],
+        tiles: tiles.to_vec(),
+        modes: vec![CellMode::Simulate],
+        seeds: vec![0],
+        cache: CachePolicy::WriteBack,
+        solve_lanes: 1,
+        solve_batch: 1,
+        delta: DeltaMode::Off,
+        faults: vec![None, Some(spec)],
+        fault_members: members,
+    };
+    let parallel = sweep::run_sweep(&grid, 4);
+    let serial = sweep::run_sweep(&grid, 1);
+    assert_eq!(
+        sweep::to_csv(&serial),
+        sweep::to_csv(&parallel),
+        "fault sweep must not depend on the thread count"
+    );
+    assert_eq!(sweep::to_json(&serial), sweep::to_json(&parallel));
+    println!(
+        "\ndeterminism gate: {} fault-axis cells byte-identical at 1 and 4 threads",
+        serial.len()
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let iters = {
+        let i = args.usize_or("iters", 120);
+        if quick {
+            i.min(40)
+        } else {
+            i
+        }
+    };
+    let threads = args.usize_or("threads", sweep::default_threads());
+    let members = args.usize_or("members", 5).max(1) as u64;
+    let mut record = BTreeMap::new();
+    record.insert("name".to_string(), Json::Str("faults".into()));
+    record.insert("iters".to_string(), Json::Num(iters as f64));
+    record.insert("spec".to_string(), Json::Str(SPEC_FILE.into()));
+    let r = &mut record;
+    if quick {
+        run_platform("configs/bujaruelo.toml", 8_192, 1024, 128, iters, threads, members, r);
+        run_platform("configs/odroid.toml", 2_048, 256, 64, iters, threads, members, r);
+        determinism_gate(2_048, &[256, 512], members);
+    } else {
+        run_platform("configs/bujaruelo.toml", 16_384, 1024, 128, iters, threads, members, r);
+        run_platform("configs/odroid.toml", 4_096, 256, 64, iters, threads, members, r);
+        determinism_gate(4_096, &[256, 512], members);
+    }
+    let out = std::path::PathBuf::from(args.str_or("out", "bench_out/BENCH_faults.json"));
+    if let Some(dir) = out.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir).expect("create bench_out");
+    }
+    std::fs::write(&out, Json::Obj(record).to_string()).expect("write bench json");
+    println!("bench record -> {}", out.display());
+}

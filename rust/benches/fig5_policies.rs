@@ -37,6 +37,8 @@ fn main() {
         solve_lanes: 1,
         solve_batch: 1,
         delta: DeltaMode::Off,
+        faults: vec![None],
+        fault_members: 3,
     };
     let results = sweep::run_sweep(&grid, threads);
 

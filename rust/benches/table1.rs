@@ -53,6 +53,8 @@ fn run_platform(
         solve_lanes: portfolio.0,
         solve_batch: portfolio.1,
         delta: DeltaMode::Auto,
+        faults: vec![None],
+        fault_members: 3,
     };
     let hom = sweep::run_sweep(&grid, threads);
 

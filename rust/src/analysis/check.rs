@@ -3,8 +3,9 @@
 //! Validates simulation inputs *before* any simulation runs: platform
 //! TOMLs (disconnected memory spaces, zero/negative-rate perf curves,
 //! unreachable processor types), sweep-grid TOMLs (infeasible
-//! tile/workload combos, empty expansions), and JSONL traces
-//! (non-monotonic arrivals, duplicate job ids, deadlines before
+//! tile/workload combos, empty expansions), fault-spec TOMLs (inverted
+//! or negative fault windows, out-of-range transient rates), and JSONL
+//! traces (non-monotonic arrivals, duplicate job ids, deadlines before
 //! arrival). Every problem carries a precise `file:key` diagnostic; the
 //! pass itself never panics and collects *all* problems instead of
 //! stopping at the first — the validation hooks it calls
@@ -13,6 +14,7 @@
 //! exactly this.
 
 use crate::config::Platform;
+use crate::coordinator::faults::FaultSpec;
 use crate::coordinator::service::arrivals::{parse_trace_line, Deadline};
 use crate::coordinator::sweep::grid_from_toml;
 
@@ -105,6 +107,28 @@ pub fn check_grid_text(file: &str, text: &str) -> Vec<Diag> {
     out
 }
 
+/// Validate a fault-spec TOML (`kind = "faults"`). Shape problems only:
+/// processor and link indices are range-checked against a machine at
+/// install time, because a spec file is platform-independent.
+pub fn check_faults_text(file: &str, text: &str) -> Vec<Diag> {
+    let spec = match FaultSpec::from_toml(text) {
+        Ok(s) => s,
+        Err(e) => return vec![Diag::err(file, "parse", e)],
+    };
+    let mut out = Vec::new();
+    for (key, msg) in spec.diagnostics() {
+        out.push(Diag::err(file, key, msg));
+    }
+    if spec.is_empty() {
+        out.push(Diag::warn(
+            file,
+            "spec",
+            "no fault source is active — simulation with this spec is identical to --faults off",
+        ));
+    }
+    out
+}
+
 /// Validate a JSONL trace. Unlike
 /// [`crate::coordinator::service::arrivals::parse_trace`] (which stops at
 /// the first malformed line), this collects a diagnostic per line and
@@ -164,8 +188,9 @@ pub fn check_trace_text(file: &str, text: &str) -> Vec<Diag> {
 }
 
 /// Sniff a file's kind and validate it: `.jsonl` files are traces, TOML
-/// documents with a top-level `platforms` key are sweep grids, everything
-/// else is a platform.
+/// documents with `kind = "faults"` are fault specs, documents with a
+/// top-level `platforms` key are sweep grids, everything else is a
+/// platform.
 pub fn check_file(path: &str) -> Vec<Diag> {
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
@@ -178,6 +203,8 @@ pub fn check_file(path: &str) -> Vec<Diag> {
 pub fn check_text(path: &str, text: &str) -> Vec<Diag> {
     if path.ends_with(".jsonl") {
         check_trace_text(path, text)
+    } else if is_faults(text) {
+        check_faults_text(path, text)
     } else if is_grid(text) {
         check_grid_text(path, text)
     } else {
@@ -188,6 +215,14 @@ pub fn check_text(path: &str, text: &str) -> Vec<Diag> {
 /// A TOML document is a sweep grid iff it has a top-level `platforms` key.
 fn is_grid(text: &str) -> bool {
     matches!(crate::util::toml::parse(text), Ok(doc) if doc.get("platforms").is_some())
+}
+
+/// A TOML document is a fault spec iff it declares `kind = "faults"`.
+fn is_faults(text: &str) -> bool {
+    matches!(
+        crate::util::toml::parse(text),
+        Ok(doc) if doc.get("kind").and_then(|v| v.as_str()) == Some("faults")
+    )
 }
 
 #[cfg(test)]
@@ -284,6 +319,35 @@ space = "host"
     fn empty_trace_is_an_error() {
         let diags = check_trace_text("t.jsonl", "\n\n");
         assert!(diags.iter().any(|d| d.error && d.msg.contains("no jobs")));
+    }
+
+    #[test]
+    fn fault_spec_sniffing_and_diagnostics() {
+        let good = concat!(
+            "kind = \"faults\"\nname = \"quick\"\n\n[transient]\nrate = 0.05\n\n",
+            "[[throttle]]\nproc = 0\nfrom = 0.002\nto = 0.006\nfactor = 0.5\n",
+        );
+        assert!(is_faults(good));
+        assert!(!is_faults(GOOD_PLATFORM));
+        assert!(check_faults_text("f.toml", good).is_empty(), "{:?}", check_faults_text("f.toml", good));
+        // check_text must route on the kind marker, not the file name
+        assert!(check_text("f.toml", good).is_empty());
+
+        // an inverted throttle window is rejected at parse time with the
+        // offending key in the message
+        let bad = good.replace("to = 0.006", "to = 0.001");
+        let diags = check_faults_text("f.toml", &bad);
+        assert!(
+            diags.iter().any(|d| d.error && d.key == "parse" && d.msg.contains("throttle.0")),
+            "{diags:?}"
+        );
+
+        // a structurally valid but fault-free spec gets a warning: it is
+        // indistinguishable from --faults off
+        let empty = "kind = \"faults\"\nname = \"noop\"\n";
+        let diags = check_faults_text("f.toml", empty);
+        assert!(diags.iter().any(|d| !d.error && d.key == "spec"), "{diags:?}");
+        assert!(diags.iter().all(|d| !d.error), "warnings only: {diags:?}");
     }
 
     #[test]

@@ -64,12 +64,13 @@ const PANIC_SCOPE: [&str; 6] = [
 const RANDOM_HASHERS: [&str; 3] = ["DefaultHasher", "RandomState", "SipHasher13"];
 
 /// All rule ids, for documentation and pragma validation.
-pub const RULES: [&str; 7] = [
+pub const RULES: [&str; 8] = [
     "det/hashmap-iter",
     "det/checkpoint-hash",
     "det/wall-clock",
     "det/unseeded-rng",
     "det/float-reduce",
+    "det/partial-cmp-unwrap",
     "safety/panic-in-lib",
     "lint/bare-allow",
 ];
@@ -304,6 +305,20 @@ pub fn run_rules(file: &SourceFile) -> Vec<Finding> {
             ));
         }
 
+        // det/partial-cmp-unwrap: float comparators built by unwrapping
+        // `partial_cmp` panic on the first NaN metric that reaches a
+        // sort. Scoped to coordinator/, where every sort feeds the
+        // bit-reproducible schedule/trace pipeline.
+        if in_coordinator && has_token(code, "partial_cmp") && code.contains(".unwrap(") {
+            out.push(Finding::new(
+                &file.path,
+                line.number,
+                "det/partial-cmp-unwrap",
+                "partial_cmp().unwrap() panics on NaN — use f64::total_cmp (or Ord::cmp on the non-float part) instead"
+                    .to_string(),
+            ));
+        }
+
         // det/wall-clock: real-time reads outside timing shims.
         if !wall_clock_exempt {
             if code.contains("Instant::now") && has_token(code, "Instant") {
@@ -519,6 +534,28 @@ mod tests {
         // RandomState (the HashMap default build-hasher) matches too
         let fs2 = lint("src/coordinator/x.rs", "fn f(s: RandomState) { let _ = s; }\n");
         assert_eq!(fs2.iter().filter(|f| f.rule == "det/checkpoint-hash").count(), 1);
+    }
+
+    #[test]
+    fn partial_cmp_unwrap_is_flagged_in_coordinator_only() {
+        let src = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        let fs = lint("src/coordinator/trace.rs", src);
+        assert_eq!(fs.iter().filter(|f| f.rule == "det/partial-cmp-unwrap").count(), 1, "{fs:?}");
+        assert!(lint("src/util/x.rs", src).is_empty());
+        // the fix idiom never matches
+        let clean = "fn f(v: &mut Vec<f64>) { v.sort_by(|a, b| a.total_cmp(b)); }\n";
+        assert!(lint("src/coordinator/trace.rs", clean).is_empty());
+        // partial_cmp with graceful handling is fine
+        let graceful = "fn f(a: f64, b: f64) -> Ordering { a.partial_cmp(&b).unwrap_or(Ordering::Equal) }\n";
+        assert!(lint("src/coordinator/trace.rs", graceful).is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_unwrap_is_suppressible_with_reason() {
+        let src = "fn f(v: &mut Vec<f64>) {\n    // detlint: allow(det/partial-cmp-unwrap) — inputs validated finite\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let fs = lint("src/coordinator/x.rs", src);
+        let f = fs.iter().find(|f| f.rule == "det/partial-cmp-unwrap").unwrap();
+        assert!(f.suppressed);
     }
 
     #[test]

@@ -29,6 +29,7 @@
 
 use super::coherence::{CachePolicy, Coherence, SpaceId, Transfer};
 use super::datadag::BlockId;
+use super::faults::FaultPlan;
 use super::ordering::critical_times;
 use super::perfmodel::PerfDb;
 use super::platform::{LinkId, Machine, ProcId, Timeline};
@@ -125,6 +126,15 @@ pub enum EventKind {
     TaskEnd { task: TaskId, proc: ProcId },
     /// A processor ran out of booked work.
     ProcIdle { proc: ProcId },
+    /// A processor died (fail-stop): its in-flight work is lost past this
+    /// instant and everything booked later is cancelled and re-dispatched.
+    ProcFail { proc: ProcId },
+    /// A dead processor came back (end of its dead window).
+    ProcRestore { proc: ProcId },
+    /// An execution attempt of `task` faulted (transient fault, or its
+    /// processor died mid-flight); its writes are discarded and the task
+    /// re-enters the ready queue if attempts remain.
+    TaskFault { task: TaskId, proc: ProcId },
 }
 
 /// An [`EventKind`] stamped with its simulated time.
@@ -434,6 +444,72 @@ fn prepare_timelines(v: &mut Vec<Timeline>, n: usize) {
     v.resize_with(n, Timeline::new);
 }
 
+/// Event keys carry the attempt number of the execution they belong to
+/// in their high bits once faults are active, so a retried task's events
+/// are distinguishable from its killed attempt's. Attempt 0 encodes to
+/// the bare key — with faults off (or before the first fault) keys are
+/// bit-identical to the fault-free engine's.
+pub(crate) const FAULT_ATTEMPT_SHIFT: u32 = 48;
+pub(crate) const FAULT_KEY_MASK: usize = (1 << FAULT_ATTEMPT_SHIFT) - 1;
+
+/// One booked-but-unfinished execution attempt (fault bookkeeping).
+#[derive(Debug, Clone, Copy)]
+struct LiveAttempt {
+    /// Attempt-encoded event key.
+    ekey: usize,
+    task: TaskId,
+    proc: ProcId,
+    start: f64,
+    end: f64,
+    /// Whether the transient roll already doomed this attempt (a
+    /// `TaskFault` is queued at `end` instead of a `TaskEnd`).
+    doomed: bool,
+}
+
+/// Live fault-injection state of one run (present only when a
+/// [`FaultPlan`] is installed; `None` keeps the fault-free engine
+/// bit-identical to before this subsystem existed).
+struct FaultRt {
+    plan: FaultPlan,
+    /// Next attempt number per base key (missing = 0). Lookup-only — the
+    /// map is never iterated, so determinism is unaffected.
+    attempts: FxHashMap<usize, u32>,
+    /// Encoded keys of killed attempts whose already-queued events must
+    /// be swallowed instead of delivered.
+    stale: Vec<usize>,
+    /// Attempts booked but not yet completed/faulted, in dispatch order.
+    live: Vec<LiveAttempt>,
+    /// A task ran out of attempts: the run can never complete.
+    exhausted: bool,
+    /// Faults injected so far (transient dooms + fail-stop kills).
+    injected: usize,
+    /// Seconds of work that executed and was then lost to a fault.
+    wasted: f64,
+}
+
+/// Earliest placement of `nominal` seconds of work on a possibly
+/// throttled processor. The fit and the stretched duration are mutually
+/// dependent (the duration depends on where the booking lands relative
+/// to the throttle windows), so iterate to a fixed point, falling back
+/// to a tail placement — which is always self-consistent, since nothing
+/// is booked after the tail.
+fn fit_throttled(tl: &Timeline, plan: &FaultPlan, proc: ProcId, ready: f64, nominal: f64) -> (f64, f64) {
+    let mut dur = plan.exec_duration(proc, ready, nominal);
+    for _ in 0..8 {
+        let start = tl.earliest_fit(ready, dur);
+        if !start.is_finite() {
+            return (start, dur);
+        }
+        let again = plan.exec_duration(proc, start, nominal);
+        if again.to_bits() == dur.to_bits() {
+            return (start, dur);
+        }
+        dur = again;
+    }
+    let start = tl.tail().max(ready);
+    (start, plan.exec_duration(proc, start, nominal))
+}
+
 /// The shared discrete-event core: global clock, typed event queue,
 /// per-processor and per-link [`Timeline`]s, coherence state and the
 /// schedule under construction. The offline engine, replay and the
@@ -466,6 +542,9 @@ pub(crate) struct EventCore<'a> {
     /// that timestamp, so a processor immediately re-booked at the same
     /// instant does not log a spurious idle transition.
     idle_candidates: Vec<(f64, ProcId)>,
+    /// Fault-injection state; `None` (the default) is the fault-free
+    /// engine, bit-identical to before faults existed.
+    faults: Option<FaultRt>,
 }
 
 impl<'a> EventCore<'a> {
@@ -483,6 +562,7 @@ impl<'a> EventCore<'a> {
             sched: Schedule { proc_busy: vec![0.0; machine.n_procs()], ..Default::default() },
             arrivals: ArrivalTable::default(),
             idle_candidates: Vec::new(),
+            faults: None,
         }
     }
 
@@ -515,6 +595,7 @@ impl<'a> EventCore<'a> {
             sched,
             arrivals: ArrivalTable::default(),
             idle_candidates: Vec::new(),
+            faults: None,
         }
     }
 
@@ -566,6 +647,7 @@ impl<'a> EventCore<'a> {
             },
             arrivals: ck.arrivals.clone(),
             idle_candidates: ck.idle_candidates.clone(),
+            faults: None,
         }
     }
 
@@ -604,6 +686,127 @@ impl<'a> EventCore<'a> {
     fn push_event(&mut self, time: f64, key: usize, kind: EventKind) {
         self.seq += 1;
         self.queue.push(QEvent { time, seq: self.seq, key, kind });
+    }
+
+    /// Arm fault injection: queue the plan's fail-stop/restore markers
+    /// (ahead of every task event, so they pop first within their
+    /// timestamp batch) and pre-book link-outage blackouts. Entries
+    /// referencing processors or links the machine does not have are
+    /// skipped — a spec file is platform-independent.
+    pub(crate) fn install_faults(&mut self, plan: &FaultPlan) {
+        for f in &plan.spec.fail_stop {
+            if f.proc >= self.machine.n_procs() {
+                continue;
+            }
+            self.push_event(f.at, usize::MAX, EventKind::ProcFail { proc: f.proc });
+            if let Some(r) = f.restore {
+                self.push_event(r, usize::MAX, EventKind::ProcRestore { proc: f.proc });
+            }
+        }
+        // a degraded link keeps `factor` of its window: model the lost
+        // fraction as one blackout booking at the window start, which
+        // every transfer then deterministically routes around via the
+        // normal earliest-fit arithmetic. Booked into the link timeline
+        // only — not `link_occupancy` — so the oracle's link-exclusivity
+        // check stays a transfer-vs-transfer property.
+        for o in &plan.spec.link_outage {
+            if o.link >= self.links.len() {
+                continue;
+            }
+            let span = (o.to - o.from) * (1.0 - o.factor.clamp(0.0, 1.0));
+            let fit = self.links[o.link].earliest_fit(o.from, span);
+            self.links[o.link].book(fit, span);
+        }
+        self.faults = Some(FaultRt {
+            plan: plan.clone(),
+            attempts: FxHashMap::default(),
+            stale: Vec::new(),
+            live: Vec::new(),
+            exhausted: false,
+            injected: 0,
+            wasted: 0.0,
+        });
+    }
+
+    /// Whether `ekey` belongs to a killed attempt (its queued events are
+    /// swallowed instead of delivered).
+    fn fault_stale(&self, ekey: usize) -> bool {
+        self.faults.as_ref().is_some_and(|rt| rt.stale.contains(&ekey))
+    }
+
+    /// After a delivered `TaskFault`: may the task at base key `base` be
+    /// re-dispatched? Exhausting the attempt budget poisons the run
+    /// ([`EventCore::finish`] reports an `INFINITY` makespan).
+    pub(crate) fn fault_retry(&mut self, base: usize) -> bool {
+        let Some(rt) = self.faults.as_mut() else {
+            return false;
+        };
+        let next = rt.attempts.get(&base).copied().unwrap_or(0);
+        if next < rt.plan.max_attempts() {
+            true
+        } else {
+            rt.exhausted = true;
+            false
+        }
+    }
+
+    /// Fault accounting of the run so far: `(faults injected, attempt
+    /// budget exhausted, seconds of executed-then-lost work)`.
+    pub fn fault_stats(&self) -> (usize, bool, f64) {
+        match self.faults.as_ref() {
+            Some(rt) => (rt.injected, rt.exhausted, rt.wasted),
+            None => (0, false, 0.0),
+        }
+    }
+
+    /// Fail-stop death of `proc` at the current clock: kill every attempt
+    /// on it that has not finished (keeping the executed prefix booked,
+    /// unbooking the rest and refunding busy time), queue replacement
+    /// `TaskFault`s at the death instant, and book the dead window so
+    /// every placement path — `commit`'s earliest-fit and the policies'
+    /// placement estimates alike — routes around the death.
+    fn on_proc_fail(&mut self, proc: ProcId) {
+        let now = self.now;
+        let Some(mut rt) = self.faults.take() else {
+            return;
+        };
+        let mut killed: Vec<LiveAttempt> = Vec::new();
+        rt.live.retain(|l| {
+            if l.proc == proc && l.end > now && l.start.is_finite() {
+                killed.push(*l);
+                false
+            } else {
+                true
+            }
+        });
+        for l in killed {
+            // the executed prefix [start, now) stays booked and billed;
+            // everything past the death instant is lost
+            let cut = l.start.max(now);
+            self.procs[proc].unbook(cut, l.end);
+            self.sched.proc_busy[proc] -= l.end - cut;
+            if l.doomed {
+                // its transient doom already billed the full duration
+                rt.wasted -= l.end - cut;
+            } else {
+                rt.wasted += cut - l.start;
+                rt.injected += 1;
+            }
+            let attempt = (l.ekey >> FAULT_ATTEMPT_SHIFT) as u32;
+            rt.attempts.insert(l.ekey & FAULT_KEY_MASK, attempt + 1);
+            rt.stale.push(l.ekey);
+            // replacement fault event at the death instant, encoded with
+            // the *next* attempt so the stale filter does not swallow it
+            let fkey = (l.ekey & FAULT_KEY_MASK) | (((attempt + 1) as usize) << FAULT_ATTEMPT_SHIFT);
+            self.push_event(now, fkey, EventKind::TaskFault { task: l.task, proc });
+        }
+        for (at, until) in rt.plan.dead_windows(proc) {
+            if at <= now && now < until {
+                let span = if until.is_finite() { until - now } else { f64::INFINITY };
+                self.procs[proc].book(now, span);
+            }
+        }
+        self.faults = Some(rt);
     }
 
     /// Book `bytes` along the route `from -> to`, each hop in the
@@ -703,13 +906,47 @@ impl<'a> EventCore<'a> {
         // by an earlier decision, arriving later) gate the start too — the
         // same gate the estimate path applies inside plan_reads
         data_ready = policy::arrival_gate(&mut self.coh, &self.arrivals, task, space, data_ready);
-        let dur = self.db.time(self.machine.procs[proc].ptype, task.kind, task.char_edge(), task.flops);
-        let start = self.procs[proc].earliest_fit(data_ready, dur);
+        let nominal = self.db.time(self.machine.procs[proc].ptype, task.kind, task.char_edge(), task.flops);
+        // fault path: attempt-encoded event key + throttle-stretched
+        // duration; attempt 0 encodes to the bare key, so a fault-free
+        // run is bit-identical to the plain path below
+        let (ekey, attempt, start, dur) = match self.faults.as_ref() {
+            None => (key, 0u32, self.procs[proc].earliest_fit(data_ready, nominal), nominal),
+            Some(rt) => {
+                let attempt = rt.attempts.get(&key).copied().unwrap_or(0);
+                let (start, dur) = fit_throttled(&self.procs[proc], &rt.plan, proc, data_ready, nominal);
+                (key | ((attempt as usize) << FAULT_ATTEMPT_SHIFT), attempt, start, dur)
+            }
+        };
         self.procs[proc].book(start, dur);
         let end = start + dur;
-        self.sched.proc_busy[proc] += end - start;
-        self.push_event(start, usize::MAX, EventKind::TaskStart { task: task.id, proc });
-        self.push_event(end, key, EventKind::TaskEnd { task: task.id, proc });
+        if end.is_finite() {
+            self.sched.proc_busy[proc] += end - start;
+        }
+        let skey = if self.faults.is_some() { ekey } else { usize::MAX };
+        self.push_event(start, skey, EventKind::TaskStart { task: task.id, proc });
+        // transient roll: a doomed attempt runs to completion but its
+        // results are lost — a TaskFault fires at `end` instead of the
+        // TaskEnd, so no successor releases and no writes apply
+        let doomed = match self.faults.as_ref() {
+            Some(rt) => rt.plan.transient_hits(task.id, attempt),
+            None => false,
+        };
+        if doomed {
+            self.push_event(end, ekey, EventKind::TaskFault { task: task.id, proc });
+        } else {
+            self.push_event(end, ekey, EventKind::TaskEnd { task: task.id, proc });
+        }
+        if let Some(rt) = self.faults.as_mut() {
+            if doomed {
+                rt.attempts.insert(key, attempt + 1);
+                rt.injected += 1;
+                if end.is_finite() {
+                    rt.wasted += end - start;
+                }
+            }
+            rt.live.push(LiveAttempt { ekey, task: task.id, proc, start, end, doomed });
+        }
         (start, end)
     }
 
@@ -754,6 +991,24 @@ impl<'a> EventCore<'a> {
                 break;
             }
             let ev = self.queue.pop().expect("peeked");
+            if self.faults.is_some() {
+                match ev.kind {
+                    // cancel the dying processor's booked work *before*
+                    // later events at this instant are delivered
+                    EventKind::ProcFail { proc } => self.on_proc_fail(proc),
+                    EventKind::TaskStart { .. } | EventKind::TaskEnd { .. } | EventKind::TaskFault { .. } => {
+                        if self.fault_stale(ev.key) {
+                            continue; // a killed attempt's event: swallowed
+                        }
+                        if matches!(ev.kind, EventKind::TaskEnd { .. } | EventKind::TaskFault { .. }) {
+                            if let Some(rt) = self.faults.as_mut() {
+                                rt.live.retain(|l| l.ekey != ev.key);
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
             self.sched.events.push(SimEvent { time: ev.time, kind: ev.kind });
             if let EventKind::TaskEnd { proc, .. } = ev.kind {
                 if !self.procs[proc].busy_after(t) {
@@ -771,6 +1026,10 @@ impl<'a> EventCore<'a> {
         let task_end = self.sched.assignments.iter().map(|a| a.end).fold(0.0f64, f64::max);
         let xfer_end = self.sched.transfers.iter().map(|t| t.end).fold(0.0f64, f64::max);
         self.sched.makespan = task_end.max(xfer_end);
+        if self.faults.as_ref().is_some_and(|rt| rt.exhausted) {
+            // a task ran out of attempts: the workload never completes
+            self.sched.makespan = f64::INFINITY;
+        }
         self.sched
     }
 }
@@ -845,7 +1104,26 @@ fn run(
     flat_in: Option<&FlatDag>,
     policy: &mut dyn SchedPolicy,
 ) -> Schedule {
-    run_core(dag, machine, db, cfg, forced, flat_in, policy, None, None, 0)
+    run_core(dag, machine, db, cfg, forced, flat_in, policy, None, None, 0, None)
+}
+
+/// Simulate under a deterministic fault plan: fail-stop deaths cancel
+/// booked work and re-dispatch it, transient attempt faults send tasks
+/// back to the ready queue for policy-driven rescheduling (bounded by
+/// the spec's `max_attempts`), throttle windows stretch execution, and
+/// link outages occupy interconnect windows. An exhausted attempt budget
+/// yields `makespan = INFINITY`. Incompatible with mapping replay and
+/// with the delta evaluator's tracing.
+pub fn simulate_flat_faults(
+    dag: &TaskDag,
+    flat: &FlatDag,
+    machine: &Machine,
+    db: &PerfDb,
+    cfg: SimConfig,
+    policy: &mut dyn SchedPolicy,
+    plan: &FaultPlan,
+) -> Schedule {
+    run_core(dag, machine, db, cfg, None, Some(flat), policy, None, None, 0, Some(plan))
 }
 
 /// Trace a full simulation: the schedule plus its decision log and
@@ -862,7 +1140,7 @@ pub(crate) fn simulate_flat_traced(
     every: usize,
 ) -> (Schedule, SimTrace) {
     let mut trace = SimTrace::default();
-    let sched = run_core(dag, machine, db, cfg, None, Some(flat), policy, None, Some(&mut trace), every);
+    let sched = run_core(dag, machine, db, cfg, None, Some(flat), policy, None, Some(&mut trace), every, None);
     (sched, trace)
 }
 
@@ -886,7 +1164,7 @@ pub(crate) fn simulate_flat_replay(
     mut seed: SimTrace,
     every: usize,
 ) -> (Schedule, SimTrace) {
-    let sched = run_core(dag, machine, db, cfg, None, Some(flat), policy, Some(plan), Some(&mut seed), every);
+    let sched = run_core(dag, machine, db, cfg, None, Some(flat), policy, Some(plan), Some(&mut seed), every, None);
     (sched, seed)
 }
 
@@ -902,7 +1180,12 @@ fn run_core(
     plan: Option<ReplayPlan<'_>>,
     mut trace: Option<&mut SimTrace>,
     ckpt_every: usize,
+    faults: Option<&FaultPlan>,
 ) -> Schedule {
+    assert!(
+        faults.is_none() || (forced.is_none() && plan.is_none() && trace.is_none()),
+        "fault injection cannot be combined with mapping replay or tracing"
+    );
     let flat_owned;
     let flat: &FlatDag = match flat_in {
         Some(f) => f,
@@ -980,6 +1263,10 @@ fn run_core(
             c
         }
     };
+
+    if let Some(fp) = faults {
+        core.install_faults(fp);
+    }
 
     let mut batch = std::mem::take(&mut scratch.batch);
     batch.clear();
@@ -1059,20 +1346,37 @@ fn run_core(
             break;
         }
         for &(key, kind) in &batch {
-            if let EventKind::TaskEnd { proc, .. } = kind {
-                let pos = key;
-                core.apply_writes(dag.task(flat.tasks[pos]), proc, core.now);
-                for &s in &flat.succs[pos] {
-                    indeg[s] -= 1;
-                    release[s] = release[s].max(core.now);
-                    if indeg[s] == 0 {
-                        if static_keys {
-                            let mut ctx = core.ctx(&[]);
-                            keys[s] = policy.order(&mut ctx, dag.task(flat.tasks[s]), release[s], prio[s]);
+            match kind {
+                EventKind::TaskEnd { proc, .. } => {
+                    let pos = key & FAULT_KEY_MASK;
+                    core.apply_writes(dag.task(flat.tasks[pos]), proc, core.now);
+                    for &s in &flat.succs[pos] {
+                        indeg[s] -= 1;
+                        release[s] = release[s].max(core.now);
+                        if indeg[s] == 0 {
+                            if static_keys {
+                                let mut ctx = core.ctx(&[]);
+                                keys[s] = policy.order(&mut ctx, dag.task(flat.tasks[s]), release[s], prio[s]);
+                            }
+                            ready.push(s);
                         }
-                        ready.push(s);
                     }
                 }
+                EventKind::TaskFault { .. } => {
+                    // a faulted attempt applied no writes and released no
+                    // successors; the task re-enters the ready queue for a
+                    // fresh policy decision if attempts remain
+                    let pos = key & FAULT_KEY_MASK;
+                    if core.fault_retry(pos) {
+                        release[pos] = release[pos].max(core.now);
+                        if static_keys {
+                            let mut ctx = core.ctx(&[]);
+                            keys[pos] = policy.order(&mut ctx, dag.task(flat.tasks[pos]), release[pos], prio[pos]);
+                        }
+                        ready.push(pos);
+                    }
+                }
+                _ => {}
             }
         }
     }
@@ -1219,6 +1523,136 @@ mod tests {
         let c = simulate(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::Random).with_seed(8));
         // almost surely a different mapping with 4 procs and 8 tasks
         assert_ne!(a.mapping(), c.mapping());
+    }
+
+    use crate::coordinator::faults::{FailStop, FaultPlan, FaultSpec, ThrottleWindow};
+
+    fn faulted(dag: &TaskDag, m: &Machine, db: &PerfDb, c: SimConfig, spec: &FaultSpec) -> Schedule {
+        let flat = dag.flat_dag();
+        let mut p = policy::policy_for(SchedConfig::new(c.ordering, c.select));
+        simulate_flat_faults(dag, &flat, m, db, c, p.as_mut(), &FaultPlan::new(spec, 0))
+    }
+
+    fn count_kind(s: &Schedule, pred: impl Fn(&EventKind) -> bool) -> usize {
+        s.events.iter().filter(|e| pred(&e.kind)).count()
+    }
+
+    #[test]
+    fn empty_fault_plan_is_byte_identical_to_fault_free() {
+        let (m, db) = single_space_machine(2, 1);
+        let dag = independent(6);
+        for c in [cfg(Ordering::Fcfs, ProcSelect::EarliestIdle), cfg(Ordering::CriticalTime, ProcSelect::EarliestFinish)] {
+            let base = simulate(&dag, &m, &db, c);
+            let off = faulted(&dag, &m, &db, c, &FaultSpec::named("off"));
+            assert_eq!(base.mapping(), off.mapping());
+            assert_eq!(base.makespan.to_bits(), off.makespan.to_bits());
+            assert_eq!(base.events, off.events);
+            for (a, b) in base.assignments.iter().zip(off.assignments.iter()) {
+                assert_eq!(a.start.to_bits(), b.start.to_bits());
+                assert_eq!(a.end.to_bits(), b.end.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn fail_stop_cancels_and_redispatches_booked_work() {
+        let (m, db) = single_space_machine(2, 0);
+        let dag = independent(4);
+        let per = GEMM100 / 4e9;
+        let mut spec = FaultSpec::named("kill1");
+        spec.fail_stop.push(FailStop { proc: 1, at: per / 2.0, restore: None });
+        let s = faulted(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestIdle), &spec);
+        // proc 1 had one task in flight and one booked behind it — both
+        // are killed, re-enter the ready queue, and land on proc 0
+        assert_eq!(count_kind(&s, |k| matches!(k, EventKind::ProcFail { .. })), 1);
+        assert_eq!(count_kind(&s, |k| matches!(k, EventKind::TaskFault { .. })), 2);
+        assert!(s.assignments.iter().all(|a| a.proc == 0), "dead processor must be routed around");
+        assert!((s.makespan - 4.0 * per).abs() < 1e-12, "makespan={}", s.makespan);
+        // only the executed prefix of the in-flight attempt is billed to
+        // the dead processor
+        assert!((s.proc_busy[1] - per / 2.0).abs() < 1e-15, "proc_busy[1]={}", s.proc_busy[1]);
+        assert_eq!(count_kind(&s, |k| matches!(k, EventKind::TaskEnd { .. })), 4);
+    }
+
+    #[test]
+    fn restored_processor_takes_work_again() {
+        let (m, db) = single_space_machine(2, 0);
+        let dag = independent(2);
+        let per = GEMM100 / 4e9;
+        let mut spec = FaultSpec::named("blip");
+        spec.fail_stop.push(FailStop { proc: 1, at: 0.2 * per, restore: Some(0.6 * per) });
+        let s = faulted(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestIdle), &spec);
+        assert_eq!(count_kind(&s, |k| matches!(k, EventKind::ProcRestore { .. })), 1);
+        // the killed task goes back to proc 1 *after* its dead window
+        // (earliest idle: restore at 0.6*per beats proc 0's tail at per)
+        let retried = s.assignments.iter().find(|a| a.proc == 1).expect("proc 1 reused after restore");
+        assert!((retried.start - 0.6 * per).abs() < 1e-15, "start={}", retried.start);
+        assert!((s.makespan - 1.6 * per).abs() < 1e-12, "makespan={}", s.makespan);
+    }
+
+    #[test]
+    fn transient_faults_retry_until_the_attempt_budget_exhausts() {
+        let (m, db) = single_space_machine(1, 0);
+        let dag = chain(1);
+        let per = GEMM100 / 4e9;
+        let mut spec = FaultSpec::named("always");
+        spec.transient_rate = 1.0;
+        spec.max_attempts = 3;
+        let s = faulted(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestIdle), &spec);
+        // every attempt is doomed: 3 starts, 3 faults, no end, no finish
+        assert_eq!(count_kind(&s, |k| matches!(k, EventKind::TaskStart { .. })), 3);
+        assert_eq!(count_kind(&s, |k| matches!(k, EventKind::TaskFault { .. })), 3);
+        assert_eq!(count_kind(&s, |k| matches!(k, EventKind::TaskEnd { .. })), 0);
+        assert!(s.makespan.is_infinite(), "exhausted budget must poison the makespan");
+        // all three attempts executed (and were billed) before being lost
+        assert!((s.proc_busy[0] - 3.0 * per).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moderate_transient_rate_recovers_to_a_finite_schedule() {
+        let (m, db) = single_space_machine(2, 0);
+        let dag = independent(8);
+        let base = simulate(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestIdle));
+        let mut spec = FaultSpec::named("flaky");
+        spec.transient_rate = 0.2;
+        spec.max_attempts = 8;
+        spec.seed = 11;
+        let s = faulted(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestIdle), &spec);
+        assert!(s.makespan.is_finite());
+        assert!(s.makespan >= base.makespan - 1e-12, "retries cannot speed a schedule up");
+        assert_eq!(count_kind(&s, |k| matches!(k, EventKind::TaskEnd { .. })), 8, "every task completes once");
+    }
+
+    #[test]
+    fn throttle_window_stretches_execution() {
+        let (m, db) = single_space_machine(1, 0);
+        let dag = chain(1);
+        let per = GEMM100 / 4e9;
+        let mut spec = FaultSpec::named("hot");
+        spec.throttle.push(ThrottleWindow { proc: 0, from: 0.0, to: 1.0, factor: 0.5 });
+        let s = faulted(&dag, &m, &db, cfg(Ordering::Fcfs, ProcSelect::EarliestIdle), &spec);
+        assert!((s.makespan - 2.0 * per).abs() < 1e-12, "half speed doubles the duration");
+    }
+
+    #[test]
+    fn fault_runs_replay_bit_identically() {
+        let (m, db) = single_space_machine(2, 1);
+        let dag = independent(6);
+        let mut spec = FaultSpec::named("mix");
+        spec.transient_rate = 0.3;
+        spec.max_attempts = 6;
+        spec.fail_stop.push(FailStop { proc: 0, at: 2e-4, restore: Some(9e-4) });
+        let c = cfg(Ordering::CriticalTime, ProcSelect::EarliestFinish);
+        let a = faulted(&dag, &m, &db, c, &spec);
+        let b = faulted(&dag, &m, &db, c, &spec);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.mapping(), b.mapping());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        // a different ensemble member draws a different transient pattern
+        let flat = dag.flat_dag();
+        let mut p = policy::policy_for(SchedConfig::new(c.ordering, c.select));
+        let other = simulate_flat_faults(&dag, &flat, &m, &db, c, p.as_mut(), &FaultPlan::new(&spec, 1));
+        assert_ne!(a.events, other.events, "members must differ");
     }
 
     #[test]

@@ -1,0 +1,557 @@
+//! Deterministic fault models for the event core: seeded fail-stop
+//! processor deaths, transient per-attempt task faults, throttle windows
+//! that slow a processor over an interval, and link outage/degradation
+//! windows.
+//!
+//! Every stochastic draw is content-derived ([`content_seed`] over the
+//! spec's name/seed plus the drawing coordinates), so a fault trace
+//! replays bit-for-bit at any `--threads` count and on any grid axis
+//! ordering — the same determinism contract as [`super::sweep::cell_seed`]
+//! and the portfolio solver's lane seeds.
+//!
+//! A [`FaultSpec`] is the declarative description (parsed from a TOML
+//! file, `hesp ... --faults SPEC.toml`); a [`FaultPlan`] is one concrete
+//! instantiation — an *ensemble member* — whose transient draws depend on
+//! the member index. Explicit entries (fail-stop instants, throttle and
+//! outage windows) are fixed across members; only the per-attempt
+//! transient rolls vary, which is what the solver's expected-makespan
+//! pricing ([`super::solver::PortfolioConfig::faults`]) averages over.
+
+use super::platform::ProcId;
+use super::task::TaskId;
+use crate::util::fxhash::content_seed;
+use crate::util::rng::Rng;
+use crate::util::toml::{parse as toml_parse, Toml};
+
+/// Default bound on executions per task (1 initial + 2 retries).
+pub const DEFAULT_MAX_ATTEMPTS: u32 = 3;
+
+/// A fail-stop processor death at `at`, optionally healed at `restore`.
+/// Work in flight at `at` is lost past that instant; work booked later is
+/// cancelled and re-dispatched by the policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailStop {
+    pub proc: ProcId,
+    pub at: f64,
+    /// `None` = the processor never comes back.
+    pub restore: Option<f64>,
+}
+
+/// A rate-multiplier window: over `[from, to)` the processor executes at
+/// `factor` of its nominal speed (`0 < factor <= 1`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThrottleWindow {
+    pub proc: ProcId,
+    pub from: f64,
+    pub to: f64,
+    pub factor: f64,
+}
+
+/// A link outage/degradation window: over `[from, to)` the link keeps
+/// `factor` of its capacity (0 = full blackout). Modeled as a pre-booked
+/// blackout of the lost fraction, so transfers deterministically route
+/// around it via the normal earliest-fit arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkOutage {
+    pub link: usize,
+    pub from: f64,
+    pub to: f64,
+    pub factor: f64,
+}
+
+/// The declarative fault model (one `--faults SPEC.toml` file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Label; enters every derived seed and the sweep CSV column.
+    pub name: String,
+    /// Base seed of the spec's stochastic draws.
+    pub seed: u64,
+    /// Per-attempt transient fault probability in `[0, 1]`: each attempt
+    /// of each task fails independently with this rate (the attempt runs
+    /// to completion but its writes are lost).
+    pub transient_rate: f64,
+    /// Executions allowed per task (first attempt included) before the
+    /// run is declared failed (`makespan = INFINITY`).
+    pub max_attempts: u32,
+    pub fail_stop: Vec<FailStop>,
+    pub throttle: Vec<ThrottleWindow>,
+    pub link_outage: Vec<LinkOutage>,
+}
+
+impl FaultSpec {
+    /// An empty (fault-free) spec under `name` — useful as the property-
+    /// test identity: simulating with it must be byte-identical to not
+    /// simulating with faults at all.
+    pub fn named(name: &str) -> FaultSpec {
+        FaultSpec {
+            name: name.to_string(),
+            seed: 0,
+            transient_rate: 0.0,
+            max_attempts: DEFAULT_MAX_ATTEMPTS,
+            fail_stop: Vec::new(),
+            throttle: Vec::new(),
+            link_outage: Vec::new(),
+        }
+    }
+
+    /// Whether no fault source is active.
+    pub fn is_empty(&self) -> bool {
+        self.transient_rate <= 0.0
+            && self.fail_stop.is_empty()
+            && self.throttle.is_empty()
+            && self.link_outage.is_empty()
+    }
+
+    /// Parse a fault-spec TOML document:
+    ///
+    /// ```toml
+    /// kind = "faults"        # marker so `hesp check` can sniff the file
+    /// name = "quick"
+    /// seed = 0               # optional
+    ///
+    /// [transient]            # optional
+    /// rate = 0.05
+    /// max_attempts = 4
+    ///
+    /// [[fail_stop]]
+    /// proc = 1
+    /// at = 0.004
+    /// restore = 0.009        # optional; omitted = dead forever
+    ///
+    /// [[throttle]]
+    /// proc = 0
+    /// from = 0.002
+    /// to = 0.006
+    /// factor = 0.5           # rate multiplier in (0, 1]
+    ///
+    /// [[link_outage]]
+    /// link = 0
+    /// from = 0.001
+    /// to = 0.003
+    /// factor = 0.0           # optional capacity kept; 0 = blackout
+    /// ```
+    pub fn from_toml(text: &str) -> Result<FaultSpec, String> {
+        let doc = toml_parse(text)?;
+        let name = match doc.get("name").and_then(|v| v.as_str()) {
+            Some(s) => s.to_string(),
+            None => return Err("fault spec needs name = \"...\"".to_string()),
+        };
+        let seed = match doc.get("seed") {
+            None => 0,
+            Some(v) => match v.as_i64() {
+                Some(x) if x >= 0 => x as u64,
+                _ => return Err("seed must be a non-negative integer".to_string()),
+            },
+        };
+        let num = |t: &Toml, key: &str, what: &str| -> Result<f64, String> {
+            match t.get(key).and_then(|v| v.as_f64()) {
+                Some(x) => Ok(x),
+                None => Err(format!("{what} needs numeric {key} = ...")),
+            }
+        };
+        let idx = |t: &Toml, key: &str, what: &str| -> Result<usize, String> {
+            match t.get(key).and_then(|v| v.as_i64()) {
+                Some(x) if x >= 0 => Ok(x as usize),
+                _ => Err(format!("{what} needs non-negative integer {key} = ...")),
+            }
+        };
+        let (transient_rate, max_attempts) = match doc.get("transient") {
+            None => (0.0, DEFAULT_MAX_ATTEMPTS),
+            Some(t) => {
+                let rate = num(t, "rate", "[transient]")?;
+                let ma = match t.get("max_attempts") {
+                    None => DEFAULT_MAX_ATTEMPTS,
+                    Some(v) => match v.as_i64() {
+                        Some(x) if x >= 1 => x as u32,
+                        _ => return Err("[transient] max_attempts must be >= 1".to_string()),
+                    },
+                };
+                (rate, ma)
+            }
+        };
+        let mut fail_stop = Vec::new();
+        if let Some(entries) = doc.get("fail_stop").and_then(|v| v.as_table_arr()) {
+            for t in entries {
+                let restore = match t.get("restore") {
+                    None => None,
+                    Some(v) => match v.as_f64() {
+                        Some(x) => Some(x),
+                        None => return Err("[[fail_stop]] restore must be numeric".to_string()),
+                    },
+                };
+                fail_stop.push(FailStop {
+                    proc: idx(t, "proc", "[[fail_stop]]")?,
+                    at: num(t, "at", "[[fail_stop]]")?,
+                    restore,
+                });
+            }
+        }
+        let mut throttle = Vec::new();
+        if let Some(entries) = doc.get("throttle").and_then(|v| v.as_table_arr()) {
+            for t in entries {
+                throttle.push(ThrottleWindow {
+                    proc: idx(t, "proc", "[[throttle]]")?,
+                    from: num(t, "from", "[[throttle]]")?,
+                    to: num(t, "to", "[[throttle]]")?,
+                    factor: num(t, "factor", "[[throttle]]")?,
+                });
+            }
+        }
+        let mut link_outage = Vec::new();
+        if let Some(entries) = doc.get("link_outage").and_then(|v| v.as_table_arr()) {
+            for t in entries {
+                let factor = match t.get("factor") {
+                    None => 0.0,
+                    Some(v) => match v.as_f64() {
+                        Some(x) => x,
+                        None => return Err("[[link_outage]] factor must be numeric".to_string()),
+                    },
+                };
+                link_outage.push(LinkOutage {
+                    link: idx(t, "link", "[[link_outage]]")?,
+                    from: num(t, "from", "[[link_outage]]")?,
+                    to: num(t, "to", "[[link_outage]]")?,
+                    factor,
+                });
+            }
+        }
+        let spec = FaultSpec { name, seed, transient_rate, max_attempts, fail_stop, throttle, link_outage };
+        let errs: Vec<String> =
+            spec.diagnostics().into_iter().map(|(k, m)| format!("{k}: {m}")).collect();
+        if errs.is_empty() {
+            Ok(spec)
+        } else {
+            Err(errs.join("\n"))
+        }
+    }
+
+    /// [`FaultSpec::from_toml`] on a file.
+    pub fn from_file(path: &str) -> Result<FaultSpec, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => FaultSpec::from_toml(&text).map_err(|e| format!("{path}: {e}")),
+            Err(e) => Err(format!("{path}: {e}")),
+        }
+    }
+
+    /// Collect every internal-consistency problem as `(key, message)`
+    /// pairs — the `hesp check` hook. Processor/link indices are range-
+    /// checked against a machine only at install time (a spec file is
+    /// platform-independent), so only shape problems surface here.
+    pub fn diagnostics(&self) -> Vec<(String, String)> {
+        let mut out = Vec::new();
+        if self.name.is_empty() {
+            out.push(("name".to_string(), "fault spec name must be non-empty".to_string()));
+        }
+        if !(0.0..=1.0).contains(&self.transient_rate) {
+            out.push((
+                "transient.rate".to_string(),
+                format!("transient rate {} outside [0, 1]", self.transient_rate),
+            ));
+        }
+        if self.max_attempts < 1 {
+            out.push(("transient.max_attempts".to_string(), "max_attempts must be >= 1".to_string()));
+        }
+        for (i, f) in self.fail_stop.iter().enumerate() {
+            if !f.at.is_finite() || f.at < 0.0 {
+                out.push((format!("fail_stop.{i}"), format!("death instant {} must be finite and >= 0", f.at)));
+            }
+            if let Some(r) = f.restore {
+                if !r.is_finite() || r <= f.at {
+                    out.push((format!("fail_stop.{i}"), format!("restore {} must be finite and after at {}", r, f.at)));
+                }
+            }
+        }
+        // a processor may die at most once: overlapping dead windows have
+        // no sensible kill/restore semantics
+        for (i, a) in self.fail_stop.iter().enumerate() {
+            for b in self.fail_stop.iter().skip(i + 1) {
+                if a.proc == b.proc {
+                    let a_end = a.restore.unwrap_or(f64::INFINITY);
+                    let b_end = b.restore.unwrap_or(f64::INFINITY);
+                    if a.at < b_end && b.at < a_end {
+                        out.push((
+                            format!("fail_stop.{i}"),
+                            format!("dead windows of processor {} overlap", a.proc),
+                        ));
+                    }
+                }
+            }
+        }
+        for (i, w) in self.throttle.iter().enumerate() {
+            if !w.from.is_finite() || !w.to.is_finite() || w.from < 0.0 || w.to <= w.from {
+                out.push((format!("throttle.{i}"), format!("window [{}, {}] is malformed", w.from, w.to)));
+            }
+            if !(w.factor > 0.0 && w.factor <= 1.0) {
+                out.push((
+                    format!("throttle.{i}"),
+                    format!("factor {} outside (0, 1] — 0 would stall work forever; use [[fail_stop]] for death", w.factor),
+                ));
+            }
+        }
+        // the duration walk assumes per-processor throttle windows are
+        // disjoint (overlapping multipliers are ambiguous anyway)
+        for (i, a) in self.throttle.iter().enumerate() {
+            for b in self.throttle.iter().skip(i + 1) {
+                if a.proc == b.proc && a.from < b.to && b.from < a.to {
+                    out.push((
+                        format!("throttle.{i}"),
+                        format!("throttle windows of processor {} overlap", a.proc),
+                    ));
+                }
+            }
+        }
+        for (i, o) in self.link_outage.iter().enumerate() {
+            if !o.from.is_finite() || !o.to.is_finite() || o.from < 0.0 || o.to <= o.from {
+                out.push((format!("link_outage.{i}"), format!("window [{}, {}] is malformed", o.from, o.to)));
+            }
+            if !(0.0..=1.0).contains(&o.factor) {
+                out.push((format!("link_outage.{i}"), format!("factor {} outside [0, 1]", o.factor)));
+            }
+        }
+        out
+    }
+}
+
+/// One concrete instantiation of a [`FaultSpec`]: ensemble member
+/// `member`'s transient draws, plus the spec's explicit windows. Cheap to
+/// clone (the spec's vectors are small).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub spec: FaultSpec,
+    /// Content-derived seed of this member's stochastic draws.
+    pub draw_seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(spec: &FaultSpec, member: u64) -> FaultPlan {
+        let draw_seed = content_seed(&["fault-ensemble", &spec.name], &[spec.seed, member]);
+        FaultPlan { spec: spec.clone(), draw_seed }
+    }
+
+    pub fn max_attempts(&self) -> u32 {
+        self.spec.max_attempts.max(1)
+    }
+
+    /// Deterministic transient roll: does attempt `attempt` of `task`
+    /// fault? A pure function of (plan seed, task id, attempt) — thread
+    /// count, dispatch order and wall clock never enter.
+    pub fn transient_hits(&self, task: TaskId, attempt: u32) -> bool {
+        if self.spec.transient_rate <= 0.0 {
+            return false;
+        }
+        let draw = Rng::new(content_seed(&["transient-fault"], &[self.draw_seed, task as u64, attempt as u64]))
+            .next_f64();
+        draw < self.spec.transient_rate
+    }
+
+    /// Dead windows `[at, restore)` of `proc`, sorted by start
+    /// (`INFINITY` end = never restored).
+    pub fn dead_windows(&self, proc: ProcId) -> Vec<(f64, f64)> {
+        let mut v: Vec<(f64, f64)> = self
+            .spec
+            .fail_stop
+            .iter()
+            .filter(|f| f.proc == proc)
+            .map(|f| (f.at, f.restore.unwrap_or(f64::INFINITY)))
+            .collect();
+        v.sort_by(|a, b| a.0.total_cmp(&b.0));
+        v
+    }
+
+    /// Wall-clock duration of `nominal` seconds of nominal-speed work
+    /// started at `start` on `proc`, walking the processor's throttle
+    /// windows (inside a window, work proceeds at `factor` speed).
+    pub fn exec_duration(&self, proc: ProcId, start: f64, nominal: f64) -> f64 {
+        if !start.is_finite() || nominal <= 0.0 {
+            return nominal;
+        }
+        let mut wins: Vec<(f64, f64, f64)> = self
+            .spec
+            .throttle
+            .iter()
+            .filter(|w| w.proc == proc)
+            .map(|w| (w.from, w.to, w.factor))
+            .collect();
+        if wins.is_empty() {
+            return nominal;
+        }
+        wins.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut t = start;
+        let mut work = nominal;
+        for (from, to, factor) in wins {
+            if work <= 0.0 || to <= t {
+                continue;
+            }
+            if t < from {
+                // full speed up to the window
+                let span = (from - t).min(work);
+                work -= span;
+                t += span;
+                if work <= 0.0 {
+                    break;
+                }
+            }
+            if t < to {
+                // inside the window: `factor` seconds of work per second
+                let capacity = (to - t) * factor;
+                if work <= capacity {
+                    t += work / factor;
+                    work = 0.0;
+                    break;
+                }
+                work -= capacity;
+                t = to;
+            }
+        }
+        if work > 0.0 {
+            t += work;
+        }
+        t - start
+    }
+}
+
+/// The solver's fault-aware objective configuration: average candidate
+/// makespans over `members` independent [`FaultPlan`]s of one spec.
+#[derive(Debug, Clone)]
+pub struct FaultEnsemble {
+    pub spec: FaultSpec,
+    pub members: u64,
+}
+
+impl FaultEnsemble {
+    pub fn new(spec: FaultSpec, members: u64) -> FaultEnsemble {
+        FaultEnsemble { spec, members: members.max(1) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"
+kind = "faults"
+name = "quick"
+seed = 7
+
+[transient]
+rate = 0.05
+max_attempts = 4
+
+[[fail_stop]]
+proc = 1
+at = 0.004
+restore = 0.009
+
+[[fail_stop]]
+proc = 2
+at = 0.5
+
+[[throttle]]
+proc = 0
+from = 0.002
+to = 0.006
+factor = 0.5
+
+[[link_outage]]
+link = 0
+from = 0.001
+to = 0.003
+"#;
+
+    #[test]
+    fn spec_round_trips_from_toml() {
+        let s = FaultSpec::from_toml(SPEC).unwrap();
+        assert_eq!(s.name, "quick");
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.transient_rate, 0.05);
+        assert_eq!(s.max_attempts, 4);
+        assert_eq!(s.fail_stop.len(), 2);
+        assert_eq!(s.fail_stop[0], FailStop { proc: 1, at: 0.004, restore: Some(0.009) });
+        assert_eq!(s.fail_stop[1].restore, None);
+        assert_eq!(s.throttle.len(), 1);
+        assert_eq!(s.link_outage, vec![LinkOutage { link: 0, from: 0.001, to: 0.003, factor: 0.0 }]);
+        assert!(!s.is_empty());
+        assert!(FaultSpec::named("x").is_empty());
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected_with_keys() {
+        assert!(FaultSpec::from_toml("seed = 1\n").unwrap_err().contains("name"));
+        let bad_rate = SPEC.replace("rate = 0.05", "rate = 1.5");
+        assert!(FaultSpec::from_toml(&bad_rate).unwrap_err().contains("transient.rate"));
+        let bad_restore = SPEC.replace("restore = 0.009", "restore = 0.001");
+        assert!(FaultSpec::from_toml(&bad_restore).unwrap_err().contains("fail_stop.0"));
+        let bad_factor = SPEC.replace("factor = 0.5", "factor = 0.0");
+        assert!(FaultSpec::from_toml(&bad_factor).unwrap_err().contains("throttle.0"));
+        let overlap = format!("{SPEC}\n[[throttle]]\nproc = 0\nfrom = 0.003\nto = 0.004\nfactor = 0.9\n");
+        assert!(FaultSpec::from_toml(&overlap).unwrap_err().contains("overlap"));
+        let double_death = format!("{SPEC}\n[[fail_stop]]\nproc = 1\nat = 0.005\n");
+        assert!(FaultSpec::from_toml(&double_death).unwrap_err().contains("overlap"));
+    }
+
+    #[test]
+    fn transient_draws_are_deterministic_and_member_dependent() {
+        let s = FaultSpec::from_toml(SPEC).unwrap();
+        let p0 = FaultPlan::new(&s, 0);
+        let p0b = FaultPlan::new(&s, 0);
+        let p1 = FaultPlan::new(&s, 1);
+        assert_eq!(p0.draw_seed, p0b.draw_seed);
+        assert_ne!(p0.draw_seed, p1.draw_seed);
+        let mut differs = false;
+        for task in 0..2000u64 {
+            let t = task as TaskId;
+            assert_eq!(p0.transient_hits(t, 0), p0b.transient_hits(t, 0), "task {task}");
+            if p0.transient_hits(t, 0) != p1.transient_hits(t, 0) {
+                differs = true;
+            }
+        }
+        assert!(differs, "two ensemble members must draw different fault sets");
+        // rate 0 never fires
+        let calm = FaultSpec::named("calm");
+        let p = FaultPlan::new(&calm, 0);
+        assert!((0..100).all(|t| !p.transient_hits(t as TaskId, 0)));
+    }
+
+    #[test]
+    fn transient_rate_is_roughly_respected() {
+        let s = FaultSpec::from_toml(SPEC).unwrap();
+        let p = FaultPlan::new(&s, 3);
+        let hits = (0..10_000u64).filter(|&t| p.transient_hits(t as TaskId, 0)).count();
+        let rate = hits as f64 / 10_000.0;
+        assert!((rate - 0.05).abs() < 0.01, "empirical rate {rate} far from 0.05");
+    }
+
+    #[test]
+    fn dead_windows_sorted_per_proc() {
+        let s = FaultSpec::from_toml(SPEC).unwrap();
+        let p = FaultPlan::new(&s, 0);
+        assert_eq!(p.dead_windows(1), vec![(0.004, 0.009)]);
+        assert_eq!(p.dead_windows(2), vec![(0.5, f64::INFINITY)]);
+        assert!(p.dead_windows(0).is_empty());
+    }
+
+    #[test]
+    fn exec_duration_walks_throttle_windows() {
+        let s = FaultSpec::from_toml(SPEC).unwrap();
+        let p = FaultPlan::new(&s, 0);
+        // untouched processor: nominal
+        assert_eq!(p.exec_duration(3, 0.0, 1e-3), 1e-3);
+        // fully inside the half-speed window [0.002, 0.006): doubles
+        assert!((p.exec_duration(0, 0.003, 1e-3) - 2e-3).abs() < 1e-15);
+        // straddling the window end: 1 ms of work at half speed covers
+        // only 0.5 ms of it by 0.006, the rest runs at full speed
+        let d = p.exec_duration(0, 0.0055, 1e-3);
+        assert!((d - (0.5e-3 + 0.75e-3)).abs() < 1e-12, "{d}");
+        // starting before the window: full speed until 0.002
+        let d = p.exec_duration(0, 0.0015, 1e-3);
+        assert!((d - (0.5e-3 + 1.0e-3)).abs() < 1e-12, "{d}");
+        // after the window: nominal again
+        assert_eq!(p.exec_duration(0, 0.007, 1e-3), 1e-3);
+    }
+
+    #[test]
+    fn ensemble_clamps_members() {
+        let fe = FaultEnsemble::new(FaultSpec::named("x"), 0);
+        assert_eq!(fe.members, 1);
+    }
+}

@@ -31,7 +31,12 @@
 //!   back to a full run whenever equivalence cannot be proven.
 //! * [`validate`]: the schedule-invariant oracle — an independent checker
 //!   (processor/link exclusivity, dependences, arrival gates, makespan)
-//!   the solver runs on every accepted schedule in debug builds.
+//!   the solver runs on every accepted schedule in debug builds, plus the
+//!   fault-run variant (dead-window exclusion, attempt accounting).
+//! * [`faults`]: deterministic fault injection — seeded fail-stop,
+//!   transient-attempt, throttle-window, and link-outage models the
+//!   engine replays identically at any `--threads` count, with recovery
+//!   via policy-driven rescheduling and a bounded attempt budget.
 //! * [`constructive`]: the online per-task-arrival scheduler-partitioner
 //!   (the paper's §4 follow-up).
 //! * [`workloads`]: synthetic DAG generators beyond dense linear algebra.
@@ -53,6 +58,7 @@ pub mod datadag;
 pub mod delta;
 pub mod energy;
 pub mod engine;
+pub mod faults;
 pub mod lower_bound;
 pub mod metrics;
 pub mod ordering;

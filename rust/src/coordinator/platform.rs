@@ -84,6 +84,36 @@ impl Timeline {
         }
     }
 
+    /// Remove the booked sub-range `[from, to)` — fault cancellation of
+    /// work that will never run (a processor died). The range must lie
+    /// entirely inside one existing busy interval (bookings merge on
+    /// contact, so a killed attempt's window is always covered by a
+    /// single interval even when it was booked back-to-back with
+    /// neighbours). Shrinks, splits, or removes the covering interval.
+    pub fn unbook(&mut self, from: f64, to: f64) {
+        if to <= from {
+            return;
+        }
+        // first interval that ends after `from` is the covering one
+        let i = self.busy.partition_point(|&(_, e)| e <= from);
+        debug_assert!(
+            i < self.busy.len() && self.busy[i].0 <= from && to <= self.busy[i].1,
+            "unbook range [{from}, {to}) not inside one booked interval"
+        );
+        let (s, e) = self.busy[i];
+        match (s < from, to < e) {
+            (true, true) => {
+                self.busy[i].1 = from;
+                self.busy.insert(i + 1, (to, e));
+            }
+            (true, false) => self.busy[i].1 = from,
+            (false, true) => self.busy[i].0 = to,
+            (false, false) => {
+                self.busy.remove(i);
+            }
+        }
+    }
+
     /// Whether the resource has booked work strictly after time `t`
     /// (an idle-from-`t` test; the event core emits `ProcIdle` with it).
     pub fn busy_after(&self, t: f64) -> bool {
@@ -496,6 +526,43 @@ mod tests {
         // zero-duration bookings are no-ops
         tl.book(10.0, 0.0);
         assert_eq!(tl.intervals(), &[(0.0, 4.0)][..]);
+    }
+
+    #[test]
+    fn timeline_unbook_shrinks_splits_and_removes() {
+        let mut tl = Timeline::new();
+        tl.book(0.0, 10.0); // busy [0,10)
+        tl.unbook(4.0, 6.0); // split
+        assert_eq!(tl.intervals(), &[(0.0, 4.0), (6.0, 10.0)][..]);
+        tl.unbook(0.0, 2.0); // shrink from the left
+        assert_eq!(tl.intervals(), &[(2.0, 4.0), (6.0, 10.0)][..]);
+        tl.unbook(8.0, 10.0); // shrink from the right
+        assert_eq!(tl.intervals(), &[(2.0, 4.0), (6.0, 8.0)][..]);
+        tl.unbook(2.0, 4.0); // remove whole interval
+        assert_eq!(tl.intervals(), &[(6.0, 8.0)][..]);
+        // zero-width is a no-op
+        tl.unbook(7.0, 7.0);
+        assert_eq!(tl.intervals(), &[(6.0, 8.0)][..]);
+        // the freed window is bookable again
+        assert_eq!(tl.earliest_fit(0.0, 5.0), 8.0);
+        assert_eq!(tl.earliest_fit(0.0, 4.0), 0.0);
+        tl.book(0.0, 4.0);
+        assert!((tl.booked() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_unbook_inverts_merged_bookings() {
+        // two back-to-back attempts merge into one interval; cancelling
+        // the second must recover exactly the first
+        let mut tl = Timeline::new();
+        tl.book(1.0, 2.0); // attempt A [1,3)
+        tl.book(3.0, 2.0); // attempt B [3,5) — merges to [1,5)
+        assert_eq!(tl.intervals(), &[(1.0, 5.0)][..]);
+        tl.unbook(3.0, 5.0);
+        assert_eq!(tl.intervals(), &[(1.0, 3.0)][..]);
+        // partial cancellation of in-flight work keeps the executed prefix
+        tl.unbook(2.0, 3.0);
+        assert_eq!(tl.intervals(), &[(1.0, 2.0)][..]);
     }
 
     #[test]

@@ -45,6 +45,16 @@ pub struct ServeResult {
     pub transfer_bytes: u64,
     /// When the system went empty.
     pub drain: f64,
+    /// Deferred jobs that aged out of the backlog (`--max-defer`).
+    pub expired: usize,
+    /// Jobs that exhausted a fault attempt budget.
+    pub failed: usize,
+    /// Percent of busy seconds that produced surviving work:
+    /// `100 * (busy - wasted) / busy`.
+    pub goodput_pct: f64,
+    /// Mean fault-to-restart latency over recovered attempts.
+    pub mean_recovery_s: f64,
+    pub faults_injected: usize,
 }
 
 /// Reduce a [`StreamOutcome`] to its scenario row.
@@ -93,7 +103,11 @@ pub fn summarize(
         .collect();
     let fairness = jain(&class_means);
 
-    let throughput_jps = if out.drain > 0.0 { completed as f64 / out.drain } else { 0.0 };
+    let busy: f64 = out.proc_busy.iter().sum();
+    let goodput_pct = if busy > 0.0 { 100.0 * (busy - out.wasted) / busy } else { 100.0 };
+    let mean_recovery_s = if out.recovered > 0 { out.recovery_sum / out.recovered as f64 } else { 0.0 };
+
+    let throughput_jps = if out.drain > 0.0 && out.drain.is_finite() { completed as f64 / out.drain } else { 0.0 };
     let avg_load_pct = if out.drain > 0.0 && !out.proc_busy.is_empty() {
         100.0 * out.proc_busy.iter().sum::<f64>() / (out.drain * out.proc_busy.len() as f64)
     } else {
@@ -121,6 +135,11 @@ pub fn summarize(
         avg_load_pct,
         transfer_bytes: out.transfer_bytes,
         drain: out.drain,
+        expired: out.expired,
+        failed: out.failed,
+        goodput_pct,
+        mean_recovery_s,
+        faults_injected: out.faults_injected,
     }
 }
 
@@ -129,16 +148,24 @@ pub const SERVE_CSV_HEADER: &str = "platform,arrivals,policy,seed,scenario_seed,
 submitted,completed,rejected,throughput_jps,p50_sojourn_s,p99_sojourn_s,mean_sojourn_s,\
 max_sojourn_s,mean_slowdown,deadline_miss_pct,fairness,avg_load_pct,transfer_bytes,drain_s";
 
+/// Extra columns emitted when faults or `--max-defer` are active
+/// (`ext = true`). Gated so fault-free bundles stay byte-identical to
+/// their pre-fault goldens.
+pub const SERVE_CSV_EXT: &str = ",expired,failed,goodput_pct,mean_recovery_s,faults_injected";
+
 /// Serve results as CSV, one row per scenario in grid order. Fixed-width
 /// float formatting keeps the output byte-stable across runs and thread
-/// counts.
-pub fn to_csv(results: &[ServeResult]) -> String {
+/// counts. `ext` appends the fault/expiry columns ([`SERVE_CSV_EXT`]).
+pub fn to_csv(results: &[ServeResult], ext: bool) -> String {
     let mut out = String::with_capacity(160 * (results.len() + 1));
     out.push_str(SERVE_CSV_HEADER);
+    if ext {
+        out.push_str(SERVE_CSV_EXT);
+    }
     out.push('\n');
     for r in results {
         out.push_str(&format!(
-            "{},{},{},{},{},{:.3},{},{},{},{:.4},{:.6},{:.6},{:.6},{:.6},{:.4},{:.2},{:.4},{:.2},{},{:.6}\n",
+            "{},{},{},{},{},{:.3},{},{},{},{:.4},{:.6},{:.6},{:.6},{:.6},{:.4},{:.2},{:.4},{:.2},{},{:.6}",
             r.platform,
             r.arrivals,
             r.policy,
@@ -160,12 +187,20 @@ pub fn to_csv(results: &[ServeResult]) -> String {
             r.transfer_bytes,
             r.drain,
         ));
+        if ext {
+            out.push_str(&format!(
+                ",{},{},{:.2},{:.6},{}",
+                r.expired, r.failed, r.goodput_pct, r.mean_recovery_s, r.faults_injected
+            ));
+        }
+        out.push('\n');
     }
     out
 }
 
 /// Serve results as a JSON array (machine-readable twin of the CSV).
-pub fn to_json(results: &[ServeResult]) -> String {
+/// `ext` adds the fault/expiry keys, mirroring [`to_csv`]'s gating.
+pub fn to_json(results: &[ServeResult], ext: bool) -> String {
     let arr: Vec<Json> = results
         .iter()
         .map(|r| {
@@ -189,6 +224,13 @@ pub fn to_json(results: &[ServeResult]) -> String {
             o.insert("avg_load_pct".into(), Json::Num(r.avg_load_pct));
             o.insert("transfer_bytes".into(), Json::Num(r.transfer_bytes as f64));
             o.insert("drain_s".into(), Json::Num(r.drain));
+            if ext {
+                o.insert("expired".into(), Json::Num(r.expired as f64));
+                o.insert("failed".into(), Json::Num(r.failed as f64));
+                o.insert("goodput_pct".into(), Json::Num(r.goodput_pct));
+                o.insert("mean_recovery_s".into(), Json::Num(r.mean_recovery_s));
+                o.insert("faults_injected".into(), Json::Num(r.faults_injected as f64));
+            }
             Json::Obj(o)
         })
         .collect();
@@ -196,15 +238,16 @@ pub fn to_json(results: &[ServeResult]) -> String {
 }
 
 /// Write the serve bundle: `out` (CSV) plus its `.json` twin next to it.
-pub fn write_serve_bundle(out: &Path, results: &[ServeResult]) -> std::io::Result<(PathBuf, PathBuf)> {
+/// `ext` gates the fault/expiry columns in both files.
+pub fn write_serve_bundle(out: &Path, results: &[ServeResult], ext: bool) -> std::io::Result<(PathBuf, PathBuf)> {
     if let Some(dir) = out.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)?;
         }
     }
-    std::fs::write(out, to_csv(results))?;
+    std::fs::write(out, to_csv(results, ext))?;
     let json = out.with_extension("json");
-    std::fs::write(&json, to_json(results))?;
+    std::fs::write(&json, to_json(results, ext))?;
     Ok((out.to_path_buf(), json))
 }
 
@@ -236,9 +279,15 @@ mod tests {
             submitted: 5,
             admitted: 4,
             rejected: 1,
+            expired: 0,
+            failed: 0,
             drain: 10.0,
             proc_busy: vec![5.0, 3.0],
             transfer_bytes: 1234,
+            faults_injected: 0,
+            recovered: 0,
+            recovery_sum: 0.0,
+            wasted: 0.0,
         }
     }
 
@@ -291,7 +340,7 @@ mod tests {
     fn csv_and_json_agree_on_shape() {
         let out = outcome(vec![rec(0, 0, 1.0, 0.5, f64::INFINITY, false)]);
         let r = summarize("p", "bursty:3:25:0.15", "pl/sjf-p", 0, 42, 3.0, &out);
-        let csv = to_csv(&[r.clone()]);
+        let csv = to_csv(&[r.clone()], false);
         let mut lines = csv.lines();
         let header = lines.next().unwrap();
         let row = lines.next().unwrap();
@@ -302,13 +351,42 @@ mod tests {
             "every header column has a value"
         );
         assert!(row.starts_with("p,bursty:3:25:0.15,pl/sjf-p,0,42,"));
-        let parsed = crate::util::json::parse(&to_json(&[r])).unwrap();
+        let parsed = crate::util::json::parse(&to_json(&[r], false)).unwrap();
         let arr = parsed.as_arr().unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("policy").and_then(|v| v.as_str()), Some("pl/sjf-p"));
         assert_eq!(arr[0].get("completed").and_then(|v| v.as_f64()), Some(1.0));
         // infinite deadline on the job, but the row itself stays finite
         assert_eq!(arr[0].get("deadline_miss_pct").and_then(|v| v.as_f64()), Some(0.0));
+    }
+
+    #[test]
+    fn extended_columns_are_gated_and_computed() {
+        let mut out = outcome(vec![rec(0, 0, 1.0, 0.5, f64::INFINITY, false)]);
+        out.expired = 2;
+        out.failed = 1;
+        out.faults_injected = 4;
+        out.recovered = 4;
+        out.recovery_sum = 0.8;
+        out.wasted = 2.0; // busy = 8.0 -> goodput 75%
+        let r = summarize("p", "poisson:8", "pl/eft-p", 0, 1, 3.0, &out);
+        assert_eq!(r.expired, 2);
+        assert_eq!(r.failed, 1);
+        assert!((r.goodput_pct - 75.0).abs() < 1e-12);
+        assert!((r.mean_recovery_s - 0.2).abs() < 1e-12);
+        // ext off: the row is byte-identical to the pre-fault layout
+        let plain = to_csv(&[r.clone()], false);
+        assert!(!plain.contains("goodput"), "gated columns stay out of plain bundles");
+        let ext = to_csv(&[r.clone()], true);
+        let header = ext.lines().next().unwrap();
+        assert_eq!(header, format!("{SERVE_CSV_HEADER}{SERVE_CSV_EXT}"));
+        let row = ext.lines().nth(1).unwrap();
+        assert_eq!(header.split(',').count(), row.split(',').count());
+        assert!(row.ends_with(",2,1,75.00,0.200000,4"), "{row}");
+        let parsed = crate::util::json::parse(&to_json(&[r], true)).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr[0].get("faults_injected").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(arr[0].get("goodput_pct").and_then(|v| v.as_f64()), Some(75.0));
     }
 
     #[test]

@@ -39,6 +39,8 @@ pub mod queue;
 pub mod sim;
 
 pub use arrivals::{parse_trace, stream_seed, ArrivalSpec, Deadline, JobSpec};
-pub use metrics::{summarize, to_csv, to_json, write_serve_bundle, ServeResult, SERVE_CSV_HEADER};
+pub use metrics::{
+    summarize, to_csv, to_json, write_serve_bundle, ServeResult, SERVE_CSV_EXT, SERVE_CSV_HEADER,
+};
 pub use queue::{Admission, JobQueue};
 pub use sim::{run_serve, scenario_seed, simulate_stream, JobRecord, ServeConfig, ServeGrid, StreamOutcome};

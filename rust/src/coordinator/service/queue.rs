@@ -55,6 +55,7 @@ pub struct JobQueue {
     submitted: usize,
     admitted: usize,
     resident: usize,
+    expired: usize,
 }
 
 impl JobQueue {
@@ -69,6 +70,7 @@ impl JobQueue {
             submitted: 0,
             admitted: 0,
             resident: 0,
+            expired: 0,
         }
     }
 
@@ -127,6 +129,33 @@ impl JobQueue {
         self.resident
     }
 
+    /// Expire deferred jobs older than `max_defer` at simulated time
+    /// `now`: each timed-out job moves from the FIFO backlog to
+    /// [`rejected`](Self::rejected) — loudly, counted in both the
+    /// rejection list and [`expired`](Self::expired), never dropped.
+    /// Returns how many expired in this call. The backlog is FIFO by
+    /// arrival time, so expiry only ever takes a prefix.
+    pub fn expire(&mut self, now: f64, max_defer: f64) -> usize {
+        let mut n = 0;
+        while self.pending.front().is_some_and(|head| head.t_arrival + max_defer < now) {
+            if let Some(job) = self.pending.pop_front() {
+                self.rejected.push(job);
+                self.expired += 1;
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.check();
+        }
+        n
+    }
+
+    /// Deferred jobs that timed out of the backlog (a subset of
+    /// [`rejected`](Self::rejected)).
+    pub fn expired(&self) -> usize {
+        self.expired
+    }
+
     /// Jobs currently deferred (FIFO order).
     pub fn pending(&self) -> usize {
         self.pending.len()
@@ -143,6 +172,10 @@ impl JobQueue {
             self.submitted,
             self.admitted + self.rejected.len() + self.pending.len(),
             "admission accounting must conserve jobs"
+        );
+        debug_assert!(
+            self.expired <= self.rejected.len(),
+            "every expired job must sit in the rejection list"
         );
     }
 }
@@ -197,6 +230,38 @@ mod tests {
         assert_eq!(q.resident(), 0);
         assert_eq!(q.admitted(), 3);
         assert_eq!(q.submitted(), 3);
+    }
+
+    #[test]
+    fn max_defer_expires_timed_out_backlog_loudly() {
+        let mut q = JobQueue::new(1, Admission::Defer);
+        assert!(q.offer(job(0)).is_some()); // arrives 0.0, resident
+        assert!(q.offer(job(1)).is_none()); // arrives 0.1, deferred
+        assert!(q.offer(job(2)).is_none()); // arrives 0.2, deferred
+        // at t=0.35 with max_defer=0.2, job 1 (waiting 0.25) times out;
+        // job 2 (waiting 0.15) stays
+        assert_eq!(q.expire(0.35, 0.2), 1);
+        assert_eq!(q.expired(), 1);
+        assert_eq!(q.pending(), 1);
+        assert_eq!(q.rejected().len(), 1, "expiry is recorded, not silent");
+        assert_eq!(q.rejected()[0].id, 1);
+        // conservation holds through the new path
+        assert_eq!(q.submitted(), q.admitted() + q.rejected().len() + q.pending());
+        // the survivor still drains normally
+        assert_eq!(q.on_job_done().expect("job 2 admitted").id, 2);
+        assert_eq!(q.expire(10.0, 0.2), 0, "nothing pending, nothing expires");
+        assert_eq!(q.submitted(), q.admitted() + q.rejected().len() + q.pending());
+    }
+
+    #[test]
+    fn expiry_never_touches_resident_or_rejected_jobs() {
+        let mut q = JobQueue::new(1, Admission::Reject);
+        assert!(q.offer(job(0)).is_some());
+        assert!(q.offer(job(1)).is_none(), "reject mode: straight to rejected");
+        assert_eq!(q.expire(100.0, 0.0), 0, "reject mode has no backlog to expire");
+        assert_eq!(q.expired(), 0);
+        assert_eq!(q.resident(), 1);
+        assert_eq!(q.rejected().len(), 1);
     }
 
     #[test]

@@ -21,7 +21,8 @@
 //! [`Timeline`]: crate::coordinator::platform::Timeline
 
 use crate::coordinator::coherence::CachePolicy;
-use crate::coordinator::engine::{pick_best, Assignment, EventCore, EventKind, SimConfig};
+use crate::coordinator::engine::{pick_best, Assignment, EventCore, EventKind, SimConfig, FAULT_KEY_MASK};
+use crate::coordinator::faults::{FaultPlan, FaultSpec};
 use crate::coordinator::lower_bound::makespan_lower_bound;
 use crate::coordinator::ordering::critical_times;
 use crate::coordinator::perfmodel::PerfDb;
@@ -51,6 +52,10 @@ pub struct ServeConfig {
     pub job_seed: u64,
     /// Scenario seed: drives the scheduler's tie-break RNG.
     pub rng_seed: u64,
+    /// Age bound for the deferred backlog: a job waiting longer than
+    /// this is moved to `rejected` (counted as expired). `None` waits
+    /// forever — the pre-hardening behavior.
+    pub max_defer: Option<f64>,
 }
 
 /// Per-job outcome of a completed job.
@@ -86,10 +91,24 @@ pub struct StreamOutcome {
     pub submitted: usize,
     pub admitted: usize,
     pub rejected: usize,
-    /// When the system went empty (last task or transfer end).
+    /// Deferred jobs that aged out of the backlog (subset of `rejected`).
+    pub expired: usize,
+    /// Admitted jobs that could not complete: a task exhausted its fault
+    /// attempt budget. Counted as deadline misses.
+    pub failed: usize,
+    /// When the system went empty (last task or transfer end);
+    /// `INFINITY` when any job failed under faults.
     pub drain: f64,
     pub proc_busy: Vec<f64>,
     pub transfer_bytes: u64,
+    /// Fault attempts injected (transient dooms + fail-stop kills).
+    pub faults_injected: usize,
+    /// Faulted attempts that were re-dispatched.
+    pub recovered: usize,
+    /// Summed fault-to-restart latency over recovered attempts.
+    pub recovery_sum: f64,
+    /// Busy seconds spent on attempts that were later lost to faults.
+    pub wasted: f64,
 }
 
 /// One admitted, not-yet-drained job.
@@ -109,17 +128,26 @@ struct Resident {
     /// Global program-order base: ready-queue ties break on
     /// `ord_base + pos`, i.e. admission order, then task order.
     ord_base: usize,
+    /// Dispatched, not-yet-ended attempts (fault mode only).
+    inflight: usize,
+    /// A task exhausted its fault attempt budget: the job can never
+    /// complete and drains as failed once its in-flight work ends.
+    failed: bool,
 }
 
 /// Simulate `stream` (sorted by arrival) under `policy` on `machine`.
 /// Runs to full drain: past the last arrival, the clock follows the event
-/// queue until every admitted job completes.
+/// queue until every admitted job completes (or fails its fault budget).
+/// With `faults`, failures interleave with arrivals on the shared clock:
+/// faulted attempts re-enter the global ready queue and are re-dispatched
+/// by the same policy, under their *original* commit key.
 pub fn simulate_stream(
     machine: &Machine,
     db: &PerfDb,
     policy: &mut dyn SchedPolicy,
     stream: &[JobSpec],
     cfg: &ServeConfig,
+    faults: Option<&FaultPlan>,
 ) -> StreamOutcome {
     debug_assert!(stream.windows(2).all(|w| w[0].t_arrival <= w[1].t_arrival));
     let sim_cfg = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
@@ -127,20 +155,34 @@ pub fn simulate_stream(
         .with_elem_bytes(cfg.elem_bytes)
         .with_seed(cfg.rng_seed);
     let mut core = EventCore::new(machine, db, sim_cfg);
+    if let Some(plan) = faults {
+        core.install_faults(plan);
+    }
     let mut queue = JobQueue::new(cfg.queue_cap, cfg.admission);
     let mut jobs: Vec<Resident> = Vec::new();
     // (slot, pos) of every released, not-yet-dispatched task
     let mut ready: Vec<(usize, usize)> = Vec::new();
     // commit key -> (slot, pos); keys are dense dispatch indices
     let mut key_map: Vec<(usize, usize)> = Vec::new();
+    // (slot, pos) -> (original commit key, fault time) of faulted tasks
+    // awaiting re-dispatch — lookup only, never iterated
+    let mut retry_key: crate::util::fxhash::FxHashMap<(usize, usize), (usize, f64)> =
+        crate::util::fxhash::FxHashMap::default();
     let mut records: Vec<JobRecord> = Vec::new();
     let mut batch: Vec<(usize, EventKind)> = Vec::new();
     let mut next_ord = 0usize;
     let mut next_arrival = 0usize;
+    let mut recovered = 0usize;
+    let mut recovery_sum = 0.0f64;
+    let mut failed = 0usize;
     let static_keys = !policy.dynamic_order();
 
     loop {
-        // 1. admit every arrival due at or before the clock
+        // 1. expire aged-out backlog, then admit every arrival due at or
+        // before the clock
+        if let Some(md) = cfg.max_defer {
+            queue.expire(core.now, md);
+        }
         while next_arrival < stream.len() && stream[next_arrival].t_arrival <= core.now {
             let spec = stream[next_arrival];
             next_arrival += 1;
@@ -184,12 +226,34 @@ pub fn simulate_stream(
                 let mut ctx = core.ctx_job(&succ_store, Some(j.info));
                 policy.select(&mut ctx, j.dag.task(j.flat.tasks[pos]), rel)
             };
-            let key = key_map.len();
-            key_map.push((slot, pos));
+            // a faulted task re-dispatches under its ORIGINAL commit key
+            // (attempt bookkeeping in the core is keyed by it); fresh
+            // tasks get the next dense index
+            let retry = retry_key.remove(&(slot, pos));
+            let key = match retry {
+                Some((k, _)) => k,
+                None => {
+                    key_map.push((slot, pos));
+                    key_map.len() - 1
+                }
+            };
             let j = &jobs[slot];
             let task_id = j.flat.tasks[pos];
             let (start, end) = core.commit(j.dag.task(task_id), key, proc, rel);
-            core.sched.assignments.push(Assignment { task: task_id, pos: key, proc, release: rel, start, end });
+            let a = Assignment { task: task_id, pos: key, proc, release: rel, start, end };
+            match retry {
+                Some((_, t_fault)) => {
+                    recovered += 1;
+                    if start.is_finite() {
+                        recovery_sum += start - t_fault;
+                    }
+                    core.sched.assignments[key] = a;
+                }
+                None => core.sched.assignments.push(a),
+            }
+            if faults.is_some() {
+                jobs[slot].inflight += 1;
+            }
         }
 
         // 3. advance the clock: next arrival vs next event
@@ -205,33 +269,103 @@ pub fn simulate_stream(
                 core.pop_event_batch(&mut batch);
                 let mut done_slots: Vec<usize> = Vec::new();
                 for k in 0..batch.len() {
-                    let (key, kind) = batch[k];
-                    let EventKind::TaskEnd { proc, .. } = kind else { continue };
-                    debug_assert!(key < key_map.len());
-                    let (slot, pos) = key_map[key];
-                    {
-                        let j = &jobs[slot];
-                        core.apply_writes(j.dag.task(j.flat.tasks[pos]), proc, core.now);
-                    }
-                    jobs[slot].remaining -= 1;
-                    if jobs[slot].remaining == 0 {
-                        done_slots.push(slot);
-                    }
-                    for si in 0..jobs[slot].flat.succs[pos].len() {
-                        let s = jobs[slot].flat.succs[pos][si];
-                        jobs[slot].indeg[s] -= 1;
-                        let rel = jobs[slot].release[s].max(core.now);
-                        jobs[slot].release[s] = rel;
-                        if jobs[slot].indeg[s] == 0 {
-                            if static_keys {
-                                let k2 = {
-                                    let j = &jobs[slot];
-                                    let mut ctx = core.ctx_job(&[], Some(j.info));
-                                    policy.order(&mut ctx, j.dag.task(j.flat.tasks[s]), rel, j.prio[s])
-                                };
-                                jobs[slot].keys[s] = k2;
+                    let (ekey, kind) = batch[k];
+                    // fault-mode keys carry the attempt count in the high
+                    // bits; the base is the dense dispatch index
+                    let base = ekey & FAULT_KEY_MASK;
+                    match kind {
+                        EventKind::TaskEnd { proc, .. } => {
+                            debug_assert!(base < key_map.len());
+                            let (slot, pos) = key_map[base];
+                            if faults.is_some() {
+                                jobs[slot].inflight -= 1;
                             }
-                            ready.push((slot, s));
+                            {
+                                let j = &jobs[slot];
+                                core.apply_writes(j.dag.task(j.flat.tasks[pos]), proc, core.now);
+                            }
+                            jobs[slot].remaining -= 1;
+                            if jobs[slot].remaining == 0 {
+                                done_slots.push(slot);
+                            }
+                            for si in 0..jobs[slot].flat.succs[pos].len() {
+                                let s = jobs[slot].flat.succs[pos][si];
+                                jobs[slot].indeg[s] -= 1;
+                                let rel = jobs[slot].release[s].max(core.now);
+                                jobs[slot].release[s] = rel;
+                                if jobs[slot].indeg[s] == 0 {
+                                    if static_keys {
+                                        let k2 = {
+                                            let j = &jobs[slot];
+                                            let mut ctx = core.ctx_job(&[], Some(j.info));
+                                            policy.order(&mut ctx, j.dag.task(j.flat.tasks[s]), rel, j.prio[s])
+                                        };
+                                        jobs[slot].keys[s] = k2;
+                                    }
+                                    ready.push((slot, s));
+                                }
+                            }
+                        }
+                        EventKind::TaskFault { .. } => {
+                            // a faulted attempt: no writes land, no
+                            // successors release — the task re-enters the
+                            // ready queue (or fails the job for good)
+                            debug_assert!(base < key_map.len());
+                            let (slot, pos) = key_map[base];
+                            jobs[slot].inflight -= 1;
+                            if core.fault_retry(base) {
+                                let rel = jobs[slot].release[pos].max(core.now);
+                                jobs[slot].release[pos] = rel;
+                                retry_key.insert((slot, pos), (base, core.now));
+                                if static_keys {
+                                    let k2 = {
+                                        let j = &jobs[slot];
+                                        let mut ctx = core.ctx_job(&[], Some(j.info));
+                                        policy.order(&mut ctx, j.dag.task(j.flat.tasks[pos]), rel, j.prio[pos])
+                                    };
+                                    jobs[slot].keys[pos] = k2;
+                                }
+                                ready.push((slot, pos));
+                            } else if !jobs[slot].failed {
+                                jobs[slot].failed = true;
+                                failed += 1;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                // a failed job drains once its in-flight + ready work is
+                // gone: record it (as a miss) and free its residency slot
+                if failed > 0 {
+                    for slot in 0..jobs.len() {
+                        let j = &jobs[slot];
+                        if !j.failed || j.remaining == 0 || j.inflight > 0 {
+                            continue;
+                        }
+                        if ready.iter().any(|&(s, _)| s == slot) {
+                            continue;
+                        }
+                        jobs[slot].remaining = 0; // finalized marker
+                        let j = &jobs[slot];
+                        records.push(JobRecord {
+                            id: j.spec.id,
+                            workload: j.spec.workload.label(),
+                            tile: j.spec.tile,
+                            priority: j.spec.priority,
+                            t_arrival: j.spec.t_arrival,
+                            admitted: j.admitted,
+                            finished: core.now,
+                            sojourn: core.now - j.spec.t_arrival,
+                            lower_bound: j.info.lower_bound,
+                            deadline: j.info.deadline,
+                            missed: true,
+                            n_tasks: j.flat.len(),
+                        });
+                        if let Some(md) = cfg.max_defer {
+                            queue.expire(core.now, md);
+                        }
+                        if let Some(spec) = queue.on_job_done() {
+                            admit(&mut core, policy, &mut jobs, &mut ready, &mut next_ord, spec, cfg.job_seed);
                         }
                     }
                 }
@@ -252,8 +386,12 @@ pub fn simulate_stream(
                         n_tasks: j.flat.len(),
                     });
                     // a drained job frees a residency slot: the deferred
-                    // backlog head (if any) is admitted right now and its
-                    // roots dispatch in the next decision round
+                    // backlog head (if any — timed-out heads expire
+                    // first) is admitted right now and its roots dispatch
+                    // in the next decision round
+                    if let Some(md) = cfg.max_defer {
+                        queue.expire(core.now, md);
+                    }
                     if let Some(spec) = queue.on_job_done() {
                         admit(&mut core, policy, &mut jobs, &mut ready, &mut next_ord, spec, cfg.job_seed);
                     }
@@ -263,18 +401,26 @@ pub fn simulate_stream(
     }
 
     debug_assert_eq!(queue.pending(), 0, "drained system cannot hold deferred jobs");
-    debug_assert_eq!(records.len(), queue.admitted(), "every admitted job must complete");
+    debug_assert_eq!(records.len(), queue.admitted(), "every admitted job must complete or fail");
     records.sort_by_key(|r| r.id);
     let (submitted, admitted, rejected) = (queue.submitted(), queue.admitted(), queue.rejected().len());
+    let expired = queue.expired();
+    let (faults_injected, _, wasted) = core.fault_stats();
     let sched = core.finish();
     StreamOutcome {
         jobs: records,
         submitted,
         admitted,
         rejected,
+        expired,
+        failed,
         drain: sched.makespan,
         proc_busy: sched.proc_busy,
         transfer_bytes: sched.transfer_bytes,
+        faults_injected,
+        recovered,
+        recovery_sum,
+        wasted,
     }
 }
 
@@ -324,6 +470,8 @@ fn admit(
         admitted: at,
         info,
         ord_base: *next_ord,
+        inflight: 0,
+        failed: false,
         spec,
         prio,
         dag,
@@ -361,6 +509,11 @@ pub struct ServeGrid {
     pub admission: Admission,
     pub cache: CachePolicy,
     pub seed: u64,
+    /// Deferred-backlog age bound (`--max-defer`); `None` waits forever.
+    pub max_defer: Option<f64>,
+    /// Fault spec injected into every scenario (`--faults`); `None` runs
+    /// the perfect machine.
+    pub faults: Option<FaultSpec>,
 }
 
 /// Deterministic per-scenario seed for the scheduler RNG — content-derived
@@ -407,8 +560,14 @@ pub fn run_serve(grid: &ServeGrid, threads: usize) -> anyhow::Result<Vec<ServeRe
             elem_bytes: platform.elem_bytes,
             job_seed: grid.seed,
             rng_seed: sseed,
+            max_defer: grid.max_defer,
         };
-        let outcome = simulate_stream(&platform.machine, &platform.db, policy.as_mut(), &streams[a], &cfg);
+        // one plan member per grid seed, shared by every scenario: the
+        // same fault trace hits every (platform, policy) pair, so
+        // comparisons stay paired
+        let plan = grid.faults.as_ref().map(|s| FaultPlan::new(s, grid.seed));
+        let outcome =
+            simulate_stream(&platform.machine, &platform.db, policy.as_mut(), &streams[a], &cfg, plan.as_ref());
         summarize(&platform.name, &arr_label, pol_name, grid.seed, sseed, grid.duration, &outcome)
     }))
 }
@@ -441,6 +600,7 @@ mod tests {
             elem_bytes: 8,
             job_seed: 0,
             rng_seed: 0,
+            max_defer: None,
         }
     }
 
@@ -460,7 +620,7 @@ mod tests {
         let (m, db) = platform(2, 1.0);
         let mut pol = policy_by_name("pl/eft-p").unwrap();
         let stream = [job(0, 0.25)];
-        let out = simulate_stream(&m, &db, pol.as_mut(), &stream, &cfg());
+        let out = simulate_stream(&m, &db, pol.as_mut(), &stream, &cfg(), None);
         assert_eq!((out.submitted, out.admitted, out.rejected), (1, 1, 0));
         assert_eq!(out.jobs.len(), 1);
         let r = &out.jobs[0];
@@ -473,7 +633,7 @@ mod tests {
         assert!(out.drain >= r.finished);
         // bit-for-bit determinism
         let mut pol2 = policy_by_name("pl/eft-p").unwrap();
-        let out2 = simulate_stream(&m, &db, pol2.as_mut(), &stream, &cfg());
+        let out2 = simulate_stream(&m, &db, pol2.as_mut(), &stream, &cfg(), None);
         assert_eq!(out.jobs, out2.jobs);
         assert_eq!(out.drain, out2.drain);
     }
@@ -485,10 +645,10 @@ mod tests {
         // they overlap instead of serializing on write-after-write hazards
         let (m, db) = platform(8, 1.0);
         let mut pol = policy_by_name("pl/eft-p").unwrap();
-        let solo = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0)], &cfg());
+        let solo = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0)], &cfg(), None);
         let t_solo = solo.jobs[0].finished;
         let mut pol = policy_by_name("pl/eft-p").unwrap();
-        let both = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 0.0)], &cfg());
+        let both = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 0.0)], &cfg(), None);
         assert_eq!(both.jobs.len(), 2);
         let worst = both.jobs.iter().map(|r| r.finished).fold(0.0f64, f64::max);
         assert!(
@@ -503,7 +663,7 @@ mod tests {
         let mut pol = policy_by_name("pl/eft-p").unwrap();
         let mut c = cfg();
         c.queue_cap = 1;
-        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 0.0)], &c);
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 0.0)], &c, None);
         assert_eq!(out.jobs.len(), 2);
         assert_eq!(out.rejected, 0);
         let (a, b) = (&out.jobs[0], &out.jobs[1]);
@@ -518,7 +678,7 @@ mod tests {
         let mut c = cfg();
         c.queue_cap = 1;
         c.admission = Admission::Reject;
-        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 1e-6), job(2, 2e-6)], &c);
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 1e-6), job(2, 2e-6)], &c, None);
         assert_eq!(out.submitted, 3);
         assert_eq!(out.jobs.len(), 1, "only the first fits");
         assert_eq!(out.rejected, 2);
@@ -533,7 +693,7 @@ mod tests {
         impossible.deadline = Deadline::At(1e-9);
         let mut generous = job(1, 0.0);
         generous.deadline = Deadline::At(1e9);
-        let out = simulate_stream(&m, &db, pol.as_mut(), &[impossible, generous], &cfg());
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[impossible, generous], &cfg(), None);
         assert!(out.jobs[0].missed);
         assert!(!out.jobs[1].missed);
         assert_eq!(out.jobs[0].deadline, 1e-9);
@@ -545,7 +705,7 @@ mod tests {
         // event by event — the clock jumps straight to it
         let (m, db) = platform(2, 1.0);
         let mut pol = policy_by_name("pl/eft-p").unwrap();
-        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 50.0)], &cfg());
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 50.0)], &cfg(), None);
         assert_eq!(out.jobs[1].admitted, 50.0);
         assert!(out.jobs[0].finished < 50.0, "first job drains long before the second arrives");
         let (s0, s1) = (out.jobs[0].sojourn, out.jobs[1].sojourn);
@@ -556,10 +716,90 @@ mod tests {
     fn empty_stream_is_benign() {
         let (m, db) = platform(2, 1.0);
         let mut pol = policy_by_name("pl/eft-p").unwrap();
-        let out = simulate_stream(&m, &db, pol.as_mut(), &[], &cfg());
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[], &cfg(), None);
         assert!(out.jobs.is_empty());
         assert_eq!(out.drain, 0.0);
         assert_eq!((out.submitted, out.rejected), (0, 0));
+    }
+
+    #[test]
+    fn max_defer_expires_backlog_into_rejected() {
+        let (m, db) = platform(2, 1.0);
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let mut c = cfg();
+        c.queue_cap = 1;
+        c.max_defer = Some(1e-3); // far below job 0's runtime
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0), job(1, 1e-6)], &c, None);
+        assert_eq!(out.jobs.len(), 1, "the deferred job times out before a slot frees");
+        assert_eq!(out.expired, 1);
+        assert_eq!(out.rejected, 1, "expired jobs are rejected, not dropped");
+        assert_eq!(out.submitted, out.jobs.len() + out.rejected, "conservation through expiry");
+        // a generous bound changes nothing
+        c.max_defer = Some(1e9);
+        let mut pol2 = policy_by_name("pl/eft-p").unwrap();
+        let out2 = simulate_stream(&m, &db, pol2.as_mut(), &[job(0, 0.0), job(1, 1e-6)], &c, None);
+        assert_eq!(out2.jobs.len(), 2);
+        assert_eq!((out2.expired, out2.rejected), (0, 0));
+    }
+
+    #[test]
+    fn empty_fault_plan_matches_fault_free_stream() {
+        use crate::coordinator::faults::{FaultPlan, FaultSpec};
+        let (m, db) = platform(2, 1.0);
+        let stream = [job(0, 0.0), job(1, 1e-4)];
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let base = simulate_stream(&m, &db, pol.as_mut(), &stream, &cfg(), None);
+        let plan = FaultPlan::new(&FaultSpec::named("off"), 0);
+        let mut pol2 = policy_by_name("pl/eft-p").unwrap();
+        let out = simulate_stream(&m, &db, pol2.as_mut(), &stream, &cfg(), Some(&plan));
+        assert_eq!(base.jobs, out.jobs);
+        assert_eq!(base.drain.to_bits(), out.drain.to_bits());
+        assert_eq!((out.faults_injected, out.recovered, out.failed), (0, 0, 0));
+    }
+
+    #[test]
+    fn transient_faults_recover_within_the_stream() {
+        use crate::coordinator::faults::{FaultPlan, FaultSpec};
+        let (m, db) = platform(2, 1.0);
+        let mut spec = FaultSpec::named("flaky");
+        spec.transient_rate = 0.4;
+        spec.max_attempts = 20;
+        let plan = FaultPlan::new(&spec, 0);
+        let mut j0 = job(0, 0.0);
+        j0.tile = 128; // 4x4 blocks: enough attempts to see faults
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[j0], &cfg(), Some(&plan));
+        assert_eq!(out.failed, 0, "a 20-attempt budget at rate 0.4 never exhausts here");
+        assert_eq!(out.jobs.len(), 1);
+        assert!(out.drain.is_finite());
+        assert!(out.faults_injected > 0, "rate 0.4 over dozens of attempts must fault");
+        assert_eq!(out.recovered, out.faults_injected, "every fault is re-dispatched");
+        assert!(out.recovery_sum >= 0.0);
+        assert!(out.wasted > 0.0, "doomed attempts burn busy time");
+        // byte-identical replay
+        let mut pol2 = policy_by_name("pl/eft-p").unwrap();
+        let out2 = simulate_stream(&m, &db, pol2.as_mut(), &[j0], &cfg(), Some(&plan));
+        assert_eq!(out.jobs, out2.jobs);
+        assert_eq!(out.drain.to_bits(), out2.drain.to_bits());
+        assert_eq!(out.faults_injected, out2.faults_injected);
+    }
+
+    #[test]
+    fn exhausted_attempt_budget_fails_the_job_loudly() {
+        use crate::coordinator::faults::{FaultPlan, FaultSpec};
+        let (m, db) = platform(2, 1.0);
+        let mut spec = FaultSpec::named("hopeless");
+        spec.transient_rate = 1.0;
+        spec.max_attempts = 2;
+        let plan = FaultPlan::new(&spec, 0);
+        let mut pol = policy_by_name("pl/eft-p").unwrap();
+        let out = simulate_stream(&m, &db, pol.as_mut(), &[job(0, 0.0)], &cfg(), Some(&plan));
+        assert_eq!(out.failed, 1, "rate 1.0 exhausts the budget");
+        assert_eq!(out.jobs.len(), 1, "the failed job is recorded, never dropped");
+        assert!(out.jobs[0].missed, "a failed job counts as a miss");
+        assert!(out.drain.is_infinite(), "an exhausted stream has no finite drain");
+        assert_eq!(out.faults_injected, 2, "two attempts, both doomed");
+        assert_eq!(out.recovered, 1, "one retry was granted before exhaustion");
     }
 
     #[test]

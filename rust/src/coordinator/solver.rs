@@ -54,9 +54,10 @@
 use super::delta::{self, CostCache, DeltaBase, DeltaMode, DeltaPlan};
 use super::energy::Objective;
 use super::engine::{
-    recycle_schedule, simulate_flat_policy, simulate_flat_replay, simulate_flat_traced,
-    simulate_policy, Schedule, SimConfig, SimTrace,
+    recycle_schedule, simulate_flat_faults, simulate_flat_policy, simulate_flat_replay,
+    simulate_flat_traced, simulate_policy, Schedule, SimConfig, SimTrace,
 };
+use super::faults::{FaultEnsemble, FaultPlan};
 use super::ordering::{critical_path, critical_times};
 use super::partitioners::{snap_sub_edge, PartitionerSet};
 use super::perfmodel::PerfDb;
@@ -302,6 +303,15 @@ pub struct PortfolioConfig {
     /// Byte-identical results either way; `On`/`Auto` trade a verified-
     /// prefix scan per candidate for skipping most of its event loop.
     pub delta: DeltaMode,
+    /// Fault-aware solving: when set, every candidate is priced by its
+    /// *expected* cost over the ensemble's fault plans (mean objective
+    /// across members; `INFINITY` as soon as one member fails to
+    /// complete) instead of its nominal fault-free cost. The schedules
+    /// the solver keeps and returns stay the nominal ones — the ensemble
+    /// only steers acceptance. Forces [`DeltaMode::Off`] (replay plans
+    /// are proven against fault-free traces only); an empty spec is
+    /// exactly `None`, bit for bit.
+    pub faults: Option<FaultEnsemble>,
 }
 
 impl PortfolioConfig {
@@ -315,6 +325,7 @@ impl PortfolioConfig {
             threads: 1,
             lane_specs: Vec::new(),
             delta: DeltaMode::Off,
+            faults: None,
         }
     }
 
@@ -405,9 +416,40 @@ fn ckpt_every(n: usize) -> usize {
     (n / 8).clamp(16, 256)
 }
 
+/// Expected cost of `(dag, flat)` under a fault ensemble: the mean
+/// objective over the ensemble's members, each simulated against its own
+/// [`FaultPlan`], `INFINITY` as soon as any member fails to complete (an
+/// exhausted attempt budget forces that member's makespan infinite). The
+/// member schedules are throwaway — the caller keeps the nominal one;
+/// this function only *prices* it.
+fn ensemble_cost(
+    dag: &TaskDag,
+    flat: &FlatDag,
+    machine: &Machine,
+    db: &PerfDb,
+    cfg: &SolverConfig,
+    policy: &mut dyn SchedPolicy,
+    ens: &FaultEnsemble,
+) -> f64 {
+    let mut sum = 0.0;
+    for member in 0..ens.members {
+        let plan = FaultPlan::new(&ens.spec, member);
+        let sched = simulate_flat_faults(dag, flat, machine, db, cfg.sim, policy, &plan);
+        let c = cfg.objective.cost(&sched, machine);
+        if !c.is_finite() {
+            return f64::INFINITY;
+        }
+        sum += c;
+    }
+    sum / ens.members as f64
+}
+
 /// Evaluate one candidate action on a scratch clone of `dag` (cheap:
 /// copy-on-write task storage). `None` = rejected — the apply step
-/// refused the move or the evaluated cost is non-finite.
+/// refused the move or the evaluated cost is non-finite. With `faults`
+/// set, the returned cost is the ensemble expectation (the kept schedule
+/// stays the nominal simulation).
+#[allow(clippy::too_many_arguments)]
 fn evaluate(
     dag: &TaskDag,
     action: Action,
@@ -416,6 +458,7 @@ fn evaluate(
     parts: &PartitionerSet,
     cfg: &SolverConfig,
     policy: &mut dyn SchedPolicy,
+    faults: Option<&FaultEnsemble>,
 ) -> Option<Eval> {
     let mut scratch = dag.clone();
     if !apply_action(&mut scratch, parts, action) {
@@ -423,9 +466,15 @@ fn evaluate(
     }
     let flat = scratch.flat_dag();
     let sched = simulate_flat_policy(&scratch, &flat, machine, db, cfg.sim, policy);
-    let cost = cfg.objective.cost(&sched, machine);
+    let mut cost = cfg.objective.cost(&sched, machine);
     if !cost.is_finite() {
         return None;
+    }
+    if let Some(ens) = faults {
+        cost = ensemble_cost(&scratch, &flat, machine, db, cfg, policy, ens);
+        if !cost.is_finite() {
+            return None;
+        }
     }
     Some(Eval { cost, sched, dag: scratch, flat, trace: None })
 }
@@ -627,9 +676,18 @@ fn run_lane(
     eval_threads: usize,
     prov: &mut PolicyProvider<'_>,
     delta: DeltaMode,
+    faults: Option<&FaultEnsemble>,
 ) -> SolveResult {
     let mut rng = Rng::new(cfg.seed);
     let mut history: Vec<IterLog> = Vec::new();
+
+    // an empty fault spec prices nothing in — normalize it to `None` so
+    // `--faults off.toml` is bit-identical to no `--faults` at all (a
+    // 1-member "mean" would otherwise re-associate the float arithmetic)
+    let faults = faults.filter(|e| !e.spec.is_empty());
+    // replay plans are proven against fault-free traces only: fault-aware
+    // pricing forces full evaluation, bitwise the same trajectory
+    let delta = if faults.is_some() { DeltaMode::Off } else { delta };
 
     // The delta path needs fresh policy instances per candidate (a trace
     // is only reusable against a policy whose decisions are a pure
@@ -668,6 +726,17 @@ fn run_lane(
     #[cfg(debug_assertions)]
     if cost.is_finite() {
         super::validate::assert_valid(&dag, &flat, machine, &sched);
+    }
+    if let Some(ens) = faults {
+        if cost.is_finite() {
+            cost = match prov {
+                PolicyProvider::Shared(p) => ensemble_cost(&dag, &flat, machine, db, cfg, &mut **p, ens),
+                PolicyProvider::Factory(f) => {
+                    let mut p = f();
+                    ensemble_cost(&dag, &flat, machine, db, cfg, p.as_mut(), ens)
+                }
+            };
+        }
     }
     let mut best: (f64, Schedule, TaskDag, usize) = (cost, sched.clone(), dag.clone(), 0);
 
@@ -708,12 +777,12 @@ fn run_lane(
                     let f = *f; // reborrow the shared factory out of &mut
                     par_map(eval_threads, &picked, |_, &(action, _)| {
                         let mut p = f();
-                        evaluate(&dag, action, machine, db, parts, cfg, p.as_mut())
+                        evaluate(&dag, action, machine, db, parts, cfg, p.as_mut(), faults)
                     })
                 }
                 PolicyProvider::Shared(p) => picked
                     .iter()
-                    .map(|&(action, _)| evaluate(&dag, action, machine, db, parts, cfg, &mut **p))
+                    .map(|&(action, _)| evaluate(&dag, action, machine, db, parts, cfg, &mut **p, faults))
                     .collect(),
             };
             // delta requested but ineligible: every simulated candidate
@@ -842,7 +911,7 @@ pub fn solve_with(
     policy: &mut dyn SchedPolicy,
 ) -> SolveResult {
     let mut prov = PolicyProvider::Shared(policy);
-    run_lane(&dag, machine, db, parts, &cfg, 1, 1, &mut prov, DeltaMode::Off)
+    run_lane(&dag, machine, db, parts, &cfg, 1, 1, &mut prov, DeltaMode::Off, None)
 }
 
 /// Run the full parallel portfolio: `cfg.lanes` independent trajectories
@@ -873,7 +942,7 @@ pub fn solve_portfolio(
     let mut results: Vec<SolveResult> = par_map(threads.min(lanes), &lane_cfgs, |_, (lcfg, name)| {
         let factory = || reg.get(name).expect("validated above");
         let mut prov = PolicyProvider::Factory(&factory);
-        run_lane(dag, machine, db, parts, lcfg, batch, eval_threads, &mut prov, cfg.delta)
+        run_lane(dag, machine, db, parts, lcfg, batch, eval_threads, &mut prov, cfg.delta, cfg.faults.as_ref())
     });
     let lane_costs: Vec<f64> = results.iter().map(|r| r.best_cost).collect();
     let mut win = 0usize;
@@ -1678,5 +1747,73 @@ mod tests {
         let simulated: u64 =
             r_on.history.iter().map(|h| (h.evaluated - h.rejected) as u64).sum();
         assert!(st.full_fallbacks >= simulated, "every simulated candidate is a full run: {st:?}");
+    }
+
+    #[test]
+    fn empty_fault_ensemble_is_bitwise_the_fault_free_portfolio() {
+        // `--faults off.toml` must not perturb a single byte: an empty
+        // spec normalizes to no pricing at all (a 1:1 "mean" would
+        // re-associate the float arithmetic)
+        use crate::coordinator::faults::{FaultEnsemble, FaultSpec};
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let reg = crate::coordinator::policy::PolicyRegistry::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 8, 64);
+        cfg.seed = 13;
+        let base = PortfolioConfig::new(cfg);
+        let mut off = base.clone();
+        off.faults = Some(FaultEnsemble::new(FaultSpec::named("off"), 3));
+        let dag = cholesky::root(512);
+        let r0 = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &base);
+        let r1 = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &off);
+        assert_eq!(result_json(&r0), result_json(&r1), "an empty spec must price nothing in");
+    }
+
+    #[test]
+    fn fault_aware_pricing_is_reproducible_and_forces_delta_off() {
+        // a permanent half-speed window on every processor: no attempt
+        // ever faults, every member completes, so the expectation is
+        // finite — and the replay counters must stay zero even with
+        // delta requested, because plans are only proven fault-free
+        use crate::coordinator::faults::{FaultEnsemble, FaultSpec, ThrottleWindow};
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let reg = crate::coordinator::policy::PolicyRegistry::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 6, 64);
+        cfg.seed = 5;
+        let mut spec = FaultSpec::named("half-speed");
+        for p in 0..4 {
+            spec.throttle.push(ThrottleWindow { proc: p, from: 0.0, to: 1e9, factor: 0.5 });
+        }
+        let mut pcfg = PortfolioConfig::new(cfg);
+        pcfg.faults = Some(FaultEnsemble::new(spec, 3));
+        pcfg.delta = DeltaMode::On;
+        let dag = cholesky::root(512);
+        let r1 = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &pcfg);
+        assert!(r1.best_cost.is_finite(), "throttle-only members always complete");
+        assert_eq!(r1.replay_stats(), ReplayStats::default(), "fault pricing forces delta off");
+        let r2 = solve_portfolio(&dag, &m, &db, &parts, &reg, "pl/eft-p", &pcfg);
+        assert_eq!(result_json(&r1), result_json(&r2), "fault-aware solves replay bit-for-bit");
+    }
+
+    #[test]
+    fn ensemble_members_that_cannot_complete_price_as_infinite() {
+        // rate 1.0 with a 2-attempt budget: every task faults on every
+        // attempt, every member exhausts, so every candidate — and the
+        // incumbent — prices to INFINITY and nothing is ever accepted
+        use crate::coordinator::faults::{FaultEnsemble, FaultSpec};
+        let (m, db) = setup();
+        let parts = PartitionerSet::standard();
+        let reg = crate::coordinator::policy::PolicyRegistry::standard();
+        let mut cfg = SolverConfig::all_soft(simcfg(), 4, 64);
+        cfg.seed = 2;
+        let mut spec = FaultSpec::named("hopeless");
+        spec.transient_rate = 1.0;
+        spec.max_attempts = 2;
+        let mut pcfg = PortfolioConfig::new(cfg);
+        pcfg.faults = Some(FaultEnsemble::new(spec, 2));
+        let res = solve_portfolio(&cholesky::root(512), &m, &db, &parts, &reg, "pl/eft-p", &pcfg);
+        assert!(res.best_cost.is_infinite(), "no member ever completes: {}", res.best_cost);
+        assert!(res.history.iter().all(|h| !h.applied), "every candidate must be rejected");
     }
 }

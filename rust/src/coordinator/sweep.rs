@@ -29,7 +29,8 @@ use std::path::{Path, PathBuf};
 use super::coherence::CachePolicy;
 use super::delta::DeltaMode;
 use super::energy::{energy, DEFAULT_J_PER_BYTE};
-use super::engine::{simulate_policy, SimConfig};
+use super::engine::{simulate_flat_faults, simulate_policy, SimConfig};
+use super::faults::{FaultEnsemble, FaultPlan, FaultSpec};
 use super::lower_bound::makespan_lower_bound;
 use super::metrics::{peak_in_flight_transfers, report};
 use super::partitioners::{cholesky, lu, qr, PartitionerSet};
@@ -235,6 +236,17 @@ pub struct SweepGrid {
     /// identical whatever the mode — only wall-clock and the
     /// `replay_frac` column react to it).
     pub delta: DeltaMode,
+    /// The fault axis: `None` = fault-free (label `off`), `Some(spec)` =
+    /// every cell of that slice simulates under one deterministic member
+    /// plan of the spec (`sim` mode) or prices candidates over a
+    /// [`FaultEnsemble`] (`solve` mode). The member draw is a pure
+    /// function of (spec, platform, workload, tile, seed) — policy and
+    /// mode deliberately excluded, so every policy faces the *identical*
+    /// fault trace and rows compare paired. An all-`off` axis leaves the
+    /// CSV/JSON bundle byte-identical to a grid without the axis at all.
+    pub faults: Vec<Option<FaultSpec>>,
+    /// Ensemble members per fault-aware `solve` cell (min 1).
+    pub fault_members: u64,
 }
 
 /// One executable point of the grid.
@@ -249,6 +261,11 @@ pub struct SweepCell {
     /// The declared seed-axis value (the derived per-cell RNG seed is
     /// [`cell_seed`]).
     pub seed: u64,
+    /// Index into [`SweepGrid::faults`] (0 when the grid has no fault
+    /// axis). Deliberately not a [`cell_seed`] coordinate: the scheduler
+    /// RNG stays fixed while the fault model varies, so fault columns
+    /// compare paired against their `off` twin.
+    pub fault: usize,
 }
 
 impl SweepGrid {
@@ -266,14 +283,19 @@ impl SweepGrid {
                         }
                         for m in &self.modes {
                             for &s in &self.seeds {
-                                out.push(SweepCell {
-                                    platform: pi,
-                                    workload: *w,
-                                    policy: pol.clone(),
-                                    tile: b,
-                                    mode: *m,
-                                    seed: s,
-                                });
+                                // an empty fault axis means "no axis":
+                                // one fault-free cell, not zero cells
+                                for fi in 0..self.faults.len().max(1) {
+                                    out.push(SweepCell {
+                                        platform: pi,
+                                        workload: *w,
+                                        policy: pol.clone(),
+                                        tile: b,
+                                        mode: *m,
+                                        seed: s,
+                                        fault: fi,
+                                    });
+                                }
                             }
                         }
                     }
@@ -304,6 +326,15 @@ pub fn workload_seed(workload: &str, tile: u32, seed: u64) -> u64 {
     content_seed(&[workload], &[tile as u64, seed])
 }
 
+/// Ensemble-member index for a fault-axis cell: a pure function of the
+/// spec and the cell's *scenario* coordinates (platform, workload, tile,
+/// declared seed). Policy and mode deliberately do not enter — every
+/// policy row of one scenario replays the identical fault trace, so the
+/// fault columns compare paired, like [`workload_seed`] pins the DAG.
+pub fn fault_member_seed(spec: &FaultSpec, platform: &str, workload: &str, tile: u32, seed: u64) -> u64 {
+    content_seed(&["sweep-faults", &spec.name, platform, workload], &[tile as u64, seed])
+}
+
 /// Everything one cell reports — the columns of `bench_out/sweep.csv`.
 #[derive(Debug, Clone)]
 pub struct CellResult {
@@ -313,6 +344,9 @@ pub struct CellResult {
     pub tile: u32,
     pub mode: String,
     pub seed: u64,
+    /// Fault-axis label: `off`, or the spec's name. Rows only grow a
+    /// `faults` CSV/JSON column when some cell's label is not `off`.
+    pub fault: String,
     pub cell_seed: u64,
     pub n_tasks: usize,
     pub dag_depth: u32,
@@ -410,18 +444,36 @@ fn run_cell(
         // detlint: allow(safety/panic-in-lib) — expand() filters by Workload::feasible, so build cannot fail here
         .expect("expand() emits only feasible cells");
 
-    let base = simulate_policy(&dag, &p.machine, &p.db, sim, pol.as_mut());
+    // the fault-axis entry for this cell; an empty spec IS `off`, down
+    // to the label, so an all-empty axis changes no output byte
+    let fspec = grid.faults.get(cell.fault).and_then(|o| o.as_ref()).filter(|s| !s.is_empty());
+    let fl = match fspec {
+        None => "off".to_string(),
+        Some(s) => s.name.clone(),
+    };
+    let plan = fspec
+        .map(|s| FaultPlan::new(s, fault_member_seed(s, &p.name, &wl, cell.tile, cell.seed)));
+
+    let flat = dag.flat_dag();
+    let base = match &plan {
+        None => simulate_policy(&dag, &p.machine, &p.db, sim, pol.as_mut()),
+        Some(pl) => simulate_flat_faults(&dag, &flat, &p.machine, &p.db, sim, pol.as_mut(), pl),
+    };
     // debug-build oracle pass over every cell baseline (inf-makespan cells
-    // — zero-rate curves — are infeasible results, not violations)
+    // — zero-rate curves or exhausted attempt budgets — are infeasible
+    // results, not violations); fault cells go through the fault oracle
     #[cfg(debug_assertions)]
     if base.makespan.is_finite() {
-        super::validate::assert_valid(&dag, &dag.flat_dag(), &p.machine, &base);
+        match &plan {
+            None => super::validate::assert_valid(&dag, &flat, &p.machine, &base),
+            Some(pl) => super::validate::assert_valid_faults(&dag, &flat, &p.machine, &base, pl),
+        }
     }
     let base_r = report(&dag, &base);
 
     let (sched, r, failed, lb, replay_frac) = match cell.mode {
         CellMode::Simulate => {
-            let lb = makespan_lower_bound(&dag, &dag.flat_dag(), &p.machine, &p.db);
+            let lb = makespan_lower_bound(&dag, &flat, &p.machine, &p.db);
             (base, base_r.clone(), 0, lb, 0.0)
         }
         CellMode::Solve { iters, min_edge } => {
@@ -434,6 +486,7 @@ fn run_cell(
                 threads: cell_threads,
                 lane_specs: Vec::new(),
                 delta: grid.delta,
+                faults: fspec.map(|s| FaultEnsemble::new(s.clone(), grid.fault_members)),
             };
             let res = solve_portfolio(&dag, &p.machine, &p.db, parts, reg, &cell.policy, &pcfg);
             let failed = res.history.iter().filter(|h| h.action.is_some() && !h.applied).count();
@@ -453,6 +506,7 @@ fn run_cell(
         tile: cell.tile,
         mode: ml,
         seed: cell.seed,
+        fault: fl,
         cell_seed: cseed,
         n_tasks: r.n_tasks,
         dag_depth: r.dag_depth,
@@ -477,14 +531,19 @@ hom_makespan_s,hom_gflops,improve_pct,failed_moves,makespan_over_lb,replay_frac"
 
 /// Aggregate results as CSV, one row per cell in grid order. Fixed-width
 /// float formatting keeps the output byte-stable across runs and thread
-/// counts.
+/// counts. A `faults` column appears only when some cell ran under a
+/// fault spec — an all-`off` grid keeps the exact pre-fault-axis bytes.
 pub fn to_csv(results: &[CellResult]) -> String {
+    let ext = results.iter().any(|r| r.fault != "off");
     let mut out = String::with_capacity(128 * (results.len() + 1));
     out.push_str(CSV_HEADER);
+    if ext {
+        out.push_str(",faults");
+    }
     out.push('\n');
     for r in results {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{:.6},{:.3},{:.2},{},{:.3},{},{:.6},{:.3},{:.2},{},{:.4},{:.4}\n",
+            "{},{},{},{},{},{},{},{},{},{:.6},{:.3},{:.2},{},{:.3},{},{:.6},{:.3},{:.2},{},{:.4},{:.4}",
             r.platform,
             r.workload,
             r.policy,
@@ -507,16 +566,26 @@ pub fn to_csv(results: &[CellResult]) -> String {
             r.makespan_over_lb,
             r.replay_frac,
         ));
+        if ext {
+            out.push(',');
+            out.push_str(&r.fault);
+        }
+        out.push('\n');
     }
     out
 }
 
-/// Aggregate results as a JSON array (machine-readable twin of the CSV).
+/// Aggregate results as a JSON array (machine-readable twin of the CSV,
+/// including the gated `faults` key).
 pub fn to_json(results: &[CellResult]) -> String {
+    let ext = results.iter().any(|r| r.fault != "off");
     let arr: Vec<Json> = results
         .iter()
         .map(|r| {
             let mut o = std::collections::BTreeMap::new();
+            if ext {
+                o.insert("faults".into(), Json::Str(r.fault.clone()));
+            }
             o.insert("platform".into(), Json::Str(r.platform.clone()));
             o.insert("workload".into(), Json::Str(r.workload.clone()));
             o.insert("policy".into(), Json::Str(r.policy.clone()));
@@ -566,6 +635,8 @@ pub fn write_sweep_bundle(dir: &Path, results: &[CellResult]) -> std::io::Result
 /// solve_lanes = 4                  # optional: portfolio lanes per solve cell
 /// solve_batch = 2                  # optional: candidates evaluated per iter
 /// delta       = "auto"             # optional: on | off | auto (incremental re-simulation)
+/// faults      = ["off", "configs/faults_quick.toml"]  # optional fault axis
+/// fault_members = 3                # optional: ensemble members per fault solve cell
 /// ```
 pub fn grid_from_toml(text: &str) -> anyhow::Result<SweepGrid> {
     use anyhow::anyhow;
@@ -676,6 +747,29 @@ pub fn grid_from_toml(text: &str) -> anyhow::Result<SweepGrid> {
         None => DeltaMode::Off,
     };
 
+    let faults = match str_list("faults") {
+        Some(entries) => {
+            let mut out = Vec::new();
+            for e in &entries {
+                if e.eq_ignore_ascii_case("off") {
+                    out.push(None);
+                } else {
+                    out.push(Some(FaultSpec::from_file(e).map_err(|msg| anyhow!(msg))?));
+                }
+            }
+            if out.is_empty() {
+                vec![None]
+            } else {
+                out
+            }
+        }
+        None => vec![None],
+    };
+    let fault_members = match doc.get("fault_members") {
+        None => 3,
+        Some(_) => pos_int("fault_members")? as u64,
+    };
+
     Ok(SweepGrid {
         platforms,
         workloads,
@@ -687,6 +781,8 @@ pub fn grid_from_toml(text: &str) -> anyhow::Result<SweepGrid> {
         solve_lanes,
         solve_batch,
         delta,
+        faults,
+        fault_members,
     })
 }
 
@@ -770,6 +866,8 @@ mod tests {
             solve_lanes: 1,
             solve_batch: 1,
             delta: DeltaMode::Off,
+            faults: vec![None],
+            fault_members: 3,
         };
         let cells = grid.expand();
         // cholesky keeps only tile 64; stencil keeps both tiles
@@ -777,6 +875,84 @@ mod tests {
         assert!(cells
             .iter()
             .all(|c| c.workload.feasible(c.tile)));
+        assert!(cells.iter().all(|c| c.fault == 0), "a None-only axis pins index 0");
+    }
+
+    #[test]
+    fn fault_axis_expands_innermost_and_pairs_scenarios() {
+        use crate::coordinator::faults::FaultSpec;
+        use crate::coordinator::platform::MachineBuilder;
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let t = b.proc_type("cpu", 1.0, 0.1);
+        b.processors(2, "c", t, h);
+        let mut spec = FaultSpec::named("quick");
+        spec.transient_rate = 0.1;
+        let grid = SweepGrid {
+            platforms: vec![SweepPlatform::new("m", b.build(), PerfDb::new(), 8)],
+            workloads: vec![Workload::Cholesky { n: 256 }],
+            policies: vec!["pl/eft-p".into(), "pl/edf-p".into()],
+            tiles: vec![64],
+            modes: vec![CellMode::Simulate],
+            seeds: vec![0],
+            cache: CachePolicy::WriteBack,
+            solve_lanes: 1,
+            solve_batch: 1,
+            delta: DeltaMode::Off,
+            faults: vec![None, Some(spec.clone())],
+            fault_members: 3,
+        };
+        let cells = grid.expand();
+        assert_eq!(cells.len(), 4, "2 policies x 2 fault entries: {cells:?}");
+        // the axis is innermost: each policy gets its off/faulted pair
+        assert_eq!(
+            cells.iter().map(|c| c.fault).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1]
+        );
+        // the member draw ignores policy and mode — both policies of one
+        // scenario replay the identical trace — but follows the scenario
+        let a = fault_member_seed(&spec, "m", "cholesky:256", 64, 0);
+        assert_eq!(a, fault_member_seed(&spec, "m", "cholesky:256", 64, 0));
+        assert_ne!(a, fault_member_seed(&spec, "m2", "cholesky:256", 64, 0));
+        assert_ne!(a, fault_member_seed(&spec, "m", "cholesky:256", 128, 0));
+        assert_ne!(a, fault_member_seed(&spec, "m", "cholesky:256", 64, 1));
+    }
+
+    #[test]
+    fn faults_column_is_gated_on_a_non_off_label() {
+        let row = |fault: &str| CellResult {
+            platform: "m".into(),
+            workload: "cholesky:256".into(),
+            policy: "pl/eft-p".into(),
+            tile: 64,
+            mode: "sim".into(),
+            seed: 0,
+            fault: fault.into(),
+            cell_seed: 7,
+            n_tasks: 10,
+            dag_depth: 1,
+            makespan: 1.5,
+            gflops: 2.0,
+            avg_load_pct: 50.0,
+            transfer_bytes: 0,
+            energy_j: 1.0,
+            peak_in_flight: 0,
+            hom_makespan: 1.5,
+            hom_gflops: 2.0,
+            failed_moves: 0,
+            makespan_over_lb: 1.0,
+            replay_frac: 0.0,
+        };
+        let plain = to_csv(&[row("off")]);
+        assert!(!plain.contains("faults"), "all-off rows keep the pre-axis bytes:\n{plain}");
+        assert!(!to_json(&[row("off")]).contains("faults"));
+        let ext = to_csv(&[row("off"), row("quick")]);
+        let mut lines = ext.lines();
+        assert!(lines.next().unwrap().ends_with(",faults"));
+        assert!(lines.next().unwrap().ends_with(",off"));
+        assert!(lines.next().unwrap().ends_with(",quick"));
+        assert!(to_json(&[row("quick")]).contains("\"faults\""));
     }
 
     #[test]

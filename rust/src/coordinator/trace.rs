@@ -35,6 +35,15 @@ pub fn event_log_csv(sched: &Schedule) -> String {
             EventKind::ProcIdle { proc } => {
                 writeln!(out, "{:.9},proc_idle,,{proc},,,", e.time)
             }
+            EventKind::ProcFail { proc } => {
+                writeln!(out, "{:.9},proc_fail,,{proc},,,", e.time)
+            }
+            EventKind::ProcRestore { proc } => {
+                writeln!(out, "{:.9},proc_restore,,{proc},,,", e.time)
+            }
+            EventKind::TaskFault { task, proc } => {
+                writeln!(out, "{:.9},task_fault,{task},{proc},,,", e.time)
+            }
         };
     }
     out
@@ -55,7 +64,7 @@ pub fn load_trace_csv(sched: &Schedule, samples: usize) -> String {
 pub fn schedule_csv(dag: &TaskDag, sched: &Schedule, machine: &Machine) -> String {
     let mut out = String::from("proc,proc_name,start_s,end_s,kind,tile_edge\n");
     let mut rows: Vec<_> = sched.assignments.iter().collect();
-    rows.sort_by(|a, b| (a.proc, a.start).partial_cmp(&(b.proc, b.start)).unwrap());
+    rows.sort_by(|a, b| a.proc.cmp(&b.proc).then(a.start.total_cmp(&b.start)));
     for a in rows {
         let t = dag.task(a.task);
         let _ = writeln!(

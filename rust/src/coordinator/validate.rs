@@ -34,6 +34,7 @@
 //! optimized-build arithmetic goes through the same checks).
 
 use super::engine::{EventKind, Schedule};
+use super::faults::FaultPlan;
 use super::platform::Machine;
 use super::task::TaskId;
 use super::taskdag::{FlatDag, TaskDag};
@@ -275,6 +276,308 @@ pub fn assert_valid(dag: &TaskDag, flat: &FlatDag, machine: &Machine, sched: &Sc
     }
 }
 
+/// The fault-run oracle: every invariant of [`validate_schedule`] adapted
+/// to a schedule produced under a [`FaultPlan`], plus the fault-specific
+/// ones the tentpole demands:
+///
+/// - **No dead-interval execution** — no executed interval (final
+///   assignment or killed-attempt prefix) overlaps its processor's dead
+///   windows from the plan.
+/// - **Re-execution** — every non-final attempt (a `TaskFault` event) is
+///   followed by a re-execution; each assigned task ends with exactly one
+///   `TaskEnd`, at the final assignment's own time and processor.
+/// - **Attempt accounting closes** — faults per task stay strictly below
+///   the spec's `max_attempts`, and per-processor busy seconds equal the
+///   summed final durations *plus* the executed-then-lost attempt
+///   intervals reconstructed from the event log.
+///
+/// Attempt intervals are reconstructed independently from the log: a
+/// `TaskStart` opens an execution on `(task, proc)`; a `TaskFault` closes
+/// it as a lost interval (a fault with no open start is a cancelled
+/// not-yet-started booking and left no executed work); a `TaskEnd` closes
+/// the final one. Only finite (completed) schedules are validatable — an
+/// exhausted run's `INFINITY` makespan is rejected outright.
+pub fn validate_schedule_faults(
+    dag: &TaskDag,
+    flat: &FlatDag,
+    machine: &Machine,
+    sched: &Schedule,
+    plan: &FaultPlan,
+) -> Result<(), String> {
+    if plan.spec.is_empty() {
+        return validate_schedule(dag, flat, machine, sched);
+    }
+    if !sched.makespan.is_finite() {
+        return Err(format!("fault run did not complete (makespan {}): nothing to validate", sched.makespan));
+    }
+    let mut errs: Vec<String> = Vec::new();
+    let n = flat.len();
+
+    // ---- shape ----
+    if sched.assignments.len() != n {
+        return Err(format!("schedule has {} assignments for a {}-task frontier", sched.assignments.len(), n));
+    }
+    for (pos, a) in sched.assignments.iter().enumerate() {
+        if a.pos != pos || a.task != flat.tasks[pos] {
+            errs.push(format!("assignment at slot {pos} carries pos {} task {}", a.pos, a.task));
+        }
+        if !dag.is_live(a.task) {
+            errs.push(format!("assignment {pos} schedules non-live task {}", a.task));
+        }
+        if a.proc >= machine.n_procs() {
+            errs.push(format!("assignment {pos} placed on unknown processor {}", a.proc));
+        }
+        if !(a.release.is_finite() && a.start.is_finite() && a.end.is_finite())
+            || a.release < -EPS
+            || a.start < a.release - EPS
+            || a.end < a.start
+        {
+            errs.push(format!(
+                "task {} violates 0 <= release <= start <= end: release {} start {} end {}",
+                a.task, a.release, a.start, a.end
+            ));
+        }
+    }
+    for (i, t) in sched.transfers.iter().enumerate() {
+        if !t.start.is_finite() || !t.end.is_finite() || t.start < -EPS || t.end < t.start {
+            errs.push(format!("transfer {i} ({} -> {}) is malformed: [{}, {}]", t.from, t.to, t.start, t.end));
+        }
+    }
+    if !errs.is_empty() {
+        return Err(errs.join("\n")); // later checks index by these fields
+    }
+
+    // ---- reconstruct executed attempt intervals from the event log ----
+    // `(task, proc) -> open TaskStart time`; lost intervals collected per
+    // processor, fault/start/end times per task
+    let mut open: FxHashMap<(TaskId, usize), f64> = FxHashMap::default();
+    let mut lost: Vec<(usize, f64, f64, TaskId)> = Vec::new(); // (proc, start, end, task)
+    let mut fault_times: FxHashMap<TaskId, Vec<f64>> = FxHashMap::default();
+    let mut end_events: FxHashMap<TaskId, Vec<(usize, f64)>> = FxHashMap::default();
+    let mut start_counts: FxHashMap<TaskId, usize> = FxHashMap::default();
+    let pos_of: FxHashMap<TaskId, usize> = flat.tasks.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+    for e in &sched.events {
+        match e.kind {
+            EventKind::TaskStart { task, proc } => {
+                if open.insert((task, proc), e.time).is_some() {
+                    errs.push(format!("task {task} started twice on processor {proc} without finishing"));
+                }
+                *start_counts.entry(task).or_insert(0) += 1;
+            }
+            EventKind::TaskEnd { task, proc } => {
+                if open.remove(&(task, proc)).is_none() {
+                    errs.push(format!("TaskEnd for task {task} on processor {proc} without a TaskStart"));
+                }
+                end_events.entry(task).or_default().push((proc, e.time));
+            }
+            EventKind::TaskFault { task, proc } => {
+                // an open start means the attempt executed [start, fault);
+                // no open start = a cancelled not-yet-started booking
+                if let Some(s) = open.remove(&(task, proc)) {
+                    lost.push((proc, s, e.time, task));
+                }
+                fault_times.entry(task).or_default().push(e.time);
+            }
+            _ => {}
+        }
+        if !e.time.is_finite() {
+            errs.push(format!("event {:?} has non-finite time", e.kind));
+        }
+    }
+    for e in &sched.events {
+        let (task, proc, what) = match e.kind {
+            EventKind::TaskStart { task, proc } => (task, proc, "TaskStart"),
+            EventKind::TaskEnd { task, proc } => (task, proc, "TaskEnd"),
+            EventKind::TaskFault { task, proc } => (task, proc, "TaskFault"),
+            EventKind::ProcFail { proc } | EventKind::ProcRestore { proc } => {
+                if proc >= machine.n_procs() {
+                    errs.push(format!("fault event on unknown processor {proc}"));
+                }
+                continue;
+            }
+            _ => continue,
+        };
+        if !pos_of.contains_key(&task) {
+            errs.push(format!("stale record: {what} references task {task} outside this frontier"));
+        }
+        if proc >= machine.n_procs() {
+            errs.push(format!("stale record: {what} for task {task} on unknown processor {proc}"));
+        }
+    }
+    if !errs.is_empty() {
+        return Err(errs.join("\n"));
+    }
+
+    // ---- processor exclusivity over finals + lost attempt intervals ----
+    let mut per_proc: Vec<Vec<(f64, f64, TaskId)>> = vec![Vec::new(); machine.n_procs()];
+    for a in &sched.assignments {
+        per_proc[a.proc].push((a.start, a.end, a.task));
+    }
+    let mut lost_per_proc: Vec<f64> = vec![0.0; machine.n_procs()];
+    let mut lost_counts: Vec<usize> = vec![0; machine.n_procs()];
+    for &(p, s, e, task) in &lost {
+        per_proc[p].push((s, e, task));
+        lost_per_proc[p] += e - s;
+        lost_counts[p] += 1;
+    }
+    for (p, ivs) in per_proc.iter_mut().enumerate() {
+        ivs.sort_by(|x, y| x.0.total_cmp(&y.0));
+        for w in ivs.windows(2) {
+            if w[0].1 > w[1].0 + EPS {
+                errs.push(format!(
+                    "processor {p}: executions of tasks {} [{}, {}] and {} [{}, {}] overlap",
+                    w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
+                ));
+            }
+        }
+        // ---- no executed interval overlaps a dead window ----
+        for (ds, de) in plan.dead_windows(p) {
+            for &(s, e, task) in ivs.iter() {
+                if s < de - EPS && ds < e - EPS {
+                    errs.push(format!(
+                        "task {task} executes [{s}, {e}] inside processor {p}'s dead window [{ds}, {de}]"
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- dependences on final assignments ----
+    for pos in 0..n {
+        let a = &sched.assignments[pos];
+        for &p in &flat.preds[pos] {
+            let dep = &sched.assignments[p];
+            if a.start < dep.end - EPS {
+                errs.push(format!(
+                    "task {} starts at {} before predecessor {} finishes at {}",
+                    a.task, a.start, dep.task, dep.end
+                ));
+            }
+        }
+    }
+
+    // ---- arrival gate: transfers into the *final* placement's space
+    // gate its start (a killed attempt's fetches into another space are
+    // that attempt's business, already covered by its logged interval) ----
+    for (i, t) in sched.transfers.iter().enumerate() {
+        let Some(tid) = t.dst_task else { continue };
+        let Some(&pos) = pos_of.get(&tid) else {
+            errs.push(format!("transfer {i} fetches input for unknown task {tid}"));
+            continue;
+        };
+        let a = &sched.assignments[pos];
+        if machine.procs[a.proc].space == t.to && a.start < t.end - EPS {
+            errs.push(format!(
+                "task {tid} starts at {} before its input transfer {i} ({} -> {}) lands at {}",
+                a.start, t.from, t.to, t.end
+            ));
+        }
+    }
+
+    // ---- makespan + event-log order (fail/restore markers may outlive
+    // the workload; everything else stays inside the makespan) ----
+    let task_end = sched.assignments.iter().map(|a| a.end).fold(0.0f64, f64::max);
+    let xfer_end = sched.transfers.iter().map(|t| t.end).fold(0.0f64, f64::max);
+    let expect = task_end.max(xfer_end);
+    if (sched.makespan - expect).abs() > EPS {
+        errs.push(format!("makespan {} != max event end {}", sched.makespan, expect));
+    }
+    for w in sched.events.windows(2) {
+        if w[1].time < w[0].time - EPS {
+            errs.push(format!("event log out of order: {} after {}", w[1].time, w[0].time));
+            break;
+        }
+    }
+    for e in &sched.events {
+        if matches!(e.kind, EventKind::ProcFail { .. } | EventKind::ProcRestore { .. }) {
+            continue;
+        }
+        if e.time > sched.makespan + EPS {
+            errs.push(format!("event {:?} at {} past the makespan {}", e.kind, e.time, sched.makespan));
+        }
+    }
+
+    // ---- attempt accounting ----
+    let no_faults: Vec<f64> = Vec::new();
+    for a in &sched.assignments {
+        let faults = fault_times.get(&a.task).unwrap_or(&no_faults);
+        let max = plan.max_attempts() as usize;
+        if faults.len() >= max {
+            errs.push(format!(
+                "task {} logged {} faults with an attempt budget of {max} and still completed",
+                a.task,
+                faults.len()
+            ));
+        }
+        let ends = end_events.get(&a.task).map(Vec::as_slice).unwrap_or(&[]);
+        if ends.len() != 1 {
+            errs.push(format!("task {} has {} TaskEnd events; a recovered task completes exactly once", a.task, ends.len()));
+            continue;
+        }
+        let (ep, et) = ends[0];
+        if ep != a.proc || (et - a.end).abs() > EPS {
+            errs.push(format!(
+                "task {} finally ends on processor {ep} at {et}, but its assignment says processor {} at {}",
+                a.task, a.proc, a.end
+            ));
+        }
+        // every non-final attempt is followed by a re-execution: the
+        // final completion comes after every fault of the task
+        for &ft in faults {
+            if ft > a.end + EPS {
+                errs.push(format!(
+                    "task {} faulted at {ft} after its final completion at {} — missing re-execution",
+                    a.task, a.end
+                ));
+            }
+        }
+        let starts = start_counts.get(&a.task).copied().unwrap_or(0);
+        if starts < 1 || starts > faults.len() + 1 {
+            errs.push(format!(
+                "task {} logged {starts} TaskStart events for {} faults + 1 completion",
+                a.task,
+                faults.len()
+            ));
+        }
+    }
+
+    // ---- busy accounting: finals + executed-then-lost prefixes ----
+    for p in 0..machine.n_procs() {
+        let finals: f64 = sched.assignments.iter().filter(|a| a.proc == p).map(|a| a.end - a.start).sum();
+        let expect_busy = finals + lost_per_proc[p];
+        let booked = sched.proc_busy.get(p).copied().unwrap_or(0.0);
+        let terms = sched.assignments.len() + lost_counts[p] + 1;
+        if (expect_busy - booked).abs() > EPS * terms as f64 {
+            errs.push(format!(
+                "processor {p}: proc_busy {booked} != final {finals} + lost {} seconds",
+                lost_per_proc[p]
+            ));
+        }
+    }
+    if sched.proc_busy.len() > machine.n_procs() {
+        errs.push(format!(
+            "stale record: proc_busy has {} entries for a {}-processor machine",
+            sched.proc_busy.len(),
+            machine.n_procs()
+        ));
+    }
+
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs.join("\n"))
+    }
+}
+
+/// Panic unless the fault-run schedule is valid — the debug-build hook
+/// fault-enabled sweep cells and the faults bench call on every schedule
+/// they keep.
+pub fn assert_valid_faults(dag: &TaskDag, flat: &FlatDag, machine: &Machine, sched: &Schedule, plan: &FaultPlan) {
+    if let Err(e) = validate_schedule_faults(dag, flat, machine, sched, plan) {
+        panic!("fault schedule failed invariant validation:\n{e}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -412,6 +715,131 @@ mod tests {
         );
         let err = validate_schedule(&dag, &flat, &m, &sched).unwrap_err();
         assert!(err.contains("stale record"), "{err}");
+    }
+
+    // ---- fault-oracle tests: a machine + workload where the fault
+    // outcome is exactly predictable (mirrors the engine fault tests) ----
+
+    fn flat_machine() -> (Machine, PerfDb) {
+        let mut b = MachineBuilder::new("m");
+        let h = b.space("host", u64::MAX);
+        b.main(h);
+        let fast = b.proc_type("fast", 1.0, 0.1);
+        b.processors(2, "f", fast, h);
+        let m = b.build();
+        let mut db = PerfDb::new();
+        db.set_fallback(0, PerfCurve::Const { gflops: 4.0 });
+        (m, db)
+    }
+
+    /// `k` independent gemm tasks over disjoint 100x100 tiles.
+    fn independent(k: u32) -> TaskDag {
+        use crate::coordinator::region::Region;
+        use crate::coordinator::task::{TaskKind, TaskSpec};
+        let root = Region::new(0, 0, 100 * k, 0, 100);
+        let mut dag = TaskDag::new(TaskSpec::new(TaskKind::Potrf, vec![root], vec![root]));
+        let specs: Vec<TaskSpec> = (0..k)
+            .map(|i| {
+                let r = Region::new(0, 100 * i, 100 * (i + 1), 0, 100);
+                TaskSpec::new(TaskKind::Gemm, vec![r], vec![r])
+            })
+            .collect();
+        dag.partition(0, specs, 100);
+        dag
+    }
+
+    /// Kill processor 1 mid-first-task, forever: its in-flight task is
+    /// re-dispatched to processor 0 and the run stays finite.
+    fn faulted_run() -> (Machine, TaskDag, FlatDag, Schedule, FaultPlan) {
+        use crate::coordinator::engine::simulate_flat_faults;
+        use crate::coordinator::faults::{FailStop, FaultSpec};
+        use crate::coordinator::policy::policy_for;
+        let (m, db) = flat_machine();
+        let dag = independent(4);
+        let flat = dag.flat_dag();
+        let per = 2e6 / 4e9; // one 100-tile gemm on a 4-gflops proc
+        let mut spec = FaultSpec::named("kill-p1");
+        spec.fail_stop.push(FailStop { proc: 1, at: per * 0.5, restore: None });
+        let plan = FaultPlan::new(&spec, 0);
+        let c = SimConfig::new(SchedConfig::new(Ordering::Fcfs, ProcSelect::EarliestIdle));
+        let mut p = policy_for(SchedConfig::new(c.ordering, c.select));
+        let sched = simulate_flat_faults(&dag, &flat, &m, &db, c, p.as_mut(), &plan);
+        (m, dag, flat, sched, plan)
+    }
+
+    #[test]
+    fn faulted_engine_schedules_pass_the_fault_oracle() {
+        let (m, dag, flat, sched, plan) = faulted_run();
+        assert!(sched.makespan.is_finite());
+        assert!(
+            sched.events.iter().any(|e| matches!(e.kind, EventKind::TaskFault { .. })),
+            "the kill must actually fault an attempt"
+        );
+        validate_schedule_faults(&dag, &flat, &m, &sched, &plan)
+            .expect("recovered schedule must satisfy every fault invariant");
+    }
+
+    #[test]
+    fn execution_inside_a_dead_window_is_rejected() {
+        let (m, dag, flat, mut sched, plan) = faulted_run();
+        // move one completed task onto the dead processor, inside the window
+        let dead_at = plan.dead_windows(1)[0].0;
+        sched.assignments[0].proc = 1;
+        sched.assignments[0].start = dead_at + 1e-4;
+        sched.assignments[0].end = dead_at + 2e-4;
+        let err = validate_schedule_faults(&dag, &flat, &m, &sched, &plan).unwrap_err();
+        assert!(err.contains("dead window"), "{err}");
+    }
+
+    #[test]
+    fn missing_re_execution_record_is_rejected() {
+        let (m, dag, flat, mut sched, plan) = faulted_run();
+        // drop the final completion of the task that faulted: its fault
+        // is now never followed by a re-execution that finishes
+        let victim = sched
+            .events
+            .iter()
+            .find_map(|e| match e.kind {
+                EventKind::TaskFault { task, .. } => Some(task),
+                _ => None,
+            })
+            .expect("the kill must fault a task");
+        sched.events.retain(|e| !matches!(e.kind, EventKind::TaskEnd { task, .. } if task == victim));
+        let err = validate_schedule_faults(&dag, &flat, &m, &sched, &plan).unwrap_err();
+        assert!(err.contains("completes exactly once"), "{err}");
+    }
+
+    #[test]
+    fn fault_after_final_completion_is_rejected() {
+        let (m, dag, flat, mut sched, plan) = faulted_run();
+        // forge a fault strictly after a task's final completion, with no
+        // re-execution behind it
+        let a = sched.assignments[2];
+        let when = sched.makespan - 1e-6;
+        assert!(when > a.end + EPS, "forged fault must land after the task's end");
+        let at = sched.events.partition_point(|e| e.time <= when);
+        sched.events.insert(
+            at,
+            crate::coordinator::engine::SimEvent {
+                time: when,
+                kind: EventKind::TaskFault { task: a.task, proc: a.proc },
+            },
+        );
+        let err = validate_schedule_faults(&dag, &flat, &m, &sched, &plan).unwrap_err();
+        assert!(err.contains("missing re-execution"), "{err}");
+    }
+
+    #[test]
+    fn empty_fault_plan_oracle_matches_the_plain_oracle() {
+        use crate::coordinator::faults::FaultSpec;
+        let (m, db) = setup();
+        let mut dag = cholesky::root(256);
+        cholesky::partition_uniform(&mut dag, 64);
+        let flat = dag.flat_dag();
+        let sched = simulate(&dag, &m, &db, sim());
+        let plan = FaultPlan::new(&FaultSpec::named("off"), 0);
+        validate_schedule_faults(&dag, &flat, &m, &sched, &plan)
+            .expect("an empty plan must delegate to the plain oracle");
     }
 
     #[test]

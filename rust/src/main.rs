@@ -34,6 +34,7 @@ use hesp::coordinator::coherence::CachePolicy;
 use hesp::coordinator::delta::DeltaMode;
 use hesp::coordinator::energy::Objective;
 use hesp::coordinator::engine::{simulate_policy, SimConfig};
+use hesp::coordinator::faults::{FaultEnsemble, FaultSpec};
 use hesp::coordinator::metrics::report;
 use hesp::coordinator::partitioners::{cholesky, PartitionerSet};
 use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
@@ -90,6 +91,7 @@ USAGE: hesp <subcommand> [--flags]
             [--policies all|name,...] [--tiles 256,512,...] [--threads T]
             [--modes sim,solve:ITERS:MINEDGE | --solve --iters K --min-edge E]
             [--solve-lanes M] [--solve-batch K] [--delta on|off|auto]
+            [--faults off,SPEC.toml,...] [--fault-members N]
             [--seeds 0,1,...] [--cache wb|wt|wa] [--out bench_out/sweep.csv]
             (parallel scenario grid; cells get content-derived seeds, so any
             --threads count emits a byte-identical aggregate CSV/JSON bundle.
@@ -97,7 +99,8 @@ USAGE: hesp <subcommand> [--flags]
   serve     --platform F | --platforms F1,F2 | --quick
             [--arrivals poisson:R,bursty:LO:HI:DWELL,trace:FILE.jsonl]
             [--rate R] [--duration S] [--policies all|name,...] [--cap N]
-            [--admission defer|reject] [--threads T] [--cache wb|wt|wa]
+            [--admission defer|reject] [--max-defer SECS] [--threads T]
+            [--faults SPEC.toml] [--cache wb|wt|wa]
             [--seed S] [--out bench_out/serve.csv] [--bench-json FILE.json]
             (streaming multi-DAG service mode: jobs arrive over time, pass
             admission control, and are co-scheduled on the shared machine
@@ -109,6 +112,7 @@ USAGE: hesp <subcommand> [--flags]
             [--candidates all|cp|shallow] [--sampling hard|soft] [--min-edge E]
             [--objective makespan|energy|edp] [--policy NAME]
             [--threads T] [--portfolio M] [--batch K] [--delta on|off|auto]
+            [--faults SPEC.toml] [--fault-members N]
             [--out FILE.json] [--bench-json FILE.json]
             (Table 1 rows; the parallel portfolio solver runs M restart
             lanes x K-candidate batches over T workers — byte-identical
@@ -134,10 +138,11 @@ USAGE: hesp <subcommand> [--flags]
             pragma: `// detlint: allow(<rule>) — <reason>`)
   check     [FILES...] [--root DIR]
             (static input sanitizer: validates platform TOMLs, sweep-grid
-            TOMLs and JSONL traces before any simulation — disconnected
-            spaces, zero-rate curves, infeasible workload/tile combos,
-            non-monotonic traces, duplicate job ids. With no FILES,
-            checks every shipped configs/*.toml and examples/ input)
+            TOMLs, fault-spec TOMLs and JSONL traces before any simulation
+            — disconnected spaces, zero-rate curves, infeasible
+            workload/tile combos, non-monotonic traces, duplicate job ids,
+            malformed fault windows. With no FILES, checks every shipped
+            configs/*.toml and examples/ input)
 
 Scheduling policies are named registry entries (`hesp policies`):
 fcfs/r-p ... pl/eft-p (Table 1), pl/affinity, pl/lookahead, and the
@@ -147,6 +152,17 @@ job-aware serve pair pl/edf-p / pl/sjf-p. For the single-policy commands
 and table1 run every registered policy by default; sweep restricts to one
 when --policy (or --order/--select) is given. serve defaults to the
 service four (fcfs/eft-p, pl/eft-p, pl/edf-p, pl/sjf-p).
+
+Fault injection (--faults): a fault-spec TOML (kind = \"faults\") declares
+seeded fail-stop processor outages, transient per-attempt task faults,
+throttle windows and link outages. sweep takes a comma list as an extra
+grid axis (entries are \"off\" or a spec path); serve injects one spec into
+every scenario and switches the bundle to the extended failure/goodput
+columns; solve prices every candidate against a --fault-members ensemble
+and optimizes expected cost (the reported schedule is the nominal run).
+Fault traces are content-seeded: any --threads count replays the same
+faults byte-for-byte, and `--faults off` output is identical to omitting
+the flag. See configs/faults_quick.toml and DESIGN.md for the schema.
 ";
 
 fn sim_config(args: &Args, p: &Platform) -> Result<SimConfig> {
@@ -244,6 +260,47 @@ fn delta_flag(args: &Args) -> Result<DeltaMode> {
     DeltaMode::from_name(&s).ok_or_else(|| anyhow!("bad --delta '{s}' (on | off | auto)"))
 }
 
+/// Parse `--faults off,SPEC.toml,...` into the sweep fault axis. Each
+/// entry is either the literal `off` (a fault-free scenario) or a path
+/// to a fault-spec TOML; no flag means a single fault-free axis entry.
+fn faults_axis_flag(args: &Args) -> Result<Vec<Option<FaultSpec>>> {
+    let Some(list) = args.get("faults") else {
+        return Ok(vec![None]);
+    };
+    let mut out = Vec::new();
+    for e in list.split(',') {
+        let e = e.trim();
+        if e.is_empty() {
+            continue;
+        }
+        if e.eq_ignore_ascii_case("off") {
+            out.push(None);
+        } else {
+            out.push(Some(FaultSpec::from_file(e).map_err(|msg| anyhow!(msg))?));
+        }
+    }
+    if out.is_empty() {
+        out.push(None);
+    }
+    Ok(out)
+}
+
+/// Parse `--faults SPEC.toml` as a single optional spec (serve / solve,
+/// where faults are a scenario property rather than a sweep axis).
+fn faults_spec_flag(args: &Args) -> Result<Option<FaultSpec>> {
+    match args.get("faults") {
+        None => Ok(None),
+        Some(path) if path.eq_ignore_ascii_case("off") => Ok(None),
+        Some(path) => Ok(Some(FaultSpec::from_file(path).map_err(|msg| anyhow!(msg))?)),
+    }
+}
+
+/// Parse `--fault-members N`: how many seeded fault-trace realisations an
+/// ensemble averages over when pricing candidates under `--faults`.
+fn fault_members_flag(args: &Args) -> u64 {
+    args.usize_or("fault-members", 3).max(1) as u64
+}
+
 /// Build the declarative scenario grid for `hesp sweep`: an explicit
 /// `--grid FILE.toml` wins; `--quick` (without a platform) is the
 /// self-contained CI smoke grid; otherwise the grid comes from flags.
@@ -252,9 +309,15 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
     if let Some(path) = args.get("grid") {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading grid file {path}"))?;
         let mut grid = sweep::grid_from_toml(&text)?;
-        // the CLI knob overrides the grid file only when explicitly given
+        // the CLI knobs override the grid file only when explicitly given
         if args.has("delta") {
             grid.delta = delta_flag(args)?;
+        }
+        if args.has("faults") {
+            grid.faults = faults_axis_flag(args)?;
+        }
+        if args.has("fault-members") {
+            grid.fault_members = fault_members_flag(args);
         }
         return Ok(grid);
     }
@@ -285,6 +348,8 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
             solve_lanes: 1,
             solve_batch: 1,
             delta: delta_flag(args)?,
+            faults: faults_axis_flag(args)?,
+            fault_members: fault_members_flag(args),
         });
     }
 
@@ -383,6 +448,8 @@ fn build_sweep_grid(args: &Args) -> Result<SweepGrid> {
         solve_lanes,
         solve_batch,
         delta,
+        faults: faults_axis_flag(args)?,
+        fault_members: fault_members_flag(args),
     })
 }
 
@@ -534,7 +601,17 @@ fn build_serve_grid(args: &Args) -> Result<ServeGrid> {
         bail!("--platform F | --platforms F1,F2 required (or bare --quick)");
     };
 
-    Ok(ServeGrid { platforms, arrivals, policies, duration, queue_cap, admission, cache, seed })
+    let max_defer = match args.get("max-defer") {
+        None => None,
+        Some(_) => {
+            let v = args.f64_or("max-defer", 0.0);
+            anyhow::ensure!(v > 0.0, "--max-defer must be a positive number of seconds");
+            Some(v)
+        }
+    };
+    let faults = faults_spec_flag(args)?;
+
+    Ok(ServeGrid { platforms, arrivals, policies, duration, queue_cap, admission, cache, seed, max_defer, faults })
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -575,7 +652,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     table.print();
 
     let out = std::path::PathBuf::from(args.str_or("out", "bench_out/serve.csv"));
-    let (csv, json) = service::write_serve_bundle(&out, &results)?;
+    // the failure/expiry columns appear only when a knob that can
+    // populate them is on, so plain bundles keep their exact bytes
+    let ext = grid.faults.is_some() || grid.max_defer.is_some();
+    let (csv, json) = service::write_serve_bundle(&out, &results, ext)?;
     println!("serve bundle -> {} + {}", csv.display(), json.display());
 
     // wall-clock record for the bench baseline — deliberately a separate
@@ -638,7 +718,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("no legal tile size in {tiles:?} for n={n}"))?;
     print_report(&format!("best homogeneous (b={hb}, {policy_name})"), &hdag, &hsched);
 
-    let pcfg = PortfolioConfig { base: scfg, batch, lanes, threads, lane_specs: Vec::new(), delta };
+    let faults = faults_spec_flag(args)?.map(|spec| FaultEnsemble::new(spec, fault_members_flag(args)));
+    let pcfg = PortfolioConfig { base: scfg, batch, lanes, threads, lane_specs: Vec::new(), delta, faults };
     let reg = PolicyRegistry::standard();
     anyhow::ensure!(
         reg.get(&policy_name).is_some(),
@@ -657,6 +738,12 @@ fn cmd_solve(args: &Args) -> Result<()> {
         "improvement: {imp:.2}%  ({lanes} lanes x {batch}-candidate batches x {} iters on {threads} threads, {dt:.2}s)",
         scfg.iters
     );
+    if let Some(ens) = pcfg.faults.as_ref().filter(|e| !e.spec.is_empty()) {
+        println!(
+            "fault-aware objective: expected cost over {} members of '{}' = {:.6} (reported schedule is the nominal run)",
+            ens.members, ens.spec.name, res.best_cost
+        );
+    }
     // replay counters live OUTSIDE the canonical solver JSON: stdout and
     // the --bench-json record are their only outlets, so the byte-compared
     // artifact stays identical across --delta modes

@@ -1,0 +1,196 @@
+//! Fault-injection contracts, end to end (ISSUE 10).
+//!
+//! Three properties ride here:
+//!
+//! * **off = absent**: simulating under an *empty* fault plan is
+//!   byte-identical to the fault-free engine for every policy the
+//!   registry knows, on both reference platforms — `--faults off` can
+//!   never change golden artifacts.
+//! * **the oracle is independent**: `validate_schedule_faults` accepts
+//!   what the engine produced and rejects tampered schedules — it
+//!   re-derives attempt accounting from the event log instead of
+//!   trusting the engine's own arithmetic.
+//! * **thread-count identity**: a sweep with the fault axis *on* emits
+//!   byte-identical CSV/JSON bundles at any worker count, and its
+//!   fault-free rows match the all-off grid bit for bit.
+
+use hesp::coordinator::coherence::CachePolicy;
+use hesp::coordinator::delta::DeltaMode;
+use hesp::coordinator::engine::{
+    simulate_flat_faults, simulate_flat_policy, EventKind, SimConfig, SimEvent,
+};
+use hesp::coordinator::faults::{FailStop, FaultPlan, FaultSpec, ThrottleWindow};
+use hesp::coordinator::partitioners::cholesky;
+use hesp::coordinator::perfmodel::{PerfCurve, PerfDb};
+use hesp::coordinator::platform::MachineBuilder;
+use hesp::coordinator::policies::{Ordering, ProcSelect, SchedConfig};
+use hesp::coordinator::policy::PolicyRegistry;
+use hesp::coordinator::sweep::{self, CellMode, SweepGrid, SweepPlatform, Workload};
+use hesp::coordinator::validate::validate_schedule_faults;
+
+fn reference_platform(file: &str) -> SweepPlatform {
+    let path = format!("{}/configs/{file}", env!("CARGO_MANIFEST_DIR"));
+    SweepPlatform::from_file(&path).expect("reference platform config")
+}
+
+/// A small in-memory platform (no config files needed).
+fn platform(name: &str, ncpu: usize, peak: f64) -> SweepPlatform {
+    let mut b = MachineBuilder::new(name);
+    let h = b.space("host", u64::MAX);
+    b.main(h);
+    let t = b.proc_type("cpu", 1.0, 0.1);
+    b.processors(ncpu, "c", t, h);
+    let mut db = PerfDb::new();
+    db.set_fallback(0, PerfCurve::Saturating { peak, half: 64.0, exponent: 2.0 });
+    SweepPlatform::new(name, b.build(), db, 8)
+}
+
+#[test]
+fn empty_plan_is_byte_identical_for_every_registry_policy_on_both_reference_machines() {
+    let reg = PolicyRegistry::standard();
+    let names = reg.names();
+    assert!(names.len() >= 15, "registry shrank to {} policies", names.len());
+    let off = FaultSpec::named("off");
+    assert!(off.is_empty());
+    for file in ["bujaruelo.toml", "odroid.toml"] {
+        let p = reference_platform(file);
+        let mut dag = cholesky::root(1024);
+        cholesky::partition_uniform(&mut dag, 256);
+        let flat = dag.flat_dag();
+        let cfg = SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish);
+        let sim = SimConfig::new(cfg).with_elem_bytes(p.elem_bytes);
+        for name in &names {
+            let mut a = reg.get(name).expect("registry policy");
+            let mut b = reg.get(name).expect("registry policy");
+            let base = simulate_flat_policy(&dag, &flat, &p.machine, &p.db, sim, a.as_mut());
+            let plan = FaultPlan::new(&off, 0);
+            let faulted =
+                simulate_flat_faults(&dag, &flat, &p.machine, &p.db, sim, b.as_mut(), &plan);
+            assert_eq!(base.makespan.to_bits(), faulted.makespan.to_bits(), "{file}/{name}");
+            assert_eq!(base.events, faulted.events, "{file}/{name}");
+            // Debug rendering of f64 is shortest-roundtrip, so equal
+            // strings here means the whole result is bit-identical
+            assert_eq!(format!("{base:?}"), format!("{faulted:?}"), "{file}/{name}");
+        }
+    }
+}
+
+#[test]
+fn oracle_accepts_engine_output_and_rejects_tampering() {
+    let p = platform("flat", 4, 20.0);
+    let mut dag = cholesky::root(512);
+    cholesky::partition_uniform(&mut dag, 128);
+    let flat = dag.flat_dag();
+    let sim = SimConfig::new(SchedConfig::new(Ordering::PriorityList, ProcSelect::EarliestFinish))
+        .with_elem_bytes(p.elem_bytes);
+
+    // death + repair + a throttle window, but no transient faults: with
+    // three healthy processors left, completion (a finite makespan) is
+    // guaranteed, so the oracle must have something to validate
+    let mut spec = FaultSpec::named("storm");
+    spec.fail_stop.push(FailStop { proc: 1, at: 1e-4, restore: Some(8e-4) });
+    spec.throttle.push(ThrottleWindow { proc: 0, from: 0.0, to: 1e-2, factor: 0.5 });
+    let plan = FaultPlan::new(&spec, 0);
+    let mut pol = PolicyRegistry::standard().get("pl/eft-p").unwrap();
+    let sched = simulate_flat_faults(&dag, &flat, &p.machine, &p.db, sim, pol.as_mut(), &plan);
+    assert!(sched.makespan.is_finite(), "no fault source can exhaust this run");
+    validate_schedule_faults(&dag, &flat, &p.machine, &sched, &plan)
+        .expect("engine output must satisfy the oracle");
+
+    // tamper 1: an out-of-range processor id
+    let mut bad = sched.clone();
+    bad.assignments[0].proc = p.machine.n_procs();
+    assert!(validate_schedule_faults(&dag, &flat, &p.machine, &bad, &plan).is_err());
+
+    // tamper 2: a TaskEnd with no matching TaskStart — the attempt
+    // reconstruction walks the log itself, so a forged completion trips it
+    let mut bad = sched.clone();
+    let a = bad.assignments[0];
+    let forged = EventKind::TaskEnd { task: a.task, proc: a.proc };
+    bad.events.push(SimEvent { time: a.end, kind: forged });
+    assert!(validate_schedule_faults(&dag, &flat, &p.machine, &bad, &plan).is_err());
+
+    // tamper 3: inflated busy seconds must break attempt accounting
+    let mut bad = sched.clone();
+    bad.proc_busy[0] += 1.0;
+    assert!(validate_schedule_faults(&dag, &flat, &p.machine, &bad, &plan).is_err());
+
+    // an exhausted run (every attempt faults, budget 1) is not validatable
+    let mut doom = FaultSpec::named("doom");
+    doom.transient_rate = 1.0;
+    doom.max_attempts = 1;
+    let doom_plan = FaultPlan::new(&doom, 0);
+    let mut pol = PolicyRegistry::standard().get("pl/eft-p").unwrap();
+    let dead = simulate_flat_faults(&dag, &flat, &p.machine, &p.db, sim, pol.as_mut(), &doom_plan);
+    assert!(dead.makespan.is_infinite(), "rate-1.0 faults with budget 1 can never finish");
+    assert!(validate_schedule_faults(&dag, &flat, &p.machine, &dead, &doom_plan).is_err());
+}
+
+fn fault_grid(faults: Vec<Option<FaultSpec>>) -> SweepGrid {
+    SweepGrid {
+        platforms: vec![platform("alpha", 4, 20.0), platform("beta", 2, 35.0)],
+        workloads: vec![Workload::Cholesky { n: 128 }, Workload::Stencil { cells: 4, steps: 3 }],
+        policies: vec!["pl/eft-p".into(), "fcfs/eft-p".into()],
+        tiles: vec![32],
+        modes: vec![CellMode::Simulate],
+        seeds: vec![0, 1],
+        cache: CachePolicy::WriteBack,
+        solve_lanes: 1,
+        solve_batch: 1,
+        delta: DeltaMode::Off,
+        faults,
+        fault_members: 2,
+    }
+}
+
+fn storm_spec() -> FaultSpec {
+    let mut spec = FaultSpec::named("storm");
+    spec.seed = 5;
+    spec.transient_rate = 0.05;
+    spec.max_attempts = 6;
+    spec.fail_stop.push(FailStop { proc: 1, at: 1e-4, restore: Some(5e-4) });
+    spec.throttle.push(ThrottleWindow { proc: 0, from: 0.0, to: 1e-3, factor: 0.5 });
+    spec
+}
+
+#[test]
+fn fault_sweep_bundle_is_byte_identical_across_thread_counts() {
+    let grid = fault_grid(vec![None, Some(storm_spec())]);
+    let serial = sweep::run_sweep(&grid, 1);
+    let parallel = sweep::run_sweep(&grid, 4);
+    assert_eq!(serial.len(), grid.expand().len());
+    let csv = sweep::to_csv(&serial);
+    assert_eq!(csv, sweep::to_csv(&parallel), "fault axis must not change with the thread count");
+    assert_eq!(sweep::to_json(&serial), sweep::to_json(&parallel));
+    // a non-off axis entry switches the bundle to the extended schema
+    assert!(csv.lines().next().unwrap().ends_with(",faults"), "{csv}");
+    assert!(serial.iter().any(|r| r.fault == "storm"));
+    assert!(serial.iter().any(|r| r.fault == "off"));
+}
+
+#[test]
+fn off_rows_of_a_faulted_grid_match_the_all_off_grid_bit_for_bit() {
+    // the fault axis must be *paired*: scheduler seeds ignore the fault
+    // coordinate, so the off rows of a mixed grid are the all-off grid
+    let mixed = sweep::run_sweep(&fault_grid(vec![None, Some(storm_spec())]), 2);
+    let plain = sweep::run_sweep(&fault_grid(vec![None]), 2);
+    let off_rows: Vec<_> = mixed.iter().filter(|r| r.fault == "off").collect();
+    assert_eq!(off_rows.len(), plain.len());
+    for (m, p) in off_rows.iter().zip(&plain) {
+        assert_eq!(
+            (&m.platform, &m.workload, &m.policy, m.tile, m.seed),
+            (&p.platform, &p.workload, &p.policy, p.tile, p.seed)
+        );
+        assert_eq!(
+            m.makespan.to_bits(),
+            p.makespan.to_bits(),
+            "{}/{}/{}",
+            m.platform,
+            m.workload,
+            m.policy
+        );
+        assert_eq!(m.transfer_bytes, p.transfer_bytes);
+    }
+    // and an all-off grid never grows the faults column
+    assert!(!sweep::to_csv(&plain).lines().next().unwrap().contains("faults"));
+}

@@ -35,6 +35,8 @@ fn grid() -> ServeGrid {
         admission: Admission::Defer,
         cache: CachePolicy::WriteBack,
         seed: 0,
+        max_defer: None,
+        faults: None,
     }
 }
 
@@ -46,11 +48,11 @@ fn serve_bundle_is_byte_identical_across_thread_counts() {
     assert_eq!(serial.len(), 12, "2 platforms x 2 arrivals x 3 policies");
     assert!(serial.iter().any(|r| r.completed > 0), "streams must carry jobs");
     assert_eq!(
-        service::to_csv(&serial),
-        service::to_csv(&parallel),
+        service::to_csv(&serial, false),
+        service::to_csv(&parallel, false),
         "serve CSV must not depend on the thread count"
     );
-    assert_eq!(service::to_json(&serial), service::to_json(&parallel));
+    assert_eq!(service::to_json(&serial, false), service::to_json(&parallel, false));
 }
 
 #[test]
@@ -71,7 +73,10 @@ fn zero_completions_scenario_summarizes_without_panicking() {
         assert_eq!(r.throughput_jps, 0.0);
     }
     // the bundle serializers must accept the degenerate rows byte-stably
-    assert_eq!(service::to_csv(&rows), service::to_csv(&service::run_serve(&g, 1).unwrap()));
+    assert_eq!(
+        service::to_csv(&rows, false),
+        service::to_csv(&service::run_serve(&g, 1).unwrap(), false)
+    );
 }
 
 #[test]

@@ -44,6 +44,8 @@ fn grid() -> SweepGrid {
         // Auto on purpose: every solve-mode determinism assertion in this
         // file then also pins "incremental re-simulation changes no bytes"
         delta: DeltaMode::Auto,
+        faults: vec![None],
+        fault_members: 3,
     }
 }
 
